@@ -1,0 +1,5 @@
+"""Build-time compile path (L2 jax model + L1 Pallas kernels + AOT driver).
+
+Never imported at runtime: `make artifacts` runs `python -m compile.aot`
+once; the Rust coordinator only reads the emitted artifacts/*.hlo.txt.
+"""

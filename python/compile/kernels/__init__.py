@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO modules)."""
+
+from .gap_scan import BLOCK as GAP_SCAN_BLOCK, gap_scan  # noqa: F401
+from .wcc_step import BLOCK as WCC_BLOCK, edge_min  # noqa: F401

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: blocked inclusive scan (gap -> absolute-ID decode).
+
+This is the vectorizable phase-2 of WebGraph decompression: the Rust bit
+parser (phase 1) emits, per decoded block, one concatenated array of i64
+residual gaps whose inclusive prefix sum is the array of absolute neighbor
+IDs. The paper's S6 calls for raising the decompression bandwidth `d`; this
+kernel is that hot-spot expressed for a TPU-class programming model.
+
+Hardware mapping (DESIGN.md SHardware-Adaptation):
+  * the gap array is tiled into VMEM-sized chunks via BlockSpec
+    (TILE i64 = 64 KiB per input tile);
+  * each grid step performs an intra-tile inclusive scan on the VPU;
+  * a (1,)-shaped VMEM scratch accumulator carries the running total across
+    the *sequential* TPU grid - the classic scan decomposition
+    (scan-per-tile + carry propagation) without a second kernel launch.
+
+Run with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (exact integer equality vs. ref.py) is the
+contract here.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Total block length served by the AOT executable; must match
+# rust/src/runtime/exec.rs::GAP_SCAN_BLOCK.
+BLOCK = 65_536
+# VMEM tile: 8192 x 8 B = 64 KiB in, 64 KiB out, double-buffered.
+TILE = 8_192
+
+
+def _scan_kernel(carry_ref, x_ref, o_ref, acc_ref):
+    """One grid step: inclusive scan of a TILE with the running carry."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[0] = carry_ref[0]
+
+    tile = x_ref[...]
+    scanned = jnp.cumsum(tile) + acc_ref[0]
+    o_ref[...] = scanned
+    acc_ref[0] = scanned[-1]
+
+
+def gap_scan(gaps: jax.Array, carry: jax.Array) -> jax.Array:
+    """Inclusive scan of `gaps` (i64[BLOCK]) offset by scalar i64 `carry`.
+
+    Exact integer semantics: out[i] = carry + sum(gaps[0..=i]).
+    """
+    if gaps.shape != (BLOCK,):
+        raise ValueError(f"gap_scan expects shape ({BLOCK},), got {gaps.shape}")
+    grid = BLOCK // TILE
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=(grid,),
+        in_specs=[
+            # The scalar carry is visible to every step (SMEM-resident on
+            # real hardware; only step 0 reads it).
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((BLOCK,), jnp.int64),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int64)],
+        interpret=True,
+    )(carry.reshape(1).astype(jnp.int64), gaps.astype(jnp.int64))

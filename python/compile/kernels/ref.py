@@ -1,0 +1,27 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels.
+
+The kernels decode *integers*; the contract with the Rust runtime is exact
+equality, not allclose - the tests assert both (allclose for the integer
+arrays degenerates to equality, kept for harness uniformity).
+"""
+
+import numpy as np
+
+
+def ref_gap_scan(gaps: np.ndarray, carry: int) -> np.ndarray:
+    """out[i] = carry + sum(gaps[0..=i]), exact i64."""
+    return np.cumsum(gaps.astype(np.int64)) + np.int64(carry)
+
+
+def ref_edge_min(labels: np.ndarray, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """m[e] = min(labels[src[e]], labels[dst[e]])."""
+    return np.minimum(labels[src], labels[dst]).astype(np.int32)
+
+
+def ref_wcc_step(labels: np.ndarray, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """One full WCC label-propagation step (gather-min + scatter-min)."""
+    m = ref_edge_min(labels, src, dst)
+    out = labels.astype(np.int32).copy()
+    np.minimum.at(out, src, m)
+    np.minimum.at(out, dst, m)
+    return out

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: per-edge label minimum (the gather half of one WCC
+label-propagation step).
+
+One WCC step over an edge block (the paper's partial-processing workload,
+S5.3) is: for every edge (u, v), m = min(label[u], label[v]); then
+label[u] <- min(label[u], m) and label[v] <- min(label[v], m).
+
+The gather + minimum over the edge block is a dense, perfectly vectorizable
+kernel - it lives here in Pallas. The scatter-min (data-dependent write
+collisions) composes around it in the L2 jax model, lowering to an XLA
+scatter with a min combiner in the same HLO module.
+
+VMEM budget per grid step: labels (full array, 256 KiB for 64 Ki i32) +
+one TILE of src/dst/out (3 x 32 KiB) - comfortably resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Must match rust/src/runtime/exec.rs::WCC_BLOCK.
+BLOCK = 65_536
+TILE = 8_192
+
+
+def _edge_min_kernel(labels_ref, src_ref, dst_ref, o_ref):
+    labels = labels_ref[...]
+    ls = labels[src_ref[...]]
+    ld = labels[dst_ref[...]]
+    o_ref[...] = jnp.minimum(ls, ld)
+
+
+def edge_min(labels: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """m[e] = min(labels[src[e]], labels[dst[e]]) for an edge block."""
+    if labels.shape != (BLOCK,) or src.shape != (BLOCK,) or dst.shape != (BLOCK,):
+        raise ValueError("edge_min expects three (BLOCK,) arrays")
+    grid = BLOCK // TILE
+    return pl.pallas_call(
+        _edge_min_kernel,
+        grid=(grid,),
+        in_specs=[
+            # Full label array resident per step; edge tiles stream through.
+            pl.BlockSpec((BLOCK,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((BLOCK,), jnp.int32),
+        interpret=True,
+    )(labels.astype(jnp.int32), src.astype(jnp.int32), dst.astype(jnp.int32))

@@ -1,0 +1,58 @@
+"""L2: the jax compute graph the Rust coordinator executes per edge block.
+
+Two entry points, both fixed-shape (AOT contract with rust/src/runtime):
+
+* ``gap_scan_model``  - phase-2 WebGraph decode: residual gaps -> absolute
+  neighbor IDs. Wraps the L1 Pallas kernel so it lowers into the same HLO.
+* ``wcc_step_model``  - one Weakly-Connected-Components label-propagation
+  step over an edge block: the L1 ``edge_min`` Pallas gather kernel plus an
+  XLA scatter-min around it (scatter's write collisions belong to XLA, the
+  dense gather half belongs to Pallas).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import edge_min, gap_scan
+from .kernels.gap_scan import BLOCK as GAP_SCAN_BLOCK
+from .kernels.wcc_step import BLOCK as WCC_BLOCK
+
+
+def gap_scan_model(gaps: jax.Array, carry: jax.Array) -> tuple:
+    """i64[GAP_SCAN_BLOCK], i64[] -> (i64[GAP_SCAN_BLOCK],)."""
+    return (gap_scan(gaps, carry),)
+
+
+def wcc_step_model(labels: jax.Array, src: jax.Array, dst: jax.Array) -> tuple:
+    """i32[WCC_BLOCK] x3 -> (i32[WCC_BLOCK],).
+
+    labels'[v] = min(labels[v], min over incident edges of edge-min).
+    Padding convention: unused edge slots hold (0, 0) self-edges (no-ops).
+    """
+    m = edge_min(labels, src, dst)
+    out = labels.at[src].min(m, mode="drop")
+    out = out.at[dst].min(m, mode="drop")
+    return (out,)
+
+
+def example_args():
+    """Concrete ShapeDtypeStructs for AOT lowering."""
+    i64 = jnp.int64
+    i32 = jnp.int32
+    return {
+        "gap_scan": (
+            jax.ShapeDtypeStruct((GAP_SCAN_BLOCK,), i64),
+            jax.ShapeDtypeStruct((), i64),
+        ),
+        "wcc_step": (
+            jax.ShapeDtypeStruct((WCC_BLOCK,), i32),
+            jax.ShapeDtypeStruct((WCC_BLOCK,), i32),
+            jax.ShapeDtypeStruct((WCC_BLOCK,), i32),
+        ),
+    }
+
+
+MODELS = {
+    "gap_scan": gap_scan_model,
+    "wcc_step": wcc_step_model,
+}

@@ -1,0 +1,39 @@
+"""AOT lowering sanity: every model lowers to HLO text with the declared
+fixed shapes, and the emitted text is parseable-looking HLO."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.aot import to_hlo_text  # noqa: E402
+
+
+def test_every_model_lowers():
+    shapes = model.example_args()
+    for name, fn in model.MODELS.items():
+        lowered = jax.jit(fn).lower(*shapes[name])
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: missing entry computation"
+
+
+def test_gap_scan_shapes_match_rust_contract():
+    shapes = model.example_args()["gap_scan"]
+    assert shapes[0].shape == (65_536,)
+    assert str(shapes[0].dtype) == "int64"
+    assert shapes[1].shape == ()
+
+
+def test_wcc_shapes_match_rust_contract():
+    shapes = model.example_args()["wcc_step"]
+    assert all(s.shape == (65_536,) for s in shapes)
+    assert all(str(s.dtype) == "int32" for s in shapes)
+
+
+def test_lowered_hlo_is_deterministic():
+    shapes = model.example_args()
+    fn = model.MODELS["gap_scan"]
+    a = to_hlo_text(jax.jit(fn).lower(*shapes["gap_scan"]))
+    b = to_hlo_text(jax.jit(fn).lower(*shapes["gap_scan"]))
+    assert a == b

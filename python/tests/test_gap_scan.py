@@ -1,0 +1,88 @@
+"""Pallas gap-scan kernel vs. the pure-numpy oracle (exact i64)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.gap_scan import BLOCK, TILE, gap_scan  # noqa: E402
+from compile.kernels.ref import ref_gap_scan  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def run_kernel(gaps: np.ndarray, carry: int) -> np.ndarray:
+    out = gap_scan(jnp.asarray(gaps, dtype=jnp.int64), jnp.int64(carry))
+    return np.asarray(out)
+
+
+def test_zeros():
+    gaps = np.zeros(BLOCK, dtype=np.int64)
+    np.testing.assert_array_equal(run_kernel(gaps, 0), np.zeros(BLOCK))
+    np.testing.assert_array_equal(run_kernel(gaps, 7), np.full(BLOCK, 7))
+
+
+def test_ones_ramp():
+    gaps = np.ones(BLOCK, dtype=np.int64)
+    expect = np.arange(1, BLOCK + 1, dtype=np.int64)
+    np.testing.assert_array_equal(run_kernel(gaps, 0), expect)
+
+
+def test_negative_gaps_and_carry():
+    rng = np.random.default_rng(3)
+    gaps = rng.integers(-1000, 1000, size=BLOCK, dtype=np.int64)
+    for carry in (-5, 0, 123456789):
+        got = run_kernel(gaps, carry)
+        want = ref_gap_scan(gaps, carry)
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_allclose(got, want)  # harness uniformity
+
+
+def test_tile_boundaries_are_seamless():
+    # A spike at each tile boundary catches carry-propagation bugs.
+    gaps = np.zeros(BLOCK, dtype=np.int64)
+    gaps[::TILE] = 1
+    got = run_kernel(gaps, 0)
+    want = ref_gap_scan(gaps, 0)
+    np.testing.assert_array_equal(got, want)
+    assert got[-1] == BLOCK // TILE
+
+
+def test_large_values_no_overflow_in_i64_range():
+    gaps = np.full(BLOCK, 2**40, dtype=np.int64)
+    got = run_kernel(gaps, 0)
+    want = ref_gap_scan(gaps, 0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_wrong_shape_rejected():
+    with pytest.raises(ValueError):
+        gap_scan(jnp.zeros(BLOCK - 1, dtype=jnp.int64), jnp.int64(0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    carry=st.integers(min_value=-(2**40), max_value=2**40),
+    lo=st.integers(min_value=-(2**20), max_value=0),
+    hi=st.integers(min_value=1, max_value=2**20),
+)
+def test_hypothesis_random_streams(seed, carry, lo, hi):
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(lo, hi, size=BLOCK, dtype=np.int64)
+    got = run_kernel(gaps, carry)
+    want = ref_gap_scan(gaps, carry)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_realistic_webgraph_segments():
+    # Shape of real decoder input: segment heads are (possibly negative)
+    # absolute deltas, followed by strictly positive gaps.
+    rng = np.random.default_rng(11)
+    gaps = rng.integers(1, 64, size=BLOCK, dtype=np.int64)
+    seg_starts = rng.choice(BLOCK, size=BLOCK // 100, replace=False)
+    gaps[seg_starts] = rng.integers(-10000, 10000, size=len(seg_starts))
+    got = run_kernel(gaps, 0)
+    np.testing.assert_array_equal(got, ref_gap_scan(gaps, 0))

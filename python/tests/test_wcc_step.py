@@ -1,0 +1,72 @@
+"""Pallas edge-min kernel + L2 WCC step vs. the numpy oracle."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels.ref import ref_edge_min, ref_wcc_step  # noqa: E402
+from compile.kernels.wcc_step import BLOCK, edge_min  # noqa: E402
+from compile.model import wcc_step_model  # noqa: E402
+
+
+def rand_case(seed: int):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, BLOCK, size=BLOCK, dtype=np.int32)
+    src = rng.integers(0, BLOCK, size=BLOCK, dtype=np.int32)
+    dst = rng.integers(0, BLOCK, size=BLOCK, dtype=np.int32)
+    return labels, src, dst
+
+
+def test_edge_min_matches_ref():
+    labels, src, dst = rand_case(0)
+    got = np.asarray(edge_min(jnp.asarray(labels), jnp.asarray(src), jnp.asarray(dst)))
+    want = ref_edge_min(labels, src, dst)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_wcc_step_matches_ref():
+    labels, src, dst = rand_case(1)
+    (got,) = wcc_step_model(jnp.asarray(labels), jnp.asarray(src), jnp.asarray(dst))
+    want = ref_wcc_step(labels, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_self_loop_padding_is_noop():
+    labels = np.arange(BLOCK, dtype=np.int32)
+    src = np.zeros(BLOCK, dtype=np.int32)
+    dst = np.zeros(BLOCK, dtype=np.int32)
+    (got,) = wcc_step_model(jnp.asarray(labels), jnp.asarray(src), jnp.asarray(dst))
+    np.testing.assert_array_equal(np.asarray(got), labels)
+
+
+def test_chain_converges():
+    labels = np.arange(BLOCK, dtype=np.int32)
+    src = np.zeros(BLOCK, dtype=np.int32)
+    dst = np.zeros(BLOCK, dtype=np.int32)
+    # Chain 0-1-2-...-9.
+    for i in range(9):
+        src[i], dst[i] = i, i + 1
+    cur = jnp.asarray(labels)
+    for _ in range(10):
+        (cur,) = wcc_step_model(cur, jnp.asarray(src), jnp.asarray(dst))
+    got = np.asarray(cur)
+    assert (got[:10] == 0).all()
+    assert got[10] == 10
+
+
+def test_step_is_monotone_nonincreasing():
+    labels, src, dst = rand_case(2)
+    (got,) = wcc_step_model(jnp.asarray(labels), jnp.asarray(src), jnp.asarray(dst))
+    assert (np.asarray(got) <= labels).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_hypothesis_random_blocks(seed):
+    labels, src, dst = rand_case(seed)
+    (got,) = wcc_step_model(jnp.asarray(labels), jnp.asarray(src), jnp.asarray(dst))
+    np.testing.assert_array_equal(np.asarray(got), ref_wcc_step(labels, src, dst))

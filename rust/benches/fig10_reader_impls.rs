@@ -1,0 +1,103 @@
+//! Fig. 10 — reader-implementation overhead.
+//!
+//! The paper compares the Java reader against the C one (Java reaches
+//! 78–101 % of C). Our analogues:
+//! * `BufferedCopy` (managed-style staging copies) vs `ZeroCopy` readers
+//!   through the same device model — the "language/runtime tax" on read
+//!   bandwidth;
+//! * native-Rust vs XLA-offloaded gap-scan decode — the engine ablation
+//!   on the decompression path.
+
+use std::time::Instant;
+
+use paragrapher::bench::workloads::modeled_paragrapher_load;
+use paragrapher::bench::Harness;
+use paragrapher::formats::FormatKind;
+use paragrapher::graph::generators::Dataset;
+use paragrapher::runtime::{ArtifactSet, NativeScan, XlaScanEngine};
+use paragrapher::storage::reader::ReaderImpl;
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, ReadMethod, SimStore};
+
+const FILE_BYTES: usize = 24 << 20;
+
+fn main() {
+    let mut h = Harness::new("fig10_reader_impls");
+
+    // (a) Reader style vs device bandwidth: elapsed = virtual I/O + real
+    // copy CPU; the managed reader's staging pass eats into bandwidth
+    // exactly like the paper's Java reader does.
+    for device in [DeviceKind::Hdd, DeviceKind::Ssd] {
+        let store = SimStore::new(device);
+        store.put("f", vec![0x5Au8; FILE_BYTES]);
+        let mut ratio_inputs = Vec::new();
+        for reader in [ReaderImpl::ZeroCopy, ReaderImpl::BufferedCopy] {
+            store.drop_cache();
+            let ctx = ReadCtx {
+                threads: 1,
+                block: 4 << 20,
+                method: ReadMethod::Pread,
+                sequential: true,
+                reader_impl: reader,
+            };
+            let acct = IoAccount::new();
+            let f = store.open("f").unwrap();
+            let mut pos = 0u64;
+            while pos < FILE_BYTES as u64 {
+                let out = f.read(pos, 4 << 20, ctx, &acct);
+                std::hint::black_box(&out);
+                pos += 4 << 20;
+            }
+            let bw = FILE_BYTES as f64 / acct.elapsed_seconds();
+            h.report(
+                &format!("{}/{}", device.name(), reader.name()),
+                "MB_per_s",
+                bw / 1e6,
+            );
+            ratio_inputs.push(bw);
+        }
+        let pct = ratio_inputs[1] / ratio_inputs[0] * 100.0;
+        h.report(&format!("{}/managed-vs-zero-copy", device.name()), "percent", pct);
+        assert!(
+            pct <= 101.0,
+            "managed reader cannot beat zero-copy: {pct:.0}%"
+        );
+        // The paper's window is 78-101%; ours depends on host CPU, accept a
+        // wider envelope but require the tax to exist on the fast device.
+        if device == DeviceKind::Ssd {
+            assert!(pct < 100.0, "the copy tax must be visible on SSD: {pct:.0}%");
+        }
+    }
+
+    // (b) Decode-engine ablation: native scan vs XLA/Pallas scan.
+    let g = Dataset::Tw.generate(1, 42);
+    let store = SimStore::new(DeviceKind::Dram);
+    FormatKind::WebGraph.write_to_store(&g, &store, "tw");
+    let t0 = Instant::now();
+    let native = modeled_paragrapher_load(&store, "tw", 4, 128 << 10, &NativeScan, 0.0, None)
+        .expect("native load");
+    let native_wall = t0.elapsed().as_secs_f64();
+    h.report("decode/native-scan", "modeled_s", native.measurement.elapsed);
+    h.report("decode/native-scan", "wall_s", native_wall);
+    match ArtifactSet::load(ArtifactSet::default_dir()) {
+        Ok(arts) => {
+            let engine = XlaScanEngine::new(arts);
+            let t1 = Instant::now();
+            let xla =
+                modeled_paragrapher_load(&store, "tw", 4, 128 << 10, &engine, 0.0, None)
+                    .expect("xla load");
+            let xla_wall = t1.elapsed().as_secs_f64();
+            assert_eq!(xla.measurement.edges, native.measurement.edges);
+            h.report("decode/xla-pallas-scan", "modeled_s", xla.measurement.elapsed);
+            h.report("decode/xla-pallas-scan", "wall_s", xla_wall);
+            h.report(
+                "decode/xla-vs-native",
+                "percent",
+                native_wall / xla_wall * 100.0,
+            );
+            h.note("XLA path on CPU-PJRT pays per-call + copy overhead; on a real TPU the same HLO amortizes across the 64Ki-block (DESIGN §8)");
+        }
+        Err(e) => h.note(&format!("XLA ablation skipped: {e}")),
+    }
+    h.finish();
+}

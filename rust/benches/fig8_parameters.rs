@@ -1,0 +1,92 @@
+//! Fig. 8 — ParaGrapher load time for worker counts {9, 18, 36} × buffer
+//! sizes {8, 64, 128} M-edges (scaled to the suite: {8Ki, 64Ki, 128Ki}),
+//! on HDD and SSD.
+//!
+//! Paper shapes: on HDD more threads *degrade* (seek interleaving); on SSD
+//! few threads underuse the device; very large buffers cause imbalance
+//! (few blocks vs workers); very small buffers pay the scheduler's polling
+//! latency per block (§5.5).
+
+use paragrapher::bench::workloads::modeled_paragrapher_load;
+use paragrapher::bench::Harness;
+use paragrapher::formats::FormatKind;
+use paragrapher::graph::generators::Dataset;
+use paragrapher::runtime::NativeScan;
+use paragrapher::storage::{DeviceKind, SimStore};
+
+const DISPATCH_LATENCY: f64 = 50e-6; // scheduler poll roundtrip (scaled, §5.5)
+
+fn main() {
+    let mut h = Harness::new("fig8_parameters");
+    let dataset = Dataset::Tw;
+    // Large enough that blocks outnumber workers at every buffer size
+    // (the paper: 2.4B-edge TW over 8-128M-edge buffers).
+    let g = dataset.generate(16, 42);
+    let mut grid: Vec<(DeviceKind, usize, u64, f64)> = Vec::new();
+
+    for device in [DeviceKind::Hdd, DeviceKind::Ssd] {
+        let store = SimStore::new_scaled(device);
+        let base = dataset.abbr().to_string();
+        FormatKind::WebGraph.write_to_store(&g, &store, &base);
+        for &workers in &[9usize, 18, 36] {
+            for &buffer_edges in &[8u64 << 10, 64 << 10, 128 << 10] {
+                let r = modeled_paragrapher_load(
+                    &store,
+                    &base,
+                    workers,
+                    buffer_edges,
+                    &NativeScan,
+                    DISPATCH_LATENCY,
+                    None,
+                )
+                .expect("load");
+                assert_eq!(r.measurement.edges, g.num_edges());
+                let secs = r.measurement.elapsed;
+                h.report(
+                    &format!(
+                        "{}/{}w/{}Ki-edges",
+                        device.name(),
+                        workers,
+                        buffer_edges >> 10
+                    ),
+                    "seconds",
+                    secs,
+                );
+                grid.push((device, workers, buffer_edges, secs));
+            }
+        }
+    }
+
+    let get = |d: DeviceKind, w: usize, b: u64| {
+        grid.iter()
+            .find(|(gd, gw, gb, _)| *gd == d && *gw == w && *gb == b)
+            .map(|(_, _, _, s)| *s)
+            .unwrap()
+    };
+    // HDD: 36 workers must not beat 9 workers (seek interleaving).
+    let hdd9 = get(DeviceKind::Hdd, 9, 64 << 10);
+    let hdd36 = get(DeviceKind::Hdd, 36, 64 << 10);
+    assert!(
+        hdd36 >= hdd9 * 0.95,
+        "HDD should degrade (or at best hold) with more workers: 9w {hdd9:.3}s vs 36w {hdd36:.3}s"
+    );
+    // SSD: 36 workers must beat 9 workers.
+    let ssd9 = get(DeviceKind::Ssd, 9, 64 << 10);
+    let ssd36 = get(DeviceKind::Ssd, 36, 64 << 10);
+    assert!(
+        ssd36 < ssd9,
+        "SSD should improve with workers: 9w {ssd9:.3}s vs 36w {ssd36:.3}s"
+    );
+    // Small buffers pay dispatch latency (visible on the fast device).
+    let ssd_small = get(DeviceKind::Ssd, 18, 8 << 10);
+    let ssd_mid = get(DeviceKind::Ssd, 18, 64 << 10);
+    assert!(
+        ssd_small > ssd_mid,
+        "8Ki buffers must pay scheduler overhead: {ssd_small:.3}s vs {ssd_mid:.3}s"
+    );
+    h.note(&format!(
+        "HDD 9w {hdd9:.3}s -> 36w {hdd36:.3}s | SSD 9w {ssd9:.3}s -> 36w {ssd36:.3}s | SSD small-buffer penalty {:.1}%",
+        (ssd_small / ssd_mid - 1.0) * 100.0
+    ));
+    h.finish();
+}

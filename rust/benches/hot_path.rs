@@ -1,0 +1,102 @@
+//! Hot-path microbenchmarks (wall-clock, used by the §Perf optimization
+//! pass): bit-stream decode rate, instantaneous-code decode rates, the
+//! WebGraph encoder/decoder edge rates, gap-scan engines, and JT-CC union
+//! throughput. These are the real-CPU numbers that feed the calibrated
+//! decompression bandwidth d.
+
+use paragrapher::bench::Harness;
+use paragrapher::formats::webgraph::{self, WgParams};
+use paragrapher::formats::FormatKind;
+use paragrapher::graph::generators;
+use paragrapher::runtime::{ArtifactSet, NativeScan, ScanEngine, XlaScanEngine};
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
+use paragrapher::util::bitstream::{BitReader, BitWriter};
+use paragrapher::util::codes::Code;
+use paragrapher::util::rng::Xoshiro256;
+
+fn main() {
+    let mut h = Harness::new("hot_path");
+    h.target_seconds = 1.0;
+
+    // Bitstream + codes.
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let values: Vec<u64> = (0..200_000).map(|_| rng.next_below(100_000)).collect();
+    for code in [Code::Gamma, Code::Delta, Code::Zeta(3)] {
+        let mut w = BitWriter::new();
+        for &v in &values {
+            code.write(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let name = format!("decode/{code:?}");
+        let s = h.bench(&name, || {
+            let mut r = BitReader::new(&bytes);
+            let mut acc = 0u64;
+            for _ in 0..values.len() {
+                acc = acc.wrapping_add(code.read(&mut r).unwrap());
+            }
+            acc
+        });
+        h.report(&name, "Mvalues_per_s", values.len() as f64 / s.min / 1e6);
+    }
+
+    // Encoder/decoder edge rates on a web-like graph.
+    let g = generators::barabasi_albert(20_000, 12, 3);
+    let edges = g.num_edges();
+    let s = h.bench("webgraph/compress", || {
+        webgraph::compress(&g, WgParams::default()).2.total_bits
+    });
+    h.report("webgraph/compress", "ME_per_s", edges as f64 / s.min / 1e6);
+
+    let store = SimStore::new(DeviceKind::Dram);
+    FormatKind::WebGraph.write_to_store(&g, &store, "g");
+    let acct = IoAccount::new();
+    let meta = webgraph::read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+    let offs = webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+    let dec =
+        webgraph::Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+    let s = h.bench("webgraph/decode-full", || {
+        dec.decode_range(0, meta.num_vertices, &acct).unwrap().num_edges()
+    });
+    h.report("webgraph/decode-full", "ME_per_s", edges as f64 / s.min / 1e6);
+    // The calibrated single-core decompression bandwidth d (bytes of
+    // uncompressed CSR per second) — the §3 model's d.
+    h.report("webgraph/calibrated-d", "MB_per_s", edges as f64 * 4.0 / s.min / 1e6);
+
+    let s = h.bench("webgraph/decode-single-vertex", || {
+        dec.decode_vertex(10_000, &acct).unwrap().len()
+    });
+    h.report("webgraph/decode-single-vertex", "us", s.min * 1e6);
+
+    // Scan engines.
+    let mut gaps: Vec<i64> = (0..1 << 20).map(|_| rng.next_below(64) as i64).collect();
+    let s = h.bench("scan/native-1Mi", || {
+        let mut copy = gaps.clone();
+        NativeScan.inclusive_scan_i64(&mut copy).unwrap();
+        copy[copy.len() - 1]
+    });
+    h.report("scan/native-1Mi", "Melem_per_s", gaps.len() as f64 / s.min / 1e6);
+    if let Ok(arts) = ArtifactSet::load(ArtifactSet::default_dir()) {
+        let engine = XlaScanEngine::new(arts);
+        let s = h.bench("scan/xla-pallas-1Mi", || {
+            let mut copy = gaps.clone();
+            engine.inclusive_scan_i64(&mut copy).unwrap();
+            copy[copy.len() - 1]
+        });
+        h.report("scan/xla-pallas-1Mi", "Melem_per_s", gaps.len() as f64 / s.min / 1e6);
+    }
+    gaps.truncate(0);
+
+    // JT-CC union throughput.
+    let pairs: Vec<(u32, u32)> = g.iter_edges().collect();
+    let s = h.bench("jtcc/union-pass", || {
+        let uf = paragrapher::algorithms::jtcc::JtUnionFind::new(g.num_vertices(), 3);
+        for &(a, b) in &pairs {
+            uf.union(a, b);
+        }
+        uf.count_components()
+    });
+    h.report("jtcc/union-pass", "ME_per_s", pairs.len() as f64 / s.min / 1e6);
+
+    h.finish();
+}

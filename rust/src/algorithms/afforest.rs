@@ -1,0 +1,93 @@
+//! Afforest-style WCC (Sutton, Ben-Nun, Barak 2018) — the algorithm GAPBS
+//! ships and the paper's baseline in Fig. 6.
+//!
+//! Afforest's insight: link a small number of neighbors per vertex first
+//! ("subgraph sampling"), find the largest emerging component, then only
+//! process remaining edges of vertices *outside* it. It needs random access
+//! to the whole CSR — i.e. a full load first — which is exactly the
+//! contrast with JT-CC + partial loading the paper draws.
+
+use std::collections::HashMap;
+
+use crate::graph::{CsrGraph, VertexId};
+
+use super::jtcc::JtUnionFind;
+
+/// Number of neighbors linked in the sampling phase (GAPBS default: 2).
+const SAMPLE_NEIGHBORS: usize = 2;
+/// Vertices probed to estimate the largest component (GAPBS: 1024).
+const SAMPLE_PROBES: usize = 1024;
+
+/// Run Afforest over a fully-loaded CSR. Returns canonical labels.
+pub fn afforest(g: &CsrGraph, seed: u64) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let uf = JtUnionFind::new(n, seed);
+
+    // Phase 1: link the first k neighbors of every vertex.
+    for v in 0..n as u32 {
+        for &u in g.neighbors(v).iter().take(SAMPLE_NEIGHBORS) {
+            uf.union(v, u);
+        }
+    }
+
+    // Phase 2: sample to find the most common component.
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed ^ 0xAFF0);
+    let mut counts: HashMap<VertexId, usize> = HashMap::new();
+    if n > 0 {
+        for _ in 0..SAMPLE_PROBES {
+            let v = rng.next_below(n as u64) as VertexId;
+            *counts.entry(uf.find(v)).or_insert(0) += 1;
+        }
+    }
+    let giant = counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r);
+
+    // Phase 3: finish remaining edges, skipping vertices already absorbed
+    // by the giant component.
+    for v in 0..n as u32 {
+        if Some(uf.find(v)) == giant {
+            continue;
+        }
+        for &u in g.neighbors(v).iter().skip(SAMPLE_NEIGHBORS) {
+            uf.union(v, u);
+        }
+    }
+    super::canonicalize(&uf.labels())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::wcc_by_bfs;
+    use crate::algorithms::count_components;
+    use crate::graph::generators;
+
+    #[test]
+    fn matches_bfs_on_symmetric_graphs() {
+        // Afforest (like GAPBS's) assumes a symmetrized input.
+        for (i, g) in [
+            generators::road_lattice(12, 12, 0, 1),
+            generators::barabasi_albert(500, 3, 2),
+            generators::erdos_renyi(400, 300, 3).symmetrize(),
+            generators::rmat(7, 2, 4).symmetrize(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let ours = afforest(&g, 7);
+            let truth = wcc_by_bfs(&g);
+            assert_eq!(
+                count_components(&ours),
+                count_components(&truth),
+                "graph {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty = CsrGraph::from_edges(0, &[]);
+        assert!(afforest(&empty, 1).is_empty());
+        let lone = CsrGraph::from_edges(3, &[]);
+        assert_eq!(count_components(&afforest(&lone, 1)), 3);
+    }
+}

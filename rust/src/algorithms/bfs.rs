@@ -1,0 +1,78 @@
+//! Breadth-first search and the BFS-based WCC oracle.
+
+use std::collections::VecDeque;
+
+use crate::graph::{CsrGraph, VertexId};
+
+/// BFS distances from `source` (u32::MAX = unreachable). Treats the graph
+/// as directed.
+pub fn bfs_distances(g: &CsrGraph, source: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    let mut q = VecDeque::new();
+    dist[source as usize] = 0;
+    q.push_back(source);
+    while let Some(v) = q.pop_front() {
+        let d = dist[v as usize];
+        for &u in g.neighbors(v) {
+            if dist[u as usize] == u32::MAX {
+                dist[u as usize] = d + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+/// Weakly-connected components by BFS over the undirected view — the
+/// ground-truth oracle for the WCC implementations. Labels are the
+/// smallest vertex of each component.
+pub fn wcc_by_bfs(g: &CsrGraph) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let t = g.transpose();
+    let mut label = vec![VertexId::MAX; n];
+    let mut q = VecDeque::new();
+    for s in 0..n {
+        if label[s] != VertexId::MAX {
+            continue;
+        }
+        label[s] = s as VertexId;
+        q.push_back(s as VertexId);
+        while let Some(v) = q.pop_front() {
+            for &u in g.neighbors(v).iter().chain(t.neighbors(v)) {
+                if label[u as usize] == VertexId::MAX {
+                    label[u as usize] = s as VertexId;
+                    q.push_back(u);
+                }
+            }
+        }
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn distances_on_a_path() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_distances(&g, 3), vec![u32::MAX, u32::MAX, u32::MAX, 0]);
+    }
+
+    #[test]
+    fn wcc_ignores_direction() {
+        let g = CsrGraph::from_edges(4, &[(1, 0), (2, 3)]);
+        let labels = wcc_by_bfs(&g);
+        assert_eq!(labels, vec![0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn lattice_is_one_component() {
+        let g = generators::road_lattice(10, 10, 0, 1);
+        let labels = wcc_by_bfs(&g);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+}

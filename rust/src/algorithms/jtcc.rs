@@ -1,0 +1,175 @@
+//! Jayanti–Tarjan randomized concurrent union-find WCC (JT-CC).
+//!
+//! The paper's partial-processing workload (§5.3): each edge is processed
+//! once, independently — so the algorithm composes with ParaGrapher's
+//! asynchronous block delivery and never needs the whole graph in memory.
+//! This implementation follows the "randomized linking by index" variant:
+//! union by comparing (random-priority) roots with CAS, splitting paths on
+//! find, safe for concurrent use from callback threads.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::graph::VertexId;
+
+/// Concurrent disjoint-set forest over `n` vertices.
+pub struct JtUnionFind {
+    parent: Vec<AtomicU32>,
+    /// Random priorities breaking symmetry (Jayanti–Tarjan's randomization).
+    priority: Vec<u32>,
+}
+
+impl JtUnionFind {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+        let parent = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+        let priority = (0..n).map(|_| rng.next_u64() as u32).collect();
+        Self { parent, priority }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Find with path splitting (lock-free).
+    pub fn find(&self, mut v: VertexId) -> VertexId {
+        loop {
+            let p = self.parent[v as usize].load(Ordering::Acquire);
+            if p == v {
+                return v;
+            }
+            let gp = self.parent[p as usize].load(Ordering::Acquire);
+            if gp == p {
+                return p;
+            }
+            // Path splitting: point v at its grandparent.
+            let _ = self.parent[v as usize].compare_exchange_weak(
+                p,
+                gp,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+            v = gp;
+        }
+    }
+
+    /// Union the sets of `a` and `b` (processes one edge). Lock-free;
+    /// links lower-priority root under higher-priority root.
+    pub fn union(&self, a: VertexId, b: VertexId) {
+        let mut x = a;
+        let mut y = b;
+        loop {
+            x = self.find(x);
+            y = self.find(y);
+            if x == y {
+                return;
+            }
+            // Order by (priority, id) so linking direction is consistent.
+            let (lo, hi) = if (self.priority[x as usize], x) < (self.priority[y as usize], y)
+            {
+                (x, y)
+            } else {
+                (y, x)
+            };
+            match self.parent[lo as usize].compare_exchange(
+                lo,
+                hi,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(_) => {
+                    // Someone moved lo; retry from the new roots.
+                    x = lo;
+                    y = hi;
+                }
+            }
+        }
+    }
+
+    /// Final component labels (canonical root per vertex).
+    pub fn labels(&self) -> Vec<VertexId> {
+        (0..self.parent.len() as u32).map(|v| self.find(v)).collect()
+    }
+
+    /// Number of components.
+    pub fn count_components(&self) -> usize {
+        (0..self.parent.len() as u32).filter(|&v| self.find(v) == v).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::wcc_by_bfs;
+    use crate::graph::generators;
+    use crate::util::pool::parallel_for;
+
+    #[test]
+    fn chain_becomes_one_component() {
+        let uf = JtUnionFind::new(5, 1);
+        uf.union(0, 1);
+        uf.union(1, 2);
+        uf.union(3, 4);
+        assert_eq!(uf.count_components(), 2);
+        uf.union(4, 0);
+        assert_eq!(uf.count_components(), 1);
+    }
+
+    #[test]
+    fn matches_bfs_ground_truth() {
+        for seed in [1u64, 2, 3] {
+            let g = generators::rmat(8, 4, seed);
+            let uf = JtUnionFind::new(g.num_vertices(), 9);
+            for (s, d) in g.iter_edges() {
+                uf.union(s, d);
+            }
+            let truth = wcc_by_bfs(&g);
+            assert_eq!(
+                uf.count_components(),
+                crate::algorithms::count_components(&truth),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_unions_are_safe_and_correct() {
+        let g = generators::barabasi_albert(2000, 4, 7);
+        let edges: Vec<(VertexId, VertexId)> = g.iter_edges().collect();
+        let uf = JtUnionFind::new(g.num_vertices(), 3);
+        let parts = 16;
+        parallel_for(parts, 8, |i| {
+            let (s, e) = crate::util::chunk_range(edges.len(), parts, i);
+            for &(a, b) in &edges[s..e] {
+                uf.union(a, b);
+            }
+        });
+        let truth = wcc_by_bfs(&g);
+        assert_eq!(uf.count_components(), crate::algorithms::count_components(&truth));
+    }
+
+    #[test]
+    fn edge_order_invariance() {
+        let g = generators::erdos_renyi(300, 900, 5);
+        let mut edges: Vec<(VertexId, VertexId)> = g.iter_edges().collect();
+        let uf1 = JtUnionFind::new(g.num_vertices(), 1);
+        for &(a, b) in &edges {
+            uf1.union(a, b);
+        }
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(42);
+        rng.shuffle(&mut edges);
+        let uf2 = JtUnionFind::new(g.num_vertices(), 2);
+        for &(a, b) in &edges {
+            uf2.union(a, b);
+        }
+        assert_eq!(uf1.count_components(), uf2.count_components());
+        assert_eq!(
+            crate::algorithms::canonicalize(&uf1.labels()),
+            crate::algorithms::canonicalize(&uf2.labels())
+        );
+    }
+}

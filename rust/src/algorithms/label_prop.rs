@@ -1,0 +1,109 @@
+//! Label-propagation WCC over fixed-shape edge blocks — the consumer of
+//! the AOT-compiled `wcc_step` executable (L2 jax + L1 Pallas).
+//!
+//! Each iteration streams the edge list in [`WCC_BLOCK`]-sized chunks
+//! through the XLA step (or a native step for comparison) until labels
+//! stop changing. Works only for graphs with ≤ `WCC_BLOCK` vertices — the
+//! fixed-shape AOT contract; larger graphs use JT-CC.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::runtime::{ArtifactSet, WCC_BLOCK};
+
+/// One native label-propagation step (oracle for the XLA path).
+pub fn native_step(labels: &mut [i32], src: &[i32], dst: &[i32]) {
+    for (&s, &d) in src.iter().zip(dst) {
+        let m = labels[s as usize].min(labels[d as usize]);
+        labels[s as usize] = m;
+        labels[d as usize] = m;
+    }
+}
+
+/// Engine choice for [`wcc_label_prop`].
+pub enum StepEngine<'a> {
+    Native,
+    Xla(&'a ArtifactSet),
+}
+
+/// Run label-propagation WCC to convergence. Returns canonical labels.
+pub fn wcc_label_prop(g: &CsrGraph, engine: StepEngine<'_>) -> Result<Vec<VertexId>> {
+    let n = g.num_vertices();
+    if n > WCC_BLOCK {
+        bail!("label-prop WCC supports up to {WCC_BLOCK} vertices, graph has {n}");
+    }
+    // Pack edges into fixed-shape blocks padded with (0,0) self-loops.
+    let edges: Vec<(VertexId, VertexId)> = g.iter_edges().collect();
+    let mut blocks: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+    for chunk in edges.chunks(WCC_BLOCK) {
+        let mut src = vec![0i32; WCC_BLOCK];
+        let mut dst = vec![0i32; WCC_BLOCK];
+        for (i, &(s, d)) in chunk.iter().enumerate() {
+            src[i] = s as i32;
+            dst[i] = d as i32;
+        }
+        blocks.push((src, dst));
+    }
+
+    let mut labels: Vec<i32> = (0..WCC_BLOCK as i32).collect();
+    // Convergence bound: labels strictly decrease; n iterations suffice
+    // for any graph (diameter bound); typically far fewer.
+    for _ in 0..n.max(1) {
+        let before = labels.clone();
+        for (src, dst) in &blocks {
+            match engine {
+                StepEngine::Native => native_step(&mut labels, src, dst),
+                StepEngine::Xla(arts) => {
+                    labels = arts.wcc_step_block(&labels, src, dst)?;
+                }
+            }
+        }
+        if labels == before {
+            break;
+        }
+    }
+    Ok(crate::algorithms::canonicalize(
+        &labels[..n].iter().map(|&l| l as VertexId).collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::wcc_by_bfs;
+    use crate::algorithms::count_components;
+    use crate::graph::generators;
+
+    #[test]
+    fn native_matches_bfs() {
+        for g in [
+            generators::road_lattice(10, 10, 0, 1),
+            generators::erdos_renyi(200, 150, 2).symmetrize(),
+            generators::barabasi_albert(300, 2, 3),
+        ] {
+            let ours = wcc_label_prop(&g, StepEngine::Native).unwrap();
+            let truth = wcc_by_bfs(&g);
+            assert_eq!(count_components(&ours), count_components(&truth));
+        }
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        // A graph with more vertices than the AOT block must error cleanly.
+        let g = crate::graph::CsrGraph::from_edges(WCC_BLOCK + 1, &[]);
+        assert!(wcc_label_prop(&g, StepEngine::Native).is_err());
+    }
+
+    #[test]
+    fn xla_matches_native_when_artifacts_present() {
+        let dir = ArtifactSet::default_dir();
+        let Ok(arts) = ArtifactSet::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let g = generators::erdos_renyi(400, 500, 9).symmetrize();
+        let native = wcc_label_prop(&g, StepEngine::Native).unwrap();
+        let xla = wcc_label_prop(&g, StepEngine::Xla(&arts)).unwrap();
+        assert_eq!(native, xla);
+    }
+}

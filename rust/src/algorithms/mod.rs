@@ -1,0 +1,56 @@
+//! Graph algorithms used by the evaluation (§5.3):
+//!
+//! * [`jtcc`] — Jayanti–Tarjan concurrent union-find WCC: one pass over
+//!   edges, each edge processed independently — the streaming workload the
+//!   paper pairs with ParaGrapher's partial loading (use cases B/D).
+//! * [`afforest`] — the GAPBS-side baseline (Afforest-style subgraph
+//!   sampling + final sweep), run after a *full* load.
+//! * [`label_prop`] — label-propagation WCC over fixed-shape edge blocks,
+//!   the consumer of the XLA/Pallas `wcc_step` executable.
+//! * [`bfs`] — breadth-first search (use case A's repeated-access pattern
+//!   and the ground-truth oracle for component tests).
+
+pub mod afforest;
+pub mod bfs;
+pub mod jtcc;
+pub mod label_prop;
+
+use crate::graph::VertexId;
+
+/// Count distinct components from a per-vertex representative/label array.
+pub fn count_components(labels: &[VertexId]) -> usize {
+    let mut sorted: Vec<VertexId> = labels.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    sorted.len()
+}
+
+/// Normalize labels so each component is named by its smallest member
+/// (makes algorithm outputs comparable).
+pub fn canonicalize(labels: &[VertexId]) -> Vec<VertexId> {
+    use std::collections::HashMap;
+    let mut min_of: HashMap<VertexId, VertexId> = HashMap::new();
+    for (v, &l) in labels.iter().enumerate() {
+        let e = min_of.entry(l).or_insert(v as VertexId);
+        *e = (*e).min(v as VertexId);
+    }
+    labels.iter().map(|l| min_of[l]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn component_counting() {
+        assert_eq!(count_components(&[0, 0, 2, 2, 4]), 3);
+        assert_eq!(count_components(&[]), 0);
+    }
+
+    #[test]
+    fn canonical_labels() {
+        // Vertices {0,1} share label 7; {2} has 9.
+        let canon = canonicalize(&[7, 7, 9]);
+        assert_eq!(canon, vec![0, 0, 2]);
+    }
+}

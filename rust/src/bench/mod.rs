@@ -1,0 +1,154 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage pattern (in `benches/*.rs`, `harness = false`):
+//!
+//! ```ignore
+//! let mut h = Harness::new("fig5_graph_loading");
+//! h.bench("RD/HDD/webgraph", || { ... });
+//! h.finish(); // prints the table, writes bench_results/<name>.json
+//! ```
+//!
+//! Most of this repo's benches measure *modeled* (virtual-clock) time — the
+//! closure returns a metric directly — so the harness supports both
+//! wall-clock timing (`bench`) and reported metrics (`report`).
+
+pub mod workloads;
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Simple statistics over repeated wall-clock runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+fn stats(mut samples: Vec<f64>) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Stats { median: samples[n / 2], min: samples[0], max: samples[n - 1], iters: n }
+}
+
+/// One bench harness = one results file + one printed section.
+pub struct Harness {
+    name: String,
+    results: Json,
+    t0: Instant,
+    /// Wall-clock budget hint per case (keeps full `cargo bench` bounded).
+    pub max_iters: usize,
+    pub min_iters: usize,
+    pub target_seconds: f64,
+}
+
+impl Harness {
+    pub fn new(name: &str) -> Self {
+        println!("\n=== bench: {name} ===");
+        Self {
+            name: name.to_string(),
+            results: Json::obj(),
+            t0: Instant::now(),
+            max_iters: 25,
+            min_iters: 3,
+            target_seconds: 2.0,
+        }
+    }
+
+    /// Measure wall-clock time of `f` (median over adaptive iterations).
+    pub fn bench<T>(&mut self, case: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let _ = f();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.target_seconds)
+        {
+            let t = Instant::now();
+            let _ = f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = stats(samples);
+        println!(
+            "{case:<56} {:>12.6}s  (min {:.6}s, {} iters)",
+            s.median, s.min, s.iters
+        );
+        let mut o = Json::obj();
+        o.set("median_s", s.median).set("min_s", s.min).set("iters", s.iters);
+        self.results.set(case, o);
+        s
+    }
+
+    /// Record a metric computed by the experiment itself (e.g. modeled
+    /// ME/s from the virtual clock).
+    pub fn report(&mut self, case: &str, metric: &str, value: f64) {
+        println!("{case:<56} {value:>12.3} {metric}");
+        let mut o = Json::obj();
+        o.set(metric, value);
+        match &mut self.results {
+            Json::Obj(map) => {
+                if let Some(Json::Obj(existing)) = map.get_mut(case) {
+                    existing.insert(metric.to_string(), Json::Num(value));
+                } else {
+                    map.insert(case.to_string(), o);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Attach arbitrary JSON (e.g. a whole curve) under a key.
+    pub fn attach(&mut self, key: &str, value: Json) {
+        self.results.set(key, value);
+    }
+
+    /// Print a free-form note into the bench log.
+    pub fn note(&mut self, text: &str) {
+        println!("  # {text}");
+    }
+
+    /// Write results JSON and a footer. Call last.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        let mut wrapper = Json::obj();
+        wrapper.set("bench", self.name.as_str()).set("results", self.results);
+        let _ = std::fs::write(&path, wrapper.to_string_pretty());
+        println!(
+            "=== {} done in {:.1}s -> {} ===",
+            self.name,
+            self.t0.elapsed().as_secs_f64(),
+            path.display()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median() {
+        let s = stats(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn harness_runs_and_reports() {
+        let mut h = Harness::new("unit-test-harness");
+        h.min_iters = 2;
+        h.max_iters = 3;
+        h.target_seconds = 0.01;
+        let s = h.bench("noop", || 1 + 1);
+        assert!(s.iters >= 2);
+        h.report("modeled", "me_per_s", 42.0);
+        // finish writes into bench_results/ — tolerate sandboxed CWD.
+        h.finish();
+    }
+}

@@ -1,0 +1,222 @@
+//! Shared measured-workload drivers used by `benches/*` and examples.
+//!
+//! All loading measurements here use the *virtual-time* composition rule
+//! (max over per-worker accounts of virtual I/O + real CPU, §3's overlap
+//! model) so that thread-count effects are modeled faithfully even though
+//! the simulation host may have a single physical core.
+
+use anyhow::Result;
+
+use crate::formats::webgraph;
+use crate::formats::FormatKind;
+use crate::metrics::LoadMeasurement;
+use crate::runtime::ScanEngine;
+use crate::storage::sim::ReadCtx;
+use crate::storage::vclock::{phase_elapsed, phase_elapsed_with_cores};
+use crate::storage::{IoAccount, SimStore};
+
+/// Baseline (GAPBS-style) full load of `format`, `threads`-way parallel.
+pub fn modeled_full_load(
+    store: &SimStore,
+    base: &str,
+    format: FormatKind,
+    threads: usize,
+) -> Result<LoadMeasurement> {
+    store.drop_cache();
+    let ctx = ReadCtx { threads, ..ReadCtx::default() };
+    let accounts: Vec<IoAccount> = (0..threads).map(|_| IoAccount::new()).collect();
+    let loaded = format.load_full(store, base, ctx, &accounts)?;
+    Ok(LoadMeasurement::from_accounts(&accounts, loaded.num_edges(), 0.0))
+}
+
+/// ParaGrapher-style load: plan vertex-aligned blocks of `buffer_edges`,
+/// deal them round-robin to `workers` decoder workers, decode each block
+/// selectively, charge a `dispatch_latency` per block (the paper's §5.5
+/// scheduler-poll cost), and compose as max over workers plus the
+/// sequential metadata phase. Optionally cap physical `cores`.
+#[allow(clippy::too_many_arguments)]
+pub fn modeled_paragrapher_load(
+    store: &SimStore,
+    base: &str,
+    workers: usize,
+    buffer_edges: u64,
+    scan: &dyn ScanEngine,
+    dispatch_latency: f64,
+    cores: Option<usize>,
+) -> Result<ParagrapherLoad> {
+    store.drop_cache();
+    let ctx = ReadCtx { threads: workers, ..ReadCtx::default() };
+
+    // Sequential metadata phase (§5.6) — a single reader, so its I/O is
+    // charged at single-stream bandwidth.
+    let seq_ctx = ReadCtx { threads: 1, ..ctx };
+    let seq_acct = IoAccount::new();
+    let meta = seq_acct.time_cpu(|| webgraph::read_meta(store, base, seq_ctx, &seq_acct))?;
+    let offsets =
+        seq_acct.time_cpu(|| webgraph::read_offsets(store, base, seq_ctx, &seq_acct))?;
+    let sequential = seq_acct.elapsed_seconds();
+
+    // Plan blocks.
+    let n = meta.num_vertices;
+    let offs = &offsets.edge_offsets;
+    let mut blocks: Vec<(usize, usize)> = Vec::new();
+    let mut v = 0usize;
+    while v < n {
+        let limit = offs[v] + buffer_edges.max(1);
+        let mut end = offs.partition_point(|&e| e <= limit) - 1;
+        end = end.clamp(v + 1, n);
+        blocks.push((v, end));
+        v = end;
+    }
+
+    // Round-robin to workers; decode sequentially per worker. The device
+    // sees at most min(workers, blocks) concurrent readers — using the
+    // declared worker count when blocks are few would overcharge seek
+    // interleaving on spindle devices.
+    let effective = workers.max(1).min(blocks.len().max(1));
+    // Workers read round-robin-assigned blocks: scattered, not sequential —
+    // the device model charges real seeks per request.
+    let ctx = ReadCtx { threads: effective, sequential: effective == 1, ..ctx };
+    let accounts: Vec<IoAccount> = (0..workers.max(1)).map(|_| IoAccount::new()).collect();
+    let mut edges = 0u64;
+    for (i, &(bs, be)) in blocks.iter().enumerate() {
+        let acct = &accounts[i % accounts.len()];
+        let dec = webgraph::Decoder::open(store, base, &meta, &offsets, ctx, acct)?;
+        let block = acct.time_cpu(|| dec.decode_range_with_scan(bs, be, acct, scan))?;
+        edges += block.num_edges();
+        acct.charge_io(dispatch_latency, 0); // scheduler roundtrip per block
+    }
+    if std::env::var("PG_DEBUG_ACCOUNTS").is_ok() {
+        for (i, a) in accounts.iter().enumerate() {
+            if a.elapsed_seconds() > 0.0 {
+                eprintln!(
+                    "    worker {i}: io={:.4}s cpu={:.4}s bytes={} reqs={}",
+                    a.io_seconds(), a.cpu_seconds(), a.bytes_read(), a.requests()
+                );
+            }
+        }
+    }
+    let parallel = match cores {
+        Some(c) => phase_elapsed_with_cores(&accounts, c),
+        None => phase_elapsed(&accounts),
+    };
+    let device_bytes: u64 =
+        accounts.iter().map(|a| a.bytes_read()).sum::<u64>() + seq_acct.bytes_read();
+    Ok(ParagrapherLoad {
+        measurement: LoadMeasurement {
+            elapsed: sequential + parallel,
+            edges,
+            device_bytes,
+        },
+        sequential_seconds: sequential,
+        parallel_seconds: parallel,
+        blocks: blocks.len(),
+    })
+}
+
+/// Result of a modeled ParaGrapher load.
+#[derive(Debug, Clone, Copy)]
+pub struct ParagrapherLoad {
+    pub measurement: LoadMeasurement,
+    pub sequential_seconds: f64,
+    pub parallel_seconds: f64,
+    pub blocks: usize,
+}
+
+/// In-memory bytes a full uncompressed load needs (the OOM model for the
+/// "-1" bars of Figs. 5/6): offsets (u64) + edges (u32).
+pub fn full_load_memory_bytes(num_vertices: usize, num_edges: u64) -> u64 {
+    (num_vertices as u64 + 1) * 8 + num_edges * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::runtime::NativeScan;
+    use crate::storage::DeviceKind;
+
+    #[test]
+    fn paragrapher_load_counts_all_edges() {
+        let g = generators::barabasi_albert(1000, 5, 3);
+        let store = SimStore::new(DeviceKind::Hdd);
+        FormatKind::WebGraph.write_to_store(&g, &store, "g");
+        let r =
+            modeled_paragrapher_load(&store, "g", 4, 2048, &NativeScan, 0.0, None).unwrap();
+        assert_eq!(r.measurement.edges, g.num_edges());
+        assert!(r.blocks > 1);
+        assert!(r.sequential_seconds > 0.0);
+        assert!(r.parallel_seconds > 0.0);
+    }
+
+    #[test]
+    fn more_workers_less_modeled_time_on_parallel_device() {
+        let g = generators::barabasi_albert(3000, 8, 5);
+        let store = SimStore::new(DeviceKind::Ssd);
+        FormatKind::WebGraph.write_to_store(&g, &store, "g");
+        let one =
+            modeled_paragrapher_load(&store, "g", 1, 4096, &NativeScan, 0.0, None).unwrap();
+        let four =
+            modeled_paragrapher_load(&store, "g", 4, 4096, &NativeScan, 0.0, None).unwrap();
+        assert!(
+            four.parallel_seconds < one.parallel_seconds,
+            "4 workers {} vs 1 worker {}",
+            four.parallel_seconds,
+            one.parallel_seconds
+        );
+    }
+
+    #[test]
+    fn dispatch_latency_penalizes_small_buffers() {
+        let g = generators::barabasi_albert(2000, 6, 7);
+        let store = SimStore::new(DeviceKind::Ssd);
+        FormatKind::WebGraph.write_to_store(&g, &store, "g");
+        let small =
+            modeled_paragrapher_load(&store, "g", 2, 256, &NativeScan, 1e-3, None).unwrap();
+        let large =
+            modeled_paragrapher_load(&store, "g", 2, 1 << 20, &NativeScan, 1e-3, None)
+                .unwrap();
+        assert!(small.blocks > large.blocks * 4);
+        assert!(
+            small.measurement.elapsed > large.measurement.elapsed,
+            "small buffers pay dispatch: {} vs {}",
+            small.measurement.elapsed,
+            large.measurement.elapsed
+        );
+    }
+
+    #[test]
+    fn oom_model() {
+        assert!(full_load_memory_bytes(1000, 1_000_000) > 4_000_000);
+    }
+}
+
+#[cfg(test)]
+mod probe {
+    use super::*;
+    use crate::graph::generators::Dataset;
+    use crate::runtime::NativeScan;
+    use crate::storage::DeviceKind;
+
+    #[test]
+    fn dbg_probe_tw_hdd() {
+        for ds in [Dataset::Tw, Dataset::Cw] {
+        let g = ds.generate(2, 42);
+        let store = SimStore::new_scaled(DeviceKind::Hdd);
+        let wg = FormatKind::WebGraph.write_to_store(&g, &store, "w");
+        let bin = FormatKind::BinCsx.write_to_store(&g, &store, "b");
+        eprintln!("edges={} wg_bytes={} bin_bytes={}", g.num_edges(), wg, bin);
+        store.drop_cache();
+        for workers in [9usize, 36] {
+        let r = modeled_paragrapher_load(&store, "w", workers, 64 << 10, &NativeScan, 2e-3, None).unwrap();
+        eprintln!(
+            "wg: seq={:.4}s par={:.4}s blocks={} meps={:.1} bytes={}",
+            r.sequential_seconds, r.parallel_seconds, r.blocks,
+            r.measurement.me_per_sec(), r.measurement.device_bytes
+        );
+        }
+        let m = modeled_full_load(&store, "b", FormatKind::BinCsx, 8).unwrap();
+        eprintln!("bin: elapsed={:.4}s meps={:.1} bytes={}", m.elapsed, m.me_per_sec(), m.device_bytes);
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Configuration: a TOML-subset file format plus CLI-style overrides.
+//!
+//! Experiments are driven by key=value settings (dataset scale, device,
+//! thread counts, buffer sizes, format lists). The parser supports the
+//! subset of TOML the configs need: `[sections]`, `key = value` with
+//! strings, integers, floats, booleans and flat arrays, and `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat config: `section.key` -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set key=value`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (k, v) = spec.split_once('=').context("override must be key=value")?;
+        self.values.insert(k.trim().to_string(), parse_value(v.trim(), 0)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn get_int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value> {
+    let t = text.trim();
+    if t.is_empty() {
+        bail!("line {lineno}: empty value");
+    }
+    if let Some(inner) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p, lineno)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare word: treat as string (ergonomic for device/format names).
+    Ok(Value::Str(t.to_string()))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # experiment config
+            scale = 2
+            [storage]
+            device = "HDD"
+            bandwidth = 160.5   # MB/s
+            cache = true
+            [load]
+            formats = ["webgraph", "bin_csx"]
+            threads = [1, 18, 36]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_int("scale", 0), 2);
+        assert_eq!(cfg.get_str("storage.device", ""), "HDD");
+        assert!((cfg.get_float("storage.bandwidth", 0.0) - 160.5).abs() < 1e-9);
+        assert!(cfg.get_bool("storage.cache", false));
+        match cfg.get("load.threads") {
+            Some(Value::List(items)) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[2].as_int(), Some(36));
+            }
+            other => panic!("bad list: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bare_words_are_strings() {
+        let cfg = Config::parse("device = SSD\n").unwrap();
+        assert_eq!(cfg.get_str("device", ""), "SSD");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = Config::parse("a = 1\n").unwrap();
+        cfg.set_override("a=5").unwrap();
+        cfg.set_override("b.c=\"x\"").unwrap();
+        assert_eq!(cfg.get_int("a", 0), 5);
+        assert_eq!(cfg.get_str("b.c", ""), "x");
+        assert!(cfg.set_override("nope").is_err());
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let cfg = Config::default();
+        assert_eq!(cfg.get_int("x", 7), 7);
+        assert_eq!(cfg.get_str("y", "d"), "d");
+    }
+
+    #[test]
+    fn bad_syntax_is_error() {
+        assert!(Config::parse("just a line\n").is_err());
+        assert!(Config::parse("k =\n").is_err());
+    }
+}

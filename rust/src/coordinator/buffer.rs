@@ -1,0 +1,299 @@
+//! The 5-status shared-buffer protocol (§4.4).
+//!
+//! ParaGrapher's C front-end and Java back-end communicate through shared
+//! buffers whose `status` field is written by exactly one side per
+//! transition and only observed by the other:
+//!
+//! ```text
+//!  C_IDLE ──(consumer sets metadata)──▶ C_REQUESTED
+//!  C_REQUESTED ──(producer claims)────▶ J_READING
+//!  J_READING ──(producer fills)───────▶ J_READ_COMPLETED
+//!  J_READ_COMPLETED ──(consumer)──────▶ C_USER_ACCESS
+//!  C_USER_ACCESS ──(user releases)────▶ C_IDLE
+//! ```
+//!
+//! In our Rust coordinator the "C side" is the request manager and the
+//! "Java side" is the decoder worker pool; the protocol is kept verbatim —
+//! including the property the paper argues correctness from: each status
+//! value has a unique writer, and the writer orders its data writes before
+//! the status store (Release) while observers read it with Acquire.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::graph::{VertexId, Weight};
+
+/// Buffer lifecycle status. Discriminants are stable (used in metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum BufferStatus {
+    /// Ready to be allocated for reading an edge block.
+    CIdle = 0,
+    /// Metadata set; producer may start reading.
+    CRequested = 1,
+    /// Producer worker is decoding into the buffer.
+    JReading = 2,
+    /// Producer finished; consumer may hand it to the user.
+    JReadCompleted = 3,
+    /// User owns the buffer until release.
+    CUserAccess = 4,
+}
+
+impl BufferStatus {
+    pub fn from_u8(v: u8) -> BufferStatus {
+        match v {
+            0 => BufferStatus::CIdle,
+            1 => BufferStatus::CRequested,
+            2 => BufferStatus::JReading,
+            3 => BufferStatus::JReadCompleted,
+            4 => BufferStatus::CUserAccess,
+            _ => unreachable!("invalid buffer status {v}"),
+        }
+    }
+
+    /// Legal transitions (enforced in debug builds and by tests).
+    pub fn can_transition_to(self, next: BufferStatus) -> bool {
+        use BufferStatus::*;
+        matches!(
+            (self, next),
+            (CIdle, CRequested)
+                | (CRequested, JReading)
+                | (JReading, JReadCompleted)
+                | (JReadCompleted, CUserAccess)
+                | (CUserAccess, CIdle)
+                // Failure/cancel paths: the buffer is returned directly.
+                | (JReading, CIdle)
+                | (CRequested, CIdle)
+                | (JReadCompleted, CIdle)
+        )
+    }
+}
+
+/// Block metadata (§4.4: "the start and end vertex and edges").
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockMeta {
+    pub start_vertex: usize,
+    pub end_vertex: usize,
+    pub start_edge: u64,
+    pub end_edge: u64,
+}
+
+impl BlockMeta {
+    pub fn num_edges(&self) -> u64 {
+        self.end_edge - self.start_edge
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.end_vertex - self.start_vertex
+    }
+}
+
+/// One reusable shared buffer.
+pub struct Buffer {
+    pub id: usize,
+    status: AtomicU8,
+    /// Filled by the producer side while J_READING; read by the user while
+    /// C_USER_ACCESS. The status protocol serializes access.
+    pub meta: parking::Mutex<BlockMeta>,
+    pub data: parking::Mutex<BufferData>,
+}
+
+/// Decoded contents of a buffer (a CSR slice, like `DecodedBlock` but with
+/// library-owned reusable storage).
+#[derive(Debug, Default)]
+pub struct BufferData {
+    /// Local offsets (`meta.num_vertices()+1` entries when filled).
+    pub offsets: Vec<u64>,
+    pub edges: Vec<VertexId>,
+    pub weights: Vec<Weight>,
+}
+
+impl BufferData {
+    pub fn clear(&mut self) {
+        self.offsets.clear();
+        self.edges.clear();
+        self.weights.clear();
+    }
+}
+
+// Minimal Mutex alias module so the hot path can swap implementations in
+// one place (std parking-lot-style crates are unavailable offline).
+pub mod parking {
+    pub type Mutex<T> = std::sync::Mutex<T>;
+}
+
+impl Buffer {
+    pub fn new(id: usize) -> Self {
+        Self {
+            id,
+            status: AtomicU8::new(BufferStatus::CIdle as u8),
+            meta: parking::Mutex::new(BlockMeta::default()),
+            data: parking::Mutex::new(BufferData::default()),
+        }
+    }
+
+    pub fn status(&self) -> BufferStatus {
+        BufferStatus::from_u8(self.status.load(Ordering::Acquire))
+    }
+
+    /// Transition the status; panics (debug) on illegal transitions.
+    pub fn set_status(&self, next: BufferStatus) {
+        let cur = self.status();
+        debug_assert!(
+            cur.can_transition_to(next),
+            "illegal buffer transition {cur:?} -> {next:?}"
+        );
+        self.status.store(next as u8, Ordering::Release);
+    }
+
+    /// CAS-claim: the producer scheduler uses this so two pollers can never
+    /// claim the same requested buffer.
+    pub fn try_claim(&self, from: BufferStatus, to: BufferStatus) -> bool {
+        debug_assert!(from.can_transition_to(to));
+        self.status
+            .compare_exchange(from as u8, to as u8, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+}
+
+/// The pool of reusable buffers ("number of buffers" × "buffer size" are
+/// the two knobs of §5.5 / Fig. 8).
+pub struct BufferPool {
+    buffers: Vec<Buffer>,
+}
+
+impl BufferPool {
+    pub fn new(count: usize) -> Self {
+        Self { buffers: (0..count.max(1)).map(Buffer::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> &Buffer {
+        &self.buffers[id]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Buffer> {
+        self.buffers.iter()
+    }
+
+    /// Find and claim an idle buffer (C_IDLE -> C_REQUESTED), setting its
+    /// metadata. Returns the buffer id.
+    pub fn request_idle(&self, meta: BlockMeta) -> Option<usize> {
+        for b in &self.buffers {
+            if b.status() == BufferStatus::CIdle {
+                // Set metadata BEFORE publishing the status change — the
+                // paper's rule: the status store is the last write.
+                {
+                    let mut m = b.meta.lock().expect("meta lock");
+                    *m = meta;
+                }
+                if b.try_claim(BufferStatus::CIdle, BufferStatus::CRequested) {
+                    return Some(b.id);
+                }
+            }
+        }
+        None
+    }
+
+    /// Count buffers in a given status (metrics / tests).
+    pub fn count(&self, status: BufferStatus) -> usize {
+        self.buffers.iter().filter(|b| b.status() == status).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_cycle() {
+        let b = Buffer::new(0);
+        assert_eq!(b.status(), BufferStatus::CIdle);
+        b.set_status(BufferStatus::CRequested);
+        b.set_status(BufferStatus::JReading);
+        b.set_status(BufferStatus::JReadCompleted);
+        b.set_status(BufferStatus::CUserAccess);
+        b.set_status(BufferStatus::CIdle);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal buffer transition")]
+    fn illegal_transition_panics_in_debug() {
+        let b = Buffer::new(0);
+        b.set_status(BufferStatus::JReadCompleted);
+    }
+
+    #[test]
+    fn failure_path_allowed() {
+        let b = Buffer::new(0);
+        b.set_status(BufferStatus::CRequested);
+        b.set_status(BufferStatus::JReading);
+        b.set_status(BufferStatus::CIdle); // worker error returns the buffer
+    }
+
+    #[test]
+    fn claim_is_exclusive() {
+        let b = Buffer::new(0);
+        b.set_status(BufferStatus::CRequested);
+        assert!(b.try_claim(BufferStatus::CRequested, BufferStatus::JReading));
+        assert!(!b.try_claim(BufferStatus::CRequested, BufferStatus::JReading));
+    }
+
+    #[test]
+    fn pool_request_idle_sets_meta() {
+        let pool = BufferPool::new(2);
+        let meta = BlockMeta { start_vertex: 3, end_vertex: 9, start_edge: 10, end_edge: 99 };
+        let id = pool.request_idle(meta).unwrap();
+        let b = pool.get(id);
+        assert_eq!(b.status(), BufferStatus::CRequested);
+        assert_eq!(*b.meta.lock().unwrap(), meta);
+        assert_eq!(pool.count(BufferStatus::CIdle), 1);
+        // Exhaust the pool.
+        assert!(pool.request_idle(meta).is_some());
+        assert!(pool.request_idle(meta).is_none(), "no idle buffers left");
+    }
+
+    #[test]
+    fn transition_table() {
+        use BufferStatus::*;
+        for s in [CIdle, CRequested, JReading, JReadCompleted, CUserAccess] {
+            // No self-loops.
+            assert!(!s.can_transition_to(s));
+        }
+        assert!(CIdle.can_transition_to(CRequested));
+        assert!(!CIdle.can_transition_to(JReading));
+        assert!(!CUserAccess.can_transition_to(CRequested));
+        assert!(CUserAccess.can_transition_to(CIdle));
+    }
+
+    #[test]
+    fn concurrent_claims_race_safely() {
+        let pool = std::sync::Arc::new(BufferPool::new(4));
+        let meta = BlockMeta::default();
+        let mut handles = Vec::new();
+        let claimed = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        for _ in 0..8 {
+            let pool = std::sync::Arc::clone(&pool);
+            let claimed = std::sync::Arc::clone(&claimed);
+            handles.push(std::thread::spawn(move || {
+                if let Some(id) = pool.request_idle(meta) {
+                    claimed.lock().unwrap().push(id);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = claimed.lock().unwrap().clone();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), claimed.lock().unwrap().len(), "no double-claims");
+        assert_eq!(got.len(), 4, "exactly the pool size claimed");
+    }
+}

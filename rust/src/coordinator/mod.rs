@@ -1,0 +1,616 @@
+//! The ParaGrapher coordinator — the paper's system contribution (§4).
+//!
+//! The public API mirrors Appendix A:
+//!
+//! | paper                            | here                                   |
+//! |----------------------------------|----------------------------------------|
+//! | `paragrapher_init`               | [`Paragrapher::init`]                  |
+//! | `paragrapher_open_graph`         | [`Paragrapher::open_graph`]            |
+//! | `paragrapher_get_set_options`    | [`PgGraph::options`] / [`PgGraph::set_options`] + request queries |
+//! | `csx_get_offsets`                | [`PgGraph::csx_get_offsets`]           |
+//! | `csx_get_vertex_weights`         | [`PgGraph::csx_get_vertex_weights`]    |
+//! | `csx_get_subgraph` (async)       | [`PgGraph::csx_get_subgraph`]          |
+//! | `csx_get_subgraph` (blocking)    | [`PgGraph::csx_get_subgraph_sync`]     |
+//! | `coo_get_edges`                  | [`PgGraph::coo_get_edges`]             |
+//! | `csx_release_read_buffers`       | automatic at callback return (RAII)    |
+//! | `paragrapher_release_graph`      | [`Paragrapher::release_graph`] / Drop  |
+//!
+//! Internally the coordinator implements §4.4's consumer–producer design:
+//! the *request manager* ("C side") claims idle buffers and publishes block
+//! metadata; the *decoder worker pool* ("Java side") observes requested
+//! buffers, decodes the block, and publishes completion; a *callback
+//! executor* hands completed buffers to the user and recycles them. All
+//! handoffs go through the 5-status protocol in [`buffer`].
+
+pub mod buffer;
+pub mod request;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
+use crate::graph::VertexId;
+use crate::runtime::ScanEngine;
+use crate::storage::sim::ReadCtx;
+use crate::storage::{IoAccount, SimStore};
+use crate::util::pool::ThreadPool;
+use buffer::{BlockMeta, BufferPool, BufferStatus};
+pub use request::{EdgeBlock, ReadRequest, VertexRange};
+
+/// Graph types (paper Table 2). The trailing `_AP` of the paper's names
+/// (Asynchronous, Parallel) is the coordinator's operating mode here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphType {
+    /// 4-byte vertex IDs, unweighted (`CSX_WG_400_AP`).
+    CsxWg400,
+    /// 8-byte vertex IDs, unweighted (`CSX_WG_800_AP`); accepted and served
+    /// through the same u32-backed path while |V| < 2^32 (as in the paper).
+    CsxWg800,
+    /// 4-byte vertex IDs + 4-byte edge weights (`CSX_WG_404_AP`).
+    CsxWg404,
+}
+
+impl GraphType {
+    pub fn weighted(&self) -> bool {
+        matches!(self, GraphType::CsxWg404)
+    }
+
+    pub fn parse(s: &str) -> Option<GraphType> {
+        match s.to_ascii_uppercase().as_str() {
+            "CSX_WG_400_AP" | "WG400" => Some(GraphType::CsxWg400),
+            "CSX_WG_800_AP" | "WG800" => Some(GraphType::CsxWg800),
+            "CSX_WG_404_AP" | "WG404" => Some(GraphType::CsxWg404),
+            _ => None,
+        }
+    }
+}
+
+/// Library options (`get_set_options`): the two Fig. 8 knobs plus the read
+/// context and the decode engine.
+#[derive(Clone)]
+pub struct Options {
+    /// Edges per buffer (paper default: 64 M; scaled default here).
+    pub buffer_edges: u64,
+    /// Number of buffers == number of decoder workers (§4.4: "the number of
+    /// buffers ... specifies the number of parallel threads").
+    pub buffers: usize,
+    /// Declared I/O pattern for the storage model.
+    pub read_ctx: ReadCtx,
+    /// Scan engine for the gap→ID phase (native Rust or the AOT-compiled
+    /// XLA/Pallas executable).
+    pub scan: Arc<dyn ScanEngine>,
+    /// Poll interval of the request manager when all buffers are busy.
+    pub poll_interval: Duration,
+}
+
+impl std::fmt::Debug for Options {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Options")
+            .field("buffer_edges", &self.buffer_edges)
+            .field("buffers", &self.buffers)
+            .field("scan", &self.scan.name())
+            .finish()
+    }
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            buffer_edges: 1 << 20,
+            buffers: 4,
+            read_ctx: ReadCtx::default(),
+            scan: Arc::new(crate::runtime::NativeScan),
+            poll_interval: Duration::from_micros(200),
+        }
+    }
+}
+
+/// The library instance (`paragrapher_init`).
+pub struct Paragrapher {
+    /// Formats the library discovered "iterating over its inner files"
+    /// (§A.1) — here a static registry.
+    supported: Vec<GraphType>,
+}
+
+impl Default for Paragrapher {
+    fn default() -> Self {
+        Self::init()
+    }
+}
+
+impl Paragrapher {
+    pub fn init() -> Self {
+        Self {
+            supported: vec![GraphType::CsxWg400, GraphType::CsxWg800, GraphType::CsxWg404],
+        }
+    }
+
+    pub fn supported_types(&self) -> &[GraphType] {
+        &self.supported
+    }
+
+    /// Open a graph stored under `base` in `store` (`paragrapher_open_graph`).
+    ///
+    /// Loads the metadata and the binary offsets sidecar — the *sequential*
+    /// phase whose cost §5.6 identifies as the scalability limit; its time
+    /// is recorded in [`PgGraph::stats`].
+    pub fn open_graph(
+        &self,
+        store: Arc<SimStore>,
+        base: &str,
+        gtype: GraphType,
+        options: Options,
+    ) -> Result<PgGraph> {
+        if !self.supported.contains(&gtype) {
+            bail!("unsupported graph type {gtype:?}");
+        }
+        let t0 = Instant::now();
+        let meta_acct = IoAccount::new();
+        let meta = webgraph::read_meta(&store, base, options.read_ctx, &meta_acct)?;
+        if gtype.weighted() && !meta.weighted {
+            bail!("{base}: opened as weighted (WG404) but dataset has no weights");
+        }
+        let offsets = webgraph::read_offsets(&store, base, options.read_ctx, &meta_acct)?;
+        let sequential_cpu = t0.elapsed().as_secs_f64();
+        let sequential_io = meta_acct.io_seconds();
+
+        let workers = ThreadPool::new(options.buffers);
+        let callbacks = ThreadPool::new(2);
+        let inner = Arc::new(GraphInner {
+            store,
+            base: base.to_string(),
+            gtype,
+            meta,
+            offsets,
+            pool: BufferPool::new(options.buffers),
+            options: Mutex::new(options),
+            stats: GraphStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        inner.stats.sequential_seconds.store(
+            ((sequential_cpu + sequential_io) * 1e9) as u64,
+            Ordering::Relaxed,
+        );
+        Ok(PgGraph {
+            inner,
+            workers: Arc::new(workers),
+            callbacks: Arc::new(callbacks),
+            dispatchers: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Release a graph (`paragrapher_release_graph`): joins library threads
+    /// and drops the simulated OS cache — §4.1's "return the computational
+    /// resources as they were before calling".
+    pub fn release_graph(&self, graph: PgGraph) {
+        graph.release();
+    }
+}
+
+/// Cumulative per-graph statistics.
+#[derive(Debug, Default)]
+pub struct GraphStats {
+    /// Sequential metadata-load phase, nanoseconds (§5.6).
+    pub sequential_seconds: AtomicU64,
+    pub blocks_decoded: AtomicU64,
+    pub edges_decoded: AtomicU64,
+    pub requests_issued: AtomicU64,
+}
+
+struct GraphInner {
+    store: Arc<SimStore>,
+    base: String,
+    gtype: GraphType,
+    meta: WgMeta,
+    offsets: WgOffsets,
+    pool: BufferPool,
+    options: Mutex<Options>,
+    stats: GraphStats,
+    shutdown: AtomicBool,
+}
+
+/// An opened graph (`paragrapher_graph*`).
+pub struct PgGraph {
+    inner: Arc<GraphInner>,
+    workers: Arc<ThreadPool>,
+    callbacks: Arc<ThreadPool>,
+    dispatchers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// User callback invoked per completed edge block. The buffer is recycled
+/// when the callback returns (`csx_release_read_buffers` is automatic).
+pub type BlockCallback = Arc<dyn Fn(&EdgeBlock<'_>) + Send + Sync>;
+
+impl PgGraph {
+    pub fn num_vertices(&self) -> usize {
+        self.inner.meta.num_vertices
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.inner.meta.num_edges
+    }
+
+    pub fn graph_type(&self) -> GraphType {
+        self.inner.gtype
+    }
+
+    pub fn stats(&self) -> &GraphStats {
+        &self.inner.stats
+    }
+
+    /// Seconds spent in the sequential open phase (§5.6).
+    pub fn sequential_seconds(&self) -> f64 {
+        self.inner.stats.sequential_seconds.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn options(&self) -> Options {
+        self.inner.options.lock().expect("options lock").clone()
+    }
+
+    /// Set options; takes effect for subsequent requests. (The buffer pool
+    /// and worker count are fixed at open time, as in the library, where
+    /// "the user may change these values" *before* starting to read.)
+    pub fn set_options(&self, f: impl FnOnce(&mut Options)) {
+        let mut o = self.inner.options.lock().expect("options lock");
+        f(&mut o);
+    }
+
+    /// `csx_get_offsets`: the CSR offsets of `[start, end]` vertices —
+    /// an O(|V|) sidecar slice, no graph data touched (§6).
+    pub fn csx_get_offsets(&self, start_vertex: usize, end_vertex: usize) -> Result<Vec<u64>> {
+        let n = self.inner.meta.num_vertices;
+        if start_vertex > end_vertex || end_vertex > n {
+            bail!("bad vertex range {start_vertex}..{end_vertex}");
+        }
+        Ok(self.inner.offsets.edge_offsets[start_vertex..=end_vertex].to_vec())
+    }
+
+    /// `csx_get_vertex_weights`: none of the paper's shipped WebGraph types
+    /// carry vertex weights (Table 2) — kept for API parity.
+    pub fn csx_get_vertex_weights(&self, _start: usize, _end: usize) -> Result<Vec<f32>> {
+        bail!("vertex-weighted WebGraph types are not published (Table 2: weight size 0)")
+    }
+
+    /// Split a vertex range into blocks of at most `buffer_edges` edges
+    /// (vertex-aligned; a single vertex larger than the buffer gets its own
+    /// oversized block).
+    fn plan_blocks(&self, range: VertexRange, buffer_edges: u64) -> Vec<BlockMeta> {
+        let offs = &self.inner.offsets.edge_offsets;
+        let mut blocks = Vec::new();
+        let mut v = range.start;
+        while v < range.end {
+            let start_edge = offs[v];
+            // Largest end with offs[end] - start_edge <= buffer_edges.
+            let limit = start_edge + buffer_edges;
+            let mut end = offs.partition_point(|&e| e <= limit) - 1;
+            end = end.min(range.end).max(v + 1);
+            blocks.push(BlockMeta {
+                start_vertex: v,
+                end_vertex: end,
+                start_edge,
+                end_edge: offs[end],
+            });
+            v = end;
+        }
+        blocks
+    }
+
+    /// `csx_get_subgraph`, asynchronous: returns immediately; `callback`
+    /// runs on a library thread per completed block.
+    pub fn csx_get_subgraph(
+        &self,
+        range: VertexRange,
+        callback: BlockCallback,
+    ) -> Result<Arc<ReadRequest>> {
+        let n = self.inner.meta.num_vertices;
+        if range.start > range.end || range.end > n {
+            bail!("bad vertex range {}..{}", range.start, range.end);
+        }
+        let opts = self.options();
+        let blocks = self.plan_blocks(range, opts.buffer_edges.max(1));
+        let req = Arc::new(ReadRequest::new(blocks.len() as u64));
+        self.inner.stats.requests_issued.fetch_add(1, Ordering::Relaxed);
+
+        let inner = Arc::clone(&self.inner);
+        let workers = Arc::clone(&self.workers);
+        let callbacks = Arc::clone(&self.callbacks);
+        let req2 = Arc::clone(&req);
+        // The request manager ("C side"): claims idle buffers and publishes
+        // block requests; a library thread so the call returns immediately.
+        let handle = std::thread::Builder::new()
+            .name("pg-request-manager".into())
+            .spawn(move || {
+                for meta in blocks {
+                    if req2.is_cancelled() || inner.shutdown.load(Ordering::Acquire) {
+                        req2.record_block(0);
+                        continue;
+                    }
+                    // Wait for an idle buffer (the paper's tracking of free
+                    // buffers in place of a queue).
+                    let buffer_id = loop {
+                        match inner.pool.request_idle(meta) {
+                            Some(id) => break Some(id),
+                            None => {
+                                if inner.shutdown.load(Ordering::Acquire) {
+                                    break None;
+                                }
+                                std::thread::sleep(opts.poll_interval);
+                            }
+                        }
+                    };
+                    let Some(buffer_id) = buffer_id else {
+                        req2.record_block(0);
+                        continue;
+                    };
+                    // Producer side ("Java"): decode the block on a worker.
+                    let inner = Arc::clone(&inner);
+                    let callbacks = Arc::clone(&callbacks);
+                    let req3 = Arc::clone(&req2);
+                    let callback = Arc::clone(&callback);
+                    let scan = Arc::clone(&opts.scan);
+                    let read_ctx = opts.read_ctx;
+                    workers.execute(move || {
+                        let decoded = decode_into_buffer(
+                            &inner, buffer_id, meta, read_ctx, scan.as_ref(), &req3,
+                        );
+                        if !decoded {
+                            return; // decode failed: buffer already recycled
+                        }
+                        if req3.is_failed() || req3.is_cancelled() {
+                            // Another block failed or the user cancelled:
+                            // recycle the buffer and account this block so
+                            // waiters terminate (no buffer may be leaked in
+                            // J_READ_COMPLETED — that would wedge the pool).
+                            let buf = inner.pool.get(buffer_id);
+                            buf.set_status(BufferStatus::CIdle);
+                            req3.record_block(0);
+                            return;
+                        }
+                        // Consumer side observes completion and runs the
+                        // user callback on a callback thread.
+                        let inner2 = Arc::clone(&inner);
+                        let req4 = Arc::clone(&req3);
+                        callbacks.execute(move || {
+                            run_user_callback(&inner2, buffer_id, meta, &callback, &req4);
+                        });
+                    });
+                }
+            })
+            .context("spawn request manager")?;
+        self.dispatchers.lock().expect("dispatchers lock").push(handle);
+        Ok(req)
+    }
+
+    /// `csx_get_subgraph`, blocking: waits for completion and returns the
+    /// assembled subgraph (Fig. 2's synchronous call).
+    pub fn csx_get_subgraph_sync(&self, range: VertexRange) -> Result<DecodedBlock> {
+        #[allow(clippy::type_complexity)]
+        let collected: Arc<Mutex<Vec<(usize, Vec<u64>, Vec<VertexId>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let c2 = Arc::clone(&collected);
+        let req = self.csx_get_subgraph(
+            range,
+            Arc::new(move |blk: &EdgeBlock<'_>| {
+                c2.lock().expect("collect lock").push((
+                    blk.start_vertex,
+                    blk.offsets.to_vec(),
+                    blk.edges.to_vec(),
+                ));
+            }),
+        )?;
+        req.wait();
+        if let Some(e) = req.error() {
+            bail!("load failed: {e}");
+        }
+        let mut parts = collected.lock().expect("collect lock");
+        parts.sort_by_key(|(sv, _, _)| *sv);
+        let mut block = DecodedBlock {
+            first_vertex: range.start,
+            offsets: vec![0],
+            edges: Vec::new(),
+        };
+        for (_, offs, edges) in parts.iter() {
+            let base = block.edges.len() as u64;
+            block.edges.extend_from_slice(edges);
+            block.offsets.extend(offs.iter().skip(1).map(|o| base + o));
+        }
+        Ok(block)
+    }
+
+    /// `coo_get_edges`: edge-granular request `[start_edge, end_edge)` —
+    /// the finest-granularity base of §4.2. Blocks are delivered with the
+    /// first/last vertex lists trimmed to the requested edge range.
+    pub fn coo_get_edges(
+        &self,
+        start_edge: u64,
+        end_edge: u64,
+        callback: BlockCallback,
+    ) -> Result<Arc<ReadRequest>> {
+        let m = self.inner.meta.num_edges;
+        if start_edge > end_edge || end_edge > m {
+            bail!("bad edge range {start_edge}..{end_edge}");
+        }
+        let offs = &self.inner.offsets.edge_offsets;
+        // Vertex span covering the edge range.
+        let v_first = offs.partition_point(|&e| e <= start_edge).saturating_sub(1);
+        let v_last = offs.partition_point(|&e| e < end_edge);
+        let trim = move |blk: &EdgeBlock<'_>| -> Option<(Vec<u64>, Vec<VertexId>, usize, u64)> {
+            // Trim the block's edges to [start_edge, end_edge).
+            let blk_start = blk.start_edge;
+            let blk_end = blk.start_edge + blk.num_edges();
+            let lo = start_edge.max(blk_start);
+            let hi = end_edge.min(blk_end);
+            if lo >= hi {
+                return None;
+            }
+            let lo_local = (lo - blk_start) as usize;
+            let hi_local = (hi - blk_start) as usize;
+            let edges = blk.edges[lo_local..hi_local].to_vec();
+            // Rebase offsets to the trimmed window.
+            let mut offsets = Vec::with_capacity(blk.num_vertices() + 1);
+            let mut first_v = None;
+            for i in 0..blk.num_vertices() {
+                let (s, e) = (blk.offsets[i] as usize, blk.offsets[i + 1] as usize);
+                if e <= lo_local || s >= hi_local {
+                    continue;
+                }
+                if first_v.is_none() {
+                    first_v = Some(blk.start_vertex + i);
+                    offsets.push(0);
+                }
+                offsets.push((e.min(hi_local) - lo_local) as u64);
+            }
+            Some((offsets, edges, first_v.unwrap_or(blk.start_vertex), lo))
+        };
+        let user = callback;
+        let cb: BlockCallback = Arc::new(move |blk: &EdgeBlock<'_>| {
+            if let Some((offsets, edges, first_v, lo)) = trim(blk) {
+                let trimmed = EdgeBlock {
+                    buffer_id: blk.buffer_id,
+                    start_vertex: first_v,
+                    end_vertex: first_v + offsets.len().saturating_sub(1),
+                    start_edge: lo,
+                    offsets: &offsets,
+                    edges: &edges,
+                    weights: None,
+                };
+                user(&trimmed);
+            }
+        });
+        self.csx_get_subgraph(VertexRange::new(v_first, v_last.max(v_first)), cb)
+    }
+
+    /// Convenience: load the full graph through the block pipeline
+    /// (use case A, the Fig. 5 experiment).
+    pub fn load_whole_graph(&self) -> Result<DecodedBlock> {
+        self.csx_get_subgraph_sync(VertexRange::new(0, self.num_vertices()))
+    }
+
+    /// Join all library threads, drop the OS cache (§4.1 discipline).
+    pub fn release(self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        let handles: Vec<_> = {
+            let mut d = self.dispatchers.lock().expect("dispatchers lock");
+            d.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // Worker/callback pools join on drop (Arc: last owner joins).
+        self.inner.store.drop_cache();
+    }
+}
+
+impl Drop for PgGraph {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        let handles: Vec<_> = {
+            let mut d = self.dispatchers.lock().expect("dispatchers lock");
+            d.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Producer-side block decode: claim C_REQUESTED -> J_READING, fill the
+/// buffer, publish J_READ_COMPLETED (or fail back to C_IDLE). Returns true
+/// when the buffer holds a decoded block (status J_READ_COMPLETED).
+fn decode_into_buffer(
+    inner: &GraphInner,
+    buffer_id: usize,
+    meta: BlockMeta,
+    read_ctx: ReadCtx,
+    scan: &dyn ScanEngine,
+    req: &ReadRequest,
+) -> bool {
+    let buf = inner.pool.get(buffer_id);
+    if !buf.try_claim(BufferStatus::CRequested, BufferStatus::JReading) {
+        req.record_failure(format!("buffer {buffer_id} not in requested state"));
+        return false;
+    }
+    let acct = IoAccount::new();
+    let result = (|| -> Result<()> {
+        let dec = Decoder::open(
+            &inner.store,
+            &inner.base,
+            &inner.meta,
+            &inner.offsets,
+            read_ctx,
+            &acct,
+        )?;
+        let block = dec.decode_range_with_scan(meta.start_vertex, meta.end_vertex, &acct, scan)?;
+        let mut data = buf.data.lock().expect("data lock");
+        data.clear();
+        data.offsets.extend_from_slice(&block.offsets);
+        data.edges.extend_from_slice(&block.edges);
+        if inner.gtype.weighted() {
+            let name = format!("{}.weights", inner.base);
+            let file = inner
+                .store
+                .open(&name)
+                .with_context(|| format!("missing {name}"))?;
+            let bytes =
+                file.read(meta.start_edge * 4, meta.num_edges() * 4, read_ctx, &acct);
+            data.weights.extend(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        Ok(())
+    })();
+    match result {
+        Ok(()) => {
+            inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
+            inner.stats.edges_decoded.fetch_add(meta.num_edges(), Ordering::Relaxed);
+            buf.set_status(BufferStatus::JReadCompleted);
+            true
+        }
+        Err(e) => {
+            buf.set_status(BufferStatus::CIdle);
+            req.record_failure(e.to_string());
+            false
+        }
+    }
+}
+
+/// Consumer-side completion: J_READ_COMPLETED -> C_USER_ACCESS, run the
+/// user's callback, recycle the buffer to C_IDLE.
+fn run_user_callback(
+    inner: &GraphInner,
+    buffer_id: usize,
+    meta: BlockMeta,
+    callback: &BlockCallback,
+    req: &ReadRequest,
+) {
+    let buf = inner.pool.get(buffer_id);
+    if !buf.try_claim(BufferStatus::JReadCompleted, BufferStatus::CUserAccess) {
+        req.record_failure(format!("buffer {buffer_id} not completed"));
+        return;
+    }
+    {
+        let data = buf.data.lock().expect("data lock");
+        let blk = EdgeBlock {
+            buffer_id,
+            start_vertex: meta.start_vertex,
+            end_vertex: meta.end_vertex,
+            start_edge: meta.start_edge,
+            offsets: &data.offsets,
+            edges: &data.edges,
+            weights: if data.weights.is_empty() { None } else { Some(&data.weights) },
+        };
+        // User panics must not wedge the pipeline: catch, fail the request,
+        // still recycle the buffer.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| callback(&blk)));
+        if res.is_err() {
+            req.record_failure("user callback panicked".into());
+            buf.set_status(BufferStatus::CIdle);
+            return;
+        }
+    }
+    buf.set_status(BufferStatus::CIdle);
+    req.record_block(meta.num_edges());
+}

@@ -1,0 +1,242 @@
+//! Read requests and the user-facing edge-block views.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::graph::{VertexId, Weight};
+
+/// What the user asks for: a consecutive vertex range (CSX view) whose
+/// edges are delivered in blocks. `whole()` requests the entire graph
+/// (use case A); sub-ranges serve use cases B/C/D.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VertexRange {
+    pub start: usize,
+    /// Exclusive.
+    pub end: usize,
+}
+
+impl VertexRange {
+    pub fn new(start: usize, end: usize) -> Self {
+        Self { start, end }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// A delivered block of edges: a borrowed CSR slice over library buffers
+/// (§4.2: "storing data in reusable buffers allocated and managed by the
+/// library ... passed to the user").
+#[derive(Debug)]
+pub struct EdgeBlock<'a> {
+    pub buffer_id: usize,
+    pub start_vertex: usize,
+    pub end_vertex: usize,
+    /// Global index of the first edge in this block.
+    pub start_edge: u64,
+    /// Local offsets: `end_vertex - start_vertex + 1` entries from 0.
+    pub offsets: &'a [u64],
+    pub edges: &'a [VertexId],
+    /// Present for WG404-style edge-weighted graphs.
+    pub weights: Option<&'a [Weight]>,
+}
+
+impl<'a> EdgeBlock<'a> {
+    pub fn num_vertices(&self) -> usize {
+        self.end_vertex - self.start_vertex
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    /// Successors of global vertex `v` (must lie in the block).
+    pub fn neighbors(&self, v: usize) -> &'a [VertexId] {
+        debug_assert!(v >= self.start_vertex && v < self.end_vertex);
+        let i = v - self.start_vertex;
+        &self.edges[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Iterate `(src, dst)` pairs of the block.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices()).flat_map(move |i| {
+            let v = (self.start_vertex + i) as VertexId;
+            self.edges[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+                .iter()
+                .map(move |&d| (v, d))
+        })
+    }
+}
+
+/// Progress/completion tracking for one asynchronous read request — the
+/// handle `csx_get_subgraph` returns. `get_set_options`-style queries
+/// ("is loading completed, how many edges have been read", §4.3) map to
+/// [`Self::edges_delivered`] / [`Self::is_complete`].
+#[derive(Debug)]
+pub struct ReadRequest {
+    total_blocks: u64,
+    blocks_done: AtomicU64,
+    edges_delivered: AtomicU64,
+    failed: AtomicBool,
+    error: Mutex<Option<String>>,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+    cancelled: AtomicBool,
+}
+
+impl ReadRequest {
+    pub fn new(total_blocks: u64) -> Self {
+        Self {
+            total_blocks,
+            blocks_done: AtomicU64::new(0),
+            edges_delivered: AtomicU64::new(0),
+            failed: AtomicBool::new(false),
+            error: Mutex::new(None),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            cancelled: AtomicBool::new(false),
+        }
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.total_blocks
+    }
+
+    pub fn blocks_done(&self) -> u64 {
+        self.blocks_done.load(Ordering::Acquire)
+    }
+
+    pub fn edges_delivered(&self) -> u64 {
+        self.edges_delivered.load(Ordering::Acquire)
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.blocks_done() >= self.total_blocks
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    pub fn error(&self) -> Option<String> {
+        self.error.lock().expect("error lock").clone()
+    }
+
+    /// Cancel: outstanding blocks may still complete, but unscheduled ones
+    /// are dropped (counted as done so waiters wake).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Producer side: record one completed block of `edges` edges.
+    pub fn record_block(&self, edges: u64) {
+        self.edges_delivered.fetch_add(edges, Ordering::AcqRel);
+        let done = self.blocks_done.fetch_add(1, Ordering::AcqRel) + 1;
+        if done >= self.total_blocks {
+            let _g = self.done_mx.lock().expect("done lock");
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Producer side: record a failed block.
+    pub fn record_failure(&self, message: String) {
+        {
+            let mut e = self.error.lock().expect("error lock");
+            e.get_or_insert(message);
+        }
+        self.failed.store(true, Ordering::Release);
+        self.record_block(0);
+    }
+
+    /// Block until all blocks are done (the blocking-mode primitive).
+    pub fn wait(&self) {
+        let mut g = self.done_mx.lock().expect("done lock");
+        while !self.is_complete() {
+            let (ng, _timeout) = self
+                .done_cv
+                .wait_timeout(g, std::time::Duration::from_millis(50))
+                .expect("cv wait");
+            g = ng;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn progress_accounting() {
+        let r = ReadRequest::new(3);
+        assert!(!r.is_complete());
+        r.record_block(10);
+        r.record_block(20);
+        assert_eq!(r.edges_delivered(), 30);
+        assert_eq!(r.blocks_done(), 2);
+        assert!(!r.is_complete());
+        r.record_block(5);
+        assert!(r.is_complete());
+        assert_eq!(r.edges_delivered(), 35);
+    }
+
+    #[test]
+    fn wait_unblocks_on_completion() {
+        let r = Arc::new(ReadRequest::new(2));
+        let r2 = Arc::clone(&r);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            r2.record_block(1);
+            r2.record_block(1);
+        });
+        r.wait();
+        assert!(r.is_complete());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn failure_recorded() {
+        let r = ReadRequest::new(1);
+        r.record_failure("boom".into());
+        assert!(r.is_failed());
+        assert!(r.is_complete());
+        assert_eq!(r.error().as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn zero_block_request_complete_immediately() {
+        let r = ReadRequest::new(0);
+        assert!(r.is_complete());
+        r.wait(); // must not hang
+    }
+
+    #[test]
+    fn edge_block_views() {
+        let offsets = [0u64, 2, 3];
+        let edges = [5u32, 7, 1];
+        let blk = EdgeBlock {
+            buffer_id: 0,
+            start_vertex: 10,
+            end_vertex: 12,
+            start_edge: 100,
+            offsets: &offsets,
+            edges: &edges,
+            weights: None,
+        };
+        assert_eq!(blk.num_vertices(), 2);
+        assert_eq!(blk.num_edges(), 3);
+        assert_eq!(blk.neighbors(10), &[5, 7]);
+        assert_eq!(blk.neighbors(11), &[1]);
+        let pairs: Vec<_> = blk.iter_edges().collect();
+        assert_eq!(pairs, vec![(10, 5), (10, 7), (11, 1)]);
+    }
+}

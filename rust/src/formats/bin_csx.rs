@@ -1,0 +1,214 @@
+//! Binary CSX — the GAPBS-style serialized CSR: a fixed header, the offsets
+//! array (u64 LE), the edges array (u32 LE) and, for weighted graphs, an f32
+//! weights array. Loading is embarrassingly parallel: each thread reads its
+//! byte range of each array directly into place.
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::storage::sim::ReadCtx;
+use crate::storage::{IoAccount, SimStore};
+use crate::util::chunk_range;
+use crate::util::pool::parallel_map;
+
+const MAGIC: u32 = 0x4253_5843; // "CXSB"
+const VERSION: u32 = 1;
+const FLAG_WEIGHTED: u32 = 1;
+/// Header: magic, version, flags, n (u64), m (u64).
+const HEADER_LEN: usize = 4 + 4 + 4 + 8 + 8;
+
+pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
+    let n = graph.num_vertices() as u64;
+    let m = graph.num_edges();
+    let weighted = graph.is_weighted();
+    let mut out = Vec::with_capacity(
+        HEADER_LEN + (n as usize + 1) * 8 + m as usize * 4 + if weighted { m as usize * 4 } else { 0 },
+    );
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(if weighted { FLAG_WEIGHTED } else { 0 }).to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&m.to_le_bytes());
+    for &o in &graph.offsets {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    for &e in &graph.edges {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    for &w in &graph.weights {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    vec![(format!("{base}.bcsx"), out)]
+}
+
+pub fn load(
+    store: &SimStore,
+    base: &str,
+    ctx: ReadCtx,
+    accounts: &[IoAccount],
+) -> Result<CsrGraph> {
+    let name = format!("{base}.bcsx");
+    let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+    if file.len() < HEADER_LEN as u64 {
+        bail!("{name}: too short for header");
+    }
+    let header = file.read(0, HEADER_LEN as u64, ctx, &accounts[0]);
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    let flags = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("{name}: bad magic {magic:#x}");
+    }
+    if version != VERSION {
+        bail!("{name}: unsupported version {version}");
+    }
+    let weighted = flags & FLAG_WEIGHTED != 0;
+    let n = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(header[20..28].try_into().unwrap()) as usize;
+
+    let offsets_pos = HEADER_LEN as u64;
+    let edges_pos = offsets_pos + (n as u64 + 1) * 8;
+    let weights_pos = edges_pos + m as u64 * 4;
+    let expect_len = weights_pos + if weighted { m as u64 * 4 } else { 0 };
+    if file.len() < expect_len {
+        bail!("{name}: truncated ({} < {expect_len})", file.len());
+    }
+
+    let threads = accounts.len().max(1);
+
+    // Offsets array (parallel ranged reads).
+    let offsets: Vec<u64> = {
+        let per: Vec<Vec<u64>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(n + 1, threads, t);
+            let bytes =
+                file.read(offsets_pos + s as u64 * 8, (e - s) as u64 * 8, ctx, &accounts[t]);
+            accounts[t].time_cpu(|| {
+                bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    };
+
+    // Edges array.
+    let edges: Vec<VertexId> = {
+        let per: Vec<Vec<VertexId>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(m, threads, t);
+            let bytes = file.read(edges_pos + s as u64 * 4, (e - s) as u64 * 4, ctx, &accounts[t]);
+            accounts[t].time_cpu(|| {
+                bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    };
+
+    let weights: Vec<f32> = if weighted {
+        let per: Vec<Vec<f32>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(m, threads, t);
+            let bytes =
+                file.read(weights_pos + s as u64 * 4, (e - s) as u64 * 4, ctx, &accounts[t]);
+            accounts[t].time_cpu(|| {
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    } else {
+        Vec::new()
+    };
+
+    let g = CsrGraph { offsets, edges, weights };
+    g.validate().map_err(|e| anyhow::anyhow!("{name}: invalid CSX: {e}"))?;
+    Ok(g)
+}
+
+/// Read only the offsets array — O(|V|) — without touching edge data.
+/// Supports the §6 "loading from storage instead of processing" use case
+/// (e.g. partitioning decisions before any edge is read).
+pub fn load_offsets(
+    store: &SimStore,
+    base: &str,
+    ctx: ReadCtx,
+    acct: &IoAccount,
+) -> Result<Vec<u64>> {
+    let name = format!("{base}.bcsx");
+    let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+    let header = file.read(0, HEADER_LEN as u64, ctx, acct);
+    if header.len() < HEADER_LEN {
+        bail!("{name}: too short");
+    }
+    let n = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+    let bytes = file.read(HEADER_LEN as u64, (n as u64 + 1) * 8, ctx, acct);
+    Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::storage::DeviceKind;
+
+    fn accounts(n: usize) -> Vec<IoAccount> {
+        (0..n).map(|_| IoAccount::new()).collect()
+    }
+
+    #[test]
+    fn roundtrip_unweighted() {
+        let g = generators::rmat(8, 8, 2);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        for t in [1usize, 3, 8] {
+            assert_eq!(load(&store, "g", ReadCtx::default(), &accounts(t)).unwrap(), g);
+        }
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let g = CsrGraph::from_weighted_edges(5, &[(0, 4, 1.25), (4, 0, -7.5), (2, 3, 0.0)]);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "w") {
+            store.put(&name, data);
+        }
+        assert_eq!(load(&store, "w", ReadCtx::default(), &accounts(2)).unwrap(), g);
+    }
+
+    #[test]
+    fn offsets_only_reads_o_v_bytes() {
+        // Large enough that the offsets array spans few cache pages while
+        // the edge data spans many (page-granular charging).
+        let g = generators::rmat(11, 16, 4);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let offs = load_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        assert_eq!(offs, g.offsets);
+        let full_size = store.file_len("g.bcsx").unwrap();
+        assert!(
+            acct.bytes_read() < full_size / 2,
+            "offsets read {} of {full_size}",
+            acct.bytes_read()
+        );
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let g = generators::rmat(6, 4, 2);
+        let store = SimStore::new(DeviceKind::Dram);
+        let (name, mut data) = serialize(&g, "g").pop().unwrap();
+        data[0] ^= 0xFF;
+        store.put(&name, data);
+        assert!(load(&store, "g", ReadCtx::default(), &accounts(1)).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let g = generators::rmat(6, 4, 2);
+        let store = SimStore::new(DeviceKind::Dram);
+        let (name, mut data) = serialize(&g, "g").pop().unwrap();
+        data.truncate(data.len() - 10);
+        store.put(&name, data);
+        assert!(load(&store, "g", ReadCtx::default(), &accounts(1)).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Textual METIS format (Karypis & Kumar) — §2's "Textual Metis": a header
+//! `n m [fmt]` followed by one line per vertex listing its (1-based)
+//! neighbors. METIS counts each undirected edge once in the header but
+//! lists it in both endpoint lines; we preserve that convention, so the
+//! format is defined for symmetric graphs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::storage::sim::ReadCtx;
+use crate::storage::{IoAccount, SimStore};
+
+pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
+    let n = graph.num_vertices();
+    let mut out = String::new();
+    // Directed edge count must be even for a symmetric graph.
+    out.push_str(&format!("{} {}\n", n, graph.num_edges() / 2));
+    for v in 0..n {
+        let mut first = true;
+        for &d in graph.neighbors(v as VertexId) {
+            if !first {
+                out.push(' ');
+            }
+            out.push_str(&(d + 1).to_string());
+            first = false;
+        }
+        out.push('\n');
+    }
+    vec![(format!("{base}.metis"), out.into_bytes())]
+}
+
+pub fn load(store: &SimStore, base: &str, ctx: ReadCtx, acct: &IoAccount) -> Result<CsrGraph> {
+    let name = format!("{base}.metis");
+    let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+    let bytes = file.read(0, file.len(), ctx, acct);
+    let text = std::str::from_utf8(&bytes).context("metis not UTF-8")?;
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('%'));
+    let header = lines.next().context("empty file")?;
+    let mut it = header.split_whitespace();
+    let n: usize = it.next().context("n")?.parse()?;
+    let m: u64 = it.next().context("m")?.parse()?;
+
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0u64);
+    let mut edges: Vec<VertexId> = Vec::with_capacity(2 * m as usize);
+    for v in 0..n {
+        let line = lines.next().with_context(|| format!("missing line for vertex {v}"))?;
+        for tok in line.split_whitespace() {
+            let d: u64 = tok.parse().with_context(|| format!("vertex {v}: {tok:?}"))?;
+            if d == 0 || d > n as u64 {
+                bail!("{name}: 1-based neighbor {d} out of range at vertex {v}");
+            }
+            edges.push((d - 1) as VertexId);
+        }
+        offsets.push(edges.len() as u64);
+    }
+    if edges.len() as u64 != 2 * m {
+        bail!("{name}: {} directed edges, header said {} undirected", edges.len(), m);
+    }
+    let mut g = CsrGraph { offsets, edges, weights: Vec::new() };
+    g.sort_neighbors();
+    g.validate().map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::storage::DeviceKind;
+
+    #[test]
+    fn roundtrip_symmetric() {
+        let g = generators::road_lattice(12, 10, 0, 1);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        assert_eq!(load(&store, "g", ReadCtx::default(), &acct).unwrap(), g);
+    }
+
+    #[test]
+    fn known_tiny_file() {
+        // Triangle 1-2-3 (1-based METIS).
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("t.metis", b"3 3\n2 3\n1 3\n1 2\n".to_vec());
+        let acct = IoAccount::new();
+        let g = load(&store, "t", ReadCtx::default(), &acct).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn header_mismatch_rejected() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("b.metis", b"3 5\n2 3\n1 3\n1 2\n".to_vec());
+        let acct = IoAccount::new();
+        assert!(load(&store, "b", ReadCtx::default(), &acct).is_err());
+    }
+
+    #[test]
+    fn out_of_range_neighbor_rejected() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("r.metis", b"2 1\n2\n7\n".to_vec());
+        let acct = IoAccount::new();
+        assert!(load(&store, "r", ReadCtx::default(), &acct).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Textual COO (edge-list / Matrix-Market-style) format and its GAPBS-style
+//! two-pass parallel loader.
+//!
+//! One line per edge: `src dst\n` (0-based decimal IDs; weighted graphs add
+//! a third column). Loading splits the byte range into per-thread chunks
+//! aligned to line boundaries; pass 1 counts edges per chunk, a prefix sum
+//! assigns output slots, pass 2 parses in place — exactly the parallel
+//! pattern §2 "Parallel Loading" describes.
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{CooEdges, CsrGraph, VertexId};
+use crate::storage::sim::ReadCtx;
+use crate::storage::{IoAccount, SimStore};
+use crate::util::pool::parallel_map;
+use crate::util::{chunk_range, prefix::exclusive_prefix_sum};
+
+/// Serialize to `{base}.el`. A Matrix-Market-style size comment preserves
+/// the vertex count (trailing isolated vertices are otherwise
+/// unrepresentable in an edge list).
+pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
+    let mut out = String::new();
+    out.push_str(&format!("# vertices {}\n", graph.num_vertices()));
+    if graph.is_weighted() {
+        for v in 0..graph.num_vertices() {
+            let ns = graph.neighbors(v as VertexId);
+            let ws = graph.neighbor_weights(v as VertexId);
+            for (d, w) in ns.iter().zip(ws) {
+                out.push_str(&format!("{} {} {}\n", v, d, w));
+            }
+        }
+    } else {
+        for (s, d) in graph.iter_edges() {
+            out.push_str(&format!("{} {}\n", s, d));
+        }
+    }
+    vec![(format!("{base}.el"), out.into_bytes())]
+}
+
+/// GAPBS-style parallel two-pass load.
+pub fn load(
+    store: &SimStore,
+    base: &str,
+    ctx: ReadCtx,
+    accounts: &[IoAccount],
+) -> Result<CsrGraph> {
+    let name = format!("{base}.el");
+    let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+    let len = file.len();
+    let threads = accounts.len().max(1);
+
+    // Read raw chunks in parallel (ranged reads, like dividing the file's
+    // total size between threads).
+    let chunks: Vec<Vec<u8>> = parallel_map(threads, threads, |i| {
+        let (s, e) = chunk_range(len as usize, threads, i);
+        file.read(s as u64, (e - s) as u64, ctx, &accounts[i])
+    });
+
+    // Align chunk boundaries to newlines: each chunk owns lines that *start*
+    // inside it; a line spanning into the next chunk is completed from there.
+    let mut parts: Vec<Vec<u8>> = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let mut part = Vec::new();
+        let cur = &chunks[i];
+        // A line belongs to the chunk where it *starts*. Chunk i's first
+        // bytes are a partial line (owned by an earlier chunk) unless the
+        // previous non-empty chunk ended exactly on a newline.
+        let prev_ends_at_newline = i == 0
+            || chunks[..i]
+                .iter()
+                .rev()
+                .find(|c| !c.is_empty())
+                .map(|c| *c.last().unwrap() == b'\n')
+                .unwrap_or(true);
+        let start = if prev_ends_at_newline {
+            0
+        } else {
+            match cur.iter().position(|&b| b == b'\n') {
+                Some(p) => p + 1,
+                None => cur.len(),
+            }
+        };
+        part.extend_from_slice(&cur[start..]);
+        // Complete the trailing partial line from following chunks.
+        if !part.is_empty() && *part.last().unwrap() != b'\n' {
+            for next in chunks.iter().skip(i + 1) {
+                match next.iter().position(|&b| b == b'\n') {
+                    Some(p) => {
+                        part.extend_from_slice(&next[..=p]);
+                        break;
+                    }
+                    None => part.extend_from_slice(next),
+                }
+            }
+        }
+        parts.push(part);
+    }
+
+    // Pass 1: count edges per chunk (parallel, real CPU charged).
+    let counts: Vec<u64> = parallel_map(threads, threads, |i| {
+        accounts[i].time_cpu(|| count_lines(&parts[i]) as u64)
+    });
+    let mut offsets = counts.clone();
+    let total = exclusive_prefix_sum(&mut offsets) as usize;
+
+    // Pass 2: parse into place.
+    let weighted = detect_weighted(&parts);
+    let mut src = vec![0 as VertexId; total];
+    let mut dst = vec![0 as VertexId; total];
+    let mut wts = if weighted { vec![0f32; total] } else { Vec::new() };
+    {
+        let src_ptr = SyncSlice(src.as_mut_ptr());
+        let dst_ptr = SyncSlice(dst.as_mut_ptr());
+        let wts_ptr = SyncSlice(wts.as_mut_ptr());
+        let errs: Vec<Option<String>> = parallel_map(threads, threads, |i| {
+            accounts[i].time_cpu(|| {
+                let mut idx = offsets[i] as usize;
+                for line in parts[i].split(|&b| b == b'\n') {
+                    if line.is_empty() || line[0] == b'#' || line[0] == b'%' {
+                        continue;
+                    }
+                    match parse_line(line, weighted) {
+                        Ok((s, d, w)) => unsafe {
+                            // SAFETY: chunk i owns [offsets[i], offsets[i]+counts[i]).
+                            src_ptr.write(idx, s);
+                            dst_ptr.write(idx, d);
+                            if weighted {
+                                wts_ptr.write(idx, w);
+                            }
+                            idx += 1;
+                        },
+                        Err(e) => return Some(e),
+                    }
+                }
+                None
+            })
+        });
+        if let Some(e) = errs.into_iter().flatten().next() {
+            bail!("parse error in {name}: {e}");
+        }
+    }
+
+    // Vertex count: the size comment if present, else 1 + max endpoint.
+    let declared = parts.first().and_then(|p| parse_vertices_comment(p));
+    let num_vertices = declared
+        .unwrap_or(0)
+        .max(src.iter().chain(dst.iter()).map(|&v| v as usize + 1).max().unwrap_or(0));
+    let coo = CooEdges { num_vertices, src, dst, weights: wts };
+    // CSR build is the "framework side" cost; charge to worker 0.
+    Ok(accounts[0].time_cpu(|| coo.to_csr()))
+}
+
+/// Parse a leading `# vertices <n>` size comment.
+fn parse_vertices_comment(part: &[u8]) -> Option<usize> {
+    let first = part.split(|&b| b == b'\n').next()?;
+    let text = std::str::from_utf8(first).ok()?;
+    let rest = text.strip_prefix("# vertices ")?;
+    rest.trim().parse::<usize>().ok()
+}
+
+fn count_lines(bytes: &[u8]) -> usize {
+    bytes
+        .split(|&b| b == b'\n')
+        .filter(|l| !l.is_empty() && l[0] != b'#' && l[0] != b'%')
+        .count()
+}
+
+fn detect_weighted(parts: &[Vec<u8>]) -> bool {
+    for part in parts {
+        for line in part.split(|&b| b == b'\n') {
+            if line.is_empty() || line[0] == b'#' || line[0] == b'%' {
+                continue;
+            }
+            return line.split(|&b| b == b' ').filter(|t| !t.is_empty()).count() >= 3;
+        }
+    }
+    false
+}
+
+fn parse_line(line: &[u8], weighted: bool) -> std::result::Result<(VertexId, VertexId, f32), String> {
+    let mut it = line.split(|&b| b == b' ').filter(|t| !t.is_empty());
+    let s = parse_u32(it.next().ok_or("missing src")?)?;
+    let d = parse_u32(it.next().ok_or("missing dst")?)?;
+    let w = if weighted {
+        let t = it.next().ok_or("missing weight")?;
+        std::str::from_utf8(t)
+            .map_err(|e| e.to_string())?
+            .trim()
+            .parse::<f32>()
+            .map_err(|e| e.to_string())?
+    } else {
+        0.0
+    };
+    Ok((s, d, w))
+}
+
+fn parse_u32(token: &[u8]) -> std::result::Result<u32, String> {
+    let mut v: u64 = 0;
+    if token.is_empty() {
+        return Err("empty token".into());
+    }
+    for &b in token {
+        if b == b'\r' {
+            continue;
+        }
+        if !b.is_ascii_digit() {
+            return Err(format!("bad digit {:?}", b as char));
+        }
+        v = v * 10 + (b - b'0') as u64;
+        if v > u32::MAX as u64 {
+            return Err("vertex id overflows u32".into());
+        }
+    }
+    Ok(v as u32)
+}
+
+struct SyncSlice<T>(*mut T);
+unsafe impl<T> Send for SyncSlice<T> {}
+unsafe impl<T> Sync for SyncSlice<T> {}
+impl<T> SyncSlice<T> {
+    /// # Safety
+    /// Disjoint index ranges per thread.
+    unsafe fn write(&self, idx: usize, v: T) {
+        *self.0.add(idx) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::storage::DeviceKind;
+
+    fn accounts(n: usize) -> Vec<IoAccount> {
+        (0..n).map(|_| IoAccount::new()).collect()
+    }
+
+    #[test]
+    fn roundtrip_various_thread_counts() {
+        let g = generators::rmat(7, 8, 5);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        for t in [1usize, 2, 3, 8] {
+            let acc = accounts(t);
+            let loaded = load(&store, "g", ReadCtx::default(), &acc).unwrap();
+            assert_eq!(loaded, g, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let g = CsrGraph::from_weighted_edges(4, &[(0, 1, 1.5), (1, 2, -2.0), (3, 0, 0.5)]);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "w") {
+            store.put(&name, data);
+        }
+        let loaded = load(&store, "w", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(loaded, g);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("c.el", b"# comment\n0 1\n\n% other\n1 2\n".to_vec());
+        let g = load(&store, "c", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn garbage_is_an_error() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("bad.el", b"0 xyz\n".to_vec());
+        assert!(load(&store, "bad", ReadCtx::default(), &accounts(1)).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let store = SimStore::new(DeviceKind::Dram);
+        assert!(load(&store, "nope", ReadCtx::default(), &accounts(1)).is_err());
+    }
+
+    #[test]
+    fn empty_file_loads_empty_graph() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("e.el", Vec::new());
+        let g = load(&store, "e", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.num_vertices(), 0);
+    }
+}

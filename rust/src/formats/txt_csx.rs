@@ -1,0 +1,217 @@
+//! Textual CSX ("AdjacencyGraph", PBBS/Ligra-style) format.
+//!
+//! ```text
+//! AdjacencyGraph
+//! <n>
+//! <m>
+//! <offset_0> ... <offset_{n-1}>      (one per line)
+//! <edge_0> ... <edge_{m-1}>          (one per line)
+//! ```
+//!
+//! Weighted variant uses header `WeightedAdjacencyGraph` and appends m
+//! weight lines. Parsing is chunk-parallel over the numeric lines.
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::storage::sim::ReadCtx;
+use crate::storage::{IoAccount, SimStore};
+use crate::util::chunk_range;
+use crate::util::pool::parallel_map;
+
+pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
+    let n = graph.num_vertices();
+    let m = graph.num_edges();
+    let mut out = String::new();
+    out.push_str(if graph.is_weighted() { "WeightedAdjacencyGraph\n" } else { "AdjacencyGraph\n" });
+    out.push_str(&format!("{n}\n{m}\n"));
+    for v in 0..n {
+        out.push_str(&format!("{}\n", graph.offsets[v]));
+    }
+    for &e in &graph.edges {
+        out.push_str(&format!("{e}\n"));
+    }
+    for &w in &graph.weights {
+        out.push_str(&format!("{w}\n"));
+    }
+    vec![(format!("{base}.adj"), out.into_bytes())]
+}
+
+pub fn load(
+    store: &SimStore,
+    base: &str,
+    ctx: ReadCtx,
+    accounts: &[IoAccount],
+) -> Result<CsrGraph> {
+    let name = format!("{base}.adj");
+    let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+    let len = file.len();
+    let threads = accounts.len().max(1);
+
+    // Parallel ranged read of the whole file (text must be tokenized before
+    // we know where sections start, but the I/O itself is parallel).
+    let chunks: Vec<Vec<u8>> = parallel_map(threads, threads, |i| {
+        let (s, e) = chunk_range(len as usize, threads, i);
+        file.read(s as u64, (e - s) as u64, ctx, &accounts[i])
+    });
+    let mut bytes = Vec::with_capacity(len as usize);
+    for c in &chunks {
+        bytes.extend_from_slice(c);
+    }
+
+    // Header.
+    let mut lines = bytes.split(|&b| b == b'\n');
+    let header = lines.next().context("empty file")?;
+    let weighted = match header {
+        b"AdjacencyGraph" => false,
+        b"WeightedAdjacencyGraph" => true,
+        h => bail!("bad header {:?}", String::from_utf8_lossy(h)),
+    };
+    let n: usize = parse_num(lines.next().context("missing n")?)? as usize;
+    let m: usize = parse_num(lines.next().context("missing m")?)? as usize;
+
+    // Find byte offsets of each numeric section so the parse can go
+    // chunk-parallel: index the start of every line once (cheap single scan,
+    // charged as CPU), then parse ranges in parallel.
+    let header_len = header.len() + 1;
+    let body = &bytes[header_len..];
+    let line_starts: Vec<usize> = accounts[0].time_cpu(|| {
+        let mut starts = vec![0usize];
+        for (i, &b) in body.iter().enumerate() {
+            if b == b'\n' && i + 1 < body.len() {
+                starts.push(i + 1);
+            }
+        }
+        starts
+    });
+    let expected = 2 + n + m + if weighted { m } else { 0 };
+    if line_starts.len() < expected {
+        bail!("truncated file: {} lines, expected {expected}", line_starts.len());
+    }
+    let line_at = |idx: usize| -> &[u8] {
+        let s = line_starts[idx];
+        let e = body[s..]
+            .iter()
+            .position(|&b| b == b'\n')
+            .map(|p| s + p)
+            .unwrap_or(body.len());
+        &body[s..e]
+    };
+
+    // Parse offsets (lines 2..2+n) and edges (2+n..2+n+m) in parallel.
+    let offsets: Vec<u64> = {
+        let per: Vec<Vec<u64>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(n, threads, t);
+            accounts[t].time_cpu(|| {
+                (s..e).map(|i| parse_num(line_at(2 + i)).unwrap_or(u64::MAX)).collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    };
+    let edges: Vec<VertexId> = {
+        let per: Vec<Vec<VertexId>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(m, threads, t);
+            accounts[t].time_cpu(|| {
+                (s..e)
+                    .map(|i| parse_num(line_at(2 + n + i)).unwrap_or(u64::MAX) as VertexId)
+                    .collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    };
+    let weights: Vec<f32> = if weighted {
+        let per: Vec<Vec<f32>> = parallel_map(threads, threads, |t| {
+            let (s, e) = chunk_range(m, threads, t);
+            accounts[t].time_cpu(|| {
+                (s..e)
+                    .map(|i| {
+                        std::str::from_utf8(line_at(2 + n + m + i))
+                            .ok()
+                            .and_then(|s| s.trim().parse::<f32>().ok())
+                            .unwrap_or(f32::NAN)
+                    })
+                    .collect()
+            })
+        });
+        per.into_iter().flatten().collect()
+    } else {
+        Vec::new()
+    };
+
+    if offsets.iter().any(|&o| o == u64::MAX) {
+        bail!("bad offset line");
+    }
+    let mut full_offsets = offsets;
+    full_offsets.push(m as u64);
+    let g = CsrGraph { offsets: full_offsets, edges, weights };
+    g.validate().map_err(|e| anyhow::anyhow!("invalid CSX: {e}"))?;
+    Ok(g)
+}
+
+fn parse_num(line: &[u8]) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut any = false;
+    for &b in line {
+        if b == b'\r' {
+            continue;
+        }
+        if !b.is_ascii_digit() {
+            bail!("bad digit in {:?}", String::from_utf8_lossy(line));
+        }
+        v = v * 10 + (b - b'0') as u64;
+        any = true;
+    }
+    if !any {
+        bail!("empty numeric line");
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::storage::DeviceKind;
+
+    fn accounts(n: usize) -> Vec<IoAccount> {
+        (0..n).map(|_| IoAccount::new()).collect()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = generators::barabasi_albert(400, 3, 1);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        for t in [1usize, 2, 5] {
+            let loaded = load(&store, "g", ReadCtx::default(), &accounts(t)).unwrap();
+            assert_eq!(loaded, g);
+        }
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let g = CsrGraph::from_weighted_edges(3, &[(0, 1, 0.5), (2, 0, 4.0)]);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(&g, "w") {
+            store.put(&name, data);
+        }
+        let loaded = load(&store, "w", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(loaded, g);
+    }
+
+    #[test]
+    fn truncated_is_error() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("t.adj", b"AdjacencyGraph\n3\n5\n0\n1\n".to_vec());
+        assert!(load(&store, "t", ReadCtx::default(), &accounts(1)).is_err());
+    }
+
+    #[test]
+    fn bad_header_is_error() {
+        let store = SimStore::new(DeviceKind::Dram);
+        store.put("h.adj", b"NotAGraph\n1\n0\n0\n".to_vec());
+        assert!(load(&store, "h", ReadCtx::default(), &accounts(1)).is_err());
+    }
+}

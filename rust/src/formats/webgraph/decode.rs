@@ -1,0 +1,625 @@
+//! WebGraph-style decoder with random access.
+//!
+//! [`Decoder::decode_range`] decodes any consecutive vertex range without
+//! decoding the prefix of the stream: the offsets sidecar gives the bit
+//! position of every vertex, and reference chains (bounded at compression
+//! time) are resolved by recursively decoding the referenced vertex — a
+//! *selective* read of a few extra bytes, not a scan. This is the primitive
+//! the ParaGrapher coordinator builds every use case (A–D, §4.1) on.
+//!
+//! Decoding is two-phase:
+//!
+//! 1. **Bit parse** (inherently sequential): instantaneous codes →
+//!    [`AdjParts`] (copy blocks, intervals, residual *gaps*).
+//! 2. **Gap scan + merge** (vectorizable): residual gaps → absolute IDs via
+//!    an inclusive scan, then a 3-way sorted merge. The scan runs through a
+//!    [`ScanEngine`](crate::runtime::ScanEngine) — either native Rust or
+//!    the AOT-compiled Pallas kernel via PJRT — over one concatenated gap
+//!    array per decoded block ([`Decoder::decode_range_with_scan`]).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{WgMeta, WgOffsets};
+use crate::graph::VertexId;
+use crate::runtime::ScanEngine;
+use crate::storage::sim::{ReadCtx, SimFile};
+use crate::storage::{IoAccount, SimStore};
+use crate::util::bitstream::BitReader;
+use crate::util::codes::{nat_to_int, read_gamma};
+
+/// A decoded consecutive block of vertices: a little CSR slice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodedBlock {
+    /// First vertex id in the block.
+    pub first_vertex: usize,
+    /// Local offsets, `num_vertices()+1` entries, starting at 0.
+    pub offsets: Vec<u64>,
+    /// Concatenated successor lists.
+    pub edges: Vec<VertexId>,
+}
+
+impl DecodedBlock {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    /// Edge span (indices into `edges`) of local vertex `i`.
+    pub fn vertex_span(&self, i: usize) -> (usize, usize) {
+        (self.offsets[i] as usize, self.offsets[i + 1] as usize)
+    }
+
+    /// Successors of local vertex `i`.
+    pub fn neighbors(&self, i: usize) -> &[VertexId] {
+        let (s, e) = self.vertex_span(i);
+        &self.edges[s..e]
+    }
+}
+
+/// Parsed (phase-1) adjacency of one vertex: everything except the residual
+/// absolute values.
+#[derive(Debug, Clone, Default)]
+struct AdjParts {
+    degree: usize,
+    /// Reference distance (0 = none).
+    reference: usize,
+    /// Explicit copy/skip run lengths (first run is a copy run).
+    blocks: Vec<u64>,
+    /// Materialized interval successors (sorted).
+    intervals: Vec<VertexId>,
+    /// Residual gaps: `gaps[0]` is the *absolute* first residual;
+    /// `gaps[i>0]` is `res_i - res_{i-1}` (so an inclusive scan over the
+    /// whole vector yields the absolute residuals).
+    gaps: Vec<i64>,
+}
+
+/// Random-access decoder over one compressed graph.
+pub struct Decoder<'a> {
+    file: SimFile<'a>,
+    meta: &'a WgMeta,
+    offsets: &'a WgOffsets,
+    ctx: ReadCtx,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn open(
+        store: &'a SimStore,
+        base: &str,
+        meta: &'a WgMeta,
+        offsets: &'a WgOffsets,
+        ctx: ReadCtx,
+        _acct: &IoAccount,
+    ) -> Result<Self> {
+        let name = format!("{base}.graph");
+        let file = store.open(&name).with_context(|| format!("missing {name}"))?;
+        Ok(Self { file, meta, offsets, ctx })
+    }
+
+    /// Decode vertices `[v_start, v_end)` with the native scan.
+    pub fn decode_range(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+    ) -> Result<DecodedBlock> {
+        self.decode_range_with_scan(v_start, v_end, acct, &crate::runtime::NativeScan)
+    }
+
+    /// Decode vertices `[v_start, v_end)`, running the gap→ID phase of all
+    /// residuals of the block through `scan` in one batched call.
+    pub fn decode_range_with_scan(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+        scan: &dyn ScanEngine,
+    ) -> Result<DecodedBlock> {
+        let n = self.meta.num_vertices;
+        if v_start > v_end || v_end > n {
+            bail!("bad vertex range {v_start}..{v_end} (n={n})");
+        }
+        let mut block =
+            DecodedBlock { first_vertex: v_start, offsets: vec![0u64], edges: Vec::new() };
+        if v_start == v_end {
+            return Ok(block);
+        }
+
+        // One ranged read covering the whole block's bits.
+        let bit0 = self.offsets.bit_offsets[v_start];
+        let bit1 = self.offsets.bit_offsets[v_end];
+        let byte0 = bit0 / 8;
+        let byte1 = (bit1 + 7) / 8;
+        let bytes = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
+
+        // Phase 1: bit-parse every vertex; stitch residual gaps into one
+        // array (adjusting each segment head so a single inclusive scan
+        // yields absolute IDs for the whole block).
+        let mut parts_list: Vec<AdjParts> = Vec::with_capacity(v_end - v_start);
+        let mut gap_array: Vec<i64> = Vec::new();
+        let mut seg_bounds: Vec<(usize, usize)> = Vec::with_capacity(v_end - v_start);
+        let mut prev_last_abs: i64 = 0;
+        for v in v_start..v_end {
+            let mut reader = BitReader::at_bit(&bytes, self.offsets.bit_offsets[v] - byte0 * 8)
+                .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
+            let parts = self.read_parts(v, &mut reader)?;
+            let seg_start = gap_array.len();
+            if !parts.gaps.is_empty() {
+                let first_abs = parts.gaps[0];
+                let rest_sum: i64 = parts.gaps[1..].iter().sum();
+                gap_array.push(first_abs - prev_last_abs);
+                gap_array.extend_from_slice(&parts.gaps[1..]);
+                prev_last_abs = first_abs + rest_sum;
+            }
+            seg_bounds.push((seg_start, gap_array.len()));
+            parts_list.push(parts);
+        }
+
+        // Phase 2: one scan call for the block (native or XLA/Pallas).
+        scan.inclusive_scan_i64(&mut gap_array)?;
+
+        // Phase 3: resolve references and merge.
+        //
+        // Hot path: decoding is sequential, and a reference always points at
+        // most `window` vertices back, so a fixed ring of the last
+        // `window + 1` final lists answers every in-block reference with no
+        // hashing and no per-vertex allocation (perf pass: the former
+        // HashMap cache cost ~4× in decode throughput — EXPERIMENTS §Perf).
+        let win = self.meta.params.window as usize + 1;
+        let mut ring: Vec<Vec<VertexId>> = (0..win).map(|_| Vec::new()).collect();
+        let mut ring_vertex: Vec<usize> = vec![usize::MAX; win];
+        let mut out_cache: HashMap<usize, Vec<VertexId>> = HashMap::new();
+        let mut copied_scratch: Vec<VertexId> = Vec::new();
+        let mut residual_scratch: Vec<VertexId> = Vec::new();
+        for (i, v) in (v_start..v_end).enumerate() {
+            let parts = &parts_list[i];
+            copied_scratch.clear();
+            if parts.reference > 0 {
+                let target = v - parts.reference;
+                if target >= v_start {
+                    let slot = target % win;
+                    if ring_vertex[slot] != target {
+                        bail!("reference window underflow at vertex {v} (corrupt stream?)");
+                    }
+                    apply_blocks_into(v, &parts.blocks, &ring[slot], &mut copied_scratch)?;
+                } else if let Some(list) = out_cache.get(&target) {
+                    apply_blocks_into(v, &parts.blocks, list, &mut copied_scratch)?;
+                } else {
+                    // Out-of-block reference: random-access decode (rare —
+                    // only near the block head).
+                    let mut c = HashMap::new();
+                    let list = self.decode_one(target, &mut c, acct, 1)?;
+                    apply_blocks_into(v, &parts.blocks, &list, &mut copied_scratch)?;
+                    out_cache.insert(target, list);
+                }
+            }
+            let (s, e) = seg_bounds[i];
+            validate_residuals_into(v, &gap_array[s..e], n, &mut residual_scratch)?;
+            let slot = v % win;
+            let (pre, _) = merge3_into(
+                v,
+                parts.degree,
+                &copied_scratch,
+                &parts.intervals,
+                &residual_scratch,
+                &mut block.edges,
+            )?;
+            let _ = pre;
+            block.offsets.push(block.edges.len() as u64);
+            // Park the final list in the ring for upcoming references.
+            let start = block.edges.len() - parts.degree;
+            ring[slot].clear();
+            ring[slot].extend_from_slice(&block.edges[start..]);
+            ring_vertex[slot] = v;
+        }
+        Ok(block)
+    }
+
+    /// Decode a single vertex's successor list (the "down to a single
+    /// vertex's neighbor list" granularity of §1).
+    pub fn decode_vertex(&self, v: usize, acct: &IoAccount) -> Result<Vec<VertexId>> {
+        let mut cache = HashMap::new();
+        self.decode_one(v, &mut cache, acct, 0)
+    }
+
+    /// Random-access decode of one vertex (fetches its byte span, resolves
+    /// references recursively).
+    fn decode_one(
+        &self,
+        v: usize,
+        cache: &mut HashMap<usize, Vec<VertexId>>,
+        acct: &IoAccount,
+        depth: u32,
+    ) -> Result<Vec<VertexId>> {
+        if let Some(list) = cache.get(&v) {
+            return Ok(list.clone());
+        }
+        if depth > self.meta.params.max_ref_chain + 1 {
+            bail!("reference chain exceeds bound at vertex {v} (corrupt stream?)");
+        }
+        let bit0 = self.offsets.bit_offsets[v];
+        let bit1 = self.offsets.bit_offsets[v + 1];
+        let byte0 = bit0 / 8;
+        let byte1 = (bit1 + 7) / 8;
+        let local = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
+        let mut reader = BitReader::at_bit(&local, bit0 - byte0 * 8)
+            .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
+        let parts = self.read_parts(v, &mut reader)?;
+        // Native scan of this vertex's gaps.
+        let mut gaps = parts.gaps.clone();
+        for i in 1..gaps.len() {
+            gaps[i] += gaps[i - 1];
+        }
+        let copied: Vec<VertexId> = if parts.reference > 0 {
+            let target = v - parts.reference;
+            let ref_list = self.decode_one(target, cache, acct, depth + 1)?;
+            cache.insert(target, ref_list.clone());
+            apply_blocks(v, &parts.blocks, &ref_list)?
+        } else {
+            Vec::new()
+        };
+        let residuals = validate_residuals(v, &gaps, self.meta.num_vertices)?;
+        let list = merge3(v, parts.degree, &copied, &parts.intervals, &residuals)?;
+        cache.insert(v, list.clone());
+        Ok(list)
+    }
+
+    /// Phase-1 bit parse of one adjacency record.
+    fn read_parts(&self, v: usize, reader: &mut BitReader<'_>) -> Result<AdjParts> {
+        let mut parts = AdjParts::default();
+        parts.degree = read_gamma(reader).map_err(|e| anyhow::anyhow!("degree: {e}"))? as usize;
+        if parts.degree == 0 {
+            return Ok(parts);
+        }
+        parts.reference =
+            read_gamma(reader).map_err(|e| anyhow::anyhow!("reference: {e}"))? as usize;
+        if parts.reference > v {
+            bail!("reference {} before vertex 0 at vertex {v}", parts.reference);
+        }
+        let mut copied_estimate = 0usize;
+        if parts.reference > 0 {
+            let block_count =
+                read_gamma(reader).map_err(|e| anyhow::anyhow!("block count: {e}"))? as usize;
+            if block_count > self.meta.num_vertices {
+                bail!("implausible block count {block_count} at vertex {v}");
+            }
+            parts.blocks.reserve(block_count);
+            for i in 0..block_count {
+                let raw = read_gamma(reader).map_err(|e| anyhow::anyhow!("block: {e}"))?;
+                parts.blocks.push(if i == 0 { raw } else { raw + 1 });
+            }
+            // Copy amount is only fully known with the ref list; estimate
+            // for residual-count: computed below from degree - intervals -
+            // copied, so we need the true copied count. We compute it when
+            // applying blocks; for the residual count we must know it now —
+            // the encoder guarantees: copied = sum of copy runs + implicit
+            // tail. The tail length depends on the ref list length, which we
+            // don't have yet. To keep phase 1 free of reference resolution,
+            // the *degree* equation is deferred: we read residuals until the
+            // bit cursor reaches... — impossible for instantaneous codes.
+            //
+            // Instead, the encoder writes copy runs that fully describe the
+            // copied count given the ref list length; we use the offsets
+            // sidecar: ref list length = degree of target = we can compute
+            // exactly from the *edge offsets* (O(1) sidecar lookup) — no
+            // graph data needed.
+            let target = v - parts.reference;
+            let ref_degree = (self.offsets.edge_offsets[target + 1]
+                - self.offsets.edge_offsets[target]) as usize;
+            let mut pos = 0usize;
+            let mut is_copy = true;
+            for &len in &parts.blocks {
+                let len = len as usize;
+                if pos + len > ref_degree {
+                    bail!("copy blocks overrun reference list at vertex {v}");
+                }
+                if is_copy {
+                    copied_estimate += len;
+                }
+                pos += len;
+                is_copy = !is_copy;
+            }
+            if is_copy && pos < ref_degree {
+                copied_estimate += ref_degree - pos;
+            }
+        }
+
+        // Intervals.
+        let interval_count =
+            read_gamma(reader).map_err(|e| anyhow::anyhow!("interval count: {e}"))? as usize;
+        if interval_count > parts.degree {
+            bail!("implausible interval count at vertex {v}");
+        }
+        let mut prev_right: i64 = v as i64;
+        for i in 0..interval_count {
+            let left: i64 = if i == 0 {
+                let z = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval left: {e}"))?;
+                v as i64 + nat_to_int(z)
+            } else {
+                let g = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval gap: {e}"))?;
+                prev_right + 2 + g as i64
+            };
+            let len = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval len: {e}"))?
+                + self.meta.params.min_interval_len as u64;
+            if left < 0 || (left as u64 + len) > self.meta.num_vertices as u64 {
+                bail!("interval out of range at vertex {v}");
+            }
+            for x in left..left + len as i64 {
+                parts.intervals.push(x as VertexId);
+            }
+            prev_right = left + len as i64 - 1;
+        }
+
+        // Residual gaps.
+        let residual_count = parts
+            .degree
+            .checked_sub(copied_estimate + parts.intervals.len())
+            .with_context(|| format!("degree accounting underflow at vertex {v}"))?;
+        let code = self.meta.params.residual_code();
+        parts.gaps.reserve(residual_count);
+        for i in 0..residual_count {
+            if i == 0 {
+                let z = code.read(reader).map_err(|e| anyhow::anyhow!("residual: {e}"))?;
+                parts.gaps.push(v as i64 + nat_to_int(z));
+            } else {
+                let g = code.read(reader).map_err(|e| anyhow::anyhow!("residual gap: {e}"))?;
+                parts.gaps.push(1 + g as i64);
+            }
+        }
+        Ok(parts)
+    }
+}
+
+/// Expand copy/skip runs against a materialized reference list.
+fn apply_blocks(v: usize, blocks: &[u64], ref_list: &[VertexId]) -> Result<Vec<VertexId>> {
+    let mut copied = Vec::new();
+    apply_blocks_into(v, blocks, ref_list, &mut copied)?;
+    Ok(copied)
+}
+
+/// [`apply_blocks`] into a reusable scratch buffer (hot path).
+fn apply_blocks_into(
+    v: usize,
+    blocks: &[u64],
+    ref_list: &[VertexId],
+    out: &mut Vec<VertexId>,
+) -> Result<()> {
+    let mut pos = 0usize;
+    let mut is_copy = true;
+    for &len in blocks {
+        let len = len as usize;
+        if pos + len > ref_list.len() {
+            bail!("copy blocks overrun reference list at vertex {v}");
+        }
+        if is_copy {
+            out.extend_from_slice(&ref_list[pos..pos + len]);
+        }
+        pos += len;
+        is_copy = !is_copy;
+    }
+    if is_copy && pos < ref_list.len() {
+        out.extend_from_slice(&ref_list[pos..]);
+    }
+    Ok(())
+}
+
+/// Check scanned residuals are strictly increasing and in range.
+fn validate_residuals(v: usize, scanned: &[i64], n: usize) -> Result<Vec<VertexId>> {
+    let mut out = Vec::with_capacity(scanned.len());
+    validate_residuals_into(v, scanned, n, &mut out)?;
+    Ok(out)
+}
+
+/// [`validate_residuals`] into a reusable scratch buffer (hot path).
+fn validate_residuals_into(
+    v: usize,
+    scanned: &[i64],
+    n: usize,
+    out: &mut Vec<VertexId>,
+) -> Result<()> {
+    out.clear();
+    out.reserve(scanned.len());
+    let mut prev = -1i64;
+    for &r in scanned {
+        if r < 0 || r as usize >= n {
+            bail!("residual {r} out of range at vertex {v}");
+        }
+        if r <= prev {
+            bail!("residuals not increasing at vertex {v}");
+        }
+        out.push(r as VertexId);
+        prev = r;
+    }
+    Ok(())
+}
+
+/// Merge three sorted successor sequences into the final list.
+fn merge3(
+    v: usize,
+    degree: usize,
+    copied: &[VertexId],
+    intervals: &[VertexId],
+    residuals: &[VertexId],
+) -> Result<Vec<VertexId>> {
+    let mut out = Vec::with_capacity(degree);
+    merge3_into(v, degree, copied, intervals, residuals, &mut out)?;
+    Ok(out)
+}
+
+/// Merge three sorted successor sequences, appending to `out`. Returns the
+/// (start, end) span written. Fast paths: when only one sequence is
+/// non-empty (the common case for reference-free vertices) the merge is a
+/// bulk copy.
+fn merge3_into(
+    v: usize,
+    degree: usize,
+    copied: &[VertexId],
+    intervals: &[VertexId],
+    residuals: &[VertexId],
+    out: &mut Vec<VertexId>,
+) -> Result<(usize, usize)> {
+    if copied.len() + intervals.len() + residuals.len() != degree {
+        bail!(
+            "degree mismatch at vertex {v}: {} + {} + {} != {degree}",
+            copied.len(),
+            intervals.len(),
+            residuals.len()
+        );
+    }
+    let start = out.len();
+    let non_empty =
+        usize::from(!copied.is_empty()) + usize::from(!intervals.is_empty())
+            + usize::from(!residuals.is_empty());
+    if non_empty <= 1 {
+        out.extend_from_slice(copied);
+        out.extend_from_slice(intervals);
+        out.extend_from_slice(residuals);
+        return Ok((start, out.len()));
+    }
+    let (mut a, mut b, mut c) = (0usize, 0usize, 0usize);
+    for _ in 0..degree {
+        let ca = copied.get(a).copied().unwrap_or(VertexId::MAX);
+        let cb = intervals.get(b).copied().unwrap_or(VertexId::MAX);
+        let cc = residuals.get(c).copied().unwrap_or(VertexId::MAX);
+        let m = ca.min(cb).min(cc);
+        if m == VertexId::MAX {
+            bail!("ran out of successors while merging at vertex {v}");
+        }
+        if m == ca {
+            a += 1;
+        } else if m == cb {
+            b += 1;
+        } else {
+            c += 1;
+        }
+        out.push(m);
+    }
+    Ok((start, out.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{read_meta, read_offsets, serialize, serialize_with, WgParams};
+    use super::*;
+    use crate::graph::generators;
+    use crate::storage::DeviceKind;
+
+    fn setup(g: &crate::graph::CsrGraph) -> (SimStore, IoAccount) {
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in serialize(g, "g") {
+            store.put(&name, data);
+        }
+        (store, IoAccount::new())
+    }
+
+    #[test]
+    fn single_vertex_random_access() {
+        let g = generators::barabasi_albert(500, 6, 13);
+        let (store, acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        for v in [0usize, 1, 17, 250, 499] {
+            let list = dec.decode_vertex(v, &acct).unwrap();
+            assert_eq!(list, g.neighbors(v as VertexId), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn range_decode_matches_full_graph() {
+        let g = generators::rmat(8, 10, 21);
+        let (store, acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let n = g.num_vertices();
+        for (a, b) in [(0, n), (10, 30), (100, 101), (n - 5, n), (0, 1), (37, 37)] {
+            let block = dec.decode_range(a, b, &acct).unwrap();
+            assert_eq!(block.num_vertices(), b - a);
+            for (i, v) in (a..b).enumerate() {
+                assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn selective_read_is_selective() {
+        // Decoding a small range must read a small fraction of the stream.
+        let g = generators::barabasi_albert(5000, 8, 31);
+        let (store, setup_acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &setup_acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &setup_acct).unwrap();
+        store.drop_cache();
+        let acct = IoAccount::new();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let block = dec.decode_range(2000, 2100, &acct).unwrap();
+        assert_eq!(block.num_vertices(), 100);
+        let graph_len = store.file_len("g.graph").unwrap();
+        assert!(
+            acct.bytes_read() < graph_len / 5,
+            "read {} of {graph_len} for a 2% range",
+            acct.bytes_read()
+        );
+    }
+
+    #[test]
+    fn cross_block_references_resolve() {
+        // Force heavy referencing, then decode ranges that start right
+        // after reference targets.
+        let g = generators::similarity_blocks(600, 48, 16, 3);
+        let store = SimStore::new(DeviceKind::Dram);
+        let params = WgParams { window: 7, max_ref_chain: 5, ..WgParams::default() };
+        for (name, data) in serialize_with(&g, "g", params) {
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        for start in [1usize, 5, 49, 100, 333] {
+            let block = dec.decode_range(start, start + 20, &acct).unwrap();
+            for (i, v) in (start..start + 20).enumerate() {
+                assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_is_error_not_panic() {
+        let g = generators::barabasi_albert(300, 5, 17);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in serialize(&g, "g") {
+            if name.ends_with(".graph") {
+                let mid = data.len() / 2;
+                for b in data.iter_mut().skip(mid).take(64) {
+                    *b = !*b;
+                }
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        // Either an error or a wrong-but-well-formed list; never a panic.
+        for v in 0..300usize {
+            let _ = dec.decode_vertex(v, &acct);
+        }
+        let _ = dec.decode_range(100, 250, &acct);
+    }
+
+    #[test]
+    fn bad_range_rejected() {
+        let g = generators::rmat(6, 4, 5);
+        let (store, acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        assert!(dec.decode_range(10, 5, &acct).is_err());
+        assert!(dec.decode_range(0, g.num_vertices() + 1, &acct).is_err());
+    }
+}

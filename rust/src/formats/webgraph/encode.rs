@@ -1,0 +1,379 @@
+//! WebGraph-style encoder.
+//!
+//! Per vertex v (all values on an MSB-first bit stream):
+//!
+//! ```text
+//! outdegree                     γ
+//! [if d > 0]
+//!   reference r                 γ      (0 = none; else copy from v-r)
+//!   [if r > 0]
+//!     block_count               γ
+//!     blocks[0]                 γ      (copy-run length, may be 0)
+//!     blocks[i>0]               γ      (run length - 1, runs alternate
+//!                                       copy/skip; the implicit final run
+//!                                       extends to the end of the ref list
+//!                                       and is a copy iff block_count even)
+//!   interval_count              γ
+//!   per interval:
+//!     left(first)               γ(zig-zag(left - v))
+//!     left(later)               γ(left - prev_right - 2)
+//!     len - min_interval_len    γ
+//!   residuals:
+//!     first                     ζ_k(zig-zag(res - v))
+//!     later                     ζ_k(gap - 1)
+//! ```
+//!
+//! The encoder greedily picks, per vertex, the reference in the window that
+//! minimizes the encoded size (including "no reference"), subject to the
+//! `max_ref_chain` bound that keeps random access O(chain) — the knob that
+//! trades compression ratio r against decompression bandwidth d (§3, §6).
+
+use super::WgParams;
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::bitstream::BitWriter;
+use crate::util::codes::{int_to_nat, write_gamma, Code};
+
+/// Compression statistics (per-technique accounting for DESIGN/EXPERIMENTS).
+#[derive(Debug, Default, Clone)]
+pub struct CompressionStats {
+    pub vertices_with_reference: u64,
+    pub copied_edges: u64,
+    pub interval_edges: u64,
+    pub residual_edges: u64,
+    pub total_bits: u64,
+}
+
+/// Compress `graph`; returns (bit stream bytes, per-vertex bit offsets
+/// (n+1 entries), stats). Neighbor lists must be sorted ascending —
+/// [`CsrGraph`] constructors guarantee it.
+pub fn compress(graph: &CsrGraph, params: WgParams) -> (Vec<u8>, Vec<u64>, CompressionStats) {
+    let n = graph.num_vertices();
+    let mut w = BitWriter::with_capacity(graph.num_edges() as usize / 2 + 64);
+    let mut bit_offsets = Vec::with_capacity(n + 1);
+    let mut stats = CompressionStats::default();
+    // Reference chain depth per vertex (how many hops to fully resolve).
+    let mut chain_depth = vec![0u32; n];
+
+    for v in 0..n {
+        bit_offsets.push(w.bit_len());
+        let list = graph.neighbors(v as VertexId);
+        write_gamma(&mut w, list.len() as u64);
+        if list.is_empty() {
+            continue;
+        }
+
+        // Candidate references: r in 1..=window with chain budget left.
+        let mut best: Option<(u32, EncodedAdj)> = None;
+        let no_ref = encode_adjacency(v as u64, list, &[], params);
+        for r in 1..=params.window.min(v as u32) {
+            let u = v - r as usize;
+            if chain_depth[u] + 1 > params.max_ref_chain {
+                continue;
+            }
+            let ref_list = graph.neighbors(u as VertexId);
+            if ref_list.is_empty() {
+                continue;
+            }
+            let enc = encode_adjacency(v as u64, list, ref_list, params);
+            if enc.bits < best.as_ref().map(|(_, e)| e.bits).unwrap_or(u64::MAX) {
+                best = Some((r, enc));
+            }
+        }
+
+        let use_ref = match &best {
+            Some((_, enc)) if enc.bits < no_ref.bits => true,
+            _ => false,
+        };
+        let (r, enc) = if use_ref {
+            let (r, enc) = best.unwrap();
+            chain_depth[v] = chain_depth[v - r as usize] + 1;
+            stats.vertices_with_reference += 1;
+            (r, enc)
+        } else {
+            (0u32, no_ref)
+        };
+        stats.copied_edges += enc.copied as u64;
+        stats.interval_edges += enc.interval_edges as u64;
+        stats.residual_edges += enc.residuals as u64;
+
+        write_gamma(&mut w, r as u64);
+        enc.write(&mut w, params);
+    }
+    bit_offsets.push(w.bit_len());
+    stats.total_bits = w.bit_len();
+    (w.into_bytes(), bit_offsets, stats)
+}
+
+/// One vertex's encoded adjacency description (pre-serialization).
+struct EncodedAdj {
+    /// Alternating copy/skip run lengths over the reference list (first run
+    /// is a copy run; trailing implicit run omitted).
+    blocks: Vec<u64>,
+    has_reference: bool,
+    /// (left, len) intervals over the remaining successors.
+    intervals: Vec<(u64, u64)>,
+    /// Remaining residual successors.
+    residual_list: Vec<u64>,
+    /// Vertex id (for zig-zag bases).
+    vertex: u64,
+    /// Estimated encoded size in bits (excludes outdegree + reference γ).
+    bits: u64,
+    copied: usize,
+    interval_edges: usize,
+    residuals: usize,
+}
+
+impl EncodedAdj {
+    fn write(&self, w: &mut BitWriter, params: WgParams) {
+        if self.has_reference {
+            write_gamma(w, self.blocks.len() as u64);
+            for (i, &b) in self.blocks.iter().enumerate() {
+                write_gamma(w, if i == 0 { b } else { b - 1 });
+            }
+        }
+        write_gamma(w, self.intervals.len() as u64);
+        let mut prev_right: i64 = self.vertex as i64; // sentinel, first uses zig-zag
+        for (i, &(left, len)) in self.intervals.iter().enumerate() {
+            if i == 0 {
+                write_gamma(w, int_to_nat(left as i64 - self.vertex as i64));
+            } else {
+                write_gamma(w, (left as i64 - prev_right - 2) as u64);
+            }
+            write_gamma(w, len - params.min_interval_len as u64);
+            prev_right = left as i64 + len as i64 - 1;
+        }
+        let code = params.residual_code();
+        let mut prev: i64 = -1;
+        for (i, &res) in self.residual_list.iter().enumerate() {
+            if i == 0 {
+                code.write(w, int_to_nat(res as i64 - self.vertex as i64));
+            } else {
+                code.write(w, (res as i64 - prev - 1) as u64);
+            }
+            prev = res as i64;
+        }
+    }
+}
+
+/// Build the adjacency description of `list` (successors of `vertex`)
+/// against `ref_list` (empty slice = no reference).
+fn encode_adjacency(
+    vertex: u64,
+    list: &[VertexId],
+    ref_list: &[VertexId],
+    params: WgParams,
+) -> EncodedAdj {
+    let has_reference = !ref_list.is_empty();
+
+    // 1. Copy blocks: which entries of ref_list appear in list?
+    let mut copied_mask = vec![false; ref_list.len()];
+    let mut copied: Vec<u64> = Vec::new();
+    if has_reference {
+        let mut i = 0usize;
+        for (j, &r) in ref_list.iter().enumerate() {
+            while i < list.len() && list[i] < r {
+                i += 1;
+            }
+            if i < list.len() && list[i] == r {
+                copied_mask[j] = true;
+                copied.push(r as u64);
+                i += 1;
+            }
+        }
+    }
+    // Runs over the mask, alternating copy/skip, starting with copy.
+    let mut blocks: Vec<u64> = Vec::new();
+    if has_reference {
+        let mut run_is_copy = true;
+        let mut run_len = 0u64;
+        for &c in &copied_mask {
+            if c == run_is_copy {
+                run_len += 1;
+            } else {
+                blocks.push(run_len);
+                run_is_copy = !run_is_copy;
+                run_len = 1;
+            }
+        }
+        blocks.push(run_len);
+        // Drop the trailing run: implicit (extends to end of ref list).
+        blocks.pop();
+        // All runs after the first have length >= 1 by construction.
+    }
+
+    // 2. Remaining successors (not copied).
+    let mut rest: Vec<u64> = Vec::with_capacity(list.len() - copied.len());
+    {
+        let mut ci = 0usize;
+        for &x in list {
+            if ci < copied.len() && copied[ci] == x as u64 {
+                ci += 1;
+            } else {
+                rest.push(x as u64);
+            }
+        }
+    }
+
+    // 3. Intervals: maximal runs of consecutive integers of length >= L.
+    let min_len = params.min_interval_len.max(2) as usize;
+    let mut intervals: Vec<(u64, u64)> = Vec::new();
+    let mut residual_list: Vec<u64> = Vec::new();
+    let mut i = 0usize;
+    while i < rest.len() {
+        let mut j = i + 1;
+        while j < rest.len() && rest[j] == rest[j - 1] + 1 {
+            j += 1;
+        }
+        if j - i >= min_len {
+            intervals.push((rest[i], (j - i) as u64));
+        } else {
+            residual_list.extend_from_slice(&rest[i..j]);
+        }
+        i = j;
+    }
+
+    // 4. Cost model (exact: same codes as the writer).
+    let mut bits = 0u64;
+    if has_reference {
+        bits += Code::Gamma.len_bits(blocks.len() as u64);
+        for (i, &b) in blocks.iter().enumerate() {
+            bits += Code::Gamma.len_bits(if i == 0 { b } else { b - 1 });
+        }
+    }
+    bits += Code::Gamma.len_bits(intervals.len() as u64);
+    let mut prev_right: i64 = vertex as i64;
+    for (i, &(left, len)) in intervals.iter().enumerate() {
+        if i == 0 {
+            bits += Code::Gamma.len_bits(int_to_nat(left as i64 - vertex as i64));
+        } else {
+            bits += Code::Gamma.len_bits((left as i64 - prev_right - 2) as u64);
+        }
+        bits += Code::Gamma.len_bits(len - params.min_interval_len as u64);
+        prev_right = left as i64 + len as i64 - 1;
+    }
+    let code = params.residual_code();
+    let mut prev: i64 = -1;
+    for (i, &res) in residual_list.iter().enumerate() {
+        if i == 0 {
+            bits += code.len_bits(int_to_nat(res as i64 - vertex as i64));
+        } else {
+            bits += code.len_bits((res as i64 - prev - 1) as u64);
+        }
+        prev = res as i64;
+    }
+
+    let interval_edges: usize = intervals.iter().map(|&(_, l)| l as usize).sum();
+    EncodedAdj {
+        blocks,
+        has_reference,
+        intervals,
+        residuals: residual_list.len(),
+        residual_list,
+        vertex,
+        bits,
+        copied: copied.len(),
+        interval_edges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_partition_edges() {
+        let g = generators::barabasi_albert(800, 6, 3);
+        let (_, offsets, stats) = compress(&g, WgParams::default());
+        assert_eq!(offsets.len(), g.num_vertices() + 1);
+        assert_eq!(
+            stats.copied_edges + stats.interval_edges + stats.residual_edges,
+            g.num_edges(),
+            "every edge is exactly one of copied/interval/residual"
+        );
+    }
+
+    #[test]
+    fn references_used_on_similar_lists() {
+        let g = generators::similarity_blocks(400, 32, 8, 1);
+        let (_, _, stats) = compress(&g, WgParams::default());
+        assert!(
+            stats.vertices_with_reference > (g.num_vertices() / 4) as u64,
+            "similarity graph should trigger reference compression: {} of {}",
+            stats.vertices_with_reference,
+            g.num_vertices()
+        );
+        assert!(stats.copied_edges > 0);
+    }
+
+    #[test]
+    fn intervals_used_on_lattice() {
+        let g = generators::road_lattice(30, 30, 0, 1);
+        let (_, _, stats) = compress(&g, WgParams::default());
+        // Lattice neighbors are {v-w, v-1, v+1, v+w}: not long runs, but
+        // interval code must at least not fire incorrectly; check instead on
+        // an explicit run-heavy graph.
+        let mut edges = Vec::new();
+        for d in 10..200u32 {
+            edges.push((0u32, d));
+        }
+        let run = crate::graph::CsrGraph::from_edges(201, &edges);
+        let (_, _, s2) = compress(&run, WgParams::default());
+        assert!(s2.interval_edges >= 180, "long run must be intervalized");
+        let _ = stats;
+    }
+
+    #[test]
+    fn window_zero_disables_references() {
+        let g = generators::similarity_blocks(200, 16, 4, 2);
+        let p = WgParams { window: 0, ..WgParams::default() };
+        let (_, _, stats) = compress(&g, p);
+        assert_eq!(stats.vertices_with_reference, 0);
+        assert_eq!(stats.copied_edges, 0);
+    }
+
+    #[test]
+    fn bigger_window_rarely_larger_stream() {
+        // Greedy per-vertex reference choice under the chain-depth budget is
+        // not globally optimal, so a larger window is not *strictly*
+        // monotone — but it must not be materially worse.
+        let g = generators::barabasi_albert(500, 8, 5);
+        let small = compress(&g, WgParams { window: 1, ..WgParams::default() }).2.total_bits;
+        let large = compress(&g, WgParams { window: 15, ..WgParams::default() }).2.total_bits;
+        assert!(
+            (large as f64) <= small as f64 * 1.02,
+            "larger window should not hurt by >2%: {large} vs {small}"
+        );
+    }
+
+    #[test]
+    fn chain_bound_respected() {
+        // With max_ref_chain = 1, a referenced vertex must itself be
+        // reference-free; indirectly tested via decode, but the depth
+        // accounting is internal — validate by compressing a pathological
+        // graph where every vertex has identical neighbors.
+        let mut edges = Vec::new();
+        for v in 0..50u32 {
+            for d in [100u32, 101, 102, 103] {
+                edges.push((v, d));
+            }
+        }
+        let g = crate::graph::CsrGraph::from_edges(104, &edges);
+        // max_ref_chain = 0 disables referencing entirely.
+        let p0 = WgParams { max_ref_chain: 0, ..WgParams::default() };
+        let (_, _, s0) = compress(&g, p0);
+        assert_eq!(s0.vertices_with_reference, 0);
+        // max_ref_chain = 1 with window W: every referencing vertex must
+        // point at a chain-free one, so each window of W+1 vertices keeps
+        // at least one non-referencing "anchor".
+        let p1 = WgParams { window: 7, max_ref_chain: 1, ..WgParams::default() };
+        let (_, _, s1) = compress(&g, p1);
+        let n = g.num_vertices() as u64;
+        assert!(s1.vertices_with_reference <= n - n / 8, "anchors required: {}", s1.vertices_with_reference);
+        // Unbounded chains reference almost everything on this graph.
+        let pu = WgParams { max_ref_chain: 100, ..WgParams::default() };
+        let (_, _, su) = compress(&g, pu);
+        assert!(su.vertices_with_reference >= s1.vertices_with_reference);
+        assert!(su.vertices_with_reference >= 45, "unbounded chain references nearly all: {}", su.vertices_with_reference);
+    }
+}

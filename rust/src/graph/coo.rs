@@ -1,0 +1,87 @@
+//! COO (coordinate / edge-list) representation — the layout of the textual
+//! Matrix-Market-style inputs the paper compares against.
+
+use super::{CsrGraph, VertexId, Weight};
+
+/// Parallel-array edge list.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CooEdges {
+    pub num_vertices: usize,
+    pub src: Vec<VertexId>,
+    pub dst: Vec<VertexId>,
+    /// Parallel weights; empty when unweighted.
+    pub weights: Vec<Weight>,
+}
+
+impl CooEdges {
+    pub fn num_edges(&self) -> u64 {
+        self.src.len() as u64
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+
+    /// Convert to CSR (sorting neighbors).
+    pub fn to_csr(&self) -> CsrGraph {
+        if self.is_weighted() {
+            let list: Vec<(VertexId, VertexId, Weight)> = self
+                .src
+                .iter()
+                .zip(&self.dst)
+                .zip(&self.weights)
+                .map(|((&s, &d), &w)| (s, d, w))
+                .collect();
+            CsrGraph::from_weighted_edges(self.num_vertices, &list)
+        } else {
+            let list: Vec<(VertexId, VertexId)> =
+                self.src.iter().zip(&self.dst).map(|(&s, &d)| (s, d)).collect();
+            CsrGraph::from_edges(self.num_vertices, &list)
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.src.len() != self.dst.len() {
+            return Err("src/dst length mismatch".into());
+        }
+        if !self.weights.is_empty() && self.weights.len() != self.src.len() {
+            return Err("weights length mismatch".into());
+        }
+        let n = self.num_vertices as u64;
+        for (&s, &d) in self.src.iter().zip(&self.dst) {
+            if s as u64 >= n || d as u64 >= n {
+                return Err(format!("edge ({s},{d}) out of range ({n} vertices)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coo_to_csr_and_back() {
+        let coo = CooEdges {
+            num_vertices: 3,
+            src: vec![0, 2, 0],
+            dst: vec![2, 1, 1],
+            weights: vec![],
+        };
+        coo.validate().unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(csr.neighbors(0), &[1, 2]);
+        assert_eq!(csr.neighbors(2), &[1]);
+        let coo2 = csr.to_coo();
+        assert_eq!(coo2.num_edges(), 3);
+        coo2.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_vertex() {
+        let coo =
+            CooEdges { num_vertices: 2, src: vec![0], dst: vec![5], weights: vec![] };
+        assert!(coo.validate().is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Compressed-sparse (CSX) graph: the canonical in-memory layout every
+//! format loader produces and every algorithm consumes.
+
+use super::{CooEdges, VertexId, Weight};
+use crate::util::prefix::exclusive_prefix_sum;
+
+/// CSR/CSC graph: `offsets[v]..offsets[v+1]` indexes `edges` (and `weights`
+/// when edge-weighted). Whether it is "R" (out-edges) or "C" (in-edges) is a
+/// matter of interpretation, hence CSX.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrGraph {
+    pub offsets: Vec<u64>,
+    pub edges: Vec<VertexId>,
+    /// Edge weights, parallel to `edges`; empty for unweighted graphs.
+    pub weights: Vec<Weight>,
+}
+
+impl CsrGraph {
+    /// Build from an unsorted edge list (counting sort into CSR).
+    pub fn from_edges(num_vertices: usize, edge_list: &[(VertexId, VertexId)]) -> Self {
+        let mut counts = vec![0u64; num_vertices + 1];
+        for &(src, _) in edge_list {
+            counts[src as usize + 1] += 1;
+        }
+        // counts[1..] holds per-vertex degree; prefix-sum into offsets.
+        let mut offsets = counts;
+        exclusive_prefix_sum(&mut offsets[1..]);
+        // offsets[0] is already 0; offsets[v+1] currently = start of v's slot.
+        let mut cursor: Vec<u64> = offsets[1..].to_vec();
+        let mut edges = vec![0 as VertexId; edge_list.len()];
+        for &(src, dst) in edge_list {
+            let c = &mut cursor[src as usize];
+            edges[*c as usize] = dst;
+            *c += 1;
+        }
+        let mut offs = vec![0u64];
+        offs.extend_from_slice(&cursor[..]);
+        // cursor[v] is now the END of v's range == offsets[v+1].
+        let mut g = CsrGraph { offsets: offs, edges, weights: Vec::new() };
+        g.sort_neighbors();
+        g
+    }
+
+    /// Build a weighted graph from an edge list with weights.
+    pub fn from_weighted_edges(
+        num_vertices: usize,
+        edge_list: &[(VertexId, VertexId, Weight)],
+    ) -> Self {
+        let unweighted: Vec<(VertexId, VertexId)> =
+            edge_list.iter().map(|&(s, d, _)| (s, d)).collect();
+        let mut counts = vec![0u64; num_vertices + 1];
+        for &(src, _) in &unweighted {
+            counts[src as usize + 1] += 1;
+        }
+        let mut offsets = counts;
+        exclusive_prefix_sum(&mut offsets[1..]);
+        let mut cursor: Vec<u64> = offsets[1..].to_vec();
+        let mut edges = vec![0 as VertexId; edge_list.len()];
+        let mut weights = vec![0.0 as Weight; edge_list.len()];
+        for &(src, dst, w) in edge_list {
+            let c = &mut cursor[src as usize];
+            edges[*c as usize] = dst;
+            weights[*c as usize] = w;
+            *c += 1;
+        }
+        let mut offs = vec![0u64];
+        offs.extend_from_slice(&cursor[..]);
+        let mut g = CsrGraph { offsets: offs, edges, weights };
+        g.sort_neighbors();
+        g
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap_or(&0)
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+
+    pub fn degree(&self, v: VertexId) -> u64 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.edges[s..e]
+    }
+
+    pub fn neighbor_weights(&self, v: VertexId) -> &[Weight] {
+        debug_assert!(self.is_weighted());
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.weights[s..e]
+    }
+
+    /// Sort each neighbor list ascending (required by the WebGraph encoder:
+    /// gaps must be non-negative after the first residual). Weights follow
+    /// their edges.
+    pub fn sort_neighbors(&mut self) {
+        let n = self.num_vertices();
+        if self.weights.is_empty() {
+            for v in 0..n {
+                let s = self.offsets[v] as usize;
+                let e = self.offsets[v + 1] as usize;
+                self.edges[s..e].sort_unstable();
+            }
+        } else {
+            for v in 0..n {
+                let s = self.offsets[v] as usize;
+                let e = self.offsets[v + 1] as usize;
+                let mut pairs: Vec<(VertexId, Weight)> = self.edges[s..e]
+                    .iter()
+                    .copied()
+                    .zip(self.weights[s..e].iter().copied())
+                    .collect();
+                pairs.sort_unstable_by_key(|&(d, _)| d);
+                for (i, (d, w)) in pairs.into_iter().enumerate() {
+                    self.edges[s + i] = d;
+                    self.weights[s + i] = w;
+                }
+            }
+        }
+    }
+
+    /// Transposed graph (CSR <-> CSC).
+    pub fn transpose(&self) -> CsrGraph {
+        let n = self.num_vertices();
+        let mut counts = vec![0u64; n + 1];
+        for &d in &self.edges {
+            counts[d as usize + 1] += 1;
+        }
+        let mut offsets = counts;
+        exclusive_prefix_sum(&mut offsets[1..]);
+        let mut cursor: Vec<u64> = offsets[1..].to_vec();
+        let mut edges = vec![0 as VertexId; self.edges.len()];
+        let mut weights =
+            if self.is_weighted() { vec![0.0; self.edges.len()] } else { Vec::new() };
+        for v in 0..n {
+            let s = self.offsets[v] as usize;
+            let e = self.offsets[v + 1] as usize;
+            for i in s..e {
+                let d = self.edges[i] as usize;
+                let c = &mut cursor[d];
+                edges[*c as usize] = v as VertexId;
+                if !weights.is_empty() {
+                    weights[*c as usize] = self.weights[i];
+                }
+                *c += 1;
+            }
+        }
+        let mut offs = vec![0u64];
+        offs.extend_from_slice(&cursor[..]);
+        let mut g = CsrGraph { offsets: offs, edges, weights };
+        g.sort_neighbors();
+        g
+    }
+
+    /// Symmetrized graph: union of edges and reverse edges, deduplicated.
+    /// (The paper symmetrizes asymmetric datasets before evaluation.)
+    pub fn symmetrize(&self) -> CsrGraph {
+        let n = self.num_vertices();
+        let mut pairs: Vec<(VertexId, VertexId)> = Vec::with_capacity(self.edges.len() * 2);
+        for v in 0..n {
+            for &d in self.neighbors(v as VertexId) {
+                pairs.push((v as VertexId, d));
+                pairs.push((d, v as VertexId));
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        CsrGraph::from_edges(n, &pairs)
+    }
+
+    /// Iterate all edges as (src, dst) in CSR order.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices()).flat_map(move |v| {
+            self.neighbors(v as VertexId).iter().map(move |&d| (v as VertexId, d))
+        })
+    }
+
+    /// Convert to a COO edge list.
+    pub fn to_coo(&self) -> CooEdges {
+        let mut src = Vec::with_capacity(self.edges.len());
+        let mut dst = Vec::with_capacity(self.edges.len());
+        for (s, d) in self.iter_edges() {
+            src.push(s);
+            dst.push(d);
+        }
+        CooEdges { num_vertices: self.num_vertices(), src, dst, weights: self.weights.clone() }
+    }
+
+    /// Structural invariants; used by tests and the format round-trips.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices();
+        if self.offsets.is_empty() || self.offsets[0] != 0 {
+            return Err("offsets must start at 0".into());
+        }
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets not monotone at {v}"));
+            }
+        }
+        if *self.offsets.last().unwrap() != self.edges.len() as u64 {
+            return Err("last offset != edge count".into());
+        }
+        if !self.weights.is_empty() && self.weights.len() != self.edges.len() {
+            return Err("weights length mismatch".into());
+        }
+        for &d in &self.edges {
+            if (d as usize) >= n {
+                return Err(format!("edge endpoint {d} out of range ({n} vertices)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrGraph {
+        // 0 -> 1,2 ; 1 -> 2 ; 2 -> 0 ; 3 isolated
+        CsrGraph::from_edges(4, &[(0, 2), (0, 1), (1, 2), (2, 0)])
+    }
+
+    #[test]
+    fn from_edges_builds_sorted_csr() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.offsets, vec![0, 2, 3, 4, 4]);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert_eq!(g.neighbors(3), &[] as &[VertexId]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degree_and_iter() {
+        let g = tiny();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+        let edges: Vec<_> = g.iter_edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 2), (2, 0)]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = tiny();
+        let t = g.transpose();
+        assert_eq!(t.neighbors(2), &[0, 1]);
+        assert_eq!(t.neighbors(0), &[2]);
+        let tt = t.transpose();
+        assert_eq!(g, tt);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let g = tiny().symmetrize();
+        for (s, d) in g.iter_edges().collect::<Vec<_>>() {
+            assert!(g.neighbors(d).contains(&s), "missing reverse of ({s},{d})");
+        }
+        // 0<->1, 0<->2, 1<->2 = 6 directed edges
+        assert_eq!(g.num_edges(), 6);
+    }
+
+    #[test]
+    fn weighted_roundtrip_preserves_pairing() {
+        let g = CsrGraph::from_weighted_edges(
+            3,
+            &[(0, 2, 2.5), (0, 1, 1.5), (2, 0, 0.25)],
+        );
+        assert!(g.is_weighted());
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbor_weights(0), &[1.5, 2.5]);
+        let t = g.transpose();
+        assert_eq!(t.neighbors(0), &[2]);
+        assert_eq!(t.neighbor_weights(0), &[0.25]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = tiny();
+        g.edges[0] = 99;
+        assert!(g.validate().is_err());
+        let mut g2 = tiny();
+        g2.offsets[1] = 100;
+        assert!(g2.validate().is_err());
+    }
+}

@@ -1,0 +1,373 @@
+//! Synthetic graph generators — scaled-down stand-ins for the paper's
+//! Table 3 datasets (the real ones are 58 M – 124 B edges and/or only
+//! published in WebGraph format; see DESIGN.md §3).
+//!
+//! * [`rmat`] — Graph500-style R-MAT, the paper's G5 dataset.
+//! * [`road_lattice`] — 2-D lattice with diagonal shortcuts: low, nearly
+//!   uniform degree and strong locality, like the US-roads RD dataset.
+//! * [`barabasi_albert`] — preferential attachment: power-law degrees like
+//!   the Twitter/ClueWeb web-style graphs (TW/CW/SH analogues).
+//! * [`similarity_blocks`] — dense overlapping cliques-with-noise, like the
+//!   MS50 sequence-similarity graph (high average degree).
+
+use super::{CsrGraph, VertexId};
+use crate::util::rng::Xoshiro256;
+
+/// R-MAT generator (Chakrabarti et al.) with Graph500 parameters
+/// a=0.57, b=0.19, c=0.19, d=0.05. Produces `2^scale` vertices and
+/// `edge_factor * 2^scale` directed edges (duplicates removed).
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> CsrGraph {
+    let n = 1usize << scale;
+    let m = edge_factor * n;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut x0, mut x1) = (0usize, n);
+        let (mut y0, mut y1) = (0usize, n);
+        while x1 - x0 > 1 {
+            let r = rng.next_f64();
+            let half_x = (x0 + x1) / 2;
+            let half_y = (y0 + y1) / 2;
+            if r < a {
+                x1 = half_x;
+                y1 = half_y;
+            } else if r < a + b {
+                x1 = half_x;
+                y0 = half_y;
+            } else if r < a + b + c {
+                x0 = half_x;
+                y1 = half_y;
+            } else {
+                x0 = half_x;
+                y0 = half_y;
+            }
+        }
+        edges.push((x0 as VertexId, y0 as VertexId));
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Road-network-like graph: a w×h lattice (4-neighborhood) plus a sprinkle
+/// of random shortcuts; symmetric, degree ≈ 4, high locality (small gaps —
+/// compresses extremely well with interval codes, like real road graphs).
+pub fn road_lattice(width: usize, height: usize, shortcut_per_mille: u32, seed: u64) -> CsrGraph {
+    let n = width * height;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(n * 4);
+    let id = |x: usize, y: usize| (y * width + x) as VertexId;
+    for y in 0..height {
+        for x in 0..width {
+            let v = id(x, y);
+            if x + 1 < width {
+                edges.push((v, id(x + 1, y)));
+                edges.push((id(x + 1, y), v));
+            }
+            if y + 1 < height {
+                edges.push((v, id(x, y + 1)));
+                edges.push((id(x, y + 1), v));
+            }
+            if shortcut_per_mille > 0 && rng.next_below(1000) < shortcut_per_mille as u64 {
+                let u = rng.next_below(n as u64) as VertexId;
+                if u != v {
+                    edges.push((v, u));
+                    edges.push((u, v));
+                }
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m_attach` existing vertices chosen ∝ degree. Power-law degree tail,
+/// web/social-like. Directed edges new→old plus reverse, like a symmetrized
+/// crawl.
+pub fn barabasi_albert(n: usize, m_attach: usize, seed: u64) -> CsrGraph {
+    assert!(n > m_attach && m_attach >= 1);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // Repeated-endpoint list: sampling uniformly from it = degree-biased pick.
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * n * m_attach);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(2 * n * m_attach);
+    // Seed clique over the first m_attach+1 vertices.
+    for i in 0..=(m_attach as u32) {
+        for j in 0..i {
+            edges.push((i, j));
+            edges.push((j, i));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for v in (m_attach as u32 + 1)..(n as u32) {
+        let mut picked = Vec::with_capacity(m_attach);
+        let mut guard = 0;
+        while picked.len() < m_attach && guard < 100 * m_attach {
+            let u = endpoints[rng.next_below(endpoints.len() as u64) as usize];
+            if u != v && !picked.contains(&u) {
+                picked.push(u);
+            }
+            guard += 1;
+        }
+        for &u in &picked {
+            edges.push((v, u));
+            edges.push((u, v));
+            endpoints.push(v);
+            endpoints.push(u);
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Web-crawl-like graph with *locality* and *similarity* — the two
+/// properties WebGraph compression exploits (§2): URLs sorted
+/// lexicographically put most links within the same host (small gaps), and
+/// nearby pages share successors. Each vertex gets `m_out` successors:
+/// with probability `locality`, a power-law-distributed *nearby* vertex;
+/// otherwise a uniformly random one; and with probability `similarity` the
+/// whole suffix of the previous vertex's list is reused (reference-style
+/// similarity). This is what makes the CW/SH analogues land in the paper's
+/// compression regime (r ≈ 8–17) — a plain BA graph with random IDs
+/// compresses ~2× only.
+pub fn web_locality(
+    n: usize,
+    m_out: usize,
+    locality: f64,
+    similarity: f64,
+    seed: u64,
+) -> CsrGraph {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(n * m_out);
+    let mut prev_list: Vec<VertexId> = Vec::new();
+    let mut list: Vec<VertexId> = Vec::new();
+    for v in 0..n {
+        list.clear();
+        if v > 0 && rng.next_bool(similarity) {
+            // Copy a chunk of the previous vertex's successors.
+            let keep = prev_list.len().min(m_out * 3 / 4);
+            list.extend_from_slice(&prev_list[..keep]);
+        }
+        while list.len() < m_out {
+            let d = if rng.next_bool(locality) {
+                // Power-law offset around v: gap ~ 1 + pareto.
+                let u = rng.next_f64().max(1e-9);
+                let gap = (u.powf(-0.7) - 1.0) as i64; // heavy tail
+                let sign = if rng.next_bool(0.5) { 1 } else { -1 };
+                let t = v as i64 + sign * (1 + gap.min(n as i64 / 8));
+                t.rem_euclid(n as i64) as VertexId
+            } else {
+                rng.next_below(n as u64) as VertexId
+            };
+            if d as usize != v {
+                list.push(d);
+            }
+        }
+        list.sort_unstable();
+        list.dedup();
+        for &d in &list {
+            edges.push((v as VertexId, d));
+        }
+        std::mem::swap(&mut prev_list, &mut list);
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi G(n, m): m distinct directed edges chosen uniformly.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(m);
+    while edges.len() < m {
+        let s = rng.next_below(n as u64) as VertexId;
+        let d = rng.next_below(n as u64) as VertexId;
+        if s != d {
+            edges.push((s, d));
+        }
+        if edges.len() == m {
+            edges.sort_unstable();
+            edges.dedup();
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Sequence-similarity-like graph (MS50 analogue): vertices fall into
+/// overlapping blocks (sequence families); each block is densely connected.
+/// High average degree, strong similarity between adjacent vertices — the
+/// regime where WebGraph reference-compression shines.
+pub fn similarity_blocks(n: usize, block: usize, overlap: usize, seed: u64) -> CsrGraph {
+    assert!(block > 1 && overlap < block);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let stride = block - overlap;
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + block).min(n);
+        for i in start..end {
+            for j in start..end {
+                // ~70% of intra-block pairs, to avoid perfect cliques.
+                if i != j && rng.next_below(10) < 7 {
+                    edges.push((i as VertexId, j as VertexId));
+                }
+            }
+        }
+        start += stride;
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// The scaled-down dataset suite mirroring the paper's Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// RD — US-roads analogue (lattice).
+    Rd,
+    /// TW — Twitter analogue (power-law).
+    Tw,
+    /// G5 — Graph500 RMAT.
+    G5,
+    /// SH — Software-Heritage analogue (sparse power-law, many vertices).
+    Sh,
+    /// CW — ClueWeb analogue (web-like, high compression).
+    Cw,
+    /// MS — MS50 similarity analogue (dense blocks).
+    Ms,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 6] =
+        [Dataset::Rd, Dataset::Tw, Dataset::G5, Dataset::Sh, Dataset::Cw, Dataset::Ms];
+
+    pub fn abbr(&self) -> &'static str {
+        match self {
+            Dataset::Rd => "RD",
+            Dataset::Tw => "TW",
+            Dataset::G5 => "G5",
+            Dataset::Sh => "SH",
+            Dataset::Cw => "CW",
+            Dataset::Ms => "MS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        Self::ALL.iter().copied().find(|d| d.abbr().eq_ignore_ascii_case(s))
+    }
+
+    /// Generate at a given scale factor (1 = default small suite; larger
+    /// values multiply the vertex counts). Asymmetric generators are
+    /// symmetrized, as the paper does with its datasets (§5: "we
+    /// symmetrized the asymmetric ones").
+    pub fn generate(&self, scale: usize, seed: u64) -> CsrGraph {
+        let s = scale.max(1);
+        match self {
+            Dataset::Rd => road_lattice(64 * s, 48 * s, 5, seed),
+            Dataset::Tw => barabasi_albert(6_000 * s, 12, seed),
+            Dataset::G5 => {
+                let extra = (s as f64).log2().round() as u32;
+                rmat(12 + extra, 16, seed).symmetrize()
+            }
+            Dataset::Sh => web_locality(20_000 * s, 4, 0.85, 0.5, seed).symmetrize(),
+            Dataset::Cw => web_locality(10_000 * s, 10, 0.9, 0.65, seed).symmetrize(),
+            Dataset::Ms => similarity_blocks(2_000 * s, 64, 16, seed).symmetrize(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_valid_and_deterministic() {
+        let a = rmat(8, 8, 1);
+        let b = rmat(8, 8, 1);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert_eq!(a.num_vertices(), 256);
+        assert!(a.num_edges() > 500, "rmat should generate plenty of edges");
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(10, 16, 7);
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as VertexId)).max().unwrap();
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(max_deg as f64 > 5.0 * avg, "rmat should have hubs: max {max_deg} avg {avg}");
+    }
+
+    #[test]
+    fn lattice_symmetric_low_degree() {
+        let g = road_lattice(16, 16, 0, 3);
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 256);
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as VertexId)).max().unwrap();
+        assert!(max_deg <= 4);
+        for (s, d) in g.iter_edges().collect::<Vec<_>>() {
+            assert!(g.neighbors(d).contains(&s));
+        }
+    }
+
+    #[test]
+    fn ba_powerlaw_tail() {
+        let g = barabasi_albert(2000, 4, 5);
+        g.validate().unwrap();
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as VertexId)).max().unwrap();
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(max_deg as f64 > 8.0 * avg, "BA must grow hubs: max {max_deg} avg {avg}");
+    }
+
+    #[test]
+    fn er_edge_count_close() {
+        let g = erdos_renyi(500, 3000, 11);
+        g.validate().unwrap();
+        assert!(g.num_edges() > 2700, "dedup shouldn't remove too much");
+    }
+
+    #[test]
+    fn similarity_blocks_dense() {
+        let g = similarity_blocks(512, 64, 16, 2);
+        g.validate().unwrap();
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(avg > 20.0, "similarity graph should be dense, avg {avg}");
+    }
+
+    #[test]
+    fn dataset_suite_generates() {
+        for d in Dataset::ALL {
+            let g = d.generate(1, 42);
+            g.validate().unwrap();
+            assert!(g.num_edges() > 1000, "{} too small: {}", d.abbr(), g.num_edges());
+        }
+        assert_eq!(Dataset::parse("tw"), Some(Dataset::Tw));
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+}
+
+#[cfg(test)]
+mod web_tests {
+    use super::*;
+
+    #[test]
+    fn web_locality_valid_and_deterministic() {
+        let a = web_locality(2000, 8, 0.9, 0.6, 5);
+        let b = web_locality(2000, 8, 0.9, 0.6, 5);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert!(a.num_edges() > 10_000);
+    }
+
+    #[test]
+    fn web_locality_compresses_like_a_web_graph() {
+        use crate::formats::webgraph::{compress, WgParams};
+        let g = web_locality(4000, 10, 0.9, 0.65, 7);
+        let (_, _, stats) = compress(&g, WgParams::default());
+        let bpe = stats.total_bits as f64 / g.num_edges() as f64;
+        assert!(bpe < 10.0, "web-like graph must compress strongly, got {bpe:.1} bits/edge");
+        assert!(stats.copied_edges > 0, "similarity must trigger reference compression");
+    }
+}

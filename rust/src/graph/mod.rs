@@ -1,0 +1,19 @@
+//! In-memory graph representations (CSR/CSX and COO) and synthetic dataset
+//! generators standing in for the paper's Table 3 datasets.
+
+pub mod coo;
+pub mod csr;
+pub mod generators;
+pub mod relabel;
+
+pub use coo::CooEdges;
+pub use csr::CsrGraph;
+
+/// Vertex identifier. The paper encodes 4-byte IDs (|V| < 2^32); we keep u32
+/// on edge arrays and u64 on offsets (|E| may exceed 2^32) exactly like the
+/// paper's binary CSX layout (§5: "4 Bytes ID per vertex ... offsets array
+/// requires 8 Bytes per entry").
+pub type VertexId = u32;
+
+/// Edge weight type for WG404-style edge-weighted graphs.
+pub type Weight = f32;

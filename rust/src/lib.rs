@@ -1,0 +1,28 @@
+//! # ParaGrapher (Rust + JAX + Pallas reproduction)
+//!
+//! A reproduction of *“Selective Parallel Loading of Large-Scale Compressed
+//! Graphs with ParaGrapher”* (CS.AR 2024) as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the ParaGrapher coordinator: the graph-loading
+//!   API ([`coordinator`]), the WebGraph-style compressed format and the
+//!   GAPBS-style baseline formats ([`formats`]), a calibrated virtual-time
+//!   storage simulator ([`storage`]), graph algorithms ([`algorithms`]) and
+//!   the §3 performance model ([`model`]).
+//! * **L2/L1 (build-time Python)** — the vectorizable decode phase
+//!   (gap→ID prefix-sum) and WCC label-propagation step, written in JAX +
+//!   Pallas, AOT-lowered to HLO text and executed from Rust via the PJRT C
+//!   API ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod algorithms;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod formats;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod storage;
+pub mod util;

@@ -1,0 +1,401 @@
+//! ParaGrapher CLI — the leader entrypoint.
+//!
+//! ```text
+//! paragrapher generate   --dataset TW --scale 2            # build dataset suite
+//! paragrapher info       --dataset all                     # Table 3: sizes per format
+//! paragrapher model      [--sigma 160e6 --d 1e9]           # Fig. 1 curve points
+//! paragrapher load       --dataset G5 --device SSD --format webgraph [--threads 8]
+//! paragrapher wcc        --dataset RD --device HDD --format webgraph
+//! paragrapher bench-storage --device SSD                   # Fig. 4 grid
+//! paragrapher sweep      --dataset TW --device HDD         # Fig. 8 grid
+//! paragrapher end-to-end [--scale 1]                       # headline table
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline build has no clap.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
+use paragrapher::formats::FormatKind;
+use paragrapher::graph::generators::Dataset;
+use paragrapher::metrics::{fmt_bw, fmt_meps, LoadMeasurement, Table};
+use paragrapher::model::{fig1_curve, LoadModel};
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, ReadMethod, SimStore};
+use paragrapher::util::{fmt_bytes, fmt_count};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&flags),
+        "info" => cmd_info(&flags),
+        "model" => cmd_model(&flags),
+        "load" => cmd_load(&flags),
+        "wcc" => cmd_wcc(&flags),
+        "bench-storage" => cmd_bench_storage(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "end-to-end" => cmd_end_to_end(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "paragrapher — selective parallel loading of compressed graphs (paper reproduction)
+
+commands:
+  generate      --dataset <RD|TW|G5|SH|CW|MS|all> [--scale N] [--seed N]
+  info          --dataset <..|all> [--scale N]            Table 3 sizes/bits-per-edge
+  model         [--sigma B/s] [--d B/s] [--rmax R]        §3 / Fig. 1 curve
+  load          --dataset D --device <HDD|SSD|NAS|NVMM|DDR4> --format <coo|csx|bin|webgraph>
+                [--threads N] [--buffer-edges N] [--scale N]
+  wcc           --dataset D --device DEV --format F       Fig. 6 style end-to-end WCC
+  bench-storage [--device DEV]                            Fig. 4 bandwidth grid
+  sweep         --dataset D --device DEV                  Fig. 8 threads×buffer grid
+  end-to-end    [--scale N]                               full pipeline + headline table"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), value);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn datasets_from(flags: &HashMap<String, String>) -> Result<Vec<Dataset>> {
+    let spec = flag(flags, "dataset", "all");
+    if spec.eq_ignore_ascii_case("all") {
+        return Ok(Dataset::ALL.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        out.push(Dataset::parse(part).with_context(|| format!("unknown dataset {part:?}"))?);
+    }
+    Ok(out)
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let scale = flag_usize(flags, "scale", 1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    for d in datasets_from(flags)? {
+        let g = d.generate(scale, seed);
+        println!(
+            "{}: |V| = {} |E| = {}",
+            d.abbr(),
+            fmt_count(g.num_vertices() as u64),
+            fmt_count(g.num_edges())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let scale = flag_usize(flags, "scale", 1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    let store = SimStore::new(DeviceKind::Dram);
+    let mut table = Table::new(&[
+        "Abbr", "|V|", "|E|", "Txt. COO", "Txt. CSX", "Bin. CSX", "WebGraph", "WG bits/edge",
+    ]);
+    for d in datasets_from(flags)? {
+        let g = d.generate(scale, seed);
+        let mut sizes = Vec::new();
+        let mut wg_bpe = 0.0;
+        for fk in FormatKind::ALL {
+            let base = format!("{}-{:?}", d.abbr(), fk);
+            let bytes = fk.write_to_store(&g, &store, &base);
+            sizes.push(fmt_bytes(bytes));
+            if fk == FormatKind::WebGraph {
+                wg_bpe = fk.bits_per_edge(&g, &store, &base);
+            }
+        }
+        table.row(&[
+            d.abbr().to_string(),
+            fmt_count(g.num_vertices() as u64),
+            fmt_count(g.num_edges()),
+            sizes[0].clone(),
+            sizes[1].clone(),
+            sizes[2].clone(),
+            sizes[3].clone(),
+            format!("{wg_bpe:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_model(flags: &HashMap<String, String>) -> Result<()> {
+    let sigma = flag_f64(flags, "sigma", 160e6);
+    let d = flag_f64(flags, "d", 1.0e9);
+    let rmax = flag_f64(flags, "rmax", 35.0);
+    println!("load bandwidth model: sigma <= b <= min(sigma*r, d)   (Fig. 1)");
+    println!("sigma = {}, d = {}", fmt_bw(sigma), fmt_bw(d));
+    let m = LoadModel { sigma, r: rmax, d };
+    println!("knee at r* = d/sigma = {:.2}", m.knee_ratio());
+    let mut table = Table::new(&["r", "upper bound"]);
+    for p in fig1_curve(sigma, d, rmax, 12) {
+        table.row(&[format!("{:.1}", p.r), fmt_bw(p.bound)]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Prepare a store holding `dataset` in `format`, return (graph, store, base).
+fn prepare(
+    dataset: Dataset,
+    device: DeviceKind,
+    format: FormatKind,
+    scale: usize,
+    seed: u64,
+) -> (paragrapher::graph::CsrGraph, Arc<SimStore>, String) {
+    let g = dataset.generate(scale, seed);
+    let store = Arc::new(SimStore::new(device));
+    let base = dataset.abbr().to_string();
+    format.write_to_store(&g, &store, &base);
+    store.drop_cache();
+    (g, store, base)
+}
+
+fn cmd_load(flags: &HashMap<String, String>) -> Result<()> {
+    let dataset =
+        Dataset::parse(flag(flags, "dataset", "RD")).context("unknown --dataset")?;
+    let device =
+        DeviceKind::parse(flag(flags, "device", "SSD")).context("unknown --device")?;
+    let format =
+        FormatKind::parse(flag(flags, "format", "webgraph")).context("unknown --format")?;
+    let threads = flag_usize(flags, "threads", 4);
+    let scale = flag_usize(flags, "scale", 1);
+    let buffer_edges = flag_usize(flags, "buffer-edges", 1 << 20) as u64;
+    let (g, store, base) = prepare(dataset, device, format, scale, 42);
+
+    let measurement = if format == FormatKind::WebGraph {
+        // Through the coordinator (the ParaGrapher path).
+        let pg = Paragrapher::init();
+        let opts = Options {
+            buffers: threads,
+            buffer_edges,
+            read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+            ..Options::default()
+        };
+        let graph = pg.open_graph(Arc::clone(&store), &base, GraphType::CsxWg400, opts)?;
+        let t0 = std::time::Instant::now();
+        let block = graph.load_whole_graph()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let seq = graph.sequential_seconds();
+        println!(
+            "decoded {} edges (wall {:.3}s, sequential open {:.3}s)",
+            fmt_count(block.num_edges()),
+            wall,
+            seq
+        );
+        LoadMeasurement {
+            elapsed: wall + seq,
+            edges: block.num_edges(),
+            device_bytes: store.device_bytes(),
+        }
+    } else {
+        // GAPBS-style baseline full load.
+        let accounts: Vec<IoAccount> = (0..threads).map(|_| IoAccount::new()).collect();
+        let ctx = ReadCtx { threads, ..ReadCtx::default() };
+        let loaded = format.load_full(&store, &base, ctx, &accounts)?;
+        LoadMeasurement::from_accounts(&accounts, loaded.num_edges(), 0.0)
+    };
+    println!(
+        "{} / {} / {}: {} ({} modeled)",
+        dataset.abbr(),
+        device.name(),
+        format.name(),
+        fmt_meps(measurement.me_per_sec()),
+        fmt_bw(measurement.device_bandwidth()),
+    );
+    let _ = g;
+    Ok(())
+}
+
+fn cmd_wcc(flags: &HashMap<String, String>) -> Result<()> {
+    let dataset =
+        Dataset::parse(flag(flags, "dataset", "RD")).context("unknown --dataset")?;
+    let device =
+        DeviceKind::parse(flag(flags, "device", "SSD")).context("unknown --device")?;
+    let format =
+        FormatKind::parse(flag(flags, "format", "webgraph")).context("unknown --format")?;
+    let threads = flag_usize(flags, "threads", 4);
+    let scale = flag_usize(flags, "scale", 1);
+    let (g, store, base) = prepare(dataset, device, format, scale, 42);
+
+    let components = if format == FormatKind::WebGraph {
+        // ParaGrapher + streaming JT-CC over async blocks (§5.3).
+        let pg = Paragrapher::init();
+        let opts = Options {
+            buffers: threads,
+            read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+            ..Options::default()
+        };
+        let graph = pg.open_graph(Arc::clone(&store), &base, GraphType::CsxWg400, opts)?;
+        let uf = Arc::new(paragrapher::algorithms::jtcc::JtUnionFind::new(
+            graph.num_vertices(),
+            7,
+        ));
+        let uf2 = Arc::clone(&uf);
+        let req = graph.csx_get_subgraph(
+            VertexRange::new(0, graph.num_vertices()),
+            Arc::new(move |blk| {
+                for (s, d) in blk.iter_edges() {
+                    uf2.union(s, d);
+                }
+            }),
+        )?;
+        req.wait();
+        if let Some(e) = req.error() {
+            bail!("load failed: {e}");
+        }
+        uf.count_components()
+    } else {
+        // Baseline: full load then Afforest.
+        let accounts: Vec<IoAccount> = (0..threads).map(|_| IoAccount::new()).collect();
+        let ctx = ReadCtx { threads, ..ReadCtx::default() };
+        let loaded = format.load_full(&store, &base, ctx, &accounts)?;
+        let labels = paragrapher::algorithms::afforest::afforest(&loaded, 7);
+        paragrapher::algorithms::count_components(&labels)
+    };
+    println!(
+        "{} / {} / {}: {} weakly-connected components ({} vertices, {} edges)",
+        dataset.abbr(),
+        device.name(),
+        format.name(),
+        components,
+        fmt_count(g.num_vertices() as u64),
+        fmt_count(g.num_edges()),
+    );
+    Ok(())
+}
+
+fn cmd_bench_storage(flags: &HashMap<String, String>) -> Result<()> {
+    let devices: Vec<DeviceKind> = match flags.get("device") {
+        Some(d) => vec![DeviceKind::parse(d).context("unknown --device")?],
+        None => vec![DeviceKind::Hdd, DeviceKind::Ssd],
+    };
+    for device in devices {
+        println!("\n{} read bandwidth (modeled, Fig. 4 grid):", device.name());
+        let m = device.model();
+        let mut table = Table::new(&["block", "threads", "method", "bandwidth"]);
+        for &block in &[4u64 << 10, 4 << 20] {
+            for &threads in &[1usize, 18, 36] {
+                for method in ReadMethod::ALL {
+                    let bw = m.aggregate_bandwidth(threads, block, method, true);
+                    table.row(&[
+                        fmt_bytes(block),
+                        threads.to_string(),
+                        method.name().to_string(),
+                        fmt_bw(bw),
+                    ]);
+                }
+            }
+        }
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let dataset =
+        Dataset::parse(flag(flags, "dataset", "TW")).context("unknown --dataset")?;
+    let device =
+        DeviceKind::parse(flag(flags, "device", "HDD")).context("unknown --device")?;
+    let scale = flag_usize(flags, "scale", 1);
+    let (_g, store, base) = prepare(dataset, device, FormatKind::WebGraph, scale, 42);
+    let pg = Paragrapher::init();
+    let mut table = Table::new(&["threads", "buffer edges", "throughput"]);
+    for &threads in &[2usize, 4, 9] {
+        for &buffer_edges in &[64u64 << 10, 512 << 10, 1 << 20] {
+            store.drop_cache();
+            let opts = Options {
+                buffers: threads,
+                buffer_edges,
+                read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+                ..Options::default()
+            };
+            let graph =
+                pg.open_graph(Arc::clone(&store), &base, GraphType::CsxWg400, opts)?;
+            let t0 = std::time::Instant::now();
+            let block = graph.load_whole_graph()?;
+            let elapsed = t0.elapsed().as_secs_f64() + graph.sequential_seconds();
+            let meps = block.num_edges() as f64 / elapsed / 1e6;
+            table.row(&[threads.to_string(), fmt_count(buffer_edges), fmt_meps(meps)]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_end_to_end(flags: &HashMap<String, String>) -> Result<()> {
+    let scale = flag_usize(flags, "scale", 1);
+    println!(
+        "running the end-to-end pipeline at scale {scale} — see examples/end_to_end.rs for the full driver"
+    );
+    // Compact inline version: one dataset, all formats, two devices.
+    let dataset = Dataset::Tw;
+    for device in [DeviceKind::Hdd, DeviceKind::Ssd] {
+        let mut table = Table::new(&["format", "throughput", "bandwidth"]);
+        for format in FormatKind::ALL {
+            let (g, store, base) = prepare(dataset, device, format, scale, 42);
+            let threads = 4;
+            let accounts: Vec<IoAccount> = (0..threads).map(|_| IoAccount::new()).collect();
+            let ctx = ReadCtx { threads, ..ReadCtx::default() };
+            let loaded = format.load_full(&store, &base, ctx, &accounts)?;
+            assert_eq!(loaded.num_edges(), g.num_edges());
+            let m = LoadMeasurement::from_accounts(&accounts, loaded.num_edges(), 0.0);
+            table.row(&[
+                format.name().to_string(),
+                fmt_meps(m.me_per_sec()),
+                fmt_bw(m.device_bandwidth()),
+            ]);
+        }
+        println!("\nTW on {} (modeled):", device.name());
+        println!("{}", table.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Experiment metrics: throughput accounting and table rendering shared by
+//! the CLI, examples and benches.
+
+use crate::storage::IoAccount;
+use crate::util::json::Json;
+
+/// Result of one measured load: modeled elapsed time plus derived rates.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadMeasurement {
+    /// Modeled elapsed seconds (virtual I/O + real CPU composition).
+    pub elapsed: f64,
+    /// Edges delivered.
+    pub edges: u64,
+    /// Bytes read from the device.
+    pub device_bytes: u64,
+}
+
+impl LoadMeasurement {
+    pub fn from_accounts(accounts: &[IoAccount], edges: u64, extra_seconds: f64) -> Self {
+        let elapsed = crate::storage::vclock::phase_elapsed(accounts) + extra_seconds;
+        let device_bytes = accounts.iter().map(|a| a.bytes_read()).sum();
+        Self { elapsed, edges, device_bytes }
+    }
+
+    /// Throughput in Million Edges per Second — the paper's Fig. 5/7 unit.
+    pub fn me_per_sec(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        self.edges as f64 / self.elapsed / 1e6
+    }
+
+    /// Load bandwidth in device bytes/s (Fig. 5's right axis).
+    pub fn device_bandwidth(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        self.device_bytes as f64 / self.elapsed
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("elapsed_s", self.elapsed)
+            .set("edges", self.edges)
+            .set("device_bytes", self.device_bytes)
+            .set("me_per_s", self.me_per_sec());
+        o
+    }
+}
+
+/// Fixed-width text table (the bench harness's human output).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        ));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a throughput as the paper does ("129 ME/s").
+pub fn fmt_meps(v: f64) -> String {
+    format!("{v:.1} ME/s")
+}
+
+/// Format bandwidth adaptively (MB/s vs GB/s, Fig. 5's right axis).
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_rates() {
+        let accounts = vec![IoAccount::new(), IoAccount::new()];
+        accounts[0].charge_io(2.0, 100);
+        accounts[1].charge_io(1.0, 50);
+        let m = LoadMeasurement::from_accounts(&accounts, 10_000_000, 0.0);
+        assert!((m.elapsed - 2.0).abs() < 1e-9);
+        assert!((m.me_per_sec() - 5.0).abs() < 1e-9);
+        assert_eq!(m.device_bytes, 150);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_meps(129.04), "129.0 ME/s");
+        assert_eq!(fmt_bw(3.6e9), "3.60 GB/s");
+        assert_eq!(fmt_bw(160e6), "160.0 MB/s");
+    }
+}

@@ -1,0 +1,232 @@
+//! The paper's §3 performance model of compressed-graph loading.
+//!
+//! With storage read bandwidth σ (bytes/s), compression ratio r (> 1) and
+//! decompression bandwidth d (bytes of *uncompressed* output per second),
+//! the achievable load bandwidth b (uncompressed bytes/s) satisfies
+//!
+//! ```text
+//!     σ ≤ b ≤ min(σ·r, d)
+//! ```
+//!
+//! (Fig. 1). Loading an uncompressed format is the r = 1, d = ∞ corner.
+//! This module evaluates the model, generates the Fig. 1 curves, and
+//! calibrates d from measured decode runs — used by the benches to check
+//! measured numbers sit inside the model envelope.
+
+use crate::util::json::Json;
+
+/// Model inputs for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadModel {
+    /// Storage read bandwidth, bytes/s.
+    pub sigma: f64,
+    /// Compression ratio r (uncompressed bytes / compressed bytes).
+    pub r: f64,
+    /// Decompression bandwidth, uncompressed bytes/s (f64::INFINITY for
+    /// uncompressed formats).
+    pub d: f64,
+}
+
+impl LoadModel {
+    /// Upper bound on load bandwidth (uncompressed bytes/s): min(σ·r, d).
+    pub fn upper_bound(&self) -> f64 {
+        (self.sigma * self.r).min(self.d)
+    }
+
+    /// Lower bound: σ (the paper's b ≥ σ — compression never loses).
+    pub fn lower_bound(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Is this configuration storage-bound (σ·r < d) or compute-bound?
+    pub fn storage_bound(&self) -> bool {
+        self.sigma * self.r < self.d
+    }
+
+    /// The compression ratio beyond which more compression stops helping
+    /// (Fig. 1's knee): r* = d / σ.
+    pub fn knee_ratio(&self) -> f64 {
+        self.d / self.sigma
+    }
+
+    /// Expected load time for `uncompressed_bytes` of graph data, assuming
+    /// the bound is achieved (used for sanity envelopes, not predictions).
+    pub fn min_load_seconds(&self, uncompressed_bytes: u64) -> f64 {
+        uncompressed_bytes as f64 / self.upper_bound()
+    }
+}
+
+/// One point of a Fig. 1 curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub r: f64,
+    pub bound: f64,
+}
+
+/// Generate the Fig. 1 curve: load-bandwidth upper bound as a function of
+/// compression ratio r ∈ [1, r_max], for given σ and d.
+pub fn fig1_curve(sigma: f64, d: f64, r_max: f64, points: usize) -> Vec<CurvePoint> {
+    let points = points.max(2);
+    (0..points)
+        .map(|i| {
+            let r = 1.0 + (r_max - 1.0) * i as f64 / (points - 1) as f64;
+            let m = LoadModel { sigma, r, d };
+            CurvePoint { r, bound: m.upper_bound() }
+        })
+        .collect()
+}
+
+/// Calibrate d from a measured decode run: `uncompressed_bytes` produced in
+/// `cpu_seconds` of decode CPU time across `workers` workers.
+pub fn calibrate_d(uncompressed_bytes: u64, cpu_seconds: f64, workers: usize) -> f64 {
+    if cpu_seconds <= 0.0 {
+        return f64::INFINITY;
+    }
+    // Per-core decode bandwidth × workers = aggregate d.
+    uncompressed_bytes as f64 / cpu_seconds * workers as f64
+}
+
+/// Serialize a curve for the bench JSON output.
+pub fn curve_to_json(curve: &[CurvePoint]) -> Json {
+    let mut arr = Json::Arr(vec![]);
+    for p in curve {
+        let mut o = Json::obj();
+        o.set("r", p.r).set("bound", p.bound);
+        arr.push(o);
+    }
+    arr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1e6;
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn bounds_ordering() {
+        let m = LoadModel { sigma: 160.0 * MB, r: 8.0, d: 1.0 * GB };
+        assert!(m.lower_bound() <= m.upper_bound());
+        assert_eq!(m.upper_bound(), 1.0 * GB); // min(1.28G, 1G) = d
+        assert!(!m.storage_bound());
+    }
+
+    #[test]
+    fn hdd_is_storage_bound_ssd_compute_bound() {
+        // The paper's qualitative claim: on HDD the ratio dominates, on SSD
+        // the decompression bandwidth does. Take d ≈ 1 GB/s of decode.
+        let d = 1.0 * GB;
+        let hdd = LoadModel { sigma: 160.0 * MB, r: 5.0, d };
+        let ssd = LoadModel { sigma: 3.6 * GB, r: 5.0, d };
+        assert!(hdd.storage_bound(), "HDD: σ·r = 0.8G < d");
+        assert!(!ssd.storage_bound(), "SSD: σ·r = 18G > d");
+        assert!(hdd.knee_ratio() > 5.0);
+        assert!(ssd.knee_ratio() < 1.0);
+    }
+
+    #[test]
+    fn fig1_curve_shape() {
+        let curve = fig1_curve(160.0 * MB, 1.0 * GB, 35.0, 100);
+        assert_eq!(curve.len(), 100);
+        assert!((curve[0].bound - 160.0 * MB).abs() < 1e-3);
+        // Monotone non-decreasing, capped at d.
+        for w in curve.windows(2) {
+            assert!(w[1].bound >= w[0].bound - 1e-9);
+        }
+        assert_eq!(curve.last().unwrap().bound, 1.0 * GB);
+        // The knee sits at r* = d/σ = 6.25.
+        let knee = 1.0 * GB / (160.0 * MB);
+        let below = curve.iter().filter(|p| p.r < knee - 0.5).all(|p| p.bound < 1.0 * GB);
+        assert!(below, "below the knee the curve must still climb");
+    }
+
+    #[test]
+    fn calibration() {
+        assert_eq!(calibrate_d(1_000_000, 1.0, 1), 1e6);
+        assert_eq!(calibrate_d(1_000_000, 0.5, 4), 8e6);
+        assert!(calibrate_d(1, 0.0, 1).is_infinite());
+    }
+
+    #[test]
+    fn uncompressed_corner() {
+        let m = LoadModel { sigma: 500.0 * MB, r: 1.0, d: f64::INFINITY };
+        assert_eq!(m.upper_bound(), 500.0 * MB);
+        assert!(m.storage_bound());
+    }
+}
+
+/// §6 "Network-Based Distributed Decompression": instead of every machine
+/// decompressing independently, decompression is divided across `machines`
+/// and results are exchanged over a network of bandwidth `net` (bytes/s of
+/// uncompressed data). This extends the §3 model with a network limb:
+///
+/// ```text
+///     b_dist ≤ min(σ·r, machines·d_one, net)
+/// ```
+///
+/// Useful when d is the binding constraint and the network is faster than
+/// a single machine's decompression.
+#[derive(Debug, Clone, Copy)]
+pub struct DistributedModel {
+    pub base: LoadModel,
+    /// Per-machine decompression bandwidth (uncompressed bytes/s).
+    pub d_one: f64,
+    pub machines: usize,
+    /// Network bandwidth for sharing decompressed blocks.
+    pub net: f64,
+}
+
+impl DistributedModel {
+    pub fn upper_bound(&self) -> f64 {
+        (self.base.sigma * self.base.r)
+            .min(self.d_one * self.machines as f64)
+            .min(self.net)
+    }
+
+    /// Does distributing help over single-machine decompression?
+    pub fn beneficial(&self) -> bool {
+        self.upper_bound() > LoadModel { d: self.d_one, ..self.base }.upper_bound()
+    }
+
+    /// Smallest machine count that saturates the other limbs.
+    pub fn saturating_machines(&self) -> usize {
+        let target = (self.base.sigma * self.base.r).min(self.net);
+        (target / self.d_one).ceil().max(1.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod dist_tests {
+    use super::*;
+
+    #[test]
+    fn distribution_lifts_the_d_limb() {
+        // SSD, decode-bound single machine: distributing decompression
+        // raises throughput until the network limb binds.
+        let base = LoadModel { sigma: 3.6e9, r: 8.0, d: 1e9 };
+        let m = DistributedModel { base, d_one: 1e9, machines: 4, net: 10e9 };
+        assert!(m.beneficial());
+        assert_eq!(m.upper_bound(), 4e9);
+        // With a slow network the new limb binds instead.
+        let slow = DistributedModel { net: 2e9, ..m };
+        assert_eq!(slow.upper_bound(), 2e9);
+        assert!(slow.beneficial());
+        // Storage-bound configs gain nothing.
+        let hdd = DistributedModel {
+            base: LoadModel { sigma: 160e6, r: 2.0, d: 1e9 },
+            d_one: 1e9,
+            machines: 8,
+            net: 10e9,
+        };
+        assert!(!hdd.beneficial());
+    }
+
+    #[test]
+    fn saturating_machine_count() {
+        let base = LoadModel { sigma: 3.6e9, r: 4.0, d: 1e9 };
+        let m = DistributedModel { base, d_one: 1e9, machines: 1, net: 12e9 };
+        // σ·r = 14.4e9, net = 12e9 → need ceil(12) machines.
+        assert_eq!(m.saturating_machines(), 12);
+    }
+}

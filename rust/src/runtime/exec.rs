@@ -1,0 +1,300 @@
+//! Loading and executing the AOT artifacts through the PJRT CPU client.
+//!
+//! The `xla` crate's client/executable types are `!Send` (`Rc` internals),
+//! so the runtime owns them on a dedicated *service thread*; the rest of
+//! the system talks to it through a channel. This mirrors a realistic
+//! deployment where a fixed set of runtime threads own device contexts.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::ScanEngine;
+
+/// Fixed block length of the gap-scan executable (must match
+/// `python/compile/aot.py`).
+pub const GAP_SCAN_BLOCK: usize = 65_536;
+/// Fixed edge-block / label-array length of the WCC step executable.
+pub const WCC_BLOCK: usize = 65_536;
+
+/// One compiled artifact (lives on the service thread).
+struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Artifact {
+    fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(Self { exe, name: name.to_string() })
+    }
+
+    /// Execute with literal inputs; returns the first element of the
+    /// result tuple (aot.py lowers with `return_tuple=True`).
+    fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", self.name))?;
+        lit.to_tuple1().map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+enum Request {
+    Scan { gaps: Vec<i64>, carry: i64, reply: Sender<Result<Vec<i64>>> },
+    WccStep { labels: Vec<i32>, src: Vec<i32>, dst: Vec<i32>, reply: Sender<Result<Vec<i32>>> },
+    Platform { reply: Sender<String> },
+}
+
+/// Handle to the XLA service thread. Cheap to clone via `Arc`; `Send+Sync`.
+pub struct ArtifactSet {
+    tx: Mutex<Sender<Request>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Start the service thread and load every artifact from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let dir2 = dir.clone();
+        let worker = std::thread::Builder::new()
+            .name("pg-xla-service".into())
+            .spawn(move || {
+                let init = (|| -> Result<(xla::PjRtClient, Artifact, Artifact)> {
+                    let client = xla::PjRtClient::cpu()
+                        .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+                    let gap_scan = Artifact::load(&client, &dir2, "gap_scan")?;
+                    let wcc_step = Artifact::load(&client, &dir2, "wcc_step")?;
+                    Ok((client, gap_scan, wcc_step))
+                })();
+                let (client, gap_scan, wcc_step) = match init {
+                    Ok(t) => {
+                        let _ = ready_tx.send(Ok(()));
+                        t
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Scan { gaps, carry, reply } => {
+                            let _ = reply.send(run_scan(&gap_scan, &gaps, carry));
+                        }
+                        Request::WccStep { labels, src, dst, reply } => {
+                            let _ = reply.send(run_wcc(&wcc_step, &labels, &src, &dst));
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(client.platform_name());
+                        }
+                    }
+                }
+            })
+            .context("spawn xla service")?;
+        ready_rx.recv().context("xla service died during init")??;
+        Ok(Arc::new(Self { tx: Mutex::new(tx), worker: Mutex::new(Some(worker)), dir }))
+    }
+
+    /// Default artifacts directory: `$PARAGRAPHER_ARTIFACTS`, else
+    /// `<workspace>/artifacts` (repo layout), else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("PARAGRAPHER_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let repo = manifest.parent().map(|p| p.join("artifacts"));
+        match repo {
+            Some(p) if p.exists() => p,
+            _ => PathBuf::from("artifacts"),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .expect("xla tx lock")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("xla service thread gone"))
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = channel();
+        self.send(Request::Platform { reply })?;
+        rx.recv().context("xla service reply")
+    }
+
+    /// Inclusive i64 scan of exactly [`GAP_SCAN_BLOCK`] elements with a
+    /// scalar carry added to every prefix.
+    pub fn gap_scan_block(&self, gaps: &[i64], carry: i64) -> Result<Vec<i64>> {
+        if gaps.len() != GAP_SCAN_BLOCK {
+            bail!("gap_scan expects {GAP_SCAN_BLOCK} elements, got {}", gaps.len());
+        }
+        let (reply, rx) = channel();
+        self.send(Request::Scan { gaps: gaps.to_vec(), carry, reply })?;
+        rx.recv().context("xla service reply")?
+    }
+
+    /// One WCC label-propagation step over a fixed-shape edge block:
+    /// `labels'[i] = min(labels[i], min over edges (u,v) incident labels)`.
+    /// Pad unused edge slots with `(0, 0)` self-edges.
+    pub fn wcc_step_block(&self, labels: &[i32], src: &[i32], dst: &[i32]) -> Result<Vec<i32>> {
+        if labels.len() != WCC_BLOCK || src.len() != WCC_BLOCK || dst.len() != WCC_BLOCK {
+            bail!("wcc_step expects {WCC_BLOCK}-length arrays");
+        }
+        let (reply, rx) = channel();
+        self.send(Request::WccStep {
+            labels: labels.to_vec(),
+            src: src.to_vec(),
+            dst: dst.to_vec(),
+            reply,
+        })?;
+        rx.recv().context("xla service reply")?
+    }
+}
+
+impl Drop for ArtifactSet {
+    fn drop(&mut self) {
+        // Close the channel, then join the service thread.
+        {
+            let (tx, _rx) = channel();
+            let mut guard = self.tx.lock().expect("xla tx lock");
+            *guard = tx; // drop the real sender
+        }
+        if let Some(h) = self.worker.lock().expect("worker lock").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_scan(art: &Artifact, gaps: &[i64], carry: i64) -> Result<Vec<i64>> {
+    let x = xla::Literal::vec1(gaps);
+    let c = xla::Literal::scalar(carry);
+    let out = art.run(&[x, c])?;
+    out.to_vec::<i64>().map_err(|e| anyhow::anyhow!("gap_scan output: {e:?}"))
+}
+
+fn run_wcc(art: &Artifact, labels: &[i32], src: &[i32], dst: &[i32]) -> Result<Vec<i32>> {
+    let l = xla::Literal::vec1(labels);
+    let s = xla::Literal::vec1(src);
+    let d = xla::Literal::vec1(dst);
+    let out = art.run(&[l, s, d])?;
+    out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("wcc_step output: {e:?}"))
+}
+
+/// [`ScanEngine`] backed by the AOT Pallas gap-scan kernel. Arbitrary-length
+/// arrays are processed in [`GAP_SCAN_BLOCK`] chunks, chaining the carry
+/// through the executable's scalar input.
+pub struct XlaScanEngine {
+    artifacts: Arc<ArtifactSet>,
+}
+
+impl XlaScanEngine {
+    pub fn new(artifacts: Arc<ArtifactSet>) -> Self {
+        Self { artifacts }
+    }
+}
+
+impl ScanEngine for XlaScanEngine {
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+
+    fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()> {
+        let mut carry = 0i64;
+        let mut pos = 0usize;
+        let mut padded = vec![0i64; GAP_SCAN_BLOCK];
+        while pos < gaps.len() {
+            let take = (gaps.len() - pos).min(GAP_SCAN_BLOCK);
+            let out = if take == GAP_SCAN_BLOCK {
+                self.artifacts.gap_scan_block(&gaps[pos..pos + take], carry)?
+            } else {
+                padded[..take].copy_from_slice(&gaps[pos..pos + take]);
+                for p in padded[take..].iter_mut() {
+                    *p = 0;
+                }
+                self.artifacts.gap_scan_block(&padded, carry)?
+            };
+            gaps[pos..pos + take].copy_from_slice(&out[..take]);
+            carry = gaps[pos + take - 1];
+            pos += take;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeScan;
+
+    fn artifacts() -> Option<Arc<ArtifactSet>> {
+        let dir = ArtifactSet::default_dir();
+        match ArtifactSet::load(&dir) {
+            Ok(a) => Some(a),
+            Err(e) => {
+                eprintln!("skipping XLA tests ({e}); run `make artifacts`");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn xla_scan_matches_native() {
+        let Some(arts) = artifacts() else { return };
+        let engine = XlaScanEngine::new(arts);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(4);
+        for len in [0usize, 1, 100, GAP_SCAN_BLOCK - 1, GAP_SCAN_BLOCK, GAP_SCAN_BLOCK + 13] {
+            let base: Vec<i64> =
+                (0..len).map(|_| rng.next_below(1000) as i64 - 300).collect();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            engine.inclusive_scan_i64(&mut a).unwrap();
+            NativeScan.inclusive_scan_i64(&mut b).unwrap();
+            assert_eq!(a, b, "len={len}");
+        }
+    }
+
+    #[test]
+    fn wcc_step_executes() {
+        let Some(arts) = artifacts() else { return };
+        let mut labels: Vec<i32> = (0..WCC_BLOCK as i32).collect();
+        let mut src = vec![0i32; WCC_BLOCK];
+        let mut dst = vec![0i32; WCC_BLOCK];
+        // A chain 0-1, 1-2, 2-3 (padding slots are (0,0) self-edges).
+        src[0] = 0;
+        dst[0] = 1;
+        src[1] = 1;
+        dst[1] = 2;
+        src[2] = 2;
+        dst[2] = 3;
+        for _ in 0..3 {
+            labels = arts.wcc_step_block(&labels, &src, &dst).unwrap();
+        }
+        assert_eq!(&labels[..5], &[0, 0, 0, 0, 4]);
+    }
+}

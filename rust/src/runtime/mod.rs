@@ -1,0 +1,60 @@
+//! PJRT runtime: loads the AOT-compiled XLA executables produced by
+//! `python/compile/aot.py` (HLO *text* — see DESIGN.md; serialized protos
+//! from jax ≥ 0.5 are rejected by xla_extension 0.5.1) and exposes them to
+//! the L3 hot path.
+//!
+//! Python never runs at load/serve time: `make artifacts` runs once at
+//! build time; this module only reads `artifacts/*.hlo.txt`.
+//!
+//! Exposed engines:
+//! * [`ScanEngine`] — the gap→ID inclusive scan used by the decoder's
+//!   phase 2 ([`NativeScan`] in Rust, [`XlaScanEngine`] through the Pallas
+//!   kernel's HLO).
+//! * `ArtifactSet::wcc_step_block` — one label-propagation step over a fixed-shape edge
+//!   block (the analytics consumer used by examples/benches).
+
+mod exec;
+
+pub use exec::{ArtifactSet, XlaScanEngine, GAP_SCAN_BLOCK, WCC_BLOCK};
+
+use anyhow::Result;
+
+/// Inclusive scan over i64 gaps: `out[i] = sum(gaps[0..=i])`. The decoder
+/// concatenates all residual gaps of a decoded block into one array and
+/// calls this once per block (phase 2 of decoding).
+pub trait ScanEngine: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()>;
+}
+
+/// Pure-Rust scan (the default, and the oracle for the XLA path).
+pub struct NativeScan;
+
+impl ScanEngine for NativeScan {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()> {
+        let mut acc = 0i64;
+        for g in gaps.iter_mut() {
+            acc += *g;
+            *g = acc;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_scan_basics() {
+        let mut v = vec![5i64, -2, 3, 0, -6];
+        NativeScan.inclusive_scan_i64(&mut v).unwrap();
+        assert_eq!(v, vec![5, 3, 6, 6, 0]);
+        let mut empty: Vec<i64> = vec![];
+        NativeScan.inclusive_scan_i64(&mut empty).unwrap();
+    }
+}

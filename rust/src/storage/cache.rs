@@ -1,0 +1,170 @@
+//! OS page-cache model.
+//!
+//! §4.1 requires the library to leave the machine as it found it — including
+//! *dropping the OS cache of storage contents* (the paper calls
+//! `/proc/sys/vm/drop_caches` / `flushcache`). The simulator models the
+//! cache so that (a) warm re-reads are DRAM-speed, which would silently
+//! invalidate every bandwidth measurement, and (b) `drop_cache()` restores
+//! cold-read behaviour — tests assert both.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Page granularity of the model (16 KiB "super-pages": coarse enough to
+/// keep bookkeeping cheap, fine enough that small files span several).
+pub const CACHE_PAGE: u64 = 16 << 10;
+
+#[derive(Debug)]
+struct CacheInner {
+    /// (file_id, page_index) -> resident
+    pages: HashMap<(u64, u64), ()>,
+    /// FIFO eviction order (good enough for streaming workloads).
+    order: VecDeque<(u64, u64)>,
+    capacity_pages: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Shared page-cache model for one simulated machine.
+#[derive(Debug)]
+pub struct PageCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl PageCache {
+    /// `capacity_bytes` models the RAM available for caching.
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner {
+                pages: HashMap::new(),
+                order: VecDeque::new(),
+                capacity_pages: (capacity_bytes / CACHE_PAGE).max(1),
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Record an access to `[offset, offset+len)` of `file_id`; returns the
+    /// number of bytes that *missed* and must be charged to the device.
+    ///
+    /// Buffered I/O (`populate = true`) works in whole pages: a missed page
+    /// is charged at full page size (the OS reads — and caches — the whole
+    /// page, like real readahead), capped at `file_len`. O_DIRECT
+    /// (`populate = false`) bypasses the cache and is charged exactly the
+    /// requested bytes.
+    pub fn access(
+        &self,
+        file_id: u64,
+        offset: u64,
+        len: u64,
+        populate: bool,
+        file_len: u64,
+    ) -> u64 {
+        if len == 0 {
+            return 0;
+        }
+        if !populate {
+            return len;
+        }
+        let first = offset / CACHE_PAGE;
+        let last = (offset + len - 1) / CACHE_PAGE;
+        let mut inner = self.inner.lock().expect("cache lock");
+        let mut missed_bytes = 0u64;
+        for p in first..=last {
+            if inner.pages.contains_key(&(file_id, p)) {
+                inner.hits += 1;
+            } else {
+                inner.misses += 1;
+                // Whole-page transfer, truncated at EOF.
+                let page_start = p * CACHE_PAGE;
+                missed_bytes += CACHE_PAGE.min(file_len.saturating_sub(page_start));
+                if inner.order.len() as u64 >= inner.capacity_pages {
+                    if let Some(old) = inner.order.pop_front() {
+                        inner.pages.remove(&old);
+                    }
+                }
+                inner.pages.insert((file_id, p), ());
+                inner.order.push_back((file_id, p));
+            }
+        }
+        missed_bytes
+    }
+
+    /// Drop everything — the `flushcache` discipline between experiments.
+    pub fn drop_cache(&self) {
+        let mut inner = self.inner.lock().expect("cache lock");
+        inner.pages.clear();
+        inner.order.clear();
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().expect("cache lock");
+        (inner.hits, inner.misses)
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().expect("cache lock");
+        inner.pages.len() as u64 * CACHE_PAGE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLEN: u64 = 1 << 30;
+
+    #[test]
+    fn cold_then_warm_then_dropped() {
+        let c = PageCache::new(64 * CACHE_PAGE);
+        let missed = c.access(1, 0, 4 * CACHE_PAGE, true, FLEN);
+        assert_eq!(missed, 4 * CACHE_PAGE, "cold read misses everything");
+        let missed = c.access(1, 0, 4 * CACHE_PAGE, true, FLEN);
+        assert_eq!(missed, 0, "warm read is free");
+        c.drop_cache();
+        let missed = c.access(1, 0, 4 * CACHE_PAGE, true, FLEN);
+        assert_eq!(missed, 4 * CACHE_PAGE, "drop_cache restores cold behaviour");
+    }
+
+    #[test]
+    fn o_direct_does_not_populate() {
+        let c = PageCache::new(64 * CACHE_PAGE);
+        assert_eq!(c.access(1, 0, CACHE_PAGE, false, FLEN), CACHE_PAGE);
+        let missed = c.access(1, 0, CACHE_PAGE, true, FLEN);
+        assert_eq!(missed, CACHE_PAGE, "O_DIRECT read did not populate");
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let c = PageCache::new(2 * CACHE_PAGE);
+        c.access(1, 0, CACHE_PAGE, true, FLEN); // page 0
+        c.access(1, CACHE_PAGE, CACHE_PAGE, true, FLEN); // page 1
+        c.access(1, 2 * CACHE_PAGE, CACHE_PAGE, true, FLEN); // evicts page 0
+        assert_eq!(c.access(1, 0, CACHE_PAGE, true, FLEN), CACHE_PAGE, "page 0 evicted");
+    }
+
+    #[test]
+    fn distinct_files_do_not_collide() {
+        let c = PageCache::new(64 * CACHE_PAGE);
+        c.access(1, 0, CACHE_PAGE, true, FLEN);
+        assert_eq!(c.access(2, 0, CACHE_PAGE, true, FLEN), CACHE_PAGE);
+    }
+
+    #[test]
+    fn small_read_charges_whole_page_and_caches_it() {
+        let c = PageCache::new(64 * CACHE_PAGE);
+        // A tiny buffered read faults in (and pays for) the whole page —
+        // a later read of that page is then legitimately warm.
+        assert_eq!(c.access(3, 10, 100, true, FLEN), CACHE_PAGE);
+        assert_eq!(c.access(3, 10, 100, true, FLEN), 0);
+        assert_eq!(c.access(3, CACHE_PAGE / 2, 8, true, FLEN), 0, "same page");
+    }
+
+    #[test]
+    fn page_charge_truncates_at_eof() {
+        let c = PageCache::new(64 * CACHE_PAGE);
+        let flen = CACHE_PAGE + 100; // file ends 100 B into its second page
+        assert_eq!(c.access(4, CACHE_PAGE, 50, true, flen), 100);
+    }
+}

@@ -1,0 +1,332 @@
+//! Analytical device models calibrated to the paper's §5.1 measurements.
+
+use super::reader::ReadMethod;
+
+/// The storage tiers evaluated in the paper (§5.1, §5.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// 7200 RPM SATA HDD — σ ≈ 160 MB/s (§5.1).
+    Hdd,
+    /// PCIe4 NVMe SSD — σ ≈ 3.6 GB/s aggregate, ~2.1 GB/s single stream.
+    Ssd,
+    /// 4×HDD NAS behind a network switch — link-bound.
+    Nas,
+    /// Non-volatile memory DIMMs (§5.4).
+    Nvmm,
+    /// DDR4 DRAM (§5.4, §5.6 "datasets stored on memory").
+    Dram,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 5] =
+        [DeviceKind::Hdd, DeviceKind::Ssd, DeviceKind::Nas, DeviceKind::Nvmm, DeviceKind::Dram];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Hdd => "HDD",
+            DeviceKind::Ssd => "SSD",
+            DeviceKind::Nas => "NAS",
+            DeviceKind::Nvmm => "NVMM",
+            DeviceKind::Dram => "DDR4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "HDD" => Some(DeviceKind::Hdd),
+            "SSD" => Some(DeviceKind::Ssd),
+            "NAS" => Some(DeviceKind::Nas),
+            "NVMM" => Some(DeviceKind::Nvmm),
+            "DDR4" | "DRAM" => Some(DeviceKind::Dram),
+            _ => None,
+        }
+    }
+
+    pub fn model(&self) -> DeviceModel {
+        DeviceModel::new(*self)
+    }
+}
+
+/// Parametric model of one device. Times are seconds, sizes bytes,
+/// bandwidths bytes/second.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub kind: DeviceKind,
+    /// Sustained media/stream bandwidth of one internal channel.
+    pub stream_bw: f64,
+    /// Aggregate ceiling over all channels/queues.
+    pub peak_bw: f64,
+    /// Full random-access latency per request.
+    pub seek: f64,
+    /// Fraction of `seek` charged when a single sequential stream runs
+    /// (track-to-track / readahead hides most of it).
+    pub sequential_seek_factor: f64,
+    /// Concurrency half-saturation constant for queue-parallel devices:
+    /// aggregate(t) = peak * t / (t + k). (SSD/NVMM/DRAM.)
+    pub concurrency_k: f64,
+    /// True for single-spindle-like devices where concurrent readers
+    /// interleave and *degrade* throughput (HDD, NAS-of-HDDs).
+    pub spindle: bool,
+    /// OS readahead window for buffered (non-direct) methods.
+    pub readahead: u64,
+    /// Seek-time scale factor. The paper's experiments run on multi-GB
+    /// files where a 64M-edge request (~100 MB) dwarfs an 8 ms seek; our
+    /// datasets are ~10^3 smaller, so scaled experiments shrink the seek by
+    /// the same factor to preserve the request-size/seek ratio (DESIGN §3).
+    pub seek_scale: f64,
+}
+
+impl DeviceModel {
+    /// Model for *scaled* experiments (datasets ~10^3 smaller than the
+    /// paper's): seek shrinks by the same factor so request-size/seek
+    /// trade-offs are preserved.
+    pub fn new_scaled(kind: DeviceKind) -> Self {
+        DeviceModel { seek_scale: 1e-3, ..Self::new(kind) }
+    }
+
+    pub fn new(kind: DeviceKind) -> Self {
+        // Calibration sources: §5.1 ("160 MB/s HDD, 3.6 GB/s SSD, single
+        // threaded SSD read ≈ 2–2.1 GB/s", "HDD saturated by one thread,
+        // degraded by more", "mmap reduces SSD bandwidth"), §5.2 (NAS binary
+        // CSX ≈ 98 MB/s implied by 179 ME/s = 7.3× compressed), §5.4 (NVMM,
+        // DDR4: ParaGrapher peaks at 3.8 GB/s decode-bound).
+        match kind {
+            DeviceKind::Hdd => DeviceModel {
+                kind,
+                stream_bw: 168e6,
+                peak_bw: 168e6,
+                seek: 8e-3,
+                sequential_seek_factor: 0.05,
+                concurrency_k: 0.0,
+                spindle: true,
+                readahead: 1 << 20,
+                seek_scale: 1.0,
+            },
+            DeviceKind::Ssd => DeviceModel {
+                kind,
+                stream_bw: 2.55e9,
+                peak_bw: 3.6e9,
+                seek: 60e-6,
+                sequential_seek_factor: 0.25,
+                concurrency_k: 0.72,
+                spindle: false,
+                readahead: 512 << 10,
+                seek_scale: 1.0,
+            },
+            DeviceKind::Nas => DeviceModel {
+                kind,
+                // 4 spindles behind a ~1 GbE-class shared link: the link is
+                // the ceiling; latency includes network round trip.
+                stream_bw: 110e6,
+                peak_bw: 110e6,
+                seek: 12e-3,
+                sequential_seek_factor: 0.08,
+                concurrency_k: 0.0,
+                spindle: true,
+                readahead: 1 << 20,
+                seek_scale: 1.0,
+            },
+            DeviceKind::Nvmm => DeviceModel {
+                kind,
+                stream_bw: 6.5e9,
+                peak_bw: 15e9,
+                seek: 1.5e-6,
+                sequential_seek_factor: 0.5,
+                concurrency_k: 1.3,
+                spindle: false,
+                readahead: 256 << 10,
+                seek_scale: 1.0,
+            },
+            DeviceKind::Dram => DeviceModel {
+                kind,
+                stream_bw: 18e9,
+                peak_bw: 80e9,
+                seek: 0.1e-6,
+                sequential_seek_factor: 0.5,
+                concurrency_k: 3.5,
+                spindle: false,
+                readahead: 0,
+                seek_scale: 1.0,
+            },
+        }
+    }
+
+    /// Effective request size after OS readahead coalescing: buffered
+    /// methods reading sequentially get requests batched up to the
+    /// readahead window; O_DIRECT and random access do not.
+    fn effective_block(&self, block: u64, method: ReadMethod, sequential: bool) -> u64 {
+        if sequential && method.buffered() && self.readahead > 0 {
+            block.max(self.readahead)
+        } else {
+            block.max(1)
+        }
+    }
+
+    /// Method-dependent efficiency (Fig. 4: mmap costs SSD ~40 %, and
+    /// O_DIRECT does not rescue it; rotational devices don't care).
+    fn method_factor(&self, method: ReadMethod) -> f64 {
+        match (self.kind, method) {
+            (DeviceKind::Ssd, ReadMethod::Mmap) => 0.58,
+            (DeviceKind::Ssd, ReadMethod::MmapDirect) => 0.61,
+            (DeviceKind::Nvmm, ReadMethod::Mmap | ReadMethod::MmapDirect) => 0.85,
+            (DeviceKind::Dram, _) => 1.0,
+            (_, ReadMethod::Mmap | ReadMethod::MmapDirect) => 0.97,
+            _ => 1.0,
+        }
+    }
+
+    /// Aggregate device bandwidth (bytes/s) for `threads` concurrent readers
+    /// issuing requests of `block` bytes with `method`, each scanning its own
+    /// contiguous chunk (`sequential = true`, the paper's partitioned-file
+    /// pattern) or hopping randomly.
+    pub fn aggregate_bandwidth(
+        &self,
+        threads: usize,
+        block: u64,
+        method: ReadMethod,
+        sequential: bool,
+    ) -> f64 {
+        let threads = threads.max(1);
+        let block = self.effective_block(block, method, sequential);
+        let xfer = block as f64 / self.stream_bw;
+        let seek = self.seek * self.seek_scale;
+        let bw = if self.spindle {
+            // One head: requests serialize. A single sequential reader pays
+            // almost no seeks; concurrent readers force a seek per request
+            // switch (fraction grows with thread count), and deep queues add
+            // head-thrash pressure (the Fig. 8 HDD degradation).
+            let seek_fraction = if threads == 1 && sequential {
+                self.sequential_seek_factor
+            } else {
+                let interleave = 1.0 - 1.0 / (threads as f64 + 0.3);
+                self.sequential_seek_factor
+                    + (1.0 - self.sequential_seek_factor) * interleave
+            };
+            // Concurrent streams also depress the *sustained* rate (head
+            // repositioning inside large transfers) — a scale-invariant
+            // penalty, unlike the absolute seek term.
+            let stream_penalty = 1.0 + 0.012 * (threads as f64 - 1.0);
+            let per_request = seek * seek_fraction + xfer * stream_penalty;
+            block as f64 / per_request
+        } else {
+            // Queue-parallel device: per-thread stream rate bounded by one
+            // channel; aggregate follows a saturating curve toward peak.
+            let seek_fraction =
+                if sequential { self.sequential_seek_factor } else { 1.0 };
+            let per_thread = block as f64 / (seek * seek_fraction + xfer);
+            let per_thread = per_thread.min(self.stream_bw);
+            let curve = threads as f64 / (threads as f64 + self.concurrency_k);
+            (per_thread * threads as f64).min(self.peak_bw * curve)
+        };
+        bw * self.method_factor(method)
+    }
+
+    /// Virtual-time cost (seconds) of one request of `size` bytes when
+    /// `threads` readers share the device: each reader sees 1/threads of the
+    /// aggregate bandwidth, plus its share of request latency.
+    pub fn request_time(
+        &self,
+        size: u64,
+        threads: usize,
+        block: u64,
+        method: ReadMethod,
+        sequential: bool,
+    ) -> f64 {
+        let threads = threads.max(1) as f64;
+        let agg = self.aggregate_bandwidth(threads as usize, block, method, sequential);
+        size as f64 / (agg / threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const MB: f64 = 1e6;
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn hdd_saturated_by_single_thread() {
+        let m = DeviceKind::Hdd.model();
+        let bw1 = m.aggregate_bandwidth(1, 4 << 20, ReadMethod::Pread, true);
+        assert!(bw1 > 140.0 * MB && bw1 < 170.0 * MB, "HDD 1-thread {bw1}");
+    }
+
+    #[test]
+    fn hdd_degrades_with_threads() {
+        let m = DeviceKind::Hdd.model();
+        let bw1 = m.aggregate_bandwidth(1, 4 << 20, ReadMethod::Pread, true);
+        let bw18 = m.aggregate_bandwidth(18, 4 << 20, ReadMethod::Pread, true);
+        let bw36 = m.aggregate_bandwidth(36, 4 << 20, ReadMethod::Pread, true);
+        assert!(bw18 < bw1, "HDD must degrade: {bw1} -> {bw18}");
+        assert!(bw36 <= bw18 * 1.01);
+        assert!(bw36 > 80.0 * MB, "degradation is moderate for 4MB blocks: {bw36}");
+    }
+
+    #[test]
+    fn ssd_needs_threads_to_saturate() {
+        let m = DeviceKind::Ssd.model();
+        let bw1 = m.aggregate_bandwidth(1, 4 << 20, ReadMethod::Pread, true);
+        let bw18 = m.aggregate_bandwidth(18, 4 << 20, ReadMethod::Pread, true);
+        assert!(bw1 > 1.9 * GB && bw1 < 2.3 * GB, "SSD single stream ≈ 2–2.1 GB/s, got {bw1}");
+        assert!(bw18 > 3.3 * GB && bw18 <= 3.6 * GB, "SSD saturates ≈ 3.6 GB/s, got {bw18}");
+    }
+
+    #[test]
+    fn ssd_mmap_penalty() {
+        let m = DeviceKind::Ssd.model();
+        let pread = m.aggregate_bandwidth(18, 4 << 20, ReadMethod::Pread, true);
+        let mmap = m.aggregate_bandwidth(18, 4 << 20, ReadMethod::Mmap, true);
+        let mmap_direct = m.aggregate_bandwidth(18, 4 << 20, ReadMethod::MmapDirect, true);
+        assert!(mmap < 0.7 * pread, "mmap must cost SSD bandwidth");
+        assert!((mmap_direct - mmap).abs() / mmap < 0.15, "O_DIRECT doesn't rescue mmap");
+    }
+
+    #[test]
+    fn small_blocks_hurt_without_readahead() {
+        let m = DeviceKind::Ssd.model();
+        let direct_4k = m.aggregate_bandwidth(1, 4 << 10, ReadMethod::PreadDirect, true);
+        let direct_4m = m.aggregate_bandwidth(1, 4 << 20, ReadMethod::PreadDirect, true);
+        assert!(direct_4k < 0.25 * direct_4m, "4KB O_DIRECT stalls on latency");
+        // Buffered 4KB sequential is rescued by readahead.
+        let buf_4k = m.aggregate_bandwidth(1, 4 << 10, ReadMethod::Pread, true);
+        assert!(buf_4k > 0.5 * direct_4m);
+    }
+
+    #[test]
+    fn nas_is_link_bound() {
+        let m = DeviceKind::Nas.model();
+        let bw = m.aggregate_bandwidth(8, 4 << 20, ReadMethod::Pread, true);
+        assert!(bw < 115.0 * MB, "NAS capped by the link: {bw}");
+    }
+
+    #[test]
+    fn tier_ordering() {
+        // Peak achievable bandwidth must respect the hardware hierarchy.
+        let best = |k: DeviceKind| {
+            let m = k.model();
+            m.aggregate_bandwidth(64, 16 << 20, ReadMethod::Pread, true)
+        };
+        assert!(best(DeviceKind::Hdd) < best(DeviceKind::Ssd));
+        assert!(best(DeviceKind::Ssd) < best(DeviceKind::Nvmm));
+        assert!(best(DeviceKind::Nvmm) < best(DeviceKind::Dram));
+        assert!(best(DeviceKind::Nas) < best(DeviceKind::Hdd));
+    }
+
+    #[test]
+    fn request_time_scales_with_size() {
+        let m = DeviceKind::Hdd.model();
+        let t1 = m.request_time(4 << 20, 1, 4 << 20, ReadMethod::Pread, true);
+        let t2 = m.request_time(8 << 20, 1, 4 << 20, ReadMethod::Pread, true);
+        assert!((t2 / t1 - 2.0).abs() < 0.01);
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        for k in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DeviceKind::parse("dram"), Some(DeviceKind::Dram));
+        assert_eq!(DeviceKind::parse("floppy"), None);
+    }
+}

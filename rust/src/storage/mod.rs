@@ -1,0 +1,31 @@
+//! Virtual-time storage simulator.
+//!
+//! The paper's evaluation runs on physical HDD/SSD/NAS/NVMM/DRAM. Those are
+//! not available here, so every experiment reads bytes through a *simulated
+//! device*: the bytes themselves are real (in-memory file images served
+//! through the same code path the loaders use), while the elapsed I/O time is
+//! *virtual*, computed from a per-device analytical model calibrated to the
+//! bandwidth surfaces the paper measures in §5.1/Fig. 4:
+//!
+//! * HDD — single spindle, ~160 MB/s sequential, 8 ms seeks; saturated by
+//!   one thread, *degraded* by concurrent readers (seek interleaving).
+//! * SSD — ~3.6 GB/s aggregate, ~2.0–2.1 GB/s for a single stream; needs
+//!   many in-flight requests to saturate; `mmap` costs it ~40 %.
+//! * NAS — 4 HDDs behind a network link: link-bound (~110 MB/s).
+//! * NVMM / DRAM — byte-addressable tiers used in §5.4/§5.6.
+//!
+//! Decode (decompression) time stays *real measured CPU time*, so the
+//! storage-bound vs compute-bound crossover the paper's §3 model describes
+//! emerges from the same mechanics: total = max over workers of
+//! (virtual I/O + real CPU), plus sequential phases.
+
+pub mod cache;
+pub mod device;
+pub mod reader;
+pub mod sim;
+pub mod vclock;
+
+pub use device::{DeviceKind, DeviceModel};
+pub use reader::ReadMethod;
+pub use sim::{SimFile, SimStore};
+pub use vclock::IoAccount;

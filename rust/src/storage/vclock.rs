@@ -1,0 +1,158 @@
+//! Virtual-time accounting.
+//!
+//! Each loading worker carries an [`IoAccount`]: virtual I/O seconds (from
+//! the device model) plus real measured CPU seconds (decode work). The
+//! modeled elapsed time of a parallel phase is the max over workers, which
+//! is how the paper's overlap model (§3) composes: a worker that reads and
+//! decodes its blocks back-to-back has elapsed = io + cpu; the *experiment*
+//! elapsed is the slowest worker (plus any sequential phases).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Per-worker time account. Cheap to clone-snapshot; thread-safe adds.
+#[derive(Debug, Default)]
+pub struct IoAccount {
+    io_ns: AtomicU64,
+    cpu_ns: AtomicU64,
+    bytes: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl IoAccount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge virtual I/O seconds (+bytes, +1 request).
+    pub fn charge_io(&self, seconds: f64, bytes: u64) {
+        self.io_ns.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge real CPU seconds.
+    pub fn charge_cpu(&self, seconds: f64) {
+        self.cpu_ns.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Run `f`, measuring its wall time as CPU work on this account.
+    pub fn time_cpu<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.charge_cpu(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn io_seconds(&self) -> f64 {
+        self.io_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn cpu_seconds(&self) -> f64 {
+        self.cpu_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Worker elapsed time: I/O and CPU are serial within one worker
+    /// (read block, decode block, repeat). Overlap across workers comes from
+    /// taking the max at the phase level.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.io_seconds() + self.cpu_seconds()
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.io_ns.store(0, Ordering::Relaxed);
+        self.cpu_ns.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+        self.requests.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Modeled elapsed time of a parallel phase over per-worker accounts,
+/// assuming the workers run concurrently on distinct (virtual) cores:
+/// max over workers of per-worker elapsed.
+pub fn phase_elapsed(accounts: &[IoAccount]) -> f64 {
+    accounts.iter().map(|a| a.elapsed_seconds()).fold(0.0, f64::max)
+}
+
+/// Modeled elapsed time when only `cores` physical cores execute `accounts`
+/// worth of CPU work: I/O still overlaps, CPU serializes beyond `cores`.
+/// Used by the scalability experiment (Fig. 9), where decode is
+/// compute-bound and worker count exceeds core count.
+pub fn phase_elapsed_with_cores(accounts: &[IoAccount], cores: usize) -> f64 {
+    let cores = cores.max(1) as f64;
+    let max_single = phase_elapsed(accounts);
+    let total_cpu: f64 = accounts.iter().map(|a| a.cpu_seconds()).sum();
+    let max_io = accounts.iter().map(|a| a.io_seconds()).fold(0.0, f64::max);
+    // Lower bounds: the slowest single worker, and total CPU spread over cores
+    // overlapped with the longest I/O stream.
+    max_single.max(total_cpu / cores).max(max_io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let a = IoAccount::new();
+        a.charge_io(0.5, 1000);
+        a.charge_io(0.25, 500);
+        a.charge_cpu(0.1);
+        assert!((a.io_seconds() - 0.75).abs() < 1e-9);
+        assert!((a.cpu_seconds() - 0.1).abs() < 1e-9);
+        assert!((a.elapsed_seconds() - 0.85).abs() < 1e-9);
+        assert_eq!(a.bytes_read(), 1500);
+        assert_eq!(a.requests(), 2);
+        a.reset();
+        assert_eq!(a.elapsed_seconds(), 0.0);
+    }
+
+    #[test]
+    fn time_cpu_measures_something() {
+        let a = IoAccount::new();
+        let v = a.time_cpu(|| {
+            let mut s = 0u64;
+            for i in 0..100_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(v > 0);
+        assert!(a.cpu_seconds() > 0.0);
+    }
+
+    #[test]
+    fn phase_is_max_of_workers() {
+        let a = IoAccount::new();
+        let b = IoAccount::new();
+        a.charge_io(1.0, 1);
+        b.charge_io(0.2, 1);
+        b.charge_cpu(0.3);
+        let accs = [a, b];
+        assert!((phase_elapsed(&accs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn limited_cores_serialize_cpu() {
+        // 8 workers, each 1s CPU, no I/O: with 2 cores it takes >= 4s.
+        let accs: Vec<IoAccount> = (0..8)
+            .map(|_| {
+                let a = IoAccount::new();
+                a.charge_cpu(1.0);
+                a
+            })
+            .collect();
+        let t = phase_elapsed_with_cores(&accs, 2);
+        assert!((t - 4.0).abs() < 1e-9);
+        let t8 = phase_elapsed_with_cores(&accs, 8);
+        assert!((t8 - 1.0).abs() < 1e-9);
+    }
+}

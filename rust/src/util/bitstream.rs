@@ -1,0 +1,352 @@
+//! MSB-first bit streams, the substrate of the WebGraph-style codec.
+//!
+//! WebGraph's instantaneous codes are defined on an MSB-first bit order: the
+//! first bit written is the most significant bit of the first byte. The
+//! reader keeps a 64-bit refill buffer so that the per-symbol cost is a few
+//! shifts (this matters: bit decoding is the sequential phase of graph
+//! decompression and bounds the paper's decompression bandwidth `d`).
+
+/// Append-only MSB-first bit writer backed by a `Vec<u8>`.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already written into the final partial byte (0..8).
+    partial_bits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), partial_bits: 0 }
+    }
+
+    /// Total number of bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        if self.partial_bits == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.partial_bits as u64
+        }
+    }
+
+    /// Write the lowest `n` bits of `value`, MSB first. `n <= 64`.
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        let mut remaining = n;
+        while remaining > 0 {
+            if self.partial_bits == 0 {
+                self.buf.push(0);
+                self.partial_bits = 0;
+            }
+            let free = 8 - self.partial_bits;
+            let take = free.min(remaining);
+            let shift = remaining - take;
+            let chunk = ((value >> shift) & ((1u64 << take) - 1)) as u8;
+            let last = self.buf.last_mut().expect("buffer non-empty");
+            *last |= chunk << (free - take);
+            self.partial_bits = (self.partial_bits + take) % 8;
+            if self.partial_bits == 0 && remaining > take {
+                // Next iteration pushes a fresh byte.
+            }
+            remaining -= take;
+            if self.partial_bits == 0 && remaining > 0 {
+                continue;
+            }
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write `n` zero bits followed by a one bit (unary code for n).
+    pub fn write_unary(&mut self, n: u64) {
+        let mut left = n;
+        while left >= 32 {
+            self.write_bits(0, 32);
+            left -= 32;
+        }
+        self.write_bits(1, left as u32 + 1);
+    }
+
+    /// Pad to a byte boundary and return the underlying bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Current length in bytes (including the partial byte).
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// MSB-first bit reader over a byte slice with a 64-bit refill buffer.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Index of the next byte to refill from.
+    next_byte: usize,
+    /// Bits buffered, left-aligned (MSB of `acc` is the next bit).
+    acc: u64,
+    /// Number of valid bits in `acc`.
+    acc_bits: u32,
+    /// Total bits consumed so far.
+    consumed: u64,
+}
+
+/// Error produced when a read runs past the end of the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("bit stream exhausted (wanted {wanted} bits at bit {at})")]
+pub struct BitstreamExhausted {
+    pub wanted: u32,
+    pub at: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, next_byte: 0, acc: 0, acc_bits: 0, consumed: 0 }
+    }
+
+    /// Start reading at an absolute bit offset (random access — this is what
+    /// makes selective loading possible: the offsets sidecar stores per-vertex
+    /// bit offsets into the compressed stream).
+    pub fn at_bit(data: &'a [u8], bit_offset: u64) -> Result<Self, BitstreamExhausted> {
+        let byte = (bit_offset / 8) as usize;
+        let bit = (bit_offset % 8) as u32;
+        if byte > data.len() || (byte == data.len() && bit > 0) {
+            return Err(BitstreamExhausted { wanted: 1, at: bit_offset });
+        }
+        let mut r = Self { data, next_byte: byte, acc: 0, acc_bits: 0, consumed: bit_offset };
+        if bit > 0 {
+            r.refill();
+            // Drop the bits before the offset inside the first byte.
+            r.acc <<= bit;
+            r.acc_bits -= bit;
+        }
+        Ok(r)
+    }
+
+    /// Total bits consumed so far (absolute position in the stream).
+    #[inline]
+    pub fn bit_pos(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Remaining bits available.
+    #[inline]
+    pub fn remaining_bits(&self) -> u64 {
+        (self.data.len() - self.next_byte) as u64 * 8 + self.acc_bits as u64
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: top up from a single 8-byte load (the symbol-decode
+        // hot loop refills every few symbols; byte-at-a-time refill was
+        // ~25% of decode time — EXPERIMENTS §Perf).
+        if self.acc_bits == 0 && self.next_byte + 8 <= self.data.len() {
+            let word = u64::from_be_bytes(
+                self.data[self.next_byte..self.next_byte + 8].try_into().unwrap(),
+            );
+            self.acc = word;
+            self.acc_bits = 64;
+            self.next_byte += 8;
+            return;
+        }
+        while self.acc_bits <= 56 && self.next_byte < self.data.len() {
+            self.acc |= (self.data[self.next_byte] as u64) << (56 - self.acc_bits);
+            self.acc_bits += 8;
+            self.next_byte += 1;
+        }
+    }
+
+    /// Read `n` bits (MSB first), `n <= 64`.
+    pub fn read_bits(&mut self, n: u32) -> Result<u64, BitstreamExhausted> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(0);
+        }
+        if n <= 57 {
+            self.refill();
+            if self.acc_bits < n {
+                return Err(BitstreamExhausted { wanted: n, at: self.consumed });
+            }
+            let v = self.acc >> (64 - n);
+            self.acc <<= n;
+            self.acc_bits -= n;
+            self.consumed += n as u64;
+            Ok(v)
+        } else {
+            let hi = self.read_bits(32)?;
+            let lo = self.read_bits(n - 32)?;
+            Ok((hi << (n - 32)) | lo)
+        }
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool, BitstreamExhausted> {
+        Ok(self.read_bits(1)? == 1)
+    }
+
+    /// Read a unary-coded value: the number of 0 bits before the next 1.
+    pub fn read_unary(&mut self) -> Result<u64, BitstreamExhausted> {
+        let mut count = 0u64;
+        loop {
+            self.refill();
+            if self.acc_bits == 0 {
+                return Err(BitstreamExhausted { wanted: 1, at: self.consumed });
+            }
+            if self.acc == 0 {
+                // All buffered bits are zero.
+                count += self.acc_bits as u64;
+                self.consumed += self.acc_bits as u64;
+                self.acc_bits = 0;
+                continue;
+            }
+            let zeros = self.acc.leading_zeros();
+            if zeros < self.acc_bits {
+                // The terminating 1 is inside the buffer.
+                let used = zeros + 1;
+                // `used` can be 64 (a full buffer of 63 zeros + the one).
+                self.acc = if used == 64 { 0 } else { self.acc << used };
+                self.acc_bits -= used;
+                self.consumed += used as u64;
+                return Ok(count + zeros as u64);
+            } else {
+                count += self.acc_bits as u64;
+                self.consumed += self.acc_bits as u64;
+                self.acc = 0;
+                self.acc_bits = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 1);
+        w.write_bits(u64::MAX, 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(r.read_bits(1).unwrap(), 0);
+        assert_eq!(r.read_bits(64).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let values = [0u64, 1, 2, 7, 8, 31, 32, 33, 63, 64, 65, 100, 1000];
+        let mut w = BitWriter::new();
+        for &v in &values {
+            w.write_unary(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &values {
+            assert_eq!(r.read_unary().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn random_mixed_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for _ in 0..50 {
+            let n = 200;
+            let mut ops = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..n {
+                match rng.next_u64() % 3 {
+                    0 => {
+                        let width = 1 + (rng.next_u64() % 64) as u32;
+                        let v = rng.next_u64() & (if width == 64 { u64::MAX } else { (1 << width) - 1 });
+                        w.write_bits(v, width);
+                        ops.push((0u8, v, width));
+                    }
+                    1 => {
+                        let v = rng.next_u64() % 200;
+                        w.write_unary(v);
+                        ops.push((1, v, 0));
+                    }
+                    _ => {
+                        let b = rng.next_u64() & 1;
+                        w.write_bit(b == 1);
+                        ops.push((2, b, 0));
+                    }
+                }
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (kind, v, width) in ops {
+                let got = match kind {
+                    0 => r.read_bits(width).unwrap(),
+                    1 => r.read_unary().unwrap(),
+                    _ => r.read_bit().unwrap() as u64,
+                };
+                assert_eq!(got, v);
+            }
+        }
+    }
+
+    #[test]
+    fn random_access_at_bit() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.write_bits(i, 7);
+        }
+        let bytes = w.into_bytes();
+        // Jump straight to the 50th value.
+        let mut r = BitReader::at_bit(&bytes, 50 * 7).unwrap();
+        assert_eq!(r.read_bits(7).unwrap(), 50);
+        assert_eq!(r.read_bits(7).unwrap(), 51);
+        assert_eq!(r.bit_pos(), 52 * 7);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let bytes = [0u8; 2];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(16).unwrap(), 0);
+        assert!(r.read_bits(1).is_err());
+        // Unary over all-zero bits must also error out, not spin.
+        let mut r2 = BitReader::new(&bytes);
+        assert!(r2.read_unary().is_err());
+    }
+
+    #[test]
+    fn at_bit_out_of_range() {
+        let bytes = [0u8; 4];
+        assert!(BitReader::at_bit(&bytes, 32).is_ok()); // exactly at end: ok, 0 bits left
+        assert!(BitReader::at_bit(&bytes, 33).is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks_writes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write_bits(0, 7);
+        assert_eq!(w.bit_len(), 8);
+        w.write_bits(0b1010, 4);
+        assert_eq!(w.bit_len(), 12);
+    }
+}

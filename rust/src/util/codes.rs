@@ -1,0 +1,366 @@
+//! Instantaneous (prefix-free) integer codes used by the WebGraph-style
+//! compressed format: unary, Elias γ, Elias δ, ζ_k (Boldi–Vigna), Golomb,
+//! and minimal-binary codes, plus the signed↔unsigned zig-zag used for
+//! residual gaps that can be negative.
+//!
+//! All codes operate on the MSB-first [`BitWriter`]/[`BitReader`] streams.
+
+use super::bitstream::{BitReader, BitWriter, BitstreamExhausted};
+
+/// Number of bits needed to represent `x` (0 -> 0).
+#[inline]
+pub fn bit_width(x: u64) -> u32 {
+    64 - x.leading_zeros()
+}
+
+/// Zig-zag: map a signed integer to unsigned so small magnitudes stay small.
+/// WebGraph's `Fast.int2nat`: v >= 0 -> 2v, v < 0 -> 2|v| - 1.
+#[inline]
+pub fn int_to_nat(v: i64) -> u64 {
+    if v >= 0 {
+        (v as u64) << 1
+    } else {
+        (((-v) as u64) << 1) - 1
+    }
+}
+
+/// Inverse of [`int_to_nat`].
+#[inline]
+pub fn nat_to_int(n: u64) -> i64 {
+    if n & 1 == 0 {
+        (n >> 1) as i64
+    } else {
+        -(((n + 1) >> 1) as i64)
+    }
+}
+
+/// Elias γ code of `x` (codes any `x >= 0` via the x+1 shift).
+pub fn write_gamma(w: &mut BitWriter, x: u64) {
+    let x1 = x + 1;
+    let width = bit_width(x1); // >= 1
+    w.write_unary(width as u64 - 1);
+    if width > 1 {
+        w.write_bits(x1, width - 1); // implicit leading 1 dropped
+    }
+}
+
+pub fn read_gamma(r: &mut BitReader<'_>) -> Result<u64, BitstreamExhausted> {
+    let unary = r.read_unary()?;
+    if unary >= 64 {
+        // Corrupt stream: a genuine γ code never has a 64+-bit mantissa.
+        return Err(BitstreamExhausted { wanted: unary.min(u32::MAX as u64) as u32, at: r.bit_pos() });
+    }
+    let width = unary as u32 + 1;
+    if width == 1 {
+        return Ok(0);
+    }
+    let rest = r.read_bits(width - 1)?;
+    Ok(((1u64 << (width - 1)) | rest) - 1)
+}
+
+/// Elias δ code: like γ but the width field is itself γ-coded; shorter than
+/// γ for large values, used for very long gaps.
+pub fn write_delta(w: &mut BitWriter, x: u64) {
+    let x1 = x + 1;
+    let width = bit_width(x1);
+    write_gamma(w, width as u64 - 1);
+    if width > 1 {
+        w.write_bits(x1, width - 1);
+    }
+}
+
+pub fn read_delta(r: &mut BitReader<'_>) -> Result<u64, BitstreamExhausted> {
+    let w = read_gamma(r)?;
+    if w >= 64 {
+        return Err(BitstreamExhausted { wanted: w.min(u32::MAX as u64) as u32, at: r.bit_pos() });
+    }
+    let width = w as u32 + 1;
+    if width == 1 {
+        return Ok(0);
+    }
+    let rest = r.read_bits(width - 1)?;
+    Ok(((1u64 << (width - 1)) | rest) - 1)
+}
+
+/// ζ_k code (Boldi–Vigna 2004), tuned for power-law distributed gaps; k = 3
+/// is WebGraph's default for web graph residuals.
+pub fn write_zeta(w: &mut BitWriter, x: u64, k: u32) {
+    debug_assert!(k >= 1);
+    let x1 = x + 1;
+    let msb = bit_width(x1) - 1; // floor(log2(x+1))
+    let h = msb / k;
+    w.write_unary(h as u64);
+    let left = 1u64 << (h * k);
+    let range_bits = h * k + k; // codes [left, left*2^k)
+    // Minimal binary code of x1 - left in a range of size left*(2^k - 1)... —
+    // following the reference implementation: if x1 - left < left*(2^k-1)
+    // truncated form may save one bit; we use the simple full-width form of
+    // the reference decoder's "unshifted" variant for clarity & symmetry.
+    let offset = x1 - left;
+    let max = (left << k) - left; // number of values in this shell
+    write_minimal_binary(w, offset, max, range_bits);
+}
+
+pub fn read_zeta(r: &mut BitReader<'_>, k: u32) -> Result<u64, BitstreamExhausted> {
+    let h = r.read_unary()? as u32;
+    if h.saturating_mul(k).saturating_add(k) > 63 {
+        // Corrupt stream (or value ≥ 2^63, outside the supported range).
+        return Err(BitstreamExhausted { wanted: h.saturating_mul(k), at: r.bit_pos() });
+    }
+    let left = 1u64 << (h * k);
+    let max = (left << k) - left;
+    let offset = read_minimal_binary(r, max, h * k + k)?;
+    Ok(left + offset - 1)
+}
+
+/// Minimal binary (truncated) code of `x` in `[0, max)` where values below
+/// the threshold use `bits-1` bits and the rest use `bits` bits;
+/// `bits = ceil(log2(max))` is passed by the caller (both sides derive it
+/// from shared state, keeping the code instantaneous).
+fn write_minimal_binary(w: &mut BitWriter, x: u64, max: u64, bits_hint: u32) {
+    debug_assert!(x < max || (max == 0 && x == 0));
+    if max <= 1 {
+        return; // zero bits needed
+    }
+    let bits = bits_needed(max, bits_hint);
+    let threshold = (1u64 << bits) - max; // values < threshold: bits-1 bits
+    if x < threshold {
+        w.write_bits(x, bits - 1);
+    } else {
+        w.write_bits(x + threshold, bits);
+    }
+}
+
+fn read_minimal_binary(
+    r: &mut BitReader<'_>,
+    max: u64,
+    bits_hint: u32,
+) -> Result<u64, BitstreamExhausted> {
+    if max <= 1 {
+        return Ok(0);
+    }
+    let bits = bits_needed(max, bits_hint);
+    let threshold = (1u64 << bits) - max;
+    let hi = r.read_bits(bits - 1)?;
+    if hi < threshold {
+        Ok(hi)
+    } else {
+        let low = r.read_bits(1)?;
+        Ok(((hi << 1) | low) - threshold)
+    }
+}
+
+#[inline]
+fn bits_needed(max: u64, hint: u32) -> u32 {
+    // ceil(log2(max)); hint is an upper bound used to avoid recomputation
+    // in the zeta hot path when it is already exact.
+    let b = bit_width(max - 1).max(1);
+    debug_assert!(b <= hint.max(b));
+    b
+}
+
+/// Golomb code with parameter `m` (quotient unary, remainder minimal-binary).
+/// Good when gaps are geometrically distributed (road-like graphs).
+pub fn write_golomb(w: &mut BitWriter, x: u64, m: u64) {
+    debug_assert!(m >= 1);
+    let q = x / m;
+    let rem = x % m;
+    w.write_unary(q);
+    write_minimal_binary(w, rem, m, bit_width(m));
+}
+
+pub fn read_golomb(r: &mut BitReader<'_>, m: u64) -> Result<u64, BitstreamExhausted> {
+    let q = r.read_unary()?;
+    let rem = read_minimal_binary(r, m, bit_width(m))?;
+    Ok(q * m + rem)
+}
+
+/// The code families the WebGraph-style encoder can choose per component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Code {
+    Unary,
+    Gamma,
+    Delta,
+    Zeta(u32),
+    Golomb(u64),
+}
+
+impl Code {
+    pub fn write(self, w: &mut BitWriter, x: u64) {
+        match self {
+            Code::Unary => w.write_unary(x),
+            Code::Gamma => write_gamma(w, x),
+            Code::Delta => write_delta(w, x),
+            Code::Zeta(k) => write_zeta(w, x, k),
+            Code::Golomb(m) => write_golomb(w, x, m),
+        }
+    }
+
+    pub fn read(self, r: &mut BitReader<'_>) -> Result<u64, BitstreamExhausted> {
+        match self {
+            Code::Unary => r.read_unary(),
+            Code::Gamma => read_gamma(r),
+            Code::Delta => read_delta(r),
+            Code::Zeta(k) => read_zeta(r, k),
+            Code::Golomb(m) => read_golomb(r, m),
+        }
+    }
+
+    /// Length in bits of coding `x` (used by the size model / Table 1).
+    pub fn len_bits(self, x: u64) -> u64 {
+        match self {
+            Code::Unary => x + 1,
+            Code::Gamma => {
+                let w = bit_width(x + 1);
+                (2 * w - 1) as u64
+            }
+            Code::Delta => {
+                let w = bit_width(x + 1);
+                let ww = bit_width(w as u64);
+                (2 * ww - 1 + w - 1) as u64
+            }
+            Code::Zeta(k) => {
+                let mut bw = BitWriter::new();
+                write_zeta(&mut bw, x, k);
+                bw.bit_len()
+            }
+            Code::Golomb(m) => {
+                let mut bw = BitWriter::new();
+                write_golomb(&mut bw, x, m);
+                bw.bit_len()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn roundtrip_one(code: Code, values: &[u64]) {
+        let mut w = BitWriter::new();
+        for &v in values {
+            code.write(&mut w, v);
+        }
+        let expected_bits: u64 = values.iter().map(|&v| code.len_bits(v)).sum();
+        assert_eq!(w.bit_len(), expected_bits, "len_bits must match actual encoding ({code:?})");
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in values {
+            assert_eq!(code.read(&mut r).unwrap(), v, "value {v} under {code:?}");
+        }
+    }
+
+    #[test]
+    fn gamma_delta_zeta_golomb_roundtrip_small() {
+        let values: Vec<u64> = (0..300).collect();
+        for code in [
+            Code::Gamma,
+            Code::Delta,
+            Code::Zeta(1),
+            Code::Zeta(2),
+            Code::Zeta(3),
+            Code::Zeta(5),
+            Code::Golomb(1),
+            Code::Golomb(3),
+            Code::Golomb(8),
+            Code::Golomb(100),
+        ] {
+            roundtrip_one(code, &values);
+        }
+    }
+
+    #[test]
+    fn roundtrip_large_values() {
+        let values = [u64::MAX >> 2, 1 << 40, (1 << 33) + 7, u32::MAX as u64, 1 << 62];
+        for code in [Code::Gamma, Code::Delta, Code::Zeta(3), Code::Golomb(1 << 50)] {
+            // NB: Golomb with a small m on huge values is pathological (the
+            // unary quotient would be astronomically long), so the large
+            // test uses a large m.
+            roundtrip_one(code, &values);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..20 {
+            let values: Vec<u64> = (0..500)
+                .map(|_| {
+                    let shift = rng.next_u64() % 48;
+                    rng.next_u64() >> (16 + shift % 48)
+                })
+                .collect();
+            for code in [Code::Gamma, Code::Delta, Code::Zeta(3)] {
+                roundtrip_one(code, &values);
+            }
+            // Golomb's unary quotient is linear in x/m: keep x/m bounded.
+            let golomb_values: Vec<u64> =
+                values.iter().map(|&v| v % (64 * 4096)).collect();
+            roundtrip_one(Code::Golomb(64), &golomb_values);
+        }
+    }
+
+    #[test]
+    fn zig_zag() {
+        for v in [-1000i64, -3, -2, -1, 0, 1, 2, 3, 1000, i64::MIN / 2, i64::MAX / 2] {
+            assert_eq!(nat_to_int(int_to_nat(v)), v);
+        }
+        assert_eq!(int_to_nat(0), 0);
+        assert_eq!(int_to_nat(-1), 1);
+        assert_eq!(int_to_nat(1), 2);
+        assert_eq!(int_to_nat(-2), 3);
+    }
+
+    #[test]
+    fn gamma_known_lengths() {
+        // gamma(0) = "1" (1 bit), gamma(1)="010", gamma(2)="011" (3 bits)...
+        assert_eq!(Code::Gamma.len_bits(0), 1);
+        assert_eq!(Code::Gamma.len_bits(1), 3);
+        assert_eq!(Code::Gamma.len_bits(2), 3);
+        assert_eq!(Code::Gamma.len_bits(3), 5);
+        assert_eq!(Code::Gamma.len_bits(6), 5);
+        assert_eq!(Code::Gamma.len_bits(7), 7);
+    }
+
+    #[test]
+    fn zeta_beats_gamma_on_powerlaw_tail() {
+        // The point of zeta_k: shorter codes for the heavy tail.
+        let big = 100_000u64;
+        assert!(Code::Zeta(3).len_bits(big) <= Code::Gamma.len_bits(big));
+    }
+
+    #[test]
+    fn minimal_binary_edge_cases() {
+        // max == 1 encodes in zero bits.
+        let mut w = BitWriter::new();
+        write_minimal_binary(&mut w, 0, 1, 1);
+        assert_eq!(w.bit_len(), 0);
+        // Exhaustive check for small ranges.
+        for max in 2u64..20 {
+            let mut w = BitWriter::new();
+            for x in 0..max {
+                write_minimal_binary(&mut w, x, max, bit_width(max));
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for x in 0..max {
+                assert_eq!(read_minimal_binary(&mut r, max, bit_width(max)).unwrap(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_decoder_rejects_garbage_gracefully() {
+        // Decoding arbitrary bytes must never panic — only Ok or Err.
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for _ in 0..200 {
+            let bytes: Vec<u8> = (0..16).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let mut r = BitReader::new(&bytes);
+            for code in [Code::Gamma, Code::Delta, Code::Zeta(3), Code::Golomb(7)] {
+                let _ = code.read(&mut r); // must not panic
+            }
+        }
+    }
+}

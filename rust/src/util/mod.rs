@@ -1,0 +1,106 @@
+//! Low-level utilities: bit streams, instantaneous codes, PRNG, prefix sums,
+//! a minimal JSON writer and a thread pool.
+//!
+//! These are the substrates everything else builds on. The offline build has
+//! no access to `rand`, `serde` or `rayon`, so the implementations live here.
+
+pub mod bitstream;
+pub mod codes;
+pub mod json;
+pub mod pool;
+pub mod prefix;
+pub mod rng;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Split `n` items into `parts` contiguous chunks as evenly as possible.
+/// Returns the `(start, end)` half-open range of chunk `idx`.
+#[inline]
+pub fn chunk_range(n: usize, parts: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(parts > 0 && idx < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let start = idx * base + idx.min(rem);
+    let len = base + usize::from(idx < rem);
+    (start, start + len)
+}
+
+/// Human-readable byte size (e.g. "1.5 GB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Human-readable count (e.g. "2.4 B" edges).
+pub fn fmt_count(n: u64) -> String {
+    const UNITS: [(u64, &str); 3] = [(1_000_000_000, "B"), (1_000_000, "M"), (1_000, "K")];
+    for (div, suffix) in UNITS {
+        if n >= div {
+            return format!("{:.1} {}", n as f64 / div as f64, suffix);
+        }
+    }
+    n.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 100, 1023] {
+            for parts in [1usize, 2, 3, 7, 16] {
+                let mut covered = 0usize;
+                let mut prev_end = 0usize;
+                for i in 0..parts {
+                    let (s, e) = chunk_range(n, parts, i);
+                    assert_eq!(s, prev_end, "chunks must be contiguous");
+                    assert!(e >= s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, n);
+                assert_eq!(prev_end, n);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        let (s0, e0) = chunk_range(10, 3, 0);
+        let (s1, e1) = chunk_range(10, 3, 1);
+        let (s2, e2) = chunk_range(10, 3, 2);
+        assert_eq!((e0 - s0, e1 - s1, e2 - s2), (4, 3, 3));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(2_400_000_000), "2.4 B");
+    }
+}

@@ -1,0 +1,231 @@
+//! A small fixed-size thread pool plus scoped parallel-for helpers.
+//!
+//! The coordinator's "Java side" (decoder workers) and the parallel format
+//! readers run on these. The pool guarantees the paper's §4.1 requirement
+//! that library threads are joined and stop consuming CPU after completion:
+//! dropping the pool joins every worker.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs are `FnOnce() + Send`.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let active = Arc::clone(&active);
+                std::thread::Builder::new()
+                    .name(format!("pg-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                // A panicking job must not take down the worker:
+                                // the coordinator relies on the pool surviving
+                                // user-callback panics (failure injection tests).
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, active }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs currently executing (approximate; for metrics/backpressure).
+    pub fn active_jobs(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(chunk_index)` for `parts` chunks on up to `threads` OS threads and
+/// wait for all of them (scoped — may borrow from the caller).
+pub fn parallel_for<F>(parts: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(parts.max(1));
+    if threads <= 1 || parts <= 1 {
+        for i in 0..parts {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= parts {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..parts` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(parts: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut slots: Vec<Option<T>> = (0..parts).map(|_| None).collect();
+    {
+        let slots_ptr = SendPtr(slots.as_mut_ptr());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let threads = threads.max(1).min(parts.max(1));
+            for _ in 0..threads {
+                let slots_ptr = slots_ptr;
+                let (f, next) = (&f, &next);
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= parts {
+                        break;
+                    }
+                    let value = f(i);
+                    // SAFETY: each index i is claimed by exactly one thread
+                    // via the atomic counter, so writes are disjoint.
+                    unsafe {
+                        slots_ptr.write(i, Some(value));
+                    }
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+}
+
+/// Raw-pointer wrapper asserting cross-thread use is safe. Methods (rather
+/// than direct field access) matter: edition-2021 closures capture disjoint
+/// fields, which would capture the bare `*mut T` and lose the `Send` impl.
+struct SendPtr<T>(*mut T);
+// Manual Copy/Clone: derive would demand `T: Copy`, which is not needed for
+// copying a raw pointer.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// # Safety
+    /// Caller must guarantee `idx` is in bounds and not concurrently written.
+    unsafe fn write(&self, idx: usize, value: T) {
+        *self.0.add(idx) = value;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs_and_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins: all jobs must have run afterwards.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            pool.execute(|| panic!("injected failure"));
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_for_covers_all_chunks() {
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(37, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_zero_parts() {
+        let out: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+}

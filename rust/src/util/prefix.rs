@@ -1,0 +1,102 @@
+//! Prefix sums — sequential and chunk-parallel.
+//!
+//! The two-pass parallel text parse (GAPBS-style COO loading) and the CSR
+//! builder both hinge on an exclusive prefix sum over per-chunk counts; the
+//! gap-decode hot path is an inclusive scan (offloaded to the Pallas kernel,
+//! with these as the Rust fallback/oracle).
+
+/// In-place exclusive prefix sum; returns the total.
+pub fn exclusive_prefix_sum(values: &mut [u64]) -> u64 {
+    let mut acc = 0u64;
+    for v in values.iter_mut() {
+        let next = acc + *v;
+        *v = acc;
+        acc = next;
+    }
+    acc
+}
+
+/// In-place inclusive prefix sum; returns the total (last element) or 0.
+pub fn inclusive_prefix_sum(values: &mut [u64]) -> u64 {
+    let mut acc = 0u64;
+    for v in values.iter_mut() {
+        acc += *v;
+        *v = acc;
+    }
+    acc
+}
+
+/// Inclusive scan of i64 gaps starting from `base`, writing absolute values.
+/// This is exactly the semantics of the L1 `gap_decode` kernel and serves as
+/// its Rust-side oracle and fallback.
+pub fn gap_to_absolute(base: i64, gaps: &[i64], out: &mut [i64]) {
+    debug_assert_eq!(gaps.len(), out.len());
+    let mut acc = base;
+    for (o, &g) in out.iter_mut().zip(gaps) {
+        acc += g;
+        *o = acc;
+    }
+}
+
+/// Blocked inclusive scan: scan each block independently, then add carries.
+/// Mirrors the tile decomposition the Pallas kernel uses, so tests can check
+/// the decomposition logic itself against the flat scan.
+pub fn blocked_inclusive_scan(values: &mut [u64], block: usize) {
+    assert!(block > 0);
+    let mut carry = 0u64;
+    for chunk in values.chunks_mut(block) {
+        let mut acc = carry;
+        for v in chunk.iter_mut() {
+            acc += *v;
+            *v = acc;
+        }
+        carry = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn exclusive_basics() {
+        let mut v = vec![3, 1, 4, 1, 5];
+        let total = exclusive_prefix_sum(&mut v);
+        assert_eq!(v, vec![0, 3, 4, 8, 9]);
+        assert_eq!(total, 14);
+        let mut empty: Vec<u64> = vec![];
+        assert_eq!(exclusive_prefix_sum(&mut empty), 0);
+    }
+
+    #[test]
+    fn inclusive_basics() {
+        let mut v = vec![3, 1, 4, 1, 5];
+        let total = inclusive_prefix_sum(&mut v);
+        assert_eq!(v, vec![3, 4, 8, 9, 14]);
+        assert_eq!(total, 14);
+    }
+
+    #[test]
+    fn gap_decode_oracle() {
+        let gaps = [5i64, -2, 0, 7, -1];
+        let mut out = [0i64; 5];
+        gap_to_absolute(10, &gaps, &mut out);
+        assert_eq!(out, [15, 13, 13, 20, 19]);
+    }
+
+    #[test]
+    fn blocked_scan_matches_flat_scan() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for n in [0usize, 1, 5, 64, 100, 257] {
+            for block in [1usize, 2, 16, 64, 300] {
+                let base: Vec<u64> = (0..n).map(|_| rng.next_below(1000)).collect();
+                let mut flat = base.clone();
+                inclusive_prefix_sum(&mut flat);
+                let mut blocked = base.clone();
+                blocked_inclusive_scan(&mut blocked, block);
+                assert_eq!(flat, blocked, "n={n} block={block}");
+            }
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Integration tests for the ParaGrapher coordinator: the public API,
+//! sync/async equivalence, selective loading, the buffer protocol under
+//! load, and failure injection.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::{generators, CsrGraph, VertexId};
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, SimStore};
+
+fn store_with(g: &CsrGraph, base: &str, device: DeviceKind) -> Arc<SimStore> {
+    let store = Arc::new(SimStore::new(device));
+    for (name, data) in webgraph::serialize(g, base) {
+        store.put(&name, data);
+    }
+    store
+}
+
+fn open(
+    store: &Arc<SimStore>,
+    base: &str,
+    opts: Options,
+) -> paragrapher::coordinator::PgGraph {
+    Paragrapher::init()
+        .open_graph(Arc::clone(store), base, GraphType::CsxWg400, opts)
+        .expect("open graph")
+}
+
+#[test]
+fn open_reports_graph_shape() {
+    let g = generators::rmat(8, 8, 1);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(&store, "g", Options::default());
+    assert_eq!(graph.num_vertices(), g.num_vertices());
+    assert_eq!(graph.num_edges(), g.num_edges());
+    assert!(graph.sequential_seconds() > 0.0, "sequential open phase is accounted");
+}
+
+#[test]
+fn whole_graph_sync_load_matches_original() {
+    let g = generators::barabasi_albert(1500, 6, 3);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    for buffers in [1usize, 2, 4] {
+        for buffer_edges in [1000u64, 1 << 14, 1 << 22] {
+            let graph = open(
+                &store,
+                "g",
+                Options { buffers, buffer_edges, ..Options::default() },
+            );
+            let block = graph.load_whole_graph().expect("load");
+            assert_eq!(block.num_edges(), g.num_edges());
+            for v in 0..g.num_vertices() {
+                assert_eq!(
+                    block.neighbors(v),
+                    g.neighbors(v as VertexId),
+                    "vertex {v} buffers={buffers} be={buffer_edges}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn async_blocks_cover_range_exactly_once() {
+    let g = generators::rmat(9, 8, 5);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 3, buffer_edges: 1 << 13, ..Options::default() },
+    );
+    let seen: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let edges = Arc::new(AtomicU64::new(0));
+    let (s2, e2) = (Arc::clone(&seen), Arc::clone(&edges));
+    let range = VertexRange::new(10, g.num_vertices() - 10);
+    let req = graph
+        .csx_get_subgraph(
+            range,
+            Arc::new(move |blk| {
+                s2.lock().unwrap().push((blk.start_vertex, blk.end_vertex));
+                e2.fetch_add(blk.num_edges(), Ordering::SeqCst);
+            }),
+        )
+        .expect("subgraph request");
+    req.wait();
+    assert!(req.is_complete());
+    assert!(!req.is_failed(), "{:?}", req.error());
+    // Blocks tile the range contiguously.
+    let mut blocks = seen.lock().unwrap().clone();
+    blocks.sort();
+    assert_eq!(blocks.first().unwrap().0, range.start);
+    assert_eq!(blocks.last().unwrap().1, range.end);
+    for w in blocks.windows(2) {
+        assert_eq!(w[0].1, w[1].0, "blocks must tile: {blocks:?}");
+    }
+    // Edge counts match the real subgraph.
+    let expected: u64 =
+        (range.start..range.end).map(|v| g.degree(v as VertexId)).sum();
+    assert_eq!(edges.load(Ordering::SeqCst), expected);
+    assert_eq!(req.edges_delivered(), expected);
+}
+
+#[test]
+fn async_call_returns_before_completion() {
+    let g = generators::barabasi_albert(4000, 8, 9);
+    // HDD: slow enough that loading takes real (virtual) work; the call
+    // itself must return immediately.
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 1, buffer_edges: 2000, ..Options::default() },
+    );
+    let t0 = std::time::Instant::now();
+    let req = graph
+        .csx_get_subgraph(VertexRange::new(0, g.num_vertices()), Arc::new(|_| {}))
+        .expect("request");
+    let returned_in = t0.elapsed();
+    assert!(
+        returned_in.as_millis() < 500,
+        "async call should return quickly, took {returned_in:?}"
+    );
+    assert!(req.total_blocks() > 1);
+    req.wait();
+    assert!(req.is_complete());
+}
+
+#[test]
+fn selective_subrange_loads_only_that_subgraph() {
+    let g = generators::barabasi_albert(3000, 6, 11);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(&store, "g", Options::default());
+    let block = graph
+        .csx_get_subgraph_sync(VertexRange::new(100, 140))
+        .expect("sync subgraph");
+    assert_eq!(block.num_vertices(), 40);
+    for (i, v) in (100..140).enumerate() {
+        assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+    }
+}
+
+#[test]
+fn coo_edge_granular_requests_trim_correctly() {
+    let g = generators::rmat(8, 6, 13);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(&store, "g", Options::default());
+    let m = g.num_edges();
+    // Collect all (src, dst) via coo_get_edges over a strict edge range.
+    let (lo, hi) = (m / 5, m - m / 3);
+    let collected: Arc<Mutex<Vec<(VertexId, VertexId)>>> = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    let req = graph
+        .coo_get_edges(
+            lo,
+            hi,
+            Arc::new(move |blk| {
+                c2.lock().unwrap().extend(blk.iter_edges());
+            }),
+        )
+        .expect("coo request");
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    let mut got = collected.lock().unwrap().clone();
+    got.sort();
+    let mut expected: Vec<(VertexId, VertexId)> = g
+        .iter_edges()
+        .enumerate()
+        .filter(|(i, _)| (*i as u64) >= lo && (*i as u64) < hi)
+        .map(|(_, e)| e)
+        .collect();
+    expected.sort();
+    assert_eq!(got.len(), expected.len());
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn csx_get_offsets_matches_graph() {
+    let g = generators::rmat(7, 8, 17);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(&store, "g", Options::default());
+    let offs = graph.csx_get_offsets(0, g.num_vertices()).expect("offsets");
+    assert_eq!(offs, g.offsets);
+    let slice = graph.csx_get_offsets(5, 10).expect("offsets slice");
+    assert_eq!(slice, g.offsets[5..=10].to_vec());
+    assert!(graph.csx_get_offsets(10, 5).is_err());
+    assert!(graph.csx_get_vertex_weights(0, 5).is_err(), "no vertex weights (Table 2)");
+}
+
+#[test]
+fn weighted_graph_delivers_weights() {
+    let mut edges = Vec::new();
+    let mut rngv = 0.5f32;
+    for v in 0..200u32 {
+        for d in 0..(v % 7) {
+            edges.push((v, (v + d + 1) % 200, rngv));
+            rngv = (rngv * 1.7).fract() + 0.1;
+        }
+    }
+    let g = CsrGraph::from_weighted_edges(200, &edges);
+    let store = store_with(&g, "w", DeviceKind::Dram);
+    let graph = Paragrapher::init()
+        .open_graph(Arc::clone(&store), "w", GraphType::CsxWg404, Options::default())
+        .expect("open weighted");
+    let got: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+    let g2 = Arc::clone(&got);
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, 200),
+            Arc::new(move |blk| {
+                let w = blk.weights.expect("weights present for WG404");
+                g2.lock().unwrap().extend_from_slice(w);
+            }),
+        )
+        .expect("request");
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    assert_eq!(*got.lock().unwrap(), g.weights);
+}
+
+#[test]
+fn opening_unweighted_as_wg404_fails() {
+    let g = generators::rmat(6, 4, 19);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let result = Paragrapher::init().open_graph(
+        Arc::clone(&store),
+        "g",
+        GraphType::CsxWg404,
+        Options::default(),
+    );
+    assert!(result.is_err());
+}
+
+#[test]
+fn callback_panic_fails_request_without_hanging() {
+    let g = generators::rmat(8, 6, 23);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        // Small buffers: force multiple blocks so a non-first block panics.
+        Options { buffers: 2, buffer_edges: 200, ..Options::default() },
+    );
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, g.num_vertices()),
+            Arc::new(|blk| {
+                if blk.start_vertex > 0 {
+                    panic!("injected callback failure");
+                }
+            }),
+        )
+        .expect("request");
+    req.wait(); // must terminate
+    assert!(req.is_failed());
+    assert!(req.error().unwrap().contains("panicked"));
+}
+
+#[test]
+fn corrupt_graph_file_fails_cleanly() {
+    let g = generators::barabasi_albert(800, 5, 29);
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, mut data) in webgraph::serialize(&g, "g") {
+        if name.ends_with(".graph") {
+            let n = data.len();
+            for b in data.iter_mut().skip(n / 4) {
+                *b = 0xAA;
+            }
+        }
+        store.put(&name, data);
+    }
+    let graph = open(&store, "g", Options::default());
+    let result = graph.load_whole_graph();
+    assert!(result.is_err(), "corrupted stream must fail the blocking load");
+}
+
+#[test]
+fn cancellation_stops_unscheduled_blocks() {
+    let g = generators::barabasi_albert(5000, 8, 31);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 1, buffer_edges: 1000, ..Options::default() },
+    );
+    let calls = Arc::new(AtomicU64::new(0));
+    let c2 = Arc::clone(&calls);
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, g.num_vertices()),
+            Arc::new(move |_| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }),
+        )
+        .expect("request");
+    req.cancel();
+    req.wait(); // must complete (skipped blocks count as done)
+    assert!(req.is_complete());
+    assert!(
+        calls.load(Ordering::SeqCst) < req.total_blocks(),
+        "cancel should skip most blocks"
+    );
+}
+
+#[test]
+fn release_restores_resources() {
+    let g = generators::rmat(7, 6, 37);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(&store, "g", Options::default());
+    let _ = graph.load_whole_graph().expect("load");
+    let (hits_before, _) = store.cache_stats();
+    assert!(hits_before > 0 || store.device_bytes() > 0);
+    Paragrapher::init().release_graph(graph);
+    // After release the simulated OS cache is dropped (§4.1 discipline):
+    // a fresh read misses again.
+    let acct = paragrapher::storage::IoAccount::new();
+    let f = store.open("g.graph").unwrap();
+    f.read(0, 1 << 12, ReadCtx::default(), &acct);
+    assert!(acct.bytes_read() > 0, "cold read after release");
+}
+
+#[test]
+fn progress_queries_are_monotone() {
+    let g = generators::barabasi_albert(3000, 6, 41);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 2, buffer_edges: 5000, ..Options::default() },
+    );
+    let req = graph
+        .csx_get_subgraph(VertexRange::new(0, g.num_vertices()), Arc::new(|_| {}))
+        .expect("request");
+    let mut last = 0;
+    loop {
+        let done = req.blocks_done();
+        assert!(done >= last);
+        last = done;
+        if req.is_complete() {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert_eq!(req.edges_delivered(), g.num_edges());
+}

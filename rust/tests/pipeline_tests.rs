@@ -1,0 +1,139 @@
+//! Whole-pipeline integration: generate → serialize in every format →
+//! load through every path → run WCC — the loaded graph and the analytics
+//! results must agree across formats, devices and engines.
+
+use std::sync::Arc;
+
+use paragrapher::algorithms::{afforest::afforest, bfs::wcc_by_bfs, count_components, jtcc::JtUnionFind};
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
+use paragrapher::formats::FormatKind;
+use paragrapher::graph::generators::{self, Dataset};
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
+
+#[test]
+fn every_format_loads_identically_on_every_device() {
+    let g = generators::rmat(8, 8, 7);
+    for device in [DeviceKind::Hdd, DeviceKind::Ssd, DeviceKind::Nas] {
+        let store = SimStore::new(device);
+        for fk in FormatKind::ALL {
+            let base = format!("g-{:?}", fk);
+            fk.write_to_store(&g, &store, &base);
+            store.drop_cache();
+            let accounts: Vec<IoAccount> = (0..3).map(|_| IoAccount::new()).collect();
+            let loaded = fk
+                .load_full(&store, &base, ReadCtx::default(), &accounts)
+                .unwrap_or_else(|e| panic!("{:?} on {}: {e}", fk, device.name()));
+            assert_eq!(loaded, g, "{:?} on {}", fk, device.name());
+            // Cold loads must actually touch the device.
+            let bytes: u64 = accounts.iter().map(|a| a.bytes_read()).sum();
+            assert!(bytes > 0, "{:?} on {} read nothing", fk, device.name());
+        }
+    }
+}
+
+#[test]
+fn wcc_agrees_across_all_paths() {
+    let g = Dataset::Rd.generate(1, 5);
+    let truth = count_components(&wcc_by_bfs(&g));
+
+    // Path 1: GAPBS-style — binary CSX full load + Afforest.
+    let store = SimStore::new(DeviceKind::Ssd);
+    FormatKind::BinCsx.write_to_store(&g, &store, "b");
+    let accounts: Vec<IoAccount> = (0..2).map(|_| IoAccount::new()).collect();
+    let loaded = FormatKind::BinCsx
+        .load_full(&store, "b", ReadCtx::default(), &accounts)
+        .expect("bin csx load");
+    let aff = count_components(&afforest(&loaded, 3));
+    assert_eq!(aff, truth, "afforest vs bfs");
+
+    // Path 2: ParaGrapher — streaming JT-CC over async WebGraph blocks.
+    let store2 = Arc::new(SimStore::new(DeviceKind::Hdd));
+    FormatKind::WebGraph.write_to_store(&g, &store2, "w");
+    store2.drop_cache();
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store2),
+            "w",
+            GraphType::CsxWg400,
+            Options { buffers: 3, buffer_edges: 4096, ..Options::default() },
+        )
+        .expect("open");
+    let uf = Arc::new(JtUnionFind::new(graph.num_vertices(), 11));
+    let uf2 = Arc::clone(&uf);
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, graph.num_vertices()),
+            Arc::new(move |blk| {
+                for (s, d) in blk.iter_edges() {
+                    uf2.union(s, d);
+                }
+            }),
+        )
+        .expect("request");
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    assert_eq!(uf.count_components(), truth, "jt-cc streaming vs bfs");
+}
+
+#[test]
+fn all_datasets_roundtrip_webgraph() {
+    for d in Dataset::ALL {
+        let g = d.generate(1, 42);
+        let store = SimStore::new(DeviceKind::Dram);
+        FormatKind::WebGraph.write_to_store(&g, &store, d.abbr());
+        let accounts: Vec<IoAccount> = (0..4).map(|_| IoAccount::new()).collect();
+        let loaded = FormatKind::WebGraph
+            .load_full(&store, d.abbr(), ReadCtx::default(), &accounts)
+            .unwrap_or_else(|e| panic!("{}: {e}", d.abbr()));
+        assert_eq!(loaded, g, "{}", d.abbr());
+    }
+}
+
+#[test]
+fn compression_ratios_land_in_paper_regime() {
+    // Table 1's ordering, plus absolute sanity: WebGraph stream well below
+    // binary CSX; binary well below textual.
+    let g = Dataset::Cw.generate(1, 42);
+    let store = SimStore::new(DeviceKind::Dram);
+    let mut bpe = std::collections::HashMap::new();
+    for fk in FormatKind::ALL {
+        let base = format!("t-{:?}", fk);
+        fk.write_to_store(&g, &store, &base);
+        bpe.insert(fk, fk.bits_per_edge(&g, &store, &base));
+    }
+    assert!(bpe[&FormatKind::TxtCoo] > 50.0, "textual COO ≈ 80 bits/edge");
+    assert!(bpe[&FormatKind::BinCsx] > 30.0 && bpe[&FormatKind::BinCsx] < 45.0);
+    assert!(
+        bpe[&FormatKind::WebGraph] < bpe[&FormatKind::BinCsx] / 1.8,
+        "WebGraph {:.1} vs BinCSX {:.1}",
+        bpe[&FormatKind::WebGraph],
+        bpe[&FormatKind::BinCsx]
+    );
+}
+
+#[test]
+fn xla_scan_engine_decodes_identically_to_native() {
+    let dir = paragrapher::runtime::ArtifactSet::default_dir();
+    let Ok(arts) = paragrapher::runtime::ArtifactSet::load(&dir) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let g = generators::barabasi_albert(2000, 7, 13);
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    FormatKind::WebGraph.write_to_store(&g, &store, "g");
+
+    let load_with = |opts: Options| {
+        let graph = Paragrapher::init()
+            .open_graph(Arc::clone(&store), "g", GraphType::CsxWg400, opts)
+            .expect("open");
+        graph.load_whole_graph().expect("load")
+    };
+    let native = load_with(Options::default());
+    let xla = load_with(Options {
+        scan: Arc::new(paragrapher::runtime::XlaScanEngine::new(arts)),
+        ..Options::default()
+    });
+    assert_eq!(native, xla, "XLA-offloaded decode must equal native decode");
+    assert_eq!(native.num_edges(), g.num_edges());
+}
