@@ -12,9 +12,11 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use paragrapher::algorithms::bfs::{bfs_distances, bfs_distances_on};
 use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
 use paragrapher::formats::FormatKind;
 use paragrapher::graph::generators::Dataset;
+use paragrapher::metrics::fmt_hit_rate;
 use paragrapher::storage::{DeviceKind, SimStore};
 use paragrapher::util::fmt_count;
 
@@ -46,7 +48,14 @@ fn main() -> anyhow::Result<()> {
         Arc::clone(&store),
         "g5",
         GraphType::CsxWg400,
-        Options { buffers, buffer_edges, ..Options::default() },
+        Options {
+            buffers,
+            buffer_edges,
+            // Hold the random-access path to the same resident budget as
+            // the streaming buffers (cost units ≈ edges).
+            source_cache_cost: (buffers as u64) * buffer_edges,
+            ..Options::default()
+        },
     )?;
 
     // Out-of-core pass: histogram of degrees + wedge count, O(|V|) state.
@@ -94,5 +103,27 @@ fn main() -> anyhow::Result<()> {
         "peak {peak} exceeded budget {buffer_edges} (max degree {max_degree})"
     );
     println!("memory ceiling held: peak block {peak} ≤ budget {buffer_edges} ✓");
+
+    // The same opened handle also serves per-vertex *random access*
+    // (GraphSource): BFS pulls each frontier neighborhood on demand through
+    // the decoded-block cache — the second out-of-core request type, no
+    // full load anywhere.
+    let dist = bfs_distances_on(&graph, 0)?;
+    let reached = dist.iter().filter(|&&d| d != u32::MAX).count();
+    let cache = graph.decoded_cache_counters();
+    println!(
+        "random-access BFS from vertex 0: reached {} of {} vertices",
+        fmt_count(reached as u64),
+        fmt_count(graph.num_vertices() as u64),
+    );
+    println!(
+        "decoded-block cache: {} ({} hits / {} misses, {} evictions)",
+        fmt_hit_rate(&cache),
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+    );
+    assert_eq!(dist, bfs_distances(&data, 0), "random access must match full-load BFS");
+    println!("random-access BFS matches the full-load oracle ✓");
     Ok(())
 }

@@ -6,8 +6,9 @@
 
 use paragrapher::bench::Harness;
 use paragrapher::formats::webgraph::{self, WgParams};
-use paragrapher::formats::FormatKind;
+use paragrapher::formats::{FormatKind, GraphSource, SourceConfig, WebGraphSource};
 use paragrapher::graph::generators;
+use paragrapher::metrics::cache_report;
 use paragrapher::runtime::{ArtifactSet, NativeScan, ScanEngine, XlaScanEngine};
 use paragrapher::storage::sim::ReadCtx;
 use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
@@ -67,6 +68,40 @@ fn main() {
         dec.decode_vertex(10_000, &acct).unwrap().len()
     });
     h.report("webgraph/decode-single-vertex", "us", s.min * 1e6);
+
+    // Random-access successors: cold decode (cache disabled) vs DecodedCache
+    // hit — the spread is the decompression work the cache saves on hot
+    // vertices (the GraphSource out-of-core path).
+    let probes: Vec<usize> =
+        (0..512).map(|_| rng.next_below(meta.num_vertices as u64) as usize).collect();
+    let cold_cfg = SourceConfig { cache_cost: 0, ..SourceConfig::default() };
+    let cold_src = WebGraphSource::open(&store, "g", cold_cfg).unwrap();
+    let s = h.bench("webgraph/successors-cold", || {
+        let mut acc = 0usize;
+        for &v in &probes {
+            acc += cold_src.successors(v).unwrap().len();
+        }
+        acc
+    });
+    h.report("webgraph/successors-cold", "us_per_access", s.min * 1e6 / probes.len() as f64);
+
+    let warm_src = WebGraphSource::open(&store, "g", SourceConfig::default()).unwrap();
+    for &v in &probes {
+        let _ = warm_src.successors(v).unwrap(); // populate the cache
+    }
+    let s = h.bench("webgraph/successors-cache-hit", || {
+        let mut acc = 0usize;
+        for &v in &probes {
+            acc += warm_src.successors(v).unwrap().len();
+        }
+        acc
+    });
+    h.report(
+        "webgraph/successors-cache-hit",
+        "us_per_access",
+        s.min * 1e6 / probes.len() as f64,
+    );
+    h.attach("webgraph/successors-cache", cache_report(&warm_src.cache_counters()));
 
     // Scan engines.
     let mut gaps: Vec<i64> = (0..1 << 20).map(|_| rng.next_below(64) as i64).collect();

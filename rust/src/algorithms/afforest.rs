@@ -9,6 +9,9 @@
 
 use std::collections::HashMap;
 
+use anyhow::Result;
+
+use crate::formats::GraphSource;
 use crate::graph::{CsrGraph, VertexId};
 
 use super::jtcc::JtUnionFind;
@@ -54,6 +57,47 @@ pub fn afforest(g: &CsrGraph, seed: u64) -> Vec<VertexId> {
     super::canonicalize(&uf.labels())
 }
 
+/// Afforest pulling neighborhoods through [`GraphSource::successors`]
+/// instead of a fully-loaded CSR — the out-of-core variant (§4.1 D): the
+/// graph is decoded block-by-block on demand and never materialized whole.
+/// Deterministic for a fixed `seed` and identical to [`afforest`] on the
+/// same graph.
+pub fn afforest_on(src: &dyn GraphSource, seed: u64) -> Result<Vec<VertexId>> {
+    let n = src.num_vertices();
+    let uf = JtUnionFind::new(n, seed);
+
+    // Phase 1: link the first k neighbors of every vertex.
+    for v in 0..n as u32 {
+        for &u in src.successors(v as usize)?.iter().take(SAMPLE_NEIGHBORS) {
+            uf.union(v, u);
+        }
+    }
+
+    // Phase 2: sample to find the most common component.
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed ^ 0xAFF0);
+    let mut counts: HashMap<VertexId, usize> = HashMap::new();
+    if n > 0 {
+        for _ in 0..SAMPLE_PROBES {
+            let v = rng.next_below(n as u64) as VertexId;
+            *counts.entry(uf.find(v)).or_insert(0) += 1;
+        }
+    }
+    let giant = counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r);
+
+    // Phase 3: finish remaining edges, skipping vertices already absorbed
+    // by the giant component. Re-pulling the neighborhood here is a cache
+    // hit when the decoded-block cache is sized sanely.
+    for v in 0..n as u32 {
+        if Some(uf.find(v)) == giant {
+            continue;
+        }
+        for &u in src.successors(v as usize)?.iter().skip(SAMPLE_NEIGHBORS) {
+            uf.union(v, u);
+        }
+    }
+    Ok(super::canonicalize(&uf.labels()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +133,21 @@ mod tests {
         assert!(afforest(&empty, 1).is_empty());
         let lone = CsrGraph::from_edges(3, &[]);
         assert_eq!(count_components(&afforest(&lone, 1)), 3);
+        assert!(afforest_on(&empty, 1).unwrap().is_empty());
+        assert_eq!(count_components(&afforest_on(&lone, 1).unwrap()), 3);
+    }
+
+    #[test]
+    fn source_pull_matches_full_load() {
+        for (i, g) in [
+            generators::road_lattice(10, 10, 0, 1),
+            generators::barabasi_albert(400, 3, 5),
+            generators::rmat(7, 2, 9).symmetrize(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(afforest_on(&g, 7).unwrap(), afforest(&g, 7), "graph {i}");
+        }
     }
 }

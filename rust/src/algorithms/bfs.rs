@@ -1,7 +1,16 @@
 //! Breadth-first search and the BFS-based WCC oracle.
+//!
+//! Two flavors: [`bfs_distances`] runs over a fully-loaded [`CsrGraph`]
+//! (the full-load baseline), while [`bfs_distances_on`] pulls each frontier
+//! neighborhood through [`GraphSource::successors`] — the out-of-core
+//! pattern where only the touched vertices' adjacency is ever decoded, with
+//! the decoded-block cache absorbing re-visits.
 
 use std::collections::VecDeque;
 
+use anyhow::{bail, Result};
+
+use crate::formats::GraphSource;
 use crate::graph::{CsrGraph, VertexId};
 
 /// BFS distances from `source` (u32::MAX = unreachable). Treats the graph
@@ -22,6 +31,29 @@ pub fn bfs_distances(g: &CsrGraph, source: VertexId) -> Vec<u32> {
         }
     }
     dist
+}
+
+/// BFS distances pulled through [`GraphSource::successors`] (random access,
+/// no full load). Produces exactly the distances of [`bfs_distances`].
+pub fn bfs_distances_on(src: &dyn GraphSource, source: VertexId) -> Result<Vec<u32>> {
+    let n = src.num_vertices();
+    if source as usize >= n {
+        bail!("BFS source {source} out of range (n={n})");
+    }
+    let mut dist = vec![u32::MAX; n];
+    let mut q = VecDeque::new();
+    dist[source as usize] = 0;
+    q.push_back(source);
+    while let Some(v) = q.pop_front() {
+        let d = dist[v as usize];
+        for u in src.successors(v as usize)? {
+            if dist[u as usize] == u32::MAX {
+                dist[u as usize] = d + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    Ok(dist)
 }
 
 /// Weakly-connected components by BFS over the undirected view — the
@@ -60,6 +92,14 @@ mod tests {
         let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
         assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3]);
         assert_eq!(bfs_distances(&g, 3), vec![u32::MAX, u32::MAX, u32::MAX, 0]);
+    }
+
+    #[test]
+    fn source_pull_matches_full_load() {
+        let g = generators::barabasi_albert(400, 4, 7);
+        for s in [0u32, 17, 399] {
+            assert_eq!(bfs_distances_on(&g, s).unwrap(), bfs_distances(&g, s), "source {s}");
+        }
     }
 
     #[test]

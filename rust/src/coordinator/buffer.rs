@@ -16,9 +16,24 @@
 //! "Java side" is the decoder worker pool; the protocol is kept verbatim —
 //! including the property the paper argues correctness from: each status
 //! value has a unique writer, and the writer orders its data writes before
-//! the status store (Release) while observers read it with Acquire.
+//! the status store (Release) while observers read it with Acquire. One
+//! deliberate exception: the requester *claims* C_IDLE -> C_REQUESTED by
+//! CAS first and writes the block metadata after (see
+//! [`BufferPool::request_idle`]) — the claim makes it the buffer's sole
+//! owner, and the decode worker receives the metadata by value through the
+//! job queue, so nothing observes `Buffer::meta` through the status flag.
+//!
+//! Scheduling over the statuses is *event-driven*, not polled: the pool is
+//! split into shards scanned from a rotating hint (so concurrent requests
+//! don't contend on buffer 0), and a requester that finds no idle buffer
+//! parks on a condvar ([`BufferPool::acquire_idle`]) until a consumer
+//! recycles one ([`BufferPool::recycle`]) or the pool closes
+//! ([`BufferPool::close`]). Request latency therefore tracks actual buffer
+//! turnaround instead of a tuned poll constant.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Condvar;
+use std::time::Duration;
 
 use crate::graph::{VertexId, Weight};
 
@@ -155,15 +170,39 @@ impl Buffer {
     }
 }
 
+/// Watchdog re-check period while parked in [`BufferPool::acquire_idle`].
+/// Scheduling is notification-driven; this only bounds how long a *lost*
+/// wakeup could stall progress if a recycle path ever bypassed the pool.
+const ACQUIRE_WATCHDOG: Duration = Duration::from_millis(100);
+
 /// The pool of reusable buffers ("number of buffers" × "buffer size" are
-/// the two knobs of §5.5 / Fig. 8).
+/// the two knobs of §5.5 / Fig. 8), sharded for claim scans and fronted by
+/// a condvar so requesters block instead of polling.
 pub struct BufferPool {
     buffers: Vec<Buffer>,
+    /// Shard `s` covers ids `shard_bounds[s]..shard_bounds[s + 1]`.
+    shard_bounds: Vec<usize>,
+    /// Rotating start shard for claim scans.
+    claim_hint: AtomicUsize,
+    /// Parked requesters; recycles and close notify through it.
+    idle_mx: parking::Mutex<()>,
+    idle_cv: Condvar,
+    closed: AtomicBool,
 }
 
 impl BufferPool {
     pub fn new(count: usize) -> Self {
-        Self { buffers: (0..count.max(1)).map(Buffer::new).collect() }
+        let count = count.max(1);
+        let shards = count.min(8);
+        let shard_bounds: Vec<usize> = (0..=shards).map(|s| s * count / shards).collect();
+        Self {
+            buffers: (0..count).map(Buffer::new).collect(),
+            shard_bounds,
+            claim_hint: AtomicUsize::new(0),
+            idle_mx: parking::Mutex::new(()),
+            idle_cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -174,6 +213,11 @@ impl BufferPool {
         self.buffers.is_empty()
     }
 
+    /// Number of claim-scan shards.
+    pub fn shards(&self) -> usize {
+        self.shard_bounds.len() - 1
+    }
+
     pub fn get(&self, id: usize) -> &Buffer {
         &self.buffers[id]
     }
@@ -182,23 +226,78 @@ impl BufferPool {
         self.buffers.iter()
     }
 
-    /// Find and claim an idle buffer (C_IDLE -> C_REQUESTED), setting its
-    /// metadata. Returns the buffer id.
+    /// Find and claim an idle buffer (C_IDLE -> C_REQUESTED) without
+    /// blocking, setting its metadata. Returns the buffer id.
+    ///
+    /// The scan starts at a rotating shard so concurrent requesters spread
+    /// over the pool instead of all hammering buffer 0. The claim (CAS)
+    /// happens *before* the metadata write: once claimed, the requester owns
+    /// the buffer exclusively, so the write is race-free — writing metadata
+    /// first (as a naive reading of the protocol suggests) would let a
+    /// losing claimant overwrite the winner's metadata.
     pub fn request_idle(&self, meta: BlockMeta) -> Option<usize> {
-        for b in &self.buffers {
-            if b.status() == BufferStatus::CIdle {
-                // Set metadata BEFORE publishing the status change — the
-                // paper's rule: the status store is the last write.
-                {
-                    let mut m = b.meta.lock().expect("meta lock");
-                    *m = meta;
-                }
+        let shards = self.shards();
+        let start = self.claim_hint.fetch_add(1, Ordering::Relaxed) % shards;
+        for k in 0..shards {
+            let s = (start + k) % shards;
+            for b in &self.buffers[self.shard_bounds[s]..self.shard_bounds[s + 1]] {
                 if b.try_claim(BufferStatus::CIdle, BufferStatus::CRequested) {
+                    *b.meta.lock().expect("meta lock") = meta;
                     return Some(b.id);
                 }
             }
         }
         None
+    }
+
+    /// Claim an idle buffer, blocking until one is recycled. Returns `None`
+    /// once the pool is [`close`](Self::close)d. This replaces the request
+    /// manager's former `poll_interval` sleep loop: the caller parks on the
+    /// pool condvar and is woken by the next [`recycle`](Self::recycle).
+    pub fn acquire_idle(&self, meta: BlockMeta) -> Option<usize> {
+        loop {
+            if self.is_closed() {
+                return None;
+            }
+            if let Some(id) = self.request_idle(meta) {
+                return Some(id);
+            }
+            let guard = self.idle_mx.lock().expect("idle lock");
+            // Re-check while holding the lock: a recycle between the scan
+            // above and the wait below must not become a lost wakeup —
+            // recyclers notify while holding the same lock.
+            if self.is_closed() {
+                return None;
+            }
+            if let Some(id) = self.request_idle(meta) {
+                return Some(id);
+            }
+            let _ = self
+                .idle_cv
+                .wait_timeout(guard, ACQUIRE_WATCHDOG)
+                .expect("idle cv wait");
+        }
+    }
+
+    /// Return a buffer to C_IDLE and wake one parked requester. Every
+    /// failure/cancel/completion path must recycle through the pool (not
+    /// via raw `set_status`) so waiters observe the transition.
+    pub fn recycle(&self, id: usize) {
+        self.get(id).set_status(BufferStatus::CIdle);
+        let _guard = self.idle_mx.lock().expect("idle lock");
+        self.idle_cv.notify_all();
+    }
+
+    /// Close the pool: [`acquire_idle`](Self::acquire_idle) returns `None`
+    /// for all current and future callers (shutdown path).
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        let _guard = self.idle_mx.lock().expect("idle lock");
+        self.idle_cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
     }
 
     /// Count buffers in a given status (metrics / tests).
@@ -295,5 +394,51 @@ mod tests {
         got.dedup();
         assert_eq!(got.len(), claimed.lock().unwrap().len(), "no double-claims");
         assert_eq!(got.len(), 4, "exactly the pool size claimed");
+    }
+
+    #[test]
+    fn shard_bounds_cover_all_buffers() {
+        for count in [1usize, 2, 7, 8, 9, 33] {
+            let pool = BufferPool::new(count);
+            assert_eq!(pool.len(), count);
+            assert!(pool.shards() <= count);
+            // Every buffer claimable exactly once through the sharded scan.
+            let mut ids: Vec<usize> =
+                (0..count).filter_map(|_| pool.request_idle(BlockMeta::default())).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..count).collect::<Vec<_>>(), "count={count}");
+            assert!(pool.request_idle(BlockMeta::default()).is_none());
+        }
+    }
+
+    #[test]
+    fn acquire_blocks_until_recycle() {
+        let pool = std::sync::Arc::new(BufferPool::new(1));
+        let meta = BlockMeta::default();
+        let first = pool.acquire_idle(meta).expect("first claim");
+        assert_eq!(pool.count(BufferStatus::CRequested), 1);
+        let p2 = std::sync::Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || p2.acquire_idle(meta));
+        // Give the waiter time to park, then recycle; it must wake and claim.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.get(first).set_status(BufferStatus::JReading);
+        pool.recycle(first);
+        let got = waiter.join().unwrap();
+        assert_eq!(got, Some(first));
+        assert_eq!(pool.count(BufferStatus::CRequested), 1);
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let pool = std::sync::Arc::new(BufferPool::new(1));
+        let meta = BlockMeta::default();
+        let _held = pool.acquire_idle(meta).expect("claim");
+        let p2 = std::sync::Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || p2.acquire_idle(meta));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.close();
+        assert_eq!(waiter.join().unwrap(), None, "close wakes parked waiters");
+        assert!(pool.is_closed());
+        assert_eq!(pool.acquire_idle(meta), None, "closed pool refuses claims");
     }
 }

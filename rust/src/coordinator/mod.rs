@@ -20,7 +20,15 @@
 //! metadata; the *decoder worker pool* ("Java side") observes requested
 //! buffers, decodes the block, and publishes completion; a *callback
 //! executor* hands completed buffers to the user and recycles them. All
-//! handoffs go through the 5-status protocol in [`buffer`].
+//! handoffs go through the 5-status protocol in [`buffer`], and scheduling
+//! over it is **event-driven**: a request manager that finds every buffer
+//! busy parks on the sharded pool's condvar and is woken by the next
+//! recycle (or by shutdown) — no code path sleeps on a poll interval.
+//!
+//! Besides block streaming, an opened graph is also a
+//! [`GraphSource`](crate::formats::GraphSource): [`PgGraph::successors`]
+//! serves per-vertex random access through a decoded-block LRU
+//! ([`DecodedCache`]), the out-of-core access pattern of §4.1's use case D.
 
 pub mod buffer;
 pub mod request;
@@ -31,11 +39,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::formats::source::{block_cost, GraphSource};
 use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::VertexId;
 use crate::runtime::ScanEngine;
+use crate::storage::cache::CacheCounters;
 use crate::storage::sim::ReadCtx;
-use crate::storage::{IoAccount, SimStore};
+use crate::storage::{DecodedCache, IoAccount, SimStore};
 use crate::util::pool::ThreadPool;
 use buffer::{BlockMeta, BufferPool, BufferStatus};
 pub use request::{EdgeBlock, ReadRequest, VertexRange};
@@ -82,7 +92,16 @@ pub struct Options {
     /// Scan engine for the gap→ID phase (native Rust or the AOT-compiled
     /// XLA/Pallas executable).
     pub scan: Arc<dyn ScanEngine>,
-    /// Poll interval of the request manager when all buffers are busy.
+    /// Vertices per random-access decode unit ([`PgGraph::successors`]
+    /// decodes the aligned block containing the requested vertex).
+    pub source_block_vertices: usize,
+    /// Decoded-block cache capacity in cost units (≈ edges + vertices);
+    /// 0 disables caching. Like the buffer pool, fixed at open time.
+    pub source_cache_cost: u64,
+    /// Legacy knob, kept for API compatibility: the former poll interval of
+    /// the request manager when all buffers were busy. The event-driven
+    /// coordinator parks on the buffer pool's condvar instead, so this
+    /// value is dead by default — no code path sleeps on it.
     pub poll_interval: Duration,
 }
 
@@ -91,7 +110,11 @@ impl std::fmt::Debug for Options {
         f.debug_struct("Options")
             .field("buffer_edges", &self.buffer_edges)
             .field("buffers", &self.buffers)
+            .field("read_ctx", &self.read_ctx)
             .field("scan", &self.scan.name())
+            .field("source_block_vertices", &self.source_block_vertices)
+            .field("source_cache_cost", &self.source_cache_cost)
+            .field("poll_interval", &self.poll_interval)
             .finish()
     }
 }
@@ -103,6 +126,10 @@ impl Default for Options {
             buffers: 4,
             read_ctx: ReadCtx::default(),
             scan: Arc::new(crate::runtime::NativeScan),
+            // One source of truth for random-access cache geometry: the
+            // formats-layer defaults, so PgGraph and WebGraphSource agree.
+            source_block_vertices: crate::formats::SourceConfig::default().block_vertices,
+            source_cache_cost: crate::formats::SourceConfig::default().cache_cost,
             poll_interval: Duration::from_micros(200),
         }
     }
@@ -159,6 +186,8 @@ impl Paragrapher {
 
         let workers = ThreadPool::new(options.buffers);
         let callbacks = ThreadPool::new(2);
+        let decoded_cache = DecodedCache::new(options.source_cache_cost, block_cost);
+        let source_block_vertices = options.source_block_vertices.max(1);
         let inner = Arc::new(GraphInner {
             store,
             base: base.to_string(),
@@ -169,6 +198,9 @@ impl Paragrapher {
             options: Mutex::new(options),
             stats: GraphStats::default(),
             shutdown: AtomicBool::new(false),
+            decoded_cache,
+            source_block_vertices,
+            random_acct: IoAccount::new(),
         });
         inner.stats.sequential_seconds.store(
             ((sequential_cpu + sequential_io) * 1e9) as u64,
@@ -198,6 +230,8 @@ pub struct GraphStats {
     pub blocks_decoded: AtomicU64,
     pub edges_decoded: AtomicU64,
     pub requests_issued: AtomicU64,
+    /// Per-vertex random accesses served via [`PgGraph::successors`].
+    pub random_accesses: AtomicU64,
 }
 
 struct GraphInner {
@@ -210,6 +244,12 @@ struct GraphInner {
     options: Mutex<Options>,
     stats: GraphStats,
     shutdown: AtomicBool,
+    /// Decoded-block LRU for the random-access path.
+    decoded_cache: DecodedCache<DecodedBlock>,
+    /// Vertices per random-access decode unit (from `Options`, ≥ 1).
+    source_block_vertices: usize,
+    /// I/O account charged by random accesses (selective reads).
+    random_acct: IoAccount,
 }
 
 /// An opened graph (`paragrapher_graph*`).
@@ -329,19 +369,11 @@ impl PgGraph {
                         continue;
                     }
                     // Wait for an idle buffer (the paper's tracking of free
-                    // buffers in place of a queue).
-                    let buffer_id = loop {
-                        match inner.pool.request_idle(meta) {
-                            Some(id) => break Some(id),
-                            None => {
-                                if inner.shutdown.load(Ordering::Acquire) {
-                                    break None;
-                                }
-                                std::thread::sleep(opts.poll_interval);
-                            }
-                        }
-                    };
-                    let Some(buffer_id) = buffer_id else {
+                    // buffers in place of a queue): park on the pool condvar
+                    // until a consumer recycles one. `None` means the pool
+                    // closed (shutdown) — account the block so waiters
+                    // terminate.
+                    let Some(buffer_id) = inner.pool.acquire_idle(meta) else {
                         req2.record_block(0);
                         continue;
                     };
@@ -364,8 +396,7 @@ impl PgGraph {
                             // recycle the buffer and account this block so
                             // waiters terminate (no buffer may be leaked in
                             // J_READ_COMPLETED — that would wedge the pool).
-                            let buf = inner.pool.get(buffer_id);
-                            buf.set_status(BufferStatus::CIdle);
+                            inner.pool.recycle(buffer_id);
                             req3.record_block(0);
                             return;
                         }
@@ -489,9 +520,57 @@ impl PgGraph {
         self.csx_get_subgraph_sync(VertexRange::new(0, self.num_vertices()))
     }
 
+    /// Random access: the successor list of one vertex, served through the
+    /// decoded-block LRU (the out-of-core request type of §4.1 use case D).
+    ///
+    /// The aligned `source_block_vertices`-vertex block containing `v` is
+    /// decoded selectively — reference chains resolve within the block or
+    /// by bounded recursion outside it — and parked in the cache, so hot
+    /// neighborhoods skip re-decompression on subsequent accesses. The
+    /// shared engine is [`cached_successors`](crate::formats::source::cached_successors).
+    pub fn successors(&self, v: usize) -> Result<Vec<VertexId>> {
+        let inner = &self.inner;
+        let list = crate::formats::source::cached_successors(
+            &inner.decoded_cache,
+            inner.source_block_vertices,
+            inner.meta.num_vertices,
+            v,
+            |lo, hi| {
+                let opts = self.options();
+                let dec = Decoder::open(
+                    &inner.store,
+                    &inner.base,
+                    &inner.meta,
+                    &inner.offsets,
+                    opts.read_ctx,
+                    &inner.random_acct,
+                )?;
+                let decoded =
+                    dec.decode_range_with_scan(lo, hi, &inner.random_acct, opts.scan.as_ref())?;
+                inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
+                Ok(decoded)
+            },
+        )?;
+        inner.stats.random_accesses.fetch_add(1, Ordering::Relaxed);
+        Ok(list)
+    }
+
+    /// Counters of the random-access decoded-block cache.
+    pub fn decoded_cache_counters(&self) -> CacheCounters {
+        self.inner.decoded_cache.counters()
+    }
+
+    /// Virtual-I/O + CPU account charged by the random-access path
+    /// (selective reads), mirroring `WebGraphSource::io_account`.
+    pub fn random_access_account(&self) -> &IoAccount {
+        &self.inner.random_acct
+    }
+
     /// Join all library threads, drop the OS cache (§4.1 discipline).
     pub fn release(self) {
         self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.pool.close(); // wake any parked request managers
+        self.inner.decoded_cache.clear();
         let handles: Vec<_> = {
             let mut d = self.dispatchers.lock().expect("dispatchers lock");
             d.drain(..).collect()
@@ -504,9 +583,31 @@ impl PgGraph {
     }
 }
 
+/// Both request types over the same opened handle: `successors` is the
+/// random-access path (decoded-block cache), `decode_range` streams through
+/// the event-driven block pipeline.
+impl GraphSource for PgGraph {
+    fn num_vertices(&self) -> usize {
+        PgGraph::num_vertices(self)
+    }
+
+    fn num_edges(&self) -> u64 {
+        PgGraph::num_edges(self)
+    }
+
+    fn successors(&self, v: usize) -> Result<Vec<VertexId>> {
+        PgGraph::successors(self, v)
+    }
+
+    fn decode_range(&self, lo: usize, hi: usize) -> Result<DecodedBlock> {
+        self.csx_get_subgraph_sync(VertexRange::new(lo, hi))
+    }
+}
+
 impl Drop for PgGraph {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.pool.close(); // wake any parked request managers
         let handles: Vec<_> = {
             let mut d = self.dispatchers.lock().expect("dispatchers lock");
             d.drain(..).collect()
@@ -570,7 +671,7 @@ fn decode_into_buffer(
             true
         }
         Err(e) => {
-            buf.set_status(BufferStatus::CIdle);
+            inner.pool.recycle(buffer_id);
             req.record_failure(e.to_string());
             false
         }
@@ -607,10 +708,10 @@ fn run_user_callback(
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| callback(&blk)));
         if res.is_err() {
             req.record_failure("user callback panicked".into());
-            buf.set_status(BufferStatus::CIdle);
+            inner.pool.recycle(buffer_id);
             return;
         }
     }
-    buf.set_status(BufferStatus::CIdle);
+    inner.pool.recycle(buffer_id);
     req.record_block(meta.num_edges());
 }

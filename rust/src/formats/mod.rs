@@ -15,13 +15,20 @@
 //! WebGraph-style compressed format (γ/δ/ζ codes, reference compression,
 //! intervals, residual gaps) with a binary offsets sidecar enabling random
 //! access — the property ParaGrapher's selective loading builds on.
+//!
+//! The [`source`] module abstracts over all of them: [`GraphSource`] serves
+//! both per-vertex random access (`successors`) and range decoding
+//! (`decode_range`) from any backing format.
 
 pub mod bin_csx;
 pub mod matrix_market;
 pub mod metis;
+pub mod source;
 pub mod txt_coo;
 pub mod txt_csx;
 pub mod webgraph;
+
+pub use source::{GraphSource, SourceConfig, WebGraphSource};
 
 use crate::graph::CsrGraph;
 use crate::storage::sim::ReadCtx;

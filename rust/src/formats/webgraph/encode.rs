@@ -41,6 +41,10 @@ pub struct CompressionStats {
     pub interval_edges: u64,
     pub residual_edges: u64,
     pub total_bits: u64,
+    /// Deepest reference chain emitted (≤ `WgParams::max_ref_chain`); the
+    /// random-access `successors()` tests assert the bound is actually
+    /// exercised, not just configured.
+    pub max_ref_chain_depth: u32,
 }
 
 /// Compress `graph`; returns (bit stream bytes, per-vertex bit offsets
@@ -87,6 +91,7 @@ pub fn compress(graph: &CsrGraph, params: WgParams) -> (Vec<u8>, Vec<u64>, Compr
         let (r, enc) = if use_ref {
             let (r, enc) = best.unwrap();
             chain_depth[v] = chain_depth[v - r as usize] + 1;
+            stats.max_ref_chain_depth = stats.max_ref_chain_depth.max(chain_depth[v]);
             stats.vertices_with_reference += 1;
             (r, enc)
         } else {

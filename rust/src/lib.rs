@@ -4,10 +4,13 @@
 //! Graphs with ParaGrapher”* (CS.AR 2024) as a three-layer stack:
 //!
 //! * **L3 (this crate)** — the ParaGrapher coordinator: the graph-loading
-//!   API ([`coordinator`]), the WebGraph-style compressed format and the
-//!   GAPBS-style baseline formats ([`formats`]), a calibrated virtual-time
-//!   storage simulator ([`storage`]), graph algorithms ([`algorithms`]) and
-//!   the §3 performance model ([`model`]).
+//!   API ([`coordinator`], event-driven over a sharded buffer pool), the
+//!   WebGraph-style compressed format, the GAPBS-style baseline formats and
+//!   the [`formats::GraphSource`] loading contract (block streaming plus
+//!   cached per-vertex random access), a calibrated virtual-time storage
+//!   simulator ([`storage`], including the decoded-block LRU), graph
+//!   algorithms ([`algorithms`], with out-of-core `*_on` variants) and the
+//!   §3 performance model ([`model`]).
 //! * **L2/L1 (build-time Python)** — the vectorizable decode phase
 //!   (gap→ID prefix-sum) and WCC label-propagation step, written in JAX +
 //!   Pallas, AOT-lowered to HLO text and executed from Rust via the PJRT C

@@ -1,6 +1,7 @@
 //! Experiment metrics: throughput accounting and table rendering shared by
 //! the CLI, examples and benches.
 
+use crate::storage::cache::CacheCounters;
 use crate::storage::IoAccount;
 use crate::util::json::Json;
 
@@ -95,6 +96,25 @@ impl Table {
     }
 }
 
+/// Render [`DecodedCache`](crate::storage::DecodedCache) counters as JSON
+/// (attached to bench results so cache efficacy shows up in the perf
+/// trajectory alongside throughput).
+pub fn cache_report(counters: &CacheCounters) -> Json {
+    let mut o = Json::obj();
+    o.set("hits", counters.hits)
+        .set("misses", counters.misses)
+        .set("evictions", counters.evictions)
+        .set("resident_cost", counters.resident_cost)
+        .set("blocks", counters.blocks)
+        .set("hit_rate", counters.hit_rate());
+    o
+}
+
+/// Format a cache hit rate for table output ("93.8% hit").
+pub fn fmt_hit_rate(counters: &CacheCounters) -> String {
+    format!("{:.1}% hit", counters.hit_rate() * 100.0)
+}
+
 /// Format a throughput as the paper does ("129 ME/s").
 pub fn fmt_meps(v: f64) -> String {
     format!("{v:.1} ME/s")
@@ -141,5 +161,15 @@ mod tests {
         assert_eq!(fmt_meps(129.04), "129.0 ME/s");
         assert_eq!(fmt_bw(3.6e9), "3.60 GB/s");
         assert_eq!(fmt_bw(160e6), "160.0 MB/s");
+    }
+
+    #[test]
+    fn cache_report_renders() {
+        let c = CacheCounters { hits: 3, misses: 1, evictions: 2, resident_cost: 40, blocks: 5 };
+        assert_eq!(fmt_hit_rate(&c), "75.0% hit");
+        let j = cache_report(&c);
+        let s = j.to_string_pretty();
+        assert!(s.contains("\"hits\""), "{s}");
+        assert!(s.contains("\"hit_rate\""), "{s}");
     }
 }

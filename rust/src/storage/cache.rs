@@ -1,14 +1,22 @@
-//! OS page-cache model.
+//! Cache layers: the OS page-cache model and the decoded-block cache.
 //!
-//! §4.1 requires the library to leave the machine as it found it — including
-//! *dropping the OS cache of storage contents* (the paper calls
-//! `/proc/sys/vm/drop_caches` / `flushcache`). The simulator models the
-//! cache so that (a) warm re-reads are DRAM-speed, which would silently
+//! [`PageCache`]: §4.1 requires the library to leave the machine as it found
+//! it — including *dropping the OS cache of storage contents* (the paper
+//! calls `/proc/sys/vm/drop_caches` / `flushcache`). The simulator models
+//! the cache so that (a) warm re-reads are DRAM-speed, which would silently
 //! invalidate every bandwidth measurement, and (b) `drop_cache()` restores
 //! cold-read behaviour — tests assert both.
+//!
+//! [`DecodedCache`]: an LRU over *decoded* blocks keyed by block id, sitting
+//! above the page cache. The page cache makes re-reads of compressed bytes
+//! cheap; the decoded cache makes repeated random accesses to hot vertices
+//! skip re-decompression entirely (the `GraphSource::successors` fast path).
+//! It is generic over the cached value so the storage layer stays free of
+//! format types; formats instantiate it with `DecodedBlock`.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Page granularity of the model (16 KiB "super-pages": coarse enough to
 /// keep bookkeeping cheap, fine enough that small files span several).
@@ -109,6 +117,170 @@ impl PageCache {
     }
 }
 
+/// Aggregate counters of a [`DecodedCache`] (metrics surface).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Sum of the cost function over resident entries.
+    pub resident_cost: u64,
+    /// Resident entry count.
+    pub blocks: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction over all lookups (0 when the cache was never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+struct DecodedEntry<T> {
+    value: Arc<T>,
+    cost: u64,
+    last_used: u64,
+}
+
+struct DecodedInner<T> {
+    map: HashMap<u64, DecodedEntry<T>>,
+    /// Recency index: `last_used` tick -> key. Ticks are unique (monotonic
+    /// counter), so the first entry is always the exact LRU — eviction and
+    /// recency refresh are O(log n) instead of a full-map scan.
+    order: BTreeMap<u64, u64>,
+    tick: u64,
+    resident_cost: u64,
+}
+
+
+/// LRU cache of decoded blocks keyed by block id.
+///
+/// Capacity is expressed through a caller-supplied *cost* function (formats
+/// use edges + vertices of a `DecodedBlock`); entries are evicted
+/// least-recently-used-first once the total cost exceeds `capacity_cost`.
+/// A capacity of 0 disables the cache (every `insert` is a no-op), which is
+/// how benches measure the cold-decode baseline. All operations take `&self`
+/// and the cache is `Send + Sync` when `T` is.
+pub struct DecodedCache<T> {
+    inner: Mutex<DecodedInner<T>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    capacity_cost: u64,
+    cost: fn(&T) -> u64,
+}
+
+impl<T> DecodedCache<T> {
+    pub fn new(capacity_cost: u64, cost: fn(&T) -> u64) -> Self {
+        Self {
+            inner: Mutex::new(DecodedInner {
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+                tick: 0,
+                resident_cost: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            capacity_cost,
+            cost,
+        }
+    }
+
+    pub fn capacity_cost(&self) -> u64 {
+        self.capacity_cost
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.capacity_cost > 0
+    }
+
+    /// Look up `key`; counts a hit or miss and refreshes recency on hit
+    /// (single map probe — this is the `successors()` fast path).
+    pub fn get(&self, key: u64) -> Option<Arc<T>> {
+        let mut guard = self.inner.lock().expect("decoded cache lock");
+        guard.tick += 1;
+        let tick = guard.tick;
+        let inner = &mut *guard;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                inner.order.remove(&entry.last_used);
+                entry.last_used = tick;
+                inner.order.insert(tick, key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&entry.value))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) `key`, then evict LRU entries until the resident
+    /// cost fits the capacity again. The entry just inserted is never the
+    /// LRU, so a single oversized block stays resident rather than thrashing.
+    pub fn insert(&self, key: u64, value: Arc<T>) {
+        if self.capacity_cost == 0 {
+            return;
+        }
+        let cost = (self.cost)(&value);
+        let mut inner = self.inner.lock().expect("decoded cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.insert(key, DecodedEntry { value, cost, last_used: tick }) {
+            inner.resident_cost -= old.cost;
+            inner.order.remove(&old.last_used);
+        }
+        inner.order.insert(tick, key);
+        inner.resident_cost += cost;
+        while inner.resident_cost > self.capacity_cost && inner.map.len() > 1 {
+            let (lru_tick, lru) = match inner.order.iter().next() {
+                Some((&t, &k)) => (t, k),
+                None => break,
+            };
+            if lru == key {
+                break;
+            }
+            inner.order.remove(&lru_tick);
+            let evicted = inner.map.remove(&lru).expect("lru entry present");
+            inner.resident_cost -= evicted.cost;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("decoded cache lock").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all resident entries (counters are preserved).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("decoded cache lock");
+        inner.map.clear();
+        inner.order.clear();
+        inner.resident_cost = 0;
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        let inner = self.inner.lock().expect("decoded cache lock");
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_cost: inner.resident_cost,
+            blocks: inner.map.len() as u64,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +338,76 @@ mod tests {
         let c = PageCache::new(64 * CACHE_PAGE);
         let flen = CACHE_PAGE + 100; // file ends 100 B into its second page
         assert_eq!(c.access(4, CACHE_PAGE, 50, true, flen), 100);
+    }
+
+    fn unit_cost(_v: &u32) -> u64 {
+        1
+    }
+
+    #[test]
+    fn decoded_cache_hits_and_misses() {
+        let c: DecodedCache<u32> = DecodedCache::new(10, unit_cost);
+        assert!(c.get(1).is_none());
+        c.insert(1, Arc::new(11));
+        assert_eq!(c.get(1).as_deref(), Some(&11));
+        let s = c.counters();
+        assert_eq!((s.hits, s.misses, s.blocks), (1, 1, 1));
+        assert!((c.counters().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decoded_cache_evicts_lru_by_cost() {
+        fn cost(v: &u32) -> u64 {
+            *v as u64
+        }
+        let c: DecodedCache<u32> = DecodedCache::new(10, cost);
+        c.insert(1, Arc::new(4));
+        c.insert(2, Arc::new(4));
+        // Touch 1 so 2 becomes the LRU.
+        assert!(c.get(1).is_some());
+        c.insert(3, Arc::new(4)); // 12 > 10: evict key 2
+        assert!(c.get(2).is_none(), "LRU entry evicted");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        let s = c.counters();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_cost, 8);
+    }
+
+    #[test]
+    fn decoded_cache_keeps_oversized_newest_entry() {
+        fn cost(v: &u32) -> u64 {
+            *v as u64
+        }
+        let c: DecodedCache<u32> = DecodedCache::new(5, cost);
+        c.insert(7, Arc::new(100)); // alone over capacity: stays resident
+        assert!(c.get(7).is_some());
+        c.insert(8, Arc::new(1)); // evicts the oversized LRU
+        assert!(c.get(7).is_none());
+        assert!(c.get(8).is_some());
+    }
+
+    #[test]
+    fn decoded_cache_zero_capacity_disabled() {
+        let c: DecodedCache<u32> = DecodedCache::new(0, unit_cost);
+        assert!(!c.is_enabled());
+        c.insert(1, Arc::new(1));
+        assert!(c.get(1).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn decoded_cache_replace_updates_cost() {
+        fn cost(v: &u32) -> u64 {
+            *v as u64
+        }
+        let c: DecodedCache<u32> = DecodedCache::new(100, cost);
+        c.insert(1, Arc::new(30));
+        c.insert(1, Arc::new(10));
+        assert_eq!(c.counters().resident_cost, 10);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.counters().resident_cost, 0);
     }
 }

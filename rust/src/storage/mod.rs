@@ -25,6 +25,7 @@ pub mod reader;
 pub mod sim;
 pub mod vclock;
 
+pub use cache::{CacheCounters, DecodedCache};
 pub use device::{DeviceKind, DeviceModel};
 pub use reader::ReadMethod;
 pub use sim::{SimFile, SimStore};

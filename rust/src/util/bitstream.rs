@@ -105,12 +105,21 @@ pub struct BitReader<'a> {
 }
 
 /// Error produced when a read runs past the end of the stream.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
-#[error("bit stream exhausted (wanted {wanted} bits at bit {at})")]
+/// (`Display`/`Error` implemented by hand: the offline build has no
+/// `thiserror`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BitstreamExhausted {
     pub wanted: u32,
     pub at: u64,
 }
+
+impl std::fmt::Display for BitstreamExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bit stream exhausted (wanted {} bits at bit {})", self.wanted, self.at)
+    }
+}
+
+impl std::error::Error for BitstreamExhausted {}
 
 impl<'a> BitReader<'a> {
     pub fn new(data: &'a [u8]) -> Self {

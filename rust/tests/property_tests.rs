@@ -3,7 +3,7 @@
 //! random cases; failures print the offending seed for reproduction.
 
 use paragrapher::formats::webgraph::{self, WgParams};
-use paragrapher::formats::FormatKind;
+use paragrapher::formats::{FormatKind, GraphSource, SourceConfig, WebGraphSource};
 use paragrapher::graph::{CsrGraph, VertexId};
 use paragrapher::storage::sim::ReadCtx;
 use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
@@ -68,6 +68,74 @@ fn prop_all_formats_roundtrip_random_graphs() {
                 .load_full(&store, &base, ReadCtx::default(), &accounts)
                 .unwrap_or_else(|e| panic!("case {case} {fk:?}: {e}"));
             assert_eq!(loaded, g, "case {case} {fk:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_successors_agree_with_decode_range() {
+    // For every vertex of random graphs under random coding parameters and
+    // random cache geometries, the random-access path must return exactly
+    // the row that range decoding produces (and both must match the
+    // original graph).
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED);
+    for case in 0..12 {
+        let mut crng = rng.split();
+        let g = random_graph(&mut crng, 300, 4000);
+        let params = random_params(&mut crng);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in webgraph::serialize_with(&g, "p", params) {
+            store.put(&name, data);
+        }
+        let cfg = SourceConfig {
+            block_vertices: 1 + crng.next_below(96) as usize,
+            cache_cost: crng.next_below(1 << 16),
+            ..SourceConfig::default()
+        };
+        let src = WebGraphSource::open(&store, "p", cfg)
+            .unwrap_or_else(|e| panic!("case {case} ({params:?}): {e}"));
+        let n = g.num_vertices();
+        let block = src
+            .decode_range(0, n)
+            .unwrap_or_else(|e| panic!("case {case} ({params:?}): {e}"));
+        for v in 0..n {
+            let succ = src
+                .successors(v)
+                .unwrap_or_else(|e| panic!("case {case} vertex {v}: {e}"));
+            assert_eq!(succ, block.neighbors(v), "case {case} vertex {v} ({cfg:?})");
+            assert_eq!(succ, g.neighbors(v as VertexId), "case {case} vertex {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_random_access_roundtrip_at_max_ref_chain_depth() {
+    // Encode a reference-heavy graph with tight chain bounds and verify the
+    // encoder actually builds chains of the configured depth AND that
+    // per-vertex random access (which must resolve those chains) round-trips
+    // every list. Guards the bound logic on both sides of the codec.
+    let g = paragrapher::graph::generators::similarity_blocks(600, 48, 16, 3);
+    for max_ref_chain in [1u32, 2, 3] {
+        let params = WgParams { window: 7, max_ref_chain, ..WgParams::default() };
+        let (_stream, _offsets, stats) = webgraph::compress(&g, params);
+        assert_eq!(
+            stats.max_ref_chain_depth, max_ref_chain,
+            "dense similarity graph must exercise the full chain budget"
+        );
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, data) in webgraph::serialize_with(&g, "c", params) {
+            store.put(&name, data);
+        }
+        // block_vertices = 1: every access is a single-vertex random decode,
+        // so every reference resolves through the bounded recursion.
+        let cfg = SourceConfig { block_vertices: 1, ..SourceConfig::default() };
+        let src = WebGraphSource::open(&store, "c", cfg).unwrap();
+        for v in 0..g.num_vertices() {
+            assert_eq!(
+                src.successors(v).unwrap(),
+                g.neighbors(v as VertexId),
+                "chain={max_ref_chain} vertex {v}"
+            );
         }
     }
 }

@@ -1,0 +1,165 @@
+//! Integration tests for the `GraphSource` abstraction: the random-access
+//! successors path vs. range decoding, the decoded-block cache, and the
+//! BFS/Afforest out-of-core ports — over both a standalone
+//! `WebGraphSource` and an opened coordinator handle (`PgGraph`), which
+//! serves *both* request types (streaming blocks and random access).
+
+use std::sync::Arc;
+
+use paragrapher::algorithms::afforest::{afforest, afforest_on};
+use paragrapher::algorithms::bfs::{bfs_distances, bfs_distances_on};
+use paragrapher::algorithms::count_components;
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, PgGraph, VertexRange};
+use paragrapher::formats::webgraph;
+use paragrapher::formats::{GraphSource, SourceConfig, WebGraphSource};
+use paragrapher::graph::{generators, CsrGraph, VertexId};
+use paragrapher::storage::{DeviceKind, SimStore};
+use paragrapher::util::rng::Xoshiro256;
+
+fn store_with(g: &CsrGraph, base: &str) -> Arc<SimStore> {
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(g, base) {
+        store.put(&name, data);
+    }
+    store
+}
+
+fn open(store: &Arc<SimStore>, base: &str) -> PgGraph {
+    Paragrapher::init()
+        .open_graph(Arc::clone(store), base, GraphType::CsxWg400, Options::default())
+        .expect("open graph")
+}
+
+/// 10k-vertex random graph (hubs, isolated vertices, self-loops).
+fn random_10k() -> CsrGraph {
+    let mut rng = Xoshiro256::seed_from_u64(0x10_000);
+    let n = 10_000usize;
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    for _ in 0..60_000 {
+        edges.push((
+            rng.next_below(n as u64) as VertexId,
+            rng.next_below(n as u64) as VertexId,
+        ));
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[test]
+fn successors_equals_decode_range_on_10k_vertices() {
+    // Acceptance: `GraphSource::successors()` returns identical adjacency
+    // to `decode_range` on a 10k-vertex random graph.
+    let g = random_10k();
+    let store = store_with(&g, "g");
+    let src = WebGraphSource::open(&store, "g", SourceConfig::default()).expect("open source");
+    assert_eq!(src.num_vertices(), g.num_vertices());
+    assert_eq!(src.num_edges(), g.num_edges());
+    let n = g.num_vertices();
+    // Compare against several range geometries, not just the full decode.
+    let full = src.decode_range(0, n).expect("full decode");
+    for v in 0..n {
+        assert_eq!(src.successors(v).unwrap(), full.neighbors(v), "vertex {v}");
+    }
+    let mid = src.decode_range(4_321, 5_678).expect("mid decode");
+    for (i, v) in (4_321..5_678).enumerate() {
+        assert_eq!(src.successors(v).unwrap(), mid.neighbors(i), "vertex {v}");
+    }
+}
+
+#[test]
+fn pg_graph_serves_both_request_types() {
+    let g = generators::barabasi_albert(2_000, 6, 11);
+    let store = store_with(&g, "g");
+    let graph = open(&store, "g");
+    // Streaming request type (block pipeline through the event-driven pool).
+    let block = GraphSource::decode_range(&graph, 100, 300).expect("decode_range");
+    for (i, v) in (100..300).enumerate() {
+        assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+    }
+    // Random-access request type (decoded-block cache) on the same handle.
+    for v in (0..2_000).step_by(37) {
+        assert_eq!(
+            graph.successors(v).unwrap(),
+            g.neighbors(v as VertexId),
+            "vertex {v}"
+        );
+    }
+    assert!(graph.stats().random_accesses.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert!(graph.successors(2_000).is_err(), "out-of-range rejected");
+}
+
+#[test]
+fn pg_graph_random_access_hits_cache() {
+    let g = generators::barabasi_albert(1_000, 5, 13);
+    let store = store_with(&g, "g");
+    let graph = open(&store, "g");
+    let _ = graph.successors(128).unwrap();
+    let after_first = graph.decoded_cache_counters();
+    assert_eq!(after_first.misses, 1);
+    assert_eq!(after_first.hits, 0);
+    for _ in 0..9 {
+        let _ = graph.successors(128).unwrap();
+    }
+    let warm = graph.decoded_cache_counters();
+    assert_eq!(warm.misses, 1, "hot vertex decoded exactly once");
+    assert_eq!(warm.hits, 9);
+    assert!(warm.resident_cost > 0);
+}
+
+#[test]
+fn bfs_unchanged_on_random_access_path() {
+    // Acceptance: BFS produces unchanged results when switched to the
+    // random-access path — checked over the coordinator handle.
+    let g = generators::barabasi_albert(1_500, 5, 19);
+    let store = store_with(&g, "g");
+    let graph = open(&store, "g");
+    for s in [0u32, 7, 1_499] {
+        assert_eq!(
+            bfs_distances_on(&graph, s).unwrap(),
+            bfs_distances(&g, s),
+            "source {s}"
+        );
+    }
+}
+
+#[test]
+fn afforest_unchanged_on_random_access_path() {
+    // Acceptance: Afforest produces unchanged results when switched to the
+    // random-access path — same labels, out-of-core pull via the handle.
+    let g = generators::road_lattice(30, 30, 0, 1);
+    let store = store_with(&g, "g");
+    let graph = open(&store, "g");
+    let full = afforest(&g, 7);
+    let pulled = afforest_on(&graph, 7).unwrap();
+    assert_eq!(pulled, full);
+    assert_eq!(count_components(&pulled), 1);
+}
+
+#[test]
+fn streaming_and_random_access_interleave() {
+    // Mixed workload over one handle: label-prop-style streaming callbacks
+    // while random accesses run — both must see consistent adjacency.
+    let g = generators::rmat(9, 6, 23);
+    let store = store_with(&g, "g");
+    let graph = open(&store, "g");
+    let n = g.num_vertices();
+    let seen = Arc::new(std::sync::Mutex::new(Vec::<(VertexId, VertexId)>::new()));
+    let s2 = Arc::clone(&seen);
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, n),
+            Arc::new(move |blk| s2.lock().unwrap().extend(blk.iter_edges())),
+        )
+        .expect("stream request");
+    for v in (0..n).step_by(101) {
+        assert_eq!(graph.successors(v).unwrap(), g.neighbors(v as VertexId));
+    }
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    let mut got = seen.lock().unwrap().clone();
+    got.sort_unstable();
+    let mut expected: Vec<(VertexId, VertexId)> = g.iter_edges().collect();
+    expected.sort_unstable();
+    assert_eq!(got, expected);
+}

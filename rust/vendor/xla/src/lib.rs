@@ -1,0 +1,117 @@
+//! Offline stub of the `xla` (PJRT) crate API surface used by
+//! `rust/src/runtime/exec.rs`.
+//!
+//! The real crate binds the PJRT C API and is unavailable in the offline
+//! build. This stub keeps the runtime layer compiling unchanged:
+//! [`PjRtClient::cpu`] fails with a recognizable error, so
+//! `ArtifactSet::load` degrades exactly like a missing artifacts directory
+//! and every caller falls back to the native Rust engines. No stub method
+//! past client creation is ever reached.
+
+use std::fmt;
+
+/// Error type; the runtime formats it with `{:?}`.
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error("PJRT unavailable: offline xla stub (vendor/xla)".to_string())
+}
+
+/// Stub PJRT client. [`PjRtClient::cpu`] always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub HLO module handle.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real `execute` shape: per-device, per-output buffers.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Self {
+        Self
+    }
+
+    pub fn scalar<T: Copy>(_value: T) -> Self {
+        Self
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("offline xla stub"), "got: {msg}");
+    }
+}
