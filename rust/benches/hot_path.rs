@@ -103,6 +103,72 @@ fn main() {
     );
     h.attach("webgraph/successors-cache", cache_report(&warm_src.cache_counters()));
 
+    // Parallel range decode (the tentpole): scaling of decode_range over
+    // worker counts on a 100k+-vertex graph. Acceptance bar: 4 workers ≥
+    // 2× the 1-worker case.
+    let big = generators::rmat(17, 8, 7); // 131072 vertices
+    let store_big = SimStore::new(DeviceKind::Dram);
+    FormatKind::WebGraph.write_to_store(&big, &store_big, "big");
+    let acct_big = IoAccount::new();
+    let meta_big = webgraph::read_meta(&store_big, "big", ReadCtx::default(), &acct_big).unwrap();
+    let offs_big =
+        webgraph::read_offsets(&store_big, "big", ReadCtx::default(), &acct_big).unwrap();
+    let dec_big = webgraph::Decoder::open(
+        &store_big, "big", &meta_big, &offs_big, ReadCtx::default(), &acct_big,
+    )
+    .unwrap();
+    let nb = meta_big.num_vertices;
+    let mut par1_min = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let accounts: Vec<IoAccount> = (0..workers).map(|_| IoAccount::new()).collect();
+        let name = format!("webgraph/decode_range-par-{workers}");
+        let s = h.bench(&name, || {
+            dec_big
+                .decode_range_parallel(0, nb, &accounts, &NativeScan)
+                .unwrap()
+                .num_edges()
+        });
+        h.report(&name, "ME_per_s", big.num_edges() as f64 / s.min / 1e6);
+        if workers == 1 {
+            par1_min = s.min;
+        } else {
+            h.report(&name, "speedup_vs_1w", par1_min / s.min);
+        }
+    }
+
+    // Elias-Fano offsets vs plain Vec<u64>: random-access latency and
+    // resident footprint (acceptance bar: EF ≤ 40% of plain, successors
+    // latency within 10% — the successors path above runs on EF already).
+    let plain_bits: Vec<u64> = (0..=nb).map(|v| offs_big.bit_offset(v)).collect();
+    let ef_probes: Vec<usize> =
+        (0..8192).map(|_| rng.next_below(nb as u64 + 1) as usize).collect();
+    let s = h.bench("offsets-ef-vs-plain/ef-get", || {
+        let mut acc = 0u64;
+        for &v in &ef_probes {
+            acc = acc.wrapping_add(offs_big.bit_offset(v));
+        }
+        acc
+    });
+    h.report("offsets-ef-vs-plain/ef-get", "ns_per_access", s.min * 1e9 / ef_probes.len() as f64);
+    let s = h.bench("offsets-ef-vs-plain/plain-get", || {
+        let mut acc = 0u64;
+        for &v in &ef_probes {
+            acc = acc.wrapping_add(plain_bits[v]);
+        }
+        acc
+    });
+    h.report(
+        "offsets-ef-vs-plain/plain-get",
+        "ns_per_access",
+        s.min * 1e9 / ef_probes.len() as f64,
+    );
+    h.report(
+        "offsets-ef-vs-plain",
+        "footprint_ratio",
+        offs_big.size_bytes() as f64 / offs_big.plain_size_bytes() as f64,
+    );
+    h.attach("offsets-ef-vs-plain", paragrapher::metrics::offsets_report(&offs_big));
+
     // Scan engines.
     let mut gaps: Vec<i64> = (0..1 << 20).map(|_| rng.next_below(64) as i64).collect();
     let s = h.bench("scan/native-1Mi", || {

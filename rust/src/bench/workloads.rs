@@ -56,14 +56,14 @@ pub fn modeled_paragrapher_load(
         seq_acct.time_cpu(|| webgraph::read_offsets(store, base, seq_ctx, &seq_acct))?;
     let sequential = seq_acct.elapsed_seconds();
 
-    // Plan blocks.
+    // Plan blocks (vertex-aligned, ≤ buffer_edges each) straight off the
+    // Elias–Fano sidecar index — O(blocks · log n), no plain vectors.
     let n = meta.num_vertices;
-    let offs = &offsets.edge_offsets;
     let mut blocks: Vec<(usize, usize)> = Vec::new();
     let mut v = 0usize;
     while v < n {
-        let limit = offs[v] + buffer_edges.max(1);
-        let mut end = offs.partition_point(|&e| e <= limit) - 1;
+        let limit = offsets.edge_offset(v) + buffer_edges.max(1);
+        let mut end = offsets.edge_partition_point(|e| e <= limit) - 1;
         end = end.clamp(v + 1, n);
         blocks.push((v, end));
         v = end;

@@ -80,13 +80,22 @@ impl GraphType {
 
 /// Library options (`get_set_options`): the two Fig. 8 knobs plus the read
 /// context and the decode engine.
-#[derive(Clone)]
 pub struct Options {
     /// Edges per buffer (paper default: 64 M; scaled default here).
     pub buffer_edges: u64,
     /// Number of buffers == number of decoder workers (§4.4: "the number of
     /// buffers ... specifies the number of parallel threads").
     pub buffers: usize,
+    /// Chunks a single block's decode fans out over (intra-block
+    /// parallelism through [`Decoder::decode_range_parallel`]); 1 (the
+    /// default) decodes each block on its single pool worker with no extra
+    /// threads. Each chunk worker carries its own [`IoAccount`], composed
+    /// by max into [`GraphStats::decode_seconds`] so the §3 overlap model
+    /// still holds. Values > 1 spawn that many scoped threads per block
+    /// (and oversubscribe to `buffers × decode_workers` at peak) — worth
+    /// it for large blocks; a borrowed-job extension of the shared
+    /// `util::pool` is a ROADMAP item.
+    pub decode_workers: usize,
     /// Declared I/O pattern for the storage model.
     pub read_ctx: ReadCtx,
     /// Scan engine for the gap→ID phase (native Rust or the AOT-compiled
@@ -98,32 +107,57 @@ pub struct Options {
     /// Decoded-block cache capacity in cost units (≈ edges + vertices);
     /// 0 disables caching. Like the buffer pool, fixed at open time.
     pub source_cache_cost: u64,
-    /// Legacy knob, kept for API compatibility: the former poll interval of
-    /// the request manager when all buffers were busy. The event-driven
-    /// coordinator parks on the buffer pool's condvar instead, so this
-    /// value is dead by default — no code path sleeps on it.
+    /// Dead since the event-driven coordinator (PR 1): the request manager
+    /// parks on the buffer pool's condvar and is woken by the next recycle;
+    /// no code path reads or sleeps on this value.
+    #[deprecated(
+        since = "0.2.0",
+        note = "the coordinator is event-driven; nothing sleeps on this value"
+    )]
     pub poll_interval: Duration,
 }
 
 impl std::fmt::Debug for Options {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `poll_interval` is deliberately omitted: the knob is deprecated
+        // and ignored, and printing it would suggest otherwise.
         f.debug_struct("Options")
             .field("buffer_edges", &self.buffer_edges)
             .field("buffers", &self.buffers)
+            .field("decode_workers", &self.decode_workers)
             .field("read_ctx", &self.read_ctx)
             .field("scan", &self.scan.name())
             .field("source_block_vertices", &self.source_block_vertices)
             .field("source_cache_cost", &self.source_cache_cost)
-            .field("poll_interval", &self.poll_interval)
             .finish()
     }
 }
 
+// Manual impl (not derived) so the deprecated field can be copied without
+// tripping `deny(warnings)` builds.
+impl Clone for Options {
+    #[allow(deprecated)]
+    fn clone(&self) -> Self {
+        Self {
+            buffer_edges: self.buffer_edges,
+            buffers: self.buffers,
+            decode_workers: self.decode_workers,
+            read_ctx: self.read_ctx,
+            scan: Arc::clone(&self.scan),
+            source_block_vertices: self.source_block_vertices,
+            source_cache_cost: self.source_cache_cost,
+            poll_interval: self.poll_interval,
+        }
+    }
+}
+
 impl Default for Options {
+    #[allow(deprecated)]
     fn default() -> Self {
         Self {
             buffer_edges: 1 << 20,
             buffers: 4,
+            decode_workers: 1,
             read_ctx: ReadCtx::default(),
             scan: Arc::new(crate::runtime::NativeScan),
             // One source of truth for random-access cache geometry: the
@@ -181,6 +215,7 @@ impl Paragrapher {
             bail!("{base}: opened as weighted (WG404) but dataset has no weights");
         }
         let offsets = webgraph::read_offsets(&store, base, options.read_ctx, &meta_acct)?;
+        offsets.check_matches(&meta).with_context(|| base.to_string())?;
         let sequential_cpu = t0.elapsed().as_secs_f64();
         let sequential_io = meta_acct.io_seconds();
 
@@ -232,6 +267,10 @@ pub struct GraphStats {
     pub requests_issued: AtomicU64,
     /// Per-vertex random accesses served via [`PgGraph::successors`].
     pub random_accesses: AtomicU64,
+    /// Modeled block-decode time, nanoseconds: per block, the max over its
+    /// chunk workers' virtual clocks (I/O + CPU), summed across blocks —
+    /// the §3 overlap composition at `decode_workers` granularity.
+    pub decode_seconds: AtomicU64,
 }
 
 struct GraphInner {
@@ -286,6 +325,23 @@ impl PgGraph {
         self.inner.stats.sequential_seconds.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Modeled block-decode seconds (see [`GraphStats::decode_seconds`]).
+    pub fn decode_seconds(&self) -> f64 {
+        self.inner.stats.decode_seconds.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Buffers currently in C_IDLE — equals the pool size whenever no
+    /// request is in flight (the stress suite's leak check).
+    pub fn idle_buffers(&self) -> usize {
+        self.inner.pool.count(BufferStatus::CIdle)
+    }
+
+    /// Resident footprint of the Elias–Fano offsets index vs the former
+    /// plain `Vec<u64>` representation, bytes: `(compressed, plain)`.
+    pub fn offsets_footprint(&self) -> (usize, usize) {
+        (self.inner.offsets.size_bytes(), self.inner.offsets.plain_size_bytes())
+    }
+
     pub fn options(&self) -> Options {
         self.inner.options.lock().expect("options lock").clone()
     }
@@ -299,13 +355,14 @@ impl PgGraph {
     }
 
     /// `csx_get_offsets`: the CSR offsets of `[start, end]` vertices —
-    /// an O(|V|) sidecar slice, no graph data touched (§6).
+    /// an O(|V|) sidecar slice materialized from the Elias–Fano index, no
+    /// graph data touched (§6).
     pub fn csx_get_offsets(&self, start_vertex: usize, end_vertex: usize) -> Result<Vec<u64>> {
         let n = self.inner.meta.num_vertices;
         if start_vertex > end_vertex || end_vertex > n {
             bail!("bad vertex range {start_vertex}..{end_vertex}");
         }
-        Ok(self.inner.offsets.edge_offsets[start_vertex..=end_vertex].to_vec())
+        Ok(self.inner.offsets.edge_offsets_vec(start_vertex, end_vertex))
     }
 
     /// `csx_get_vertex_weights`: none of the paper's shipped WebGraph types
@@ -318,20 +375,20 @@ impl PgGraph {
     /// (vertex-aligned; a single vertex larger than the buffer gets its own
     /// oversized block).
     fn plan_blocks(&self, range: VertexRange, buffer_edges: u64) -> Vec<BlockMeta> {
-        let offs = &self.inner.offsets.edge_offsets;
+        let offs = &self.inner.offsets;
         let mut blocks = Vec::new();
         let mut v = range.start;
         while v < range.end {
-            let start_edge = offs[v];
-            // Largest end with offs[end] - start_edge <= buffer_edges.
+            let start_edge = offs.edge_offset(v);
+            // Largest end with edge_offset(end) - start_edge <= buffer_edges.
             let limit = start_edge + buffer_edges;
-            let mut end = offs.partition_point(|&e| e <= limit) - 1;
+            let mut end = offs.edge_partition_point(|e| e <= limit) - 1;
             end = end.min(range.end).max(v + 1);
             blocks.push(BlockMeta {
                 start_vertex: v,
                 end_vertex: end,
                 start_edge,
-                end_edge: offs[end],
+                end_edge: offs.edge_offset(end),
             });
             v = end;
         }
@@ -384,9 +441,11 @@ impl PgGraph {
                     let callback = Arc::clone(&callback);
                     let scan = Arc::clone(&opts.scan);
                     let read_ctx = opts.read_ctx;
+                    let decode_workers = opts.decode_workers;
                     workers.execute(move || {
                         let decoded = decode_into_buffer(
-                            &inner, buffer_id, meta, read_ctx, scan.as_ref(), &req3,
+                            &inner, buffer_id, meta, read_ctx, scan.as_ref(), decode_workers,
+                            &req3,
                         );
                         if !decoded {
                             return; // decode failed: buffer already recycled
@@ -464,10 +523,10 @@ impl PgGraph {
         if start_edge > end_edge || end_edge > m {
             bail!("bad edge range {start_edge}..{end_edge}");
         }
-        let offs = &self.inner.offsets.edge_offsets;
+        let offs = &self.inner.offsets;
         // Vertex span covering the edge range.
-        let v_first = offs.partition_point(|&e| e <= start_edge).saturating_sub(1);
-        let v_last = offs.partition_point(|&e| e < end_edge);
+        let v_first = offs.edge_partition_point(|e| e <= start_edge).saturating_sub(1);
+        let v_last = offs.edge_partition_point(|e| e < end_edge);
         let trim = move |blk: &EdgeBlock<'_>| -> Option<(Vec<u64>, Vec<VertexId>, usize, u64)> {
             // Trim the block's edges to [start_edge, end_edge).
             let blk_start = blk.start_edge;
@@ -621,12 +680,18 @@ impl Drop for PgGraph {
 /// Producer-side block decode: claim C_REQUESTED -> J_READING, fill the
 /// buffer, publish J_READ_COMPLETED (or fail back to C_IDLE). Returns true
 /// when the buffer holds a decoded block (status J_READ_COMPLETED).
+///
+/// The decode itself fans out over `decode_workers` chunk workers
+/// ([`Decoder::decode_range_parallel`]); each carries its own virtual
+/// clock, and the block's modeled decode time — max over the chunk
+/// workers, per §3 — is accumulated into [`GraphStats::decode_seconds`].
 fn decode_into_buffer(
     inner: &GraphInner,
     buffer_id: usize,
     meta: BlockMeta,
     read_ctx: ReadCtx,
     scan: &dyn ScanEngine,
+    decode_workers: usize,
     req: &ReadRequest,
 ) -> bool {
     let buf = inner.pool.get(buffer_id);
@@ -634,7 +699,8 @@ fn decode_into_buffer(
         req.record_failure(format!("buffer {buffer_id} not in requested state"));
         return false;
     }
-    let acct = IoAccount::new();
+    let accounts: Vec<IoAccount> =
+        (0..decode_workers.max(1)).map(|_| IoAccount::new()).collect();
     let result = (|| -> Result<()> {
         let dec = Decoder::open(
             &inner.store,
@@ -642,9 +708,10 @@ fn decode_into_buffer(
             &inner.meta,
             &inner.offsets,
             read_ctx,
-            &acct,
+            &accounts[0],
         )?;
-        let block = dec.decode_range_with_scan(meta.start_vertex, meta.end_vertex, &acct, scan)?;
+        let block =
+            dec.decode_range_parallel(meta.start_vertex, meta.end_vertex, &accounts, scan)?;
         let mut data = buf.data.lock().expect("data lock");
         data.clear();
         data.offsets.extend_from_slice(&block.offsets);
@@ -656,7 +723,7 @@ fn decode_into_buffer(
                 .open(&name)
                 .with_context(|| format!("missing {name}"))?;
             let bytes =
-                file.read(meta.start_edge * 4, meta.num_edges() * 4, read_ctx, &acct);
+                file.read(meta.start_edge * 4, meta.num_edges() * 4, read_ctx, &accounts[0]);
             data.weights.extend(
                 bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())),
             );
@@ -665,6 +732,8 @@ fn decode_into_buffer(
     })();
     match result {
         Ok(()) => {
+            let modeled = crate::storage::vclock::phase_elapsed(&accounts);
+            inner.stats.decode_seconds.fetch_add((modeled * 1e9) as u64, Ordering::Relaxed);
             inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
             inner.stats.edges_decoded.fetch_add(meta.num_edges(), Ordering::Relaxed);
             buf.set_status(BufferStatus::JReadCompleted);

@@ -21,7 +21,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::{CsrGraph, VertexId};
@@ -150,6 +150,7 @@ impl<'s> WebGraphSource<'s> {
         let acct = IoAccount::new();
         let meta = webgraph::read_meta(store, base, config.ctx, &acct)?;
         let offsets = webgraph::read_offsets(store, base, config.ctx, &acct)?;
+        offsets.check_matches(&meta).with_context(|| base.to_string())?;
         Ok(Self {
             store,
             base: base.to_string(),

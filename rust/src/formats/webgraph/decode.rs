@@ -28,6 +28,7 @@ use crate::storage::sim::{ReadCtx, SimFile};
 use crate::storage::{IoAccount, SimStore};
 use crate::util::bitstream::BitReader;
 use crate::util::codes::{nat_to_int, read_gamma};
+use crate::util::pool::parallel_map;
 
 /// A decoded consecutive block of vertices: a little CSR slice.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -95,6 +96,7 @@ impl<'a> Decoder<'a> {
         ctx: ReadCtx,
         _acct: &IoAccount,
     ) -> Result<Self> {
+        offsets.check_matches(meta)?;
         let name = format!("{base}.graph");
         let file = store.open(&name).with_context(|| format!("missing {name}"))?;
         Ok(Self { file, meta, offsets, ctx })
@@ -130,8 +132,8 @@ impl<'a> Decoder<'a> {
         }
 
         // One ranged read covering the whole block's bits.
-        let bit0 = self.offsets.bit_offsets[v_start];
-        let bit1 = self.offsets.bit_offsets[v_end];
+        let bit0 = self.offsets.bit_offset(v_start);
+        let bit1 = self.offsets.bit_offset(v_end);
         let byte0 = bit0 / 8;
         let byte1 = (bit1 + 7) / 8;
         let bytes = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
@@ -144,7 +146,7 @@ impl<'a> Decoder<'a> {
         let mut seg_bounds: Vec<(usize, usize)> = Vec::with_capacity(v_end - v_start);
         let mut prev_last_abs: i64 = 0;
         for v in v_start..v_end {
-            let mut reader = BitReader::at_bit(&bytes, self.offsets.bit_offsets[v] - byte0 * 8)
+            let mut reader = BitReader::at_bit(&bytes, self.offsets.bit_offset(v) - byte0 * 8)
                 .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
             let parts = self.read_parts(v, &mut reader)?;
             let seg_start = gap_array.len();
@@ -219,6 +221,86 @@ impl<'a> Decoder<'a> {
         Ok(block)
     }
 
+    /// Decode vertices `[v_start, v_end)` in parallel: the range is split
+    /// into one chunk per entry of `accounts`, with boundaries balanced by
+    /// *compressed bits* (decode work tracks stream size, not vertex
+    /// count), fanned out over scoped pool workers, and stitched back in
+    /// vertex order. This is the paper's headline mechanism — selective
+    /// loading is only *parallel* if independent WebGraph blocks decode
+    /// concurrently.
+    ///
+    /// Each chunk decodes independently: in-chunk references resolve
+    /// through the chunk's own decode ring, and references that cross the
+    /// chunk head fall back to the bounded random-access recursion — no
+    /// cross-chunk synchronization. Worker `t` charges all of its I/O and
+    /// CPU to `accounts[t]`, so the §3 overlap model still composes: the
+    /// modeled elapsed time of the call is the max over the accounts.
+    pub fn decode_range_parallel(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        accounts: &[IoAccount],
+        scan: &dyn ScanEngine,
+    ) -> Result<DecodedBlock> {
+        let Some(first) = accounts.first() else {
+            bail!("decode_range_parallel needs at least one account");
+        };
+        let workers = accounts.len();
+        if v_start > v_end || v_end > self.meta.num_vertices {
+            bail!("bad vertex range {v_start}..{v_end} (n={})", self.meta.num_vertices);
+        }
+        if workers == 1 || v_end - v_start < workers * 2 {
+            return first.time_cpu(|| self.decode_range_with_scan(v_start, v_end, first, scan));
+        }
+        let bounds = self.chunk_bounds(v_start, v_end, workers);
+        let parts = parallel_map(workers, workers, |t| {
+            let (a, b) = (bounds[t], bounds[t + 1]);
+            accounts[t].time_cpu(|| self.decode_range_with_scan(a, b, &accounts[t], scan))
+        });
+        let mut chunks = Vec::with_capacity(workers);
+        for p in parts {
+            chunks.push(p?);
+        }
+        // Stitch in vertex order (chunk boundaries are sorted). The O(m)
+        // copy is real CPU work — charge it to worker 0's virtual clock so
+        // the modeled load time keeps covering it (as the pre-fan-out
+        // load_full stitch did).
+        first.time_cpu(|| {
+            let total_edges: usize = chunks.iter().map(|c| c.edges.len()).sum();
+            let mut out = DecodedBlock {
+                first_vertex: v_start,
+                offsets: Vec::with_capacity(v_end - v_start + 1),
+                edges: Vec::with_capacity(total_edges),
+            };
+            out.offsets.push(0);
+            for c in chunks {
+                let base = out.edges.len() as u64;
+                out.edges.extend_from_slice(&c.edges);
+                out.offsets.extend(c.offsets[1..].iter().map(|o| base + o));
+            }
+            Ok(out)
+        })
+    }
+
+    /// Chunk boundaries for [`Self::decode_range_parallel`]: `parts + 1`
+    /// vertex ids splitting `[lo, hi)` so each chunk covers ~the same
+    /// number of *compressed bits* (an O(parts · log n) sidecar search).
+    fn chunk_bounds(&self, lo: usize, hi: usize, parts: usize) -> Vec<usize> {
+        let b0 = self.offsets.bit_offset(lo);
+        let b1 = self.offsets.bit_offset(hi);
+        let mut bounds = Vec::with_capacity(parts + 1);
+        bounds.push(lo);
+        for t in 1..parts {
+            let target =
+                b0 + ((b1 - b0) as u128 * t as u128 / parts as u128) as u64;
+            let v = self.offsets.bit_partition_point(|b| b < target);
+            let prev = *bounds.last().expect("non-empty bounds");
+            bounds.push(v.clamp(prev, hi));
+        }
+        bounds.push(hi);
+        bounds
+    }
+
     /// Decode a single vertex's successor list (the "down to a single
     /// vertex's neighbor list" granularity of §1).
     pub fn decode_vertex(&self, v: usize, acct: &IoAccount) -> Result<Vec<VertexId>> {
@@ -241,8 +323,8 @@ impl<'a> Decoder<'a> {
         if depth > self.meta.params.max_ref_chain + 1 {
             bail!("reference chain exceeds bound at vertex {v} (corrupt stream?)");
         }
-        let bit0 = self.offsets.bit_offsets[v];
-        let bit1 = self.offsets.bit_offsets[v + 1];
+        let bit0 = self.offsets.bit_offset(v);
+        let bit1 = self.offsets.bit_offset(v + 1);
         let byte0 = bit0 / 8;
         let byte1 = (bit1 + 7) / 8;
         let local = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
@@ -274,6 +356,14 @@ impl<'a> Decoder<'a> {
         parts.degree = read_gamma(reader).map_err(|e| anyhow::anyhow!("degree: {e}"))? as usize;
         if parts.degree == 0 {
             return Ok(parts);
+        }
+        // Successor lists are strictly increasing vertex ids in [0, n), so a
+        // degree above n can only come from a corrupt stream. Rejecting it
+        // here bounds every downstream `reserve` (fuzz suite: a flipped bit
+        // in a γ length must never translate into an unbounded allocation).
+        if parts.degree > self.meta.num_vertices {
+            let n = self.meta.num_vertices;
+            bail!("implausible degree {} at vertex {v} (n={n})", parts.degree);
         }
         parts.reference =
             read_gamma(reader).map_err(|e| anyhow::anyhow!("reference: {e}"))? as usize;
@@ -308,13 +398,14 @@ impl<'a> Decoder<'a> {
             // exactly from the *edge offsets* (O(1) sidecar lookup) — no
             // graph data needed.
             let target = v - parts.reference;
-            let ref_degree = (self.offsets.edge_offsets[target + 1]
-                - self.offsets.edge_offsets[target]) as usize;
+            let ref_degree = self.offsets.degree(target);
             let mut pos = 0usize;
             let mut is_copy = true;
             for &len in &parts.blocks {
                 let len = len as usize;
-                if pos + len > ref_degree {
+                // `len > ref_degree` first: keeps `pos + len` (≤ 2·degree
+                // afterwards) overflow-free on corrupt run lengths.
+                if len > ref_degree || pos + len > ref_degree {
                     bail!("copy blocks overrun reference list at vertex {v}");
                 }
                 if is_copy {
@@ -334,17 +425,33 @@ impl<'a> Decoder<'a> {
         if interval_count > parts.degree {
             bail!("implausible interval count at vertex {v}");
         }
+        // Interval fields are bounded at parse time like the residuals
+        // below: every valid interval lies inside [0, n), so the zig-zag
+        // left, inter-interval gap and length are all < 2n — checking the
+        // raw code values first keeps the i64/u64 arithmetic overflow-free
+        // on corrupt streams.
+        let n_u = self.meta.num_vertices as u64;
         let mut prev_right: i64 = v as i64;
         for i in 0..interval_count {
             let left: i64 = if i == 0 {
                 let z = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval left: {e}"))?;
+                if z >= 2 * n_u + 2 {
+                    bail!("interval left out of range at vertex {v}");
+                }
                 v as i64 + nat_to_int(z)
             } else {
                 let g = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval gap: {e}"))?;
+                if g >= n_u {
+                    bail!("interval gap out of range at vertex {v}");
+                }
                 prev_right + 2 + g as i64
             };
-            let len = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval len: {e}"))?
-                + self.meta.params.min_interval_len as u64;
+            let len_raw =
+                read_gamma(reader).map_err(|e| anyhow::anyhow!("interval len: {e}"))?;
+            if len_raw > n_u {
+                bail!("interval length out of range at vertex {v}");
+            }
+            let len = len_raw + self.meta.params.min_interval_len as u64;
             if left < 0 || (left as u64 + len) > self.meta.num_vertices as u64 {
                 bail!("interval out of range at vertex {v}");
             }
@@ -354,19 +461,31 @@ impl<'a> Decoder<'a> {
             prev_right = left + len as i64 - 1;
         }
 
-        // Residual gaps.
+        // Residual gaps. Each is bounded at parse time: residuals are
+        // strictly increasing ids in [0, n), so the first must land in that
+        // range and every later gap is < n. Beyond semantic validation this
+        // keeps the phase-1/2 i64 gap sums overflow-free on corrupt streams
+        // (a flipped bit in a ζ code must not become an arithmetic panic).
         let residual_count = parts
             .degree
             .checked_sub(copied_estimate + parts.intervals.len())
             .with_context(|| format!("degree accounting underflow at vertex {v}"))?;
+        let n = self.meta.num_vertices as i64;
         let code = self.meta.params.residual_code();
         parts.gaps.reserve(residual_count);
         for i in 0..residual_count {
             if i == 0 {
                 let z = code.read(reader).map_err(|e| anyhow::anyhow!("residual: {e}"))?;
-                parts.gaps.push(v as i64 + nat_to_int(z));
+                let first = v as i64 + nat_to_int(z);
+                if first < 0 || first >= n {
+                    bail!("first residual {first} out of range at vertex {v}");
+                }
+                parts.gaps.push(first);
             } else {
                 let g = code.read(reader).map_err(|e| anyhow::anyhow!("residual gap: {e}"))?;
+                if g >= self.meta.num_vertices as u64 {
+                    bail!("residual gap {g} out of range at vertex {v}");
+                }
                 parts.gaps.push(1 + g as i64);
             }
         }
@@ -392,7 +511,7 @@ fn apply_blocks_into(
     let mut is_copy = true;
     for &len in blocks {
         let len = len as usize;
-        if pos + len > ref_list.len() {
+        if len > ref_list.len() || pos + len > ref_list.len() {
             bail!("copy blocks overrun reference list at vertex {v}");
         }
         if is_copy {
@@ -586,6 +705,54 @@ mod tests {
                 assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_range_decode_matches_sequential() {
+        // Heavy referencing makes chunk heads resolve out-of-chunk
+        // references through the bounded recursion — the hard case.
+        let g = generators::similarity_blocks(1200, 48, 16, 9);
+        let store = SimStore::new(DeviceKind::Dram);
+        let params = WgParams { window: 7, max_ref_chain: 5, ..WgParams::default() };
+        for (name, data) in serialize_with(&g, "g", params) {
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let n = g.num_vertices();
+        for workers in [1usize, 2, 3, 4, 8] {
+            let accounts: Vec<IoAccount> = (0..workers).map(|_| IoAccount::new()).collect();
+            for (a, b) in [(0, n), (0, 1), (17, 17), (5, n - 3), (n / 2, n / 2 + 7)] {
+                let par = dec
+                    .decode_range_parallel(a, b, &accounts, &crate::runtime::NativeScan)
+                    .unwrap();
+                let seq = dec.decode_range(a, b, &acct).unwrap();
+                assert_eq!(par, seq, "range {a}..{b} workers={workers}");
+                assert_eq!(par.first_vertex, a);
+                assert_eq!(par.num_vertices(), b - a);
+            }
+            // Every worker that decoded a chunk charged its own clock.
+            let charged = accounts.iter().filter(|a| a.cpu_seconds() > 0.0).count();
+            assert!(charged >= 1, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_decode_rejects_bad_input() {
+        let g = generators::rmat(6, 4, 5);
+        let (store, acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let accounts: Vec<IoAccount> = (0..2).map(|_| IoAccount::new()).collect();
+        let scan = crate::runtime::NativeScan;
+        assert!(dec.decode_range_parallel(10, 5, &accounts, &scan).is_err());
+        assert!(dec
+            .decode_range_parallel(0, g.num_vertices() + 1, &accounts, &scan)
+            .is_err());
+        assert!(dec.decode_range_parallel(0, 5, &[], &scan).is_err(), "no accounts");
     }
 
     #[test]

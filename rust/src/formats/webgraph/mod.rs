@@ -37,8 +37,8 @@ use anyhow::{bail, Context, Result};
 use crate::graph::CsrGraph;
 use crate::storage::sim::ReadCtx;
 use crate::storage::{IoAccount, SimStore};
-use crate::util::pool::parallel_map;
-use crate::util::{chunk_range, codes::Code};
+use crate::util::codes::Code;
+use crate::util::elias_fano::{EliasFano, EliasFanoBuilder};
 
 /// Encoder/decoder parameters (the `.properties` content).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,6 +74,11 @@ pub struct WgMeta {
     pub weighted: bool,
 }
 
+/// Magic of the v2 offsets sidecar header. The v1 sidecar starts with the
+/// raw vertex count, which for any real graph is far below 2^56, so the
+/// high byte (0xFF here) can never collide with a v1 file.
+pub const OFFSETS_MAGIC_V2: u64 = u64::from_le_bytes(*b"WGOFF2\xF0\xFF");
+
 /// Serialize a graph into the WebGraph file family.
 pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
     serialize_with(graph, base, WgParams::default())
@@ -87,11 +92,17 @@ pub fn serialize_with(graph: &CsrGraph, base: &str, params: WgParams) -> Vec<(St
     // Offsets sidecar: header + γ-coded deltas, like WebGraph's `.offsets`
     // file (storing them raw would cost 16 B/vertex and dominate sparse
     // graphs). Bit-offset deltas are record lengths; edge-offset deltas are
-    // degrees — both small, γ-friendly quantities. The whole sidecar is
-    // decoded once at open time (the §5.6 sequential phase).
-    let mut offsets = Vec::with_capacity(16 + (n + 1) * 2);
+    // degrees — both small, γ-friendly quantities. The v2 header declares
+    // the two universes (total stream bits and edge count) so open time can
+    // stream the deltas straight into the Elias–Fano index without ever
+    // materializing 16 B/vertex of plain offsets (the §5.6 sequential
+    // phase stays O(|V|) time but drops to the compressed footprint).
+    let total_bits = *bit_offsets.last().expect("n+1 bit offsets");
+    let mut offsets = Vec::with_capacity(32 + (n + 1) * 2);
+    offsets.extend_from_slice(&OFFSETS_MAGIC_V2.to_le_bytes());
     offsets.extend_from_slice(&(n as u64).to_le_bytes());
     offsets.extend_from_slice(&m.to_le_bytes());
+    offsets.extend_from_slice(&total_bits.to_le_bytes());
     let mut w = crate::util::bitstream::BitWriter::with_capacity((n + 1) * 2);
     let mut prev = 0u64;
     for &b in &bit_offsets {
@@ -157,15 +168,120 @@ pub fn read_meta(store: &SimStore, base: &str, ctx: ReadCtx, acct: &IoAccount) -
     Ok(WgMeta { num_vertices, num_edges, params, weighted })
 }
 
-/// Offsets sidecar, fully loaded: per-vertex bit offsets and edge offsets.
+/// Offsets sidecar, resident as two Elias–Fano indexes: per-vertex *bit*
+/// offsets into the compressed stream and the CSR *edge* offsets (n+1
+/// entries each). Succinct (~10 bits/vertex instead of 128) with O(1)
+/// quantum-sampled access — the structure that lets an opened graph scale
+/// to the paper's Table 3 vertex counts without 16 B/vertex of sidecar RAM.
 #[derive(Debug, Clone)]
 pub struct WgOffsets {
-    pub bit_offsets: Vec<u64>,
-    pub edge_offsets: Vec<u64>,
+    bits: EliasFano,
+    edges: EliasFano,
+}
+
+impl WgOffsets {
+    /// Build from plain vectors (tests, oracles, and in-memory conversion).
+    /// Both slices must be monotone with `n+1` entries.
+    pub fn from_vecs(bit_offsets: &[u64], edge_offsets: &[u64]) -> Result<Self> {
+        if bit_offsets.len() != edge_offsets.len() || bit_offsets.is_empty() {
+            bail!("offsets vectors must be non-empty and equal-length");
+        }
+        Ok(Self {
+            bits: EliasFano::from_monotone(bit_offsets).map_err(|e| anyhow::anyhow!("{e}"))?,
+            edges: EliasFano::from_monotone(edge_offsets).map_err(|e| anyhow::anyhow!("{e}"))?,
+        })
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.bits.len() - 1
+    }
+
+    /// Total bits of the compressed stream (== `bit_offset(n)`).
+    pub fn total_bits(&self) -> u64 {
+        self.bits.get(self.bits.len() - 1)
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.edges.get(self.edges.len() - 1)
+    }
+
+    /// Bit position of vertex `v`'s record in the `.graph` stream.
+    #[inline]
+    pub fn bit_offset(&self, v: usize) -> u64 {
+        self.bits.get(v)
+    }
+
+    /// CSR edge offset of vertex `v`.
+    #[inline]
+    pub fn edge_offset(&self, v: usize) -> u64 {
+        self.edges.get(v)
+    }
+
+    /// Out-degree of vertex `v` — an O(1) sidecar lookup, no graph data.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.edges.get(v + 1) - self.edges.get(v)) as usize
+    }
+
+    /// Materialize edge offsets `[start, end]` (inclusive) as a plain
+    /// vector (`csx_get_offsets`).
+    pub fn edge_offsets_vec(&self, start: usize, end_inclusive: usize) -> Vec<u64> {
+        self.edges.to_vec_range(start, end_inclusive + 1)
+    }
+
+    /// `partition_point` over the edge-offsets sequence (indices `0..=n`).
+    pub fn edge_partition_point(&self, pred: impl Fn(u64) -> bool) -> usize {
+        self.edges.partition_point(pred)
+    }
+
+    /// `partition_point` over the bit-offsets sequence (indices `0..=n`).
+    pub fn bit_partition_point(&self, pred: impl Fn(u64) -> bool) -> usize {
+        self.bits.partition_point(pred)
+    }
+
+    /// Resident footprint of both indexes, bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.bits.size_bytes() + self.edges.size_bytes()
+    }
+
+    /// Footprint of the former plain representation (two `Vec<u64>`).
+    pub fn plain_size_bytes(&self) -> usize {
+        self.bits.plain_size_bytes() + self.edges.plain_size_bytes()
+    }
+
+    /// Fail fast when the sidecar disagrees with `.properties` — otherwise
+    /// a vertex-count mismatch would surface as an out-of-bounds offsets
+    /// lookup (a panic) deep inside a decode, and an edge-count mismatch as
+    /// wrong-range answers from the edge-granular APIs. Called by every
+    /// open path.
+    pub fn check_matches(&self, meta: &WgMeta) -> Result<()> {
+        if self.num_vertices() != meta.num_vertices {
+            bail!(
+                "offsets sidecar has {} vertices but properties say {}",
+                self.num_vertices(),
+                meta.num_vertices
+            );
+        }
+        if self.num_edges() != meta.num_edges {
+            bail!(
+                "offsets sidecar has {} edges but properties say {}",
+                self.num_edges(),
+                meta.num_edges
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Load the sidecar — an O(|V|) read, no graph data touched (§6's
-/// "loading from storage instead of processing").
+/// "loading from storage instead of processing"). Understands both sidecar
+/// layouts:
+///
+/// * **v2** (current): `[magic][n][m][total_bits]` + γ-delta stream —
+///   decoded *streaming* into the Elias–Fano builders (the universes are in
+///   the header), peak memory = the compressed index itself;
+/// * **v1** (legacy, pre-EF): `[n][m]` + the same γ-delta stream — decoded
+///   through a transient plain vector, then compressed in memory.
 pub fn read_offsets(
     store: &SimStore,
     base: &str,
@@ -175,25 +291,72 @@ pub fn read_offsets(
     let name = format!("{base}.offsets");
     let file = store.open(&name).with_context(|| format!("missing {name}"))?;
     let bytes = file.read(0, file.len(), ctx, acct);
-    if bytes.len() < 16 {
-        bail!("{name}: truncated header");
-    }
-    let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
-    let mut r = crate::util::bitstream::BitReader::new(&bytes[16..]);
-    let mut decode_prefix = |count: usize| -> Result<Vec<u64>> {
-        let mut out = Vec::with_capacity(count);
-        let mut acc = 0u64;
-        for i in 0..count {
-            let d = crate::util::codes::read_gamma(&mut r)
-                .map_err(|e| anyhow::anyhow!("{name}: truncated at entry {i}: {e}"))?;
-            acc += d;
-            out.push(acc);
+    if bytes.len() >= 8
+        && u64::from_le_bytes(bytes[0..8].try_into().unwrap()) == OFFSETS_MAGIC_V2
+    {
+        if bytes.len() < 32 {
+            bail!("{name}: truncated v2 header");
         }
-        Ok(out)
-    };
-    let bit_offsets = decode_prefix(n + 1)?;
-    let edge_offsets = decode_prefix(n + 1)?;
-    Ok(WgOffsets { bit_offsets, edge_offsets })
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let m = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let total_bits = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        // Plausibility: 2(n+1) γ codes need ≥ 2(n+1) bits, so a valid file
+        // always has n < 4·len. Rejecting here bounds every allocation below
+        // (a corrupt header must not translate into an OOM-sized reserve).
+        if n >= bytes.len().saturating_mul(4) {
+            bail!("{name}: implausible vertex count {n} for {} sidecar bytes", bytes.len());
+        }
+        let mut r = crate::util::bitstream::BitReader::new(&bytes[32..]);
+        let mut decode_into = |universe: u64, what: &str| -> Result<EliasFano> {
+            let mut b = EliasFanoBuilder::new(n + 1, universe);
+            let mut acc = 0u64;
+            for i in 0..=n {
+                let d = crate::util::codes::read_gamma(&mut r)
+                    .map_err(|e| anyhow::anyhow!("{name}: truncated at {what} {i}: {e}"))?;
+                acc = acc
+                    .checked_add(d)
+                    .with_context(|| format!("{name}: {what} overflow at entry {i}"))?;
+                b.push(acc).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+            }
+            if acc != universe {
+                bail!("{name}: {what} sum {acc} != declared universe {universe}");
+            }
+            b.finish().map_err(|e| anyhow::anyhow!("{name}: {e}"))
+        };
+        let bits = decode_into(total_bits, "bit offset")?;
+        let edges = decode_into(m, "edge offset")?;
+        Ok(WgOffsets { bits, edges })
+    } else {
+        // v1 compatibility path.
+        if bytes.len() < 16 {
+            bail!("{name}: truncated header");
+        }
+        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        let m = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if n >= bytes.len().saturating_mul(4) {
+            bail!("{name}: implausible vertex count {n} for {} sidecar bytes", bytes.len());
+        }
+        let mut r = crate::util::bitstream::BitReader::new(&bytes[16..]);
+        let mut decode_prefix = |count: usize| -> Result<Vec<u64>> {
+            let mut out = Vec::with_capacity(count);
+            let mut acc = 0u64;
+            for i in 0..count {
+                let d = crate::util::codes::read_gamma(&mut r)
+                    .map_err(|e| anyhow::anyhow!("{name}: truncated at entry {i}: {e}"))?;
+                acc = acc
+                    .checked_add(d)
+                    .with_context(|| format!("{name}: offset overflow at entry {i}"))?;
+                out.push(acc);
+            }
+            Ok(out)
+        };
+        let bit_offsets = decode_prefix(n + 1)?;
+        let edge_offsets = decode_prefix(n + 1)?;
+        if *edge_offsets.last().unwrap() != m {
+            bail!("{name}: edge offsets sum to {}, header says {m}", edge_offsets.last().unwrap());
+        }
+        WgOffsets::from_vecs(&bit_offsets, &edge_offsets)
+    }
 }
 
 /// Whole-graph parallel load (the use-case-A path used by the Fig. 5
@@ -210,45 +373,16 @@ pub fn load_full(
     let meta = read_meta(store, base, ctx, &accounts[0])?;
     let offsets = read_offsets(store, base, ctx, &accounts[0])?;
     let n = meta.num_vertices;
-    let threads = accounts.len().max(1);
 
-    // Parallel decode: split vertices into chunks balanced by edge count
-    // (vertex boundaries chosen where the cumulative edge offset crosses
-    // each thread's fair share).
-    let boundaries: Vec<usize> = (0..=threads)
-        .map(|t| {
-            if t == 0 {
-                0
-            } else if t == threads {
-                n
-            } else {
-                let (e_t, _) = chunk_range(meta.num_edges as usize, threads, t);
-                offsets.edge_offsets.partition_point(|&e| e < e_t as u64).min(n)
-            }
-        })
-        .collect();
-    let blocks: Vec<DecodedBlock> = parallel_map(threads, threads, |t| {
-        let (v_start, v_end) = (boundaries[t], boundaries[t + 1].max(boundaries[t]));
-        Decoder::open(store, base, &meta, &offsets, ctx, &accounts[t]).and_then(|dec| {
-            accounts[t].time_cpu(|| dec.decode_range(v_start, v_end, &accounts[t]))
-        })
-    })
-    .into_iter()
-    .collect::<Result<Vec<_>>>()?;
+    // Parallel decode through the shared fan-out primitive: one chunk per
+    // account, boundaries balanced by compressed bits, results stitched in
+    // vertex order, each worker's I/O + CPU on its own virtual clock.
+    let dec = Decoder::open(store, base, &meta, &offsets, ctx, &accounts[0])?;
+    let block = dec.decode_range_parallel(0, n, accounts, &crate::runtime::NativeScan)?;
 
-    // Stitch blocks into one CSR (charged to worker 0).
+    // Assemble the CSR (charged to worker 0): the full-range block's local
+    // offsets are exactly the graph's CSR offsets.
     accounts[0].time_cpu(|| {
-        let m = meta.num_edges as usize;
-        let mut edges = Vec::with_capacity(m);
-        let mut offs = Vec::with_capacity(n + 1);
-        offs.push(0u64);
-        for b in &blocks {
-            for i in 0..b.num_vertices() {
-                let (s, e) = b.vertex_span(i);
-                edges.extend_from_slice(&b.edges[s..e]);
-                offs.push(edges.len() as u64);
-            }
-        }
         let weights = if meta.weighted {
             let name = format!("{base}.weights");
             let file = store.open(&name).with_context(|| format!("missing {name}"))?;
@@ -257,7 +391,7 @@ pub fn load_full(
         } else {
             Vec::new()
         };
-        let g = CsrGraph { offsets: offs, edges, weights };
+        let g = CsrGraph { offsets: block.offsets, edges: block.edges, weights };
         g.validate().map_err(|e| anyhow::anyhow!("decoded graph invalid: {e}"))?;
         Ok(g)
     })
@@ -340,11 +474,76 @@ mod tests {
         assert_eq!(meta.num_edges, g.num_edges());
         assert!(!meta.weighted);
         let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
-        assert_eq!(offs.edge_offsets, g.offsets);
-        assert_eq!(offs.bit_offsets.len(), g.num_vertices() + 1);
-        // Bit offsets strictly increasing for non-empty vertices.
+        assert_eq!(offs.num_vertices(), g.num_vertices());
+        assert_eq!(offs.num_edges(), g.num_edges());
+        assert_eq!(offs.edge_offsets_vec(0, g.num_vertices()), g.offsets);
+        // Bit offsets non-decreasing; degrees match.
         for v in 0..g.num_vertices() {
-            assert!(offs.bit_offsets[v] <= offs.bit_offsets[v + 1]);
+            assert!(offs.bit_offset(v) <= offs.bit_offset(v + 1));
+            assert_eq!(offs.degree(v), g.degree(v as u32) as usize, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn v1_offsets_sidecar_still_readable() {
+        // Pre-EF sidecar layout: [n][m] header + the same γ-delta stream.
+        // read_offsets must parse it identically to the v2 file.
+        let g = generators::barabasi_albert(700, 5, 3);
+        let (_, bit_offsets, _) = compress(&g, WgParams::default());
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&(g.num_vertices() as u64).to_le_bytes());
+        v1.extend_from_slice(&g.num_edges().to_le_bytes());
+        let mut w = crate::util::bitstream::BitWriter::new();
+        let mut prev = 0u64;
+        for &b in &bit_offsets {
+            crate::util::codes::write_gamma(&mut w, b - prev);
+            prev = b;
+        }
+        let mut prev = 0u64;
+        for &e in &g.offsets {
+            crate::util::codes::write_gamma(&mut w, e - prev);
+            prev = e;
+        }
+        v1.extend_from_slice(&w.into_bytes());
+
+        let store = store_with(&g, "g");
+        store.put("g.offsets", v1); // overwrite the v2 sidecar with v1 bytes
+        let acct = IoAccount::new();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        assert_eq!(offs.edge_offsets_vec(0, g.num_vertices()), g.offsets);
+        for v in 0..=g.num_vertices() {
+            assert_eq!(offs.bit_offset(v), bit_offsets[v], "vertex {v}");
+        }
+        // And the whole-graph load still round-trips through a v1 sidecar.
+        let loaded = load_full(&store, "g", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(loaded, g);
+    }
+
+    #[test]
+    fn elias_fano_offsets_are_small_and_exact() {
+        let g = generators::barabasi_albert(20_000, 8, 11);
+        let store = store_with(&g, "g");
+        let acct = IoAccount::new();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        // Acceptance bar: ≤ 40% of the two plain Vec<u64> (in practice far
+        // less — ~10 bits/vertex against 128).
+        assert!(
+            offs.size_bytes() * 100 <= offs.plain_size_bytes() * 40,
+            "EF offsets footprint {} must be ≤ 40% of plain {}",
+            offs.size_bytes(),
+            offs.plain_size_bytes()
+        );
+        // Exactness: every offset and the partition points agree with the
+        // plain-vector oracle.
+        for v in (0..=g.num_vertices()).step_by(97) {
+            assert_eq!(offs.edge_offset(v), g.offsets[v]);
+        }
+        for probe in [0u64, 1, 7, g.num_edges() / 2, g.num_edges()] {
+            assert_eq!(
+                offs.edge_partition_point(|e| e < probe),
+                g.offsets.partition_point(|&e| e < probe),
+                "probe {probe}"
+            );
         }
     }
 

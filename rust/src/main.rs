@@ -44,6 +44,7 @@ fn main() {
         "bench-storage" => cmd_bench_storage(&flags),
         "sweep" => cmd_sweep(&flags),
         "end-to-end" => cmd_end_to_end(&flags),
+        "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -72,7 +73,8 @@ commands:
   wcc           --dataset D --device DEV --format F       Fig. 6 style end-to-end WCC
   bench-storage [--device DEV]                            Fig. 4 bandwidth grid
   sweep         --dataset D --device DEV                  Fig. 8 threads×buffer grid
-  end-to-end    [--scale N]                               full pipeline + headline table"
+  end-to-end    [--scale N]                               full pipeline + headline table
+  ci-summary                                              markdown health metrics for CI"
     );
 }
 
@@ -397,5 +399,58 @@ fn cmd_end_to_end(flags: &HashMap<String, String>) -> Result<()> {
         println!("\nTW on {} (modeled):", device.name());
         println!("{}", table.render());
     }
+    Ok(())
+}
+
+/// `ci-summary`: markdown health metrics for the CI job summary — encoder
+/// reference-chain depth, decoded-block cache hit rate, and the Elias–Fano
+/// offsets footprint, on a fixed seeded graph so drift is comparable
+/// across PRs.
+fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::formats::webgraph::{self, WgParams};
+    use paragrapher::formats::{GraphSource, SourceConfig, WebGraphSource};
+    use paragrapher::graph::generators;
+    use paragrapher::storage::SimStore;
+
+    let g = generators::barabasi_albert(20_000, 8, 42);
+    let (_, _, stats) = webgraph::compress(&g, WgParams::default());
+
+    let store = SimStore::new(DeviceKind::Dram);
+    FormatKind::WebGraph.write_to_store(&g, &store, "ci");
+    let src = WebGraphSource::open(&store, "ci", SourceConfig::default())
+        .context("open webgraph source")?;
+    // Zipf-ish probe mix: a hot block plus scattered cold vertices.
+    let mut rng = paragrapher::util::rng::Xoshiro256::seed_from_u64(7);
+    for i in 0..4000usize {
+        let v = if i % 4 == 0 {
+            rng.next_below(g.num_vertices() as u64) as usize
+        } else {
+            (i * 13) % 256 // hot set
+        };
+        let _ = src.successors(v)?;
+    }
+    let cache = src.cache_counters();
+    let acct = IoAccount::new();
+    let offs =
+        webgraph::read_offsets(&store, "ci", paragrapher::storage::sim::ReadCtx::default(), &acct)?;
+
+    println!("### paragrapher health metrics (BA 20k×8, seed 42)\n");
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!("| max_ref_chain_depth | {} |", stats.max_ref_chain_depth);
+    println!("| vertices_with_reference | {} |", stats.vertices_with_reference);
+    println!("| bits_per_edge | {:.2} |", stats.total_bits as f64 / g.num_edges() as f64);
+    println!(
+        "| decoded_cache_hit_rate | {} |",
+        paragrapher::metrics::fmt_hit_rate(&cache)
+    );
+    println!("| decoded_cache (hits/misses/evictions) | {}/{}/{} |",
+        cache.hits, cache.misses, cache.evictions);
+    println!(
+        "| ef_offsets_footprint | {} of {} plain ({:.1}%) |",
+        fmt_bytes(offs.size_bytes() as u64),
+        fmt_bytes(offs.plain_size_bytes() as u64),
+        offs.size_bytes() as f64 * 100.0 / offs.plain_size_bytes() as f64
+    );
     Ok(())
 }

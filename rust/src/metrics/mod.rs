@@ -110,6 +110,19 @@ pub fn cache_report(counters: &CacheCounters) -> Json {
     o
 }
 
+/// Render the Elias–Fano offsets index footprint against the former plain
+/// `Vec<u64>` representation (attached to bench results; the ≤ 40% bar is
+/// asserted in the webgraph tests).
+pub fn offsets_report(offsets: &crate::formats::webgraph::WgOffsets) -> Json {
+    let ef = offsets.size_bytes() as u64;
+    let plain = offsets.plain_size_bytes() as u64;
+    let mut o = Json::obj();
+    o.set("ef_bytes", ef)
+        .set("plain_bytes", plain)
+        .set("ratio", ef as f64 / plain.max(1) as f64);
+    o
+}
+
 /// Format a cache hit rate for table output ("93.8% hit").
 pub fn fmt_hit_rate(counters: &CacheCounters) -> String {
     format!("{:.1}% hit", counters.hit_rate() * 100.0)

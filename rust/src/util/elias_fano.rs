@@ -1,0 +1,418 @@
+//! Elias–Fano encoding of monotone integer sequences.
+//!
+//! The WebGraph offsets sidecar stores two monotone sequences per graph
+//! (per-vertex *bit* offsets into the compressed stream and the CSR *edge*
+//! offsets). Fully materialized as `Vec<u64>` they cost 16 B/vertex — the
+//! paper's Table 3 datasets (up to 3.6 B vertices) would need ~58 GB of
+//! offsets alone. Elias–Fano stores an n-element monotone sequence with
+//! universe u in `n * (2 + ceil(log2(u/n)))` bits — ~9–12 bits/entry for
+//! typical compressed graphs, i.e. under 20% of the plain footprint — while
+//! keeping O(1) random access via quantum-sampled select, which is exactly
+//! what webgraph-rs (`sux`'s `EliasFano`) uses for its offsets.
+//!
+//! Layout: each value is split into `low_bits` low bits (packed verbatim)
+//! and the remaining high bits (stored as a unary-gap bit vector: value `i`
+//! sets bit `(v_i >> low_bits) + i`). `get(i)` finds the position of the
+//! i-th set bit with a sampled select (one sample every [`SELECT_QUANTUM`]
+//! ones, then a popcount scan). The scan covers one inter-sample span,
+//! which averages ~2·[`SELECT_QUANTUM`] bits (global density of the
+//! high-bits vector is ~1/2), so access is O(1) *expected*. Worst case is
+//! a span stretched by one giant value gap — e.g. the edge-offsets entry
+//! of a hub vertex whose degree is far above the mean — where the scan is
+//! O(gap / 64) words for indices in that quantum; a sux-style sparse
+//! "spill" for stretched spans would make it worst-case O(1) and is noted
+//! as a ROADMAP item.
+
+use std::fmt;
+
+/// One select sample per this many set bits. 64 keeps the scan within a
+/// couple of words (the high-bits vector holds ~2 bits per element).
+const SELECT_QUANTUM: usize = 64;
+
+/// Errors from [`EliasFanoBuilder::push`] — a corrupt sidecar must surface
+/// as `Err`, never as a panic or an unbounded allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EfError {
+    /// Value smaller than its predecessor.
+    NonMonotone { index: usize },
+    /// Value above the declared universe.
+    AboveUniverse { index: usize },
+    /// More values pushed than the builder was sized for.
+    TooMany,
+    /// `finish` called before all declared values were pushed.
+    TooFew { pushed: usize, expected: usize },
+}
+
+impl fmt::Display for EfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EfError::NonMonotone { index } => {
+                write!(f, "elias-fano: value {index} smaller than its predecessor")
+            }
+            EfError::AboveUniverse { index } => {
+                write!(f, "elias-fano: value {index} above the declared universe")
+            }
+            EfError::TooMany => write!(f, "elias-fano: more values than declared"),
+            EfError::TooFew { pushed, expected } => {
+                write!(f, "elias-fano: {pushed} values pushed, {expected} declared")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EfError {}
+
+/// A monotone (non-decreasing) sequence of `u64`, Elias–Fano compressed,
+/// with O(1) `get`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EliasFano {
+    len: usize,
+    universe: u64,
+    low_bits: u32,
+    /// Packed `low_bits`-bit values, LSB-first within each word; one pad
+    /// word so the straddling read in `get_low` never goes out of bounds.
+    lows: Vec<u64>,
+    /// Upper-bits unary vector: bit `(v_i >> low_bits) + i` is set.
+    highs: Vec<u64>,
+    /// Bit position (in `highs`) of every `SELECT_QUANTUM`-th set bit.
+    select_samples: Vec<u64>,
+}
+
+/// Streaming builder: declare `len` and `universe` up front (both are in
+/// the v2 sidecar header), then push values in order. Memory is allocated
+/// once, proportional to the *compressed* size.
+#[derive(Debug)]
+pub struct EliasFanoBuilder {
+    ef: EliasFano,
+    pushed: usize,
+    last: u64,
+}
+
+/// `low_bits` choice: floor(log2(universe / len)) (0 when the sequence is
+/// denser than its universe).
+fn low_bits_for(universe: u64, len: usize) -> u32 {
+    if len == 0 {
+        return 0;
+    }
+    let q = universe / len as u64;
+    if q <= 1 {
+        0
+    } else {
+        63 - q.leading_zeros()
+    }
+}
+
+impl EliasFanoBuilder {
+    pub fn new(len: usize, universe: u64) -> Self {
+        let low_bits = low_bits_for(universe, len);
+        let low_words = crate::util::ceil_div(len * low_bits as usize, 64) + 1;
+        // Highest possible set bit: (universe >> low_bits) + len - 1.
+        let high_bits = (universe >> low_bits) as usize + len + 1;
+        let high_words = crate::util::ceil_div(high_bits, 64) + 1;
+        EliasFanoBuilder {
+            ef: EliasFano {
+                len,
+                universe,
+                low_bits,
+                lows: vec![0u64; low_words],
+                highs: vec![0u64; high_words],
+                select_samples: Vec::with_capacity(len / SELECT_QUANTUM + 1),
+            },
+            pushed: 0,
+            last: 0,
+        }
+    }
+
+    /// Append the next value (must be ≥ the previous and ≤ the universe).
+    pub fn push(&mut self, value: u64) -> Result<(), EfError> {
+        if self.pushed >= self.ef.len {
+            return Err(EfError::TooMany);
+        }
+        if value < self.last {
+            return Err(EfError::NonMonotone { index: self.pushed });
+        }
+        if value > self.ef.universe {
+            return Err(EfError::AboveUniverse { index: self.pushed });
+        }
+        let i = self.pushed;
+        let l = self.ef.low_bits;
+        if l > 0 {
+            let low = value & ((1u64 << l) - 1);
+            let bitpos = i * l as usize;
+            let (word, off) = (bitpos / 64, (bitpos % 64) as u32);
+            self.ef.lows[word] |= low << off;
+            if off + l > 64 {
+                self.ef.lows[word + 1] |= low >> (64 - off);
+            }
+        }
+        let pos = (value >> l) as usize + i;
+        self.ef.highs[pos / 64] |= 1u64 << (pos % 64);
+        if i % SELECT_QUANTUM == 0 {
+            self.ef.select_samples.push(pos as u64);
+        }
+        self.pushed = i + 1;
+        self.last = value;
+        Ok(())
+    }
+
+    pub fn finish(self) -> Result<EliasFano, EfError> {
+        if self.pushed != self.ef.len {
+            return Err(EfError::TooFew { pushed: self.pushed, expected: self.ef.len });
+        }
+        Ok(self.ef)
+    }
+}
+
+impl EliasFano {
+    /// Compress a pre-materialized monotone slice (tests, the v1 sidecar
+    /// compatibility path, and conversions from in-memory CSR offsets).
+    pub fn from_monotone(values: &[u64]) -> Result<Self, EfError> {
+        let universe = values.last().copied().unwrap_or(0);
+        let mut b = EliasFanoBuilder::new(values.len(), universe);
+        for &v in values {
+            b.push(v)?;
+        }
+        b.finish()
+    }
+
+    /// Number of stored values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Declared universe (upper bound of every stored value).
+    pub fn universe(&self) -> u64 {
+        self.universe
+    }
+
+    /// The i-th value. O(1) amortized. Panics if `i >= len` (like slice
+    /// indexing; all callers range-check the vertex id first).
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        assert!(i < self.len, "elias-fano index {i} out of range (len {})", self.len);
+        let high = (self.select1(i) - i) as u64;
+        (high << self.low_bits) | self.get_low(i)
+    }
+
+    #[inline]
+    fn get_low(&self, i: usize) -> u64 {
+        let l = self.low_bits;
+        if l == 0 {
+            return 0;
+        }
+        let bitpos = i * l as usize;
+        let (word, off) = (bitpos / 64, (bitpos % 64) as u32);
+        let mut v = self.lows[word] >> off;
+        if off + l > 64 {
+            v |= self.lows[word + 1] << (64 - off);
+        }
+        v & ((1u64 << l) - 1)
+    }
+
+    /// Bit position in `highs` of the i-th set bit.
+    #[inline]
+    fn select1(&self, i: usize) -> usize {
+        let sample = self.select_samples[i / SELECT_QUANTUM] as usize;
+        // Ones still to skip; the sampled bit itself is the 0th.
+        let mut remaining = i % SELECT_QUANTUM;
+        let mut word_idx = sample / 64;
+        let mut word = self.highs[word_idx] & (u64::MAX << (sample % 64));
+        loop {
+            let ones = word.count_ones() as usize;
+            if remaining < ones {
+                let mut w = word;
+                for _ in 0..remaining {
+                    w &= w - 1; // clear lowest set bit
+                }
+                return word_idx * 64 + w.trailing_zeros() as usize;
+            }
+            remaining -= ones;
+            word_idx += 1;
+            word = self.highs[word_idx];
+        }
+    }
+
+    /// First index in `0..=len` where `pred(get(index))` is false, given
+    /// `pred` holds on a prefix (the `slice::partition_point` contract).
+    /// O(log n) `get`s — used for edge→vertex and bit→vertex searches.
+    pub fn partition_point(&self, pred: impl Fn(u64) -> bool) -> usize {
+        let mut lo = 0usize;
+        let mut hi = self.len;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pred(self.get(mid)) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Heap footprint of the compressed structure in bytes.
+    pub fn size_bytes(&self) -> usize {
+        (self.lows.len() + self.highs.len() + self.select_samples.len()) * 8
+            + std::mem::size_of::<Self>()
+    }
+
+    /// Footprint of the same sequence as a plain `Vec<u64>`.
+    pub fn plain_size_bytes(&self) -> usize {
+        self.len * 8
+    }
+
+    /// Materialize `[start, end)` as a plain vector in one linear pass:
+    /// a single select for the first element, then a sequential walk of
+    /// the high-bits words (independent `get`s would re-scan the same
+    /// words from the nearest sample for every element).
+    pub fn to_vec_range(&self, start: usize, end: usize) -> Vec<u64> {
+        assert!(start <= end && end <= self.len, "bad range {start}..{end} (len {})", self.len);
+        let mut out = Vec::with_capacity(end - start);
+        if start == end {
+            return out;
+        }
+        let first = self.select1(start);
+        let mut word_idx = first / 64;
+        let mut word = self.highs[word_idx] & (u64::MAX << (first % 64));
+        for i in start..end {
+            while word == 0 {
+                word_idx += 1;
+                word = self.highs[word_idx];
+            }
+            let bit = word_idx * 64 + word.trailing_zeros() as usize;
+            word &= word - 1; // consume the i-th set bit
+            out.push((((bit - i) as u64) << self.low_bits) | self.get_low(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn check_equals(values: &[u64]) {
+        let ef = EliasFano::from_monotone(values).expect("build");
+        assert_eq!(ef.len(), values.len());
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(ef.get(i), v, "index {i}");
+        }
+    }
+
+    #[test]
+    fn small_sequences_roundtrip() {
+        check_equals(&[0]);
+        check_equals(&[7]);
+        check_equals(&[0, 0, 0, 0]);
+        check_equals(&[0, 1, 2, 3, 4, 5]);
+        check_equals(&[0, 0, 5, 5, 5, 1000]);
+        check_equals(&[u64::MAX >> 2]);
+        check_equals(&(0..1000).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_monotone_roundtrip_vs_vec_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(0xEF);
+        for case in 0..30 {
+            let n = 1 + rng.next_below(3000) as usize;
+            let max_gap = 1 << rng.next_below(20);
+            let mut acc = 0u64;
+            let values: Vec<u64> = (0..n)
+                .map(|_| {
+                    acc += rng.next_below(max_gap);
+                    acc
+                })
+                .collect();
+            let ef = EliasFano::from_monotone(&values).expect("build");
+            for (i, &v) in values.iter().enumerate() {
+                assert_eq!(ef.get(i), v, "case {case} index {i}");
+            }
+            // Linear-scan materialization agrees with per-element access.
+            let a = rng.next_below(n as u64) as usize;
+            let b = a + rng.next_below((n - a) as u64 + 1) as usize;
+            assert_eq!(ef.to_vec_range(a, b), values[a..b].to_vec(), "case {case} {a}..{b}");
+            // partition_point agrees with the slice implementation.
+            for _ in 0..20 {
+                let probe = rng.next_below(values.last().unwrap() + 2);
+                assert_eq!(
+                    ef.partition_point(|v| v < probe),
+                    values.partition_point(|&v| v < probe),
+                    "case {case} probe {probe} (<)"
+                );
+                assert_eq!(
+                    ef.partition_point(|v| v <= probe),
+                    values.partition_point(|&v| v <= probe),
+                    "case {case} probe {probe} (<=)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_extremes() {
+        // Dense: universe == len (every value distinct by 1).
+        let dense: Vec<u64> = (0..5000u64).collect();
+        check_equals(&dense);
+        // Sparse: few values, huge universe.
+        check_equals(&[0, 1 << 40, (1 << 40) + 1, 1 << 62]);
+        // Constant plateau crossing many sample quanta.
+        let plateau: Vec<u64> = vec![42; 1000];
+        check_equals(&plateau);
+    }
+
+    #[test]
+    fn builder_validates_input() {
+        let mut b = EliasFanoBuilder::new(3, 100);
+        b.push(10).unwrap();
+        assert_eq!(b.push(5), Err(EfError::NonMonotone { index: 1 }));
+        b.push(10).unwrap();
+        assert_eq!(b.push(101), Err(EfError::AboveUniverse { index: 2 }));
+        b.push(100).unwrap();
+        assert_eq!(b.push(100), Err(EfError::TooMany));
+        let ef = b.finish().unwrap();
+        assert_eq!((ef.get(0), ef.get(1), ef.get(2)), (10, 10, 100));
+
+        let b2 = EliasFanoBuilder::new(4, 100);
+        assert_eq!(b2.finish(), Err(EfError::TooFew { pushed: 0, expected: 4 }));
+    }
+
+    #[test]
+    fn footprint_is_a_fraction_of_plain_vectors() {
+        // Offsets-like sequence: ~120 bits per record, 50k entries.
+        let mut acc = 0u64;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let values: Vec<u64> = (0..50_000)
+            .map(|_| {
+                acc += 40 + rng.next_below(160);
+                acc
+            })
+            .collect();
+        let ef = EliasFano::from_monotone(&values).unwrap();
+        assert!(
+            ef.size_bytes() * 100 <= ef.plain_size_bytes() * 40,
+            "EF must be ≤ 40% of plain: {} vs {}",
+            ef.size_bytes(),
+            ef.plain_size_bytes()
+        );
+    }
+
+    #[test]
+    fn empty_sequence() {
+        let ef = EliasFano::from_monotone(&[]).unwrap();
+        assert!(ef.is_empty());
+        assert_eq!(ef.partition_point(|v| v < 10), 0);
+        assert_eq!(ef.to_vec_range(0, 0), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn to_vec_range_slices() {
+        let values: Vec<u64> = (0..100).map(|i| i * i).collect();
+        let ef = EliasFano::from_monotone(&values).unwrap();
+        assert_eq!(ef.to_vec_range(10, 20), values[10..20].to_vec());
+        assert_eq!(ef.to_vec_range(0, 100), values);
+    }
+}

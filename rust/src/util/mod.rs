@@ -6,6 +6,7 @@
 
 pub mod bitstream;
 pub mod codes;
+pub mod elias_fano;
 pub mod json;
 pub mod pool;
 pub mod prefix;

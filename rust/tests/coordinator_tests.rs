@@ -306,6 +306,66 @@ fn cancellation_stops_unscheduled_blocks() {
 }
 
 #[test]
+fn poll_interval_is_dead_the_condvar_schedules() {
+    // `Options::poll_interval` is deprecated and ignored: set it to a
+    // pathological 60 s and stream many blocks through a single buffer. A
+    // poll-driven request manager would sleep ~60 s per buffer wait; the
+    // condvar-driven one finishes in milliseconds. The generous bound keeps
+    // slow CI machines from flaking while still being ~2 orders of
+    // magnitude under one poll sleep.
+    let g = generators::barabasi_albert(3000, 6, 7);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    #[allow(deprecated)]
+    let opts = Options {
+        buffers: 1,
+        buffer_edges: 1000,
+        poll_interval: std::time::Duration::from_secs(60),
+        ..Options::default()
+    };
+    let graph = open(&store, "g", opts);
+    let t0 = std::time::Instant::now();
+    let block = graph.load_whole_graph().expect("load");
+    assert_eq!(block.num_edges(), g.num_edges());
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "request manager slept on the deprecated poll_interval: took {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn decode_workers_fan_out_is_equivalent_and_accounted() {
+    let g = generators::rmat(9, 8, 43);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let mut baseline = None;
+    for decode_workers in [1usize, 4] {
+        let graph = open(
+            &store,
+            "g",
+            Options { decode_workers, buffer_edges: 1 << 13, ..Options::default() },
+        );
+        let block = graph.load_whole_graph().expect("load");
+        for v in 0..g.num_vertices() {
+            assert_eq!(
+                block.neighbors(v),
+                g.neighbors(v as VertexId),
+                "vertex {v} decode_workers={decode_workers}"
+            );
+        }
+        // The per-chunk virtual clocks were threaded through (§3 model).
+        assert!(
+            graph.decode_seconds() > 0.0,
+            "decode_workers={decode_workers} must account modeled decode time"
+        );
+        let edges = block.num_edges();
+        match baseline {
+            None => baseline = Some(edges),
+            Some(b) => assert_eq!(edges, b, "fan-out must not change results"),
+        }
+    }
+}
+
+#[test]
 fn release_restores_resources() {
     let g = generators::rmat(7, 6, 37);
     let store = store_with(&g, "g", DeviceKind::Dram);

@@ -1,0 +1,381 @@
+//! Fuzz-style robustness suite for the WebGraph decoder, mirroring
+//! webgraph-rs's `fuzz/` targets with a seeded, deterministic corpus
+//! (no external fuzzer in the offline build).
+//!
+//! Contract under test: feeding the decoder truncated, bit-flipped, or
+//! adversarially constructed streams/sidecars must return `Err` (or a
+//! well-formed wrong answer for undetectable corruption) — **never** a
+//! panic and **never** an unbounded allocation. Every case derives from a
+//! fixed seed, so failures reproduce exactly in CI.
+//!
+//! Corpus size: `TRUNCATED_GRAPH_CASES + BITFLIP_CASES +
+//! TRUNCATED_OFFSETS_CASES + OFFSETS_BITFLIP_CASES + adversarial
+//! constructions` ≥ 200 (asserted below).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use paragrapher::formats::webgraph::{self, WgMeta, WgOffsets, WgParams};
+use paragrapher::graph::{generators, CsrGraph};
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
+use paragrapher::util::bitstream::BitWriter;
+use paragrapher::util::codes::{int_to_nat, write_gamma, write_zeta};
+use paragrapher::util::rng::Xoshiro256;
+
+const TRUNCATED_GRAPH_CASES: usize = 60;
+const BITFLIP_CASES: usize = 120;
+const TRUNCATED_OFFSETS_CASES: usize = 30;
+const OFFSETS_BITFLIP_CASES: usize = 30;
+const ADVERSARIAL_CASES: usize = 11;
+
+#[test]
+fn corpus_meets_the_size_bar() {
+    assert!(
+        TRUNCATED_GRAPH_CASES
+            + BITFLIP_CASES
+            + TRUNCATED_OFFSETS_CASES
+            + OFFSETS_BITFLIP_CASES
+            + ADVERSARIAL_CASES
+            >= 200
+    );
+}
+
+/// Seeded corpus graphs: three shapes that exercise intervals, references
+/// and residuals differently.
+fn corpus_graph(case: usize) -> CsrGraph {
+    match case % 3 {
+        0 => generators::barabasi_albert(250, 6, case as u64),
+        1 => generators::similarity_blocks(240, 24, 8, case as u64),
+        _ => generators::road_lattice(16, 16, 10, case as u64),
+    }
+}
+
+/// Truncating the `.graph` stream by at least one byte must make a
+/// full-range decode fail: the final records' bits are gone, and the
+/// decoder reads exactly the recorded bits (never padding).
+#[test]
+fn truncated_graph_stream_always_errors() {
+    for case in 0..TRUNCATED_GRAPH_CASES {
+        let g = corpus_graph(case);
+        let mut rng = Xoshiro256::seed_from_u64(0x7341C + case as u64);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in webgraph::serialize(&g, "g") {
+            if name.ends_with(".graph") {
+                // Keep 0..=85% of the bytes (at least one byte dropped).
+                let keep = (data.len() as u64 * rng.next_below(86) / 100) as usize;
+                data.truncate(keep);
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = webgraph::read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec =
+            webgraph::Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct)
+                .unwrap();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            dec.decode_range(0, meta.num_vertices, &acct)
+        }));
+        let outcome = result.unwrap_or_else(|_| panic!("case {case}: decode panicked"));
+        assert!(outcome.is_err(), "case {case}: truncated stream must be an error");
+    }
+}
+
+/// Bit flips anywhere in the stream: never a panic, and any `Ok` result is
+/// structurally well-formed (the corruption decoded to *some* valid shape).
+#[test]
+fn bitflipped_graph_stream_never_panics() {
+    for case in 0..BITFLIP_CASES {
+        let g = corpus_graph(case);
+        let mut rng = Xoshiro256::seed_from_u64(0xF11B + case as u64);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in webgraph::serialize(&g, "g") {
+            if name.ends_with(".graph") && !data.is_empty() {
+                for _ in 0..1 + rng.next_below(8) {
+                    let byte = rng.next_below(data.len() as u64) as usize;
+                    data[byte] ^= 1 << rng.next_below(8);
+                }
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = webgraph::read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec =
+            webgraph::Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct)
+                .unwrap();
+        let n = meta.num_vertices;
+        let probe = rng.next_below(n as u64) as usize;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let range = dec.decode_range(0, n, &acct);
+            let one = dec.decode_vertex(probe, &acct);
+            (range, one)
+        }));
+        let (range, one) = outcome.unwrap_or_else(|_| panic!("case {case}: panicked"));
+        if let Ok(block) = range {
+            assert_eq!(block.num_vertices(), n, "case {case}");
+            assert_eq!(block.offsets.len(), n + 1, "case {case}");
+            assert_eq!(block.edges.len() as u64, block.num_edges(), "case {case}");
+        }
+        if let Ok(list) = one {
+            assert!(list.len() <= n, "case {case}: degree bounded by n");
+        }
+    }
+}
+
+/// Truncating the offsets sidecar must fail `read_offsets` cleanly.
+#[test]
+fn truncated_offsets_sidecar_always_errors() {
+    for case in 0..TRUNCATED_OFFSETS_CASES {
+        let g = corpus_graph(case);
+        let mut rng = Xoshiro256::seed_from_u64(0x0FF5 + case as u64);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in webgraph::serialize(&g, "g") {
+            if name.ends_with(".offsets") {
+                // Anywhere from an empty file to one byte short; includes
+                // cuts inside the 32-byte v2 header.
+                let keep = rng.next_below(data.len() as u64) as usize;
+                data.truncate(keep);
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct)
+        }));
+        let result = outcome.unwrap_or_else(|_| panic!("case {case}: read_offsets panicked"));
+        assert!(result.is_err(), "case {case}: truncated sidecar must be an error");
+    }
+}
+
+/// Bit-flipped offsets sidecar (including flips that garble the v2 magic
+/// into a v1-looking header with a nonsense vertex count): no panics, no
+/// OOM-sized allocations — `Err` or a well-formed wrong index.
+#[test]
+fn bitflipped_offsets_sidecar_never_panics() {
+    for case in 0..OFFSETS_BITFLIP_CASES {
+        let g = corpus_graph(case);
+        let mut rng = Xoshiro256::seed_from_u64(0x0FFB + case as u64);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in webgraph::serialize(&g, "g") {
+            if name.ends_with(".offsets") && !data.is_empty() {
+                for _ in 0..1 + rng.next_below(6) {
+                    let byte = rng.next_below(data.len() as u64) as usize;
+                    data[byte] ^= 1 << rng.next_below(8);
+                }
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct).map(|_| ())
+        }));
+        assert!(outcome.is_ok(), "case {case}: read_offsets panicked");
+    }
+}
+
+/// Properties/sidecar disagreement must fail at open, not panic inside a
+/// decode (out-of-bounds offsets lookup).
+#[test]
+fn inconsistent_properties_rejected_at_open() {
+    let g = generators::barabasi_albert(100, 4, 1);
+    let store = SimStore::new(DeviceKind::Dram);
+    for (name, data) in webgraph::serialize(&g, "g") {
+        let data = if name.ends_with(".properties") {
+            b"version=1\nnodes=100000\narcs=400\n".to_vec()
+        } else {
+            data
+        };
+        store.put(&name, data);
+    }
+    let acct = IoAccount::new();
+    let meta = webgraph::read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+    let offs = webgraph::read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+    assert!(
+        webgraph::Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).is_err()
+    );
+    assert!(
+        paragrapher::formats::WebGraphSource::open(
+            &store,
+            "g",
+            paragrapher::formats::SourceConfig::default()
+        )
+        .is_err()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial hand-constructed streams: each targets one decoder validation
+// and must fail *quickly* — a 2^40 length read from a γ/ζ code must never
+// become a 2^40-element reserve. (ADVERSARIAL_CASES tracks this list.)
+// ---------------------------------------------------------------------------
+
+/// Decoder fixture over a hand-built bit stream: open a store containing
+/// only the raw stream plus synthetic sidecar vectors, then random-access
+/// decode `vertex`.
+fn adversarial_decode(
+    stream: BitWriter,
+    n: usize,
+    bit_offsets: Vec<u64>,
+    edge_offsets: Vec<u64>,
+    vertex: usize,
+) -> anyhow::Result<Vec<u32>> {
+    let bytes = stream.into_bytes();
+    let store = SimStore::new(DeviceKind::Dram);
+    store.put("adv.graph", bytes);
+    let meta = WgMeta {
+        num_vertices: n,
+        num_edges: *edge_offsets.last().unwrap(),
+        params: WgParams::default(),
+        weighted: false,
+    };
+    let offsets = WgOffsets::from_vecs(&bit_offsets, &edge_offsets)?;
+    let acct = IoAccount::new();
+    let dec = webgraph::Decoder::open(&store, "adv", &meta, &offsets, ReadCtx::default(), &acct)?;
+    dec.decode_vertex(vertex, &acct)
+}
+
+/// All records at bit 0; record length = whole stream for every vertex.
+fn flat_offsets(n: usize, total_bits: u64) -> Vec<u64> {
+    let mut v = vec![0u64];
+    v.extend(std::iter::repeat(total_bits).take(n));
+    v
+}
+
+#[test]
+fn adversarial_streams_error_fast_without_allocating() {
+    let n = 4usize;
+
+    // 1. Degree far beyond the vertex count.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 1 << 40);
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0; n + 1], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "huge degree");
+
+    // 2. Interval length bomb (degree stays plausible so the range check,
+    // not the degree guard, is what fires).
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 3); // degree
+    write_gamma(&mut w, 0); // no reference
+    write_gamma(&mut w, 1); // one interval
+    write_gamma(&mut w, int_to_nat(0)); // left = v
+    write_gamma(&mut w, 1 << 40); // len - min_interval_len
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 3, 3, 3, 3], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "interval bomb");
+
+    // 3. Interval count above the degree.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 2);
+    write_gamma(&mut w, 0);
+    write_gamma(&mut w, 1 << 30);
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 2, 2, 2, 2], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "interval count bomb");
+
+    // 4. Copy-block count bomb (vertex 1 referencing vertex 0).
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 2); // degree of vertex 1
+    write_gamma(&mut w, 1); // reference v0
+    write_gamma(&mut w, 1 << 30); // block count
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, vec![0, 0, bits, bits, bits], vec![0, 2, 4, 4, 4], 1)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "block count bomb");
+
+    // 5. Copy blocks overrun the reference list.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 2);
+    write_gamma(&mut w, 1);
+    write_gamma(&mut w, 1); // one block
+    write_gamma(&mut w, 10); // copy run of 10 > ref degree 2
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, vec![0, 0, bits, bits, bits], vec![0, 2, 4, 4, 4], 1)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "copy overrun");
+
+    // 6. Stream ends mid-residuals.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 3);
+    write_gamma(&mut w, 0);
+    write_gamma(&mut w, 0); // no intervals; 3 residuals expected, none present
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 3, 3, 3, 3], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "residual exhaustion");
+
+    // 7. ζ shell bomb (h·k + k > 63).
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 1);
+    write_gamma(&mut w, 0);
+    write_gamma(&mut w, 0);
+    w.write_unary(40); // ζ3 h = 40 -> 123-bit shell
+    w.write_bits(0, 16);
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 1, 1, 1, 1], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "zeta bomb");
+
+    // 8. Reference pointing before vertex 0.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 1);
+    write_gamma(&mut w, 5); // reference 5 at vertex 0
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 1, 1, 1, 1], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "reference underflow");
+
+    // 9. Residual far outside the vertex range.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 1);
+    write_gamma(&mut w, 0);
+    write_gamma(&mut w, 0);
+    write_zeta(&mut w, int_to_nat(2000), 3); // residual = v + 2000 >= n
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, flat_offsets(n, bits), vec![0, 1, 1, 1, 1], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "residual out of range");
+
+    // 10. Degree accounting underflow: whole-list copy larger than degree.
+    let mut w = BitWriter::new();
+    write_gamma(&mut w, 2); // degree 2
+    write_gamma(&mut w, 1); // reference v0 (degree 5 per sidecar)
+    write_gamma(&mut w, 0); // zero blocks -> copy everything (5 > 2)
+    write_gamma(&mut w, 0); // no intervals
+    let bits = w.bit_len();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, vec![0, 0, bits, bits, bits], vec![0, 5, 7, 7, 7], 1)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "degree accounting underflow");
+
+    // 11. Empty stream, non-empty offsets.
+    let w = BitWriter::new();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        adversarial_decode(w, n, vec![0, 9, 9, 9, 9], vec![0, 1, 1, 1, 1], 0)
+    }))
+    .expect("no panic");
+    assert!(r.is_err(), "empty stream");
+}

@@ -1,0 +1,414 @@
+#!/usr/bin/env python3
+"""Generator for the golden WebGraph fixtures (tiny.graph / tiny.offsets /
+tiny.properties).
+
+This is a line-by-line port of the Rust encoder (`formats/webgraph/encode.rs`)
+and serializer (`formats/webgraph/mod.rs::serialize_with`) for the fixed tiny
+graph in `golden_format_tests.rs`. The fixture bytes are checked in; the test
+re-encodes the same graph and byte-compares, so any silent format drift —
+which would invalidate cross-PR benchmark comparisons — fails CI.
+
+Run from the repo root:  python3 rust/tests/golden/gen_golden.py
+It also runs a port of the decoder and asserts the fixture round-trips.
+"""
+
+import os
+
+# ---- WgParams::default() ----
+WINDOW = 7
+MAX_REF_CHAIN = 3
+ZETA_K = 3
+MIN_INTERVAL_LEN = 3
+
+# ---- The tiny graph (keep in sync with golden_format_tests.rs) ----
+ADJ = [
+    [1, 2, 3, 4],            # 0: one interval
+    [0, 2, 4, 6],            # 1: residuals only
+    [1, 3, 4],               # 2: partial copy of a window vertex
+    [5],                     # 3: single residual
+    [],                      # 4: empty list (degree-0 record)
+    [0, 2, 3, 4, 7],         # 5: interval + residuals
+    [0, 2, 3, 4, 7],         # 6: identical to 5 -> whole-list reference
+    [0, 1, 2, 3, 4, 5, 6],   # 7: one long interval
+]
+N = len(ADJ)
+M = sum(len(a) for a in ADJ)
+
+
+class BitWriter:
+    def __init__(self):
+        self.bits = []
+
+    def write_bits(self, value, n):
+        value &= (1 << n) - 1 if n < 64 else (1 << 64) - 1
+        for i in range(n - 1, -1, -1):
+            self.bits.append((value >> i) & 1)
+
+    def write_unary(self, n):
+        self.bits.extend([0] * n)
+        self.bits.append(1)
+
+    def bit_len(self):
+        return len(self.bits)
+
+    def into_bytes(self):
+        out = bytearray()
+        for i in range(0, len(self.bits), 8):
+            chunk = self.bits[i:i + 8]
+            b = 0
+            for k, bit in enumerate(chunk):
+                b |= bit << (7 - k)
+            out.append(b)
+        return bytes(out)
+
+
+def bit_width(x):
+    return x.bit_length()
+
+
+def int_to_nat(v):
+    return (v << 1) if v >= 0 else ((-v) << 1) - 1
+
+
+def write_gamma(w, x):
+    x1 = x + 1
+    width = bit_width(x1)
+    w.write_unary(width - 1)
+    if width > 1:
+        w.write_bits(x1, width - 1)
+
+
+def gamma_len(x):
+    return 2 * bit_width(x + 1) - 1
+
+
+def write_minimal_binary(w, x, maxv, _bits_hint):
+    if maxv <= 1:
+        return
+    bits = max(bit_width(maxv - 1), 1)
+    threshold = (1 << bits) - maxv
+    if x < threshold:
+        w.write_bits(x, bits - 1)
+    else:
+        w.write_bits(x + threshold, bits)
+
+
+def write_zeta(w, x, k):
+    x1 = x + 1
+    msb = bit_width(x1) - 1
+    h = msb // k
+    w.write_unary(h)
+    left = 1 << (h * k)
+    maxv = (left << k) - left
+    write_minimal_binary(w, x1 - left, maxv, h * k + k)
+
+
+def zeta_len(x, k):
+    w = BitWriter()
+    write_zeta(w, x, k)
+    return w.bit_len()
+
+
+class EncodedAdj:
+    def __init__(self):
+        self.blocks = []
+        self.has_reference = False
+        self.intervals = []
+        self.residual_list = []
+        self.vertex = 0
+        self.bits = 0
+
+    def write(self, w):
+        if self.has_reference:
+            write_gamma(w, len(self.blocks))
+            for i, b in enumerate(self.blocks):
+                write_gamma(w, b if i == 0 else b - 1)
+        write_gamma(w, len(self.intervals))
+        prev_right = self.vertex
+        for i, (left, length) in enumerate(self.intervals):
+            if i == 0:
+                write_gamma(w, int_to_nat(left - self.vertex))
+            else:
+                write_gamma(w, left - prev_right - 2)
+            write_gamma(w, length - MIN_INTERVAL_LEN)
+            prev_right = left + length - 1
+        prev = -1
+        for i, res in enumerate(self.residual_list):
+            if i == 0:
+                write_zeta(w, int_to_nat(res - self.vertex), ZETA_K)
+            else:
+                write_zeta(w, res - prev - 1, ZETA_K)
+            prev = res
+
+
+def encode_adjacency(vertex, lst, ref_list):
+    has_reference = len(ref_list) > 0
+    enc = EncodedAdj()
+    enc.vertex = vertex
+    enc.has_reference = has_reference
+
+    copied_mask = [False] * len(ref_list)
+    copied = []
+    if has_reference:
+        i = 0
+        for j, r in enumerate(ref_list):
+            while i < len(lst) and lst[i] < r:
+                i += 1
+            if i < len(lst) and lst[i] == r:
+                copied_mask[j] = True
+                copied.append(r)
+                i += 1
+    blocks = []
+    if has_reference:
+        run_is_copy = True
+        run_len = 0
+        for c in copied_mask:
+            if c == run_is_copy:
+                run_len += 1
+            else:
+                blocks.append(run_len)
+                run_is_copy = not run_is_copy
+                run_len = 1
+        blocks.append(run_len)
+        blocks.pop()  # trailing run is implicit
+    enc.blocks = blocks
+
+    rest = []
+    ci = 0
+    for x in lst:
+        if ci < len(copied) and copied[ci] == x:
+            ci += 1
+        else:
+            rest.append(x)
+
+    min_len = max(MIN_INTERVAL_LEN, 2)
+    intervals = []
+    residual_list = []
+    i = 0
+    while i < len(rest):
+        j = i + 1
+        while j < len(rest) and rest[j] == rest[j - 1] + 1:
+            j += 1
+        if j - i >= min_len:
+            intervals.append((rest[i], j - i))
+        else:
+            residual_list.extend(rest[i:j])
+        i = j
+    enc.intervals = intervals
+    enc.residual_list = residual_list
+
+    bits = 0
+    if has_reference:
+        bits += gamma_len(len(blocks))
+        for i, b in enumerate(blocks):
+            bits += gamma_len(b if i == 0 else b - 1)
+    bits += gamma_len(len(intervals))
+    prev_right = vertex
+    for i, (left, length) in enumerate(intervals):
+        if i == 0:
+            bits += gamma_len(int_to_nat(left - vertex))
+        else:
+            bits += gamma_len(left - prev_right - 2)
+        bits += gamma_len(length - MIN_INTERVAL_LEN)
+        prev_right = left + length - 1
+    prev = -1
+    for i, res in enumerate(residual_list):
+        if i == 0:
+            bits += zeta_len(int_to_nat(res - vertex), ZETA_K)
+        else:
+            bits += zeta_len(res - prev - 1, ZETA_K)
+        prev = res
+    enc.bits = bits
+    enc.copied = len(copied)
+    return enc
+
+
+def compress():
+    w = BitWriter()
+    bit_offsets = []
+    chain_depth = [0] * N
+    for v in range(N):
+        bit_offsets.append(w.bit_len())
+        lst = ADJ[v]
+        write_gamma(w, len(lst))
+        if not lst:
+            continue
+        best = None  # (r, enc)
+        no_ref = encode_adjacency(v, lst, [])
+        for r in range(1, min(WINDOW, v) + 1):
+            u = v - r
+            if chain_depth[u] + 1 > MAX_REF_CHAIN:
+                continue
+            ref_list = ADJ[u]
+            if not ref_list:
+                continue
+            enc = encode_adjacency(v, lst, ref_list)
+            if best is None or enc.bits < best[1].bits:
+                best = (r, enc)
+        use_ref = best is not None and best[1].bits < no_ref.bits
+        if use_ref:
+            r, enc = best
+            chain_depth[v] = chain_depth[v - r] + 1
+        else:
+            r, enc = 0, no_ref
+        write_gamma(w, r)
+        enc.write(w)
+    bit_offsets.append(w.bit_len())
+    return w.into_bytes(), bit_offsets
+
+
+def serialize():
+    stream, bit_offsets = compress()
+    total_bits = bit_offsets[-1]
+
+    offsets = bytearray()
+    offsets += b"WGOFF2\xF0\xFF"  # OFFSETS_MAGIC_V2
+    offsets += N.to_bytes(8, "little")
+    offsets += M.to_bytes(8, "little")
+    offsets += total_bits.to_bytes(8, "little")
+    w = BitWriter()
+    prev = 0
+    for b in bit_offsets:
+        write_gamma(w, b - prev)
+        prev = b
+    edge_offsets = [0]
+    for a in ADJ:
+        edge_offsets.append(edge_offsets[-1] + len(a))
+    prev = 0
+    for e in edge_offsets:
+        write_gamma(w, e - prev)
+        prev = e
+    offsets += w.into_bytes()
+
+    properties = (
+        f"version=1\nnodes={N}\narcs={M}\nwindow={WINDOW}\n"
+        f"maxrefchain={MAX_REF_CHAIN}\nzetak={ZETA_K}\n"
+        f"minintervallength={MIN_INTERVAL_LEN}\nweighted=false\n"
+    ).encode()
+    return bytes(stream), bytes(offsets), properties
+
+
+# ---- decoder port (sanity: fixture must round-trip) ----
+class BitReader:
+    def __init__(self, data, bitpos=0):
+        self.data = data
+        self.pos = bitpos
+
+    def read_bit(self):
+        byte = self.data[self.pos // 8]
+        bit = (byte >> (7 - self.pos % 8)) & 1
+        self.pos += 1
+        return bit
+
+    def read_bits(self, n):
+        v = 0
+        for _ in range(n):
+            v = (v << 1) | self.read_bit()
+        return v
+
+    def read_unary(self):
+        c = 0
+        while self.read_bit() == 0:
+            c += 1
+        return c
+
+
+def read_gamma(r):
+    width = r.read_unary() + 1
+    if width == 1:
+        return 0
+    return ((1 << (width - 1)) | r.read_bits(width - 1)) - 1
+
+
+def read_minimal_binary(r, maxv):
+    if maxv <= 1:
+        return 0
+    bits = max(bit_width(maxv - 1), 1)
+    threshold = (1 << bits) - maxv
+    hi = r.read_bits(bits - 1)
+    if hi < threshold:
+        return hi
+    low = r.read_bits(1)
+    return ((hi << 1) | low) - threshold
+
+
+def read_zeta(r, k):
+    h = r.read_unary()
+    left = 1 << (h * k)
+    maxv = (left << k) - left
+    return left + read_minimal_binary(r, maxv) - 1
+
+
+def nat_to_int(n):
+    return (n >> 1) if n % 2 == 0 else -((n + 1) >> 1)
+
+
+def decode_vertex(stream, bit_offsets, v):
+    r = BitReader(stream, bit_offsets[v])
+    degree = read_gamma(r)
+    if degree == 0:
+        return []
+    reference = read_gamma(r)
+    copied = []
+    if reference > 0:
+        ref_list = decode_vertex(stream, bit_offsets, v - reference)
+        block_count = read_gamma(r)
+        blocks = []
+        for i in range(block_count):
+            raw = read_gamma(r)
+            blocks.append(raw if i == 0 else raw + 1)
+        pos = 0
+        is_copy = True
+        for length in blocks:
+            if is_copy:
+                copied.extend(ref_list[pos:pos + length])
+            pos += length
+            is_copy = not is_copy
+        if is_copy and pos < len(ref_list):
+            copied.extend(ref_list[pos:])
+    interval_count = read_gamma(r)
+    intervals = []
+    prev_right = v
+    for i in range(interval_count):
+        if i == 0:
+            left = v + nat_to_int(read_gamma(r))
+        else:
+            left = prev_right + 2 + read_gamma(r)
+        length = read_gamma(r) + MIN_INTERVAL_LEN
+        intervals.extend(range(left, left + length))
+        prev_right = left + length - 1
+    residuals = []
+    count = degree - len(copied) - len(intervals)
+    prev = None
+    for i in range(count):
+        if i == 0:
+            prev = v + nat_to_int(read_zeta(r, ZETA_K))
+        else:
+            prev = prev + 1 + read_zeta(r, ZETA_K)
+        residuals.append(prev)
+    out = sorted(copied + intervals + residuals)
+    assert len(out) == degree, f"vertex {v}: degree mismatch"
+    return out
+
+
+def main():
+    stream, offsets, properties = serialize()
+    # Round-trip sanity before writing anything.
+    _, bit_offsets = compress()
+    for v in range(N):
+        got = decode_vertex(stream, bit_offsets, v)
+        assert got == ADJ[v], f"vertex {v}: {got} != {ADJ[v]}"
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name, data in [
+        ("tiny.graph", stream),
+        ("tiny.offsets", offsets),
+        ("tiny.properties", properties),
+    ]:
+        with open(os.path.join(here, name), "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes: {data.hex()}")
+    print("round-trip OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+//! Golden-file format tests: a tiny graph's exact `.graph` / `.offsets` /
+//! `.properties` bytes are checked in under `golden/` (generated and
+//! cross-verified by `golden/gen_golden.py`), and re-encoding the same
+//! graph must byte-compare equal. Silent format drift — which would
+//! invalidate cross-PR benchmark comparisons and break on-disk
+//! compatibility — fails here instead of going unnoticed.
+//!
+//! The fixture exercises every encoder technique: an interval run
+//! (vertices 0 and 7), pure residuals (vertex 1), a partial copy with
+//! explicit copy/skip blocks (vertex 2), a single residual (vertex 3), an
+//! empty list (vertex 4), and a whole-list reference (vertex 6 → 5).
+
+use std::sync::Arc;
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::CsrGraph;
+use paragrapher::storage::sim::ReadCtx;
+use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
+
+const GOLDEN_GRAPH: &[u8] = include_bytes!("golden/tiny.graph");
+const GOLDEN_OFFSETS: &[u8] = include_bytes!("golden/tiny.offsets");
+const GOLDEN_PROPERTIES: &[u8] = include_bytes!("golden/tiny.properties");
+
+/// Keep in sync with `ADJ` in `golden/gen_golden.py`.
+fn tiny_graph() -> CsrGraph {
+    let adj: [&[u32]; 8] = [
+        &[1, 2, 3, 4],
+        &[0, 2, 4, 6],
+        &[1, 3, 4],
+        &[5],
+        &[],
+        &[0, 2, 3, 4, 7],
+        &[0, 2, 3, 4, 7],
+        &[0, 1, 2, 3, 4, 5, 6],
+    ];
+    let mut edges = Vec::new();
+    for (v, list) in adj.iter().enumerate() {
+        for &d in list.iter() {
+            edges.push((v as u32, d));
+        }
+    }
+    CsrGraph::from_edges(8, &edges)
+}
+
+fn fixture_files() -> [(&'static str, &'static [u8]); 3] {
+    [
+        ("tiny.graph", GOLDEN_GRAPH),
+        ("tiny.offsets", GOLDEN_OFFSETS),
+        ("tiny.properties", GOLDEN_PROPERTIES),
+    ]
+}
+
+#[test]
+fn encoder_output_matches_golden_bytes() {
+    let g = tiny_graph();
+    let files = webgraph::serialize(&g, "tiny");
+    assert_eq!(files.len(), 3);
+    for (name, data) in &files {
+        let expected = fixture_files()
+            .iter()
+            .find(|(n, _)| name.ends_with(n))
+            .unwrap_or_else(|| panic!("unexpected file {name}"))
+            .1;
+        assert_eq!(
+            data.as_slice(),
+            expected,
+            "{name} drifted from the golden fixture.\n  got:      {}\n  expected: {}\n\
+             If the change is intentional, regenerate with \
+             `python3 rust/tests/golden/gen_golden.py` and say so in the PR.",
+            hex(data),
+            hex(expected)
+        );
+    }
+}
+
+#[test]
+fn golden_fixture_decodes_to_the_tiny_graph() {
+    let g = tiny_graph();
+    let store = SimStore::new(DeviceKind::Dram);
+    for (name, data) in fixture_files() {
+        store.put(name, data.to_vec());
+    }
+    let accounts: Vec<IoAccount> = (0..2).map(|_| IoAccount::new()).collect();
+    let loaded = webgraph::load_full(&store, "tiny", ReadCtx::default(), &accounts).unwrap();
+    assert_eq!(loaded, g, "fixture bytes must decode to the reference graph");
+
+    // Per-vertex random access over the fixture too.
+    let acct = IoAccount::new();
+    let meta = webgraph::read_meta(&store, "tiny", ReadCtx::default(), &acct).unwrap();
+    let offs = webgraph::read_offsets(&store, "tiny", ReadCtx::default(), &acct).unwrap();
+    let dec =
+        webgraph::Decoder::open(&store, "tiny", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+    for v in 0..8usize {
+        assert_eq!(dec.decode_vertex(v, &acct).unwrap(), g.neighbors(v as u32), "vertex {v}");
+    }
+}
+
+#[test]
+fn reencoding_the_decoded_fixture_is_idempotent() {
+    // decode(fixture) -> encode must reproduce the fixture exactly: catches
+    // drift in either direction (decoder *or* encoder).
+    let store = SimStore::new(DeviceKind::Dram);
+    for (name, data) in fixture_files() {
+        store.put(name, data.to_vec());
+    }
+    let accounts = [IoAccount::new()];
+    let decoded = webgraph::load_full(&store, "tiny", ReadCtx::default(), &accounts).unwrap();
+    for (name, data) in webgraph::serialize(&decoded, "tiny") {
+        let expected = fixture_files()
+            .iter()
+            .find(|(n, _)| name.ends_with(n))
+            .unwrap()
+            .1;
+        assert_eq!(data.as_slice(), expected, "{name} not idempotent");
+    }
+}
+
+#[test]
+fn golden_fixture_loads_through_the_coordinator() {
+    let g = tiny_graph();
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in fixture_files() {
+        store.put(name, data.to_vec());
+    }
+    let graph = Paragrapher::init()
+        .open_graph(Arc::clone(&store), "tiny", GraphType::CsxWg400, Options::default())
+        .unwrap();
+    let block = graph.csx_get_subgraph_sync(VertexRange::new(0, 8)).unwrap();
+    for v in 0..8usize {
+        assert_eq!(block.neighbors(v), g.neighbors(v as u32), "vertex {v}");
+    }
+    assert_eq!(graph.csx_get_offsets(0, 8).unwrap(), g.offsets);
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}

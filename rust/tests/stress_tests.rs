@@ -1,0 +1,217 @@
+//! Deterministic concurrency stress for the coordinator: seeded requester
+//! threads drive mixed `successors` / sync `decode_range` / async+cancel
+//! traffic over a deliberately tiny buffer pool, bounded by a watchdog.
+//!
+//! What it proves:
+//! * no deadlock and no lost condvar wakeups — the whole run completes
+//!   under the watchdog even though every request contends for 2 buffers;
+//! * per-request results equal the in-memory `CsrGraph` oracle;
+//! * no buffer leaks — after the traffic drains, every buffer is back in
+//!   C_IDLE (a block stuck in J_READ_COMPLETED would wedge the pool).
+//!
+//! All randomness is seeded per thread, so the request *content* is
+//! deterministic; only the interleaving varies run to run (which is the
+//! point of a stress test).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, PgGraph, VertexRange};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::{generators, CsrGraph, VertexId};
+use paragrapher::storage::{DeviceKind, SimStore};
+use paragrapher::util::rng::Xoshiro256;
+
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+/// Run `f` on a helper thread; panic (failing the test) if it does not
+/// finish under `timeout` — the deadlock/lost-wakeup detector.
+fn with_watchdog<T: Send + 'static>(
+    timeout: Duration,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let out = f();
+        let _ = tx.send(());
+        out
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(()) => handle.join().expect("stress body panicked"),
+        Err(_) => panic!("watchdog: coordinator stress did not finish within {timeout:?}"),
+    }
+}
+
+fn open_graph(g: &CsrGraph, buffers: usize, buffer_edges: u64) -> (Arc<SimStore>, PgGraph) {
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(g, "g") {
+        store.put(&name, data);
+    }
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store),
+            "g",
+            GraphType::CsxWg400,
+            Options {
+                buffers,
+                buffer_edges,
+                decode_workers: 2,
+                source_block_vertices: 16,
+                ..Options::default()
+            },
+        )
+        .expect("open");
+    (store, graph)
+}
+
+#[test]
+fn mixed_traffic_over_two_buffers_matches_oracle() {
+    with_watchdog(WATCHDOG, || {
+        let g = Arc::new(generators::rmat(10, 8, 99)); // 1024 vertices
+        let n = g.num_vertices();
+        let (_store, graph) = open_graph(&g, 2, 256);
+        let graph = Arc::new(graph);
+        let buffers = 2;
+
+        const THREADS: u64 = 4;
+        const OPS_PER_THREAD: u64 = 30;
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let g = Arc::clone(&g);
+            let graph = Arc::clone(&graph);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(0x57E55 + t);
+                for op in 0..OPS_PER_THREAD {
+                    match rng.next_below(4) {
+                        // Random access through the decoded-block cache.
+                        0 | 1 => {
+                            let v = rng.next_below(n as u64) as usize;
+                            let got = graph.successors(v).expect("successors");
+                            assert_eq!(
+                                got,
+                                g.neighbors(v as VertexId),
+                                "thread {t} op {op}: successors({v})"
+                            );
+                        }
+                        // Blocking range decode through the buffer pipeline.
+                        2 => {
+                            let lo = rng.next_below(n as u64) as usize;
+                            let hi = (lo + 1 + rng.next_below(200) as usize).min(n);
+                            let block = graph
+                                .csx_get_subgraph_sync(VertexRange::new(lo, hi))
+                                .expect("sync subgraph");
+                            for (i, v) in (lo..hi).enumerate() {
+                                assert_eq!(
+                                    block.neighbors(i),
+                                    g.neighbors(v as VertexId),
+                                    "thread {t} op {op}: range {lo}..{hi} vertex {v}"
+                                );
+                            }
+                        }
+                        // Async request, sometimes cancelled mid-flight.
+                        _ => {
+                            let lo = rng.next_below((n / 2) as u64) as usize;
+                            let hi = (lo + 50 + rng.next_below(400) as usize).min(n);
+                            let edges = Arc::new(AtomicU64::new(0));
+                            let e2 = Arc::clone(&edges);
+                            let req = graph
+                                .csx_get_subgraph(
+                                    VertexRange::new(lo, hi),
+                                    Arc::new(move |blk| {
+                                        e2.fetch_add(blk.num_edges(), Ordering::SeqCst);
+                                    }),
+                                )
+                                .expect("async subgraph");
+                            let cancel = rng.next_below(2) == 0;
+                            if cancel {
+                                req.cancel();
+                            }
+                            req.wait(); // must terminate either way
+                            assert!(req.is_complete(), "thread {t} op {op}");
+                            assert!(!req.is_failed(), "thread {t} op {op}: {:?}", req.error());
+                            if !cancel {
+                                let expected: u64 =
+                                    (lo..hi).map(|v| g.degree(v as VertexId)).sum();
+                                assert_eq!(
+                                    edges.load(Ordering::SeqCst),
+                                    expected,
+                                    "thread {t} op {op}: edges for {lo}..{hi}"
+                                );
+                                assert_eq!(req.edges_delivered(), expected);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("requester thread panicked");
+        }
+        // All traffic drained: every buffer must be back in C_IDLE.
+        assert_eq!(graph.idle_buffers(), buffers, "buffer leaked out of C_IDLE");
+        // The random-access side kept its cache coherent under concurrency.
+        let c = graph.decoded_cache_counters();
+        assert!(c.hits + c.misses > 0);
+    });
+}
+
+#[test]
+fn blocking_requesters_saturate_a_single_buffer_pool() {
+    // 8 threads × sequential whole-range loads through ONE buffer: the
+    // request manager parks on the pool condvar for almost every block. A
+    // lost wakeup anywhere stalls this test into the watchdog.
+    with_watchdog(WATCHDOG, || {
+        let g = Arc::new(generators::barabasi_albert(600, 6, 5));
+        let n = g.num_vertices();
+        let (_store, graph) = open_graph(&g, 1, 128);
+        let graph = Arc::new(graph);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let g = Arc::clone(&g);
+            let graph = Arc::clone(&graph);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..5 {
+                    let block = graph
+                        .csx_get_subgraph_sync(VertexRange::new(0, n))
+                        .expect("whole load");
+                    assert_eq!(
+                        block.num_edges(),
+                        g.num_edges(),
+                        "thread {t} round {round}"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("requester thread panicked");
+        }
+        assert_eq!(graph.idle_buffers(), 1, "the single buffer must be idle again");
+    });
+}
+
+#[test]
+fn cancel_storm_terminates_and_leaks_nothing() {
+    with_watchdog(WATCHDOG, || {
+        let g = Arc::new(generators::barabasi_albert(2000, 8, 17));
+        let n = g.num_vertices();
+        let (_store, graph) = open_graph(&g, 2, 200);
+        let graph = Arc::new(graph);
+        let mut requests = Vec::new();
+        for i in 0..32 {
+            let req = graph
+                .csx_get_subgraph(VertexRange::new(0, n), Arc::new(|_| {}))
+                .expect("request");
+            if i % 2 == 0 {
+                req.cancel();
+            }
+            requests.push(req);
+        }
+        for req in &requests {
+            req.wait();
+            assert!(req.is_complete());
+        }
+        assert_eq!(graph.idle_buffers(), 2, "cancel paths must recycle buffers");
+    });
+}
