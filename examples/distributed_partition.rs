@@ -1,20 +1,27 @@
-//! Use case C (§4.1): distributed-memory loading — each "machine" loads a
-//! contiguous block of edges. Partitioning uses only the O(|V|) offsets
-//! sidecar (§6: "loading from storage instead of processing"), then every
-//! machine selectively decodes exactly its share, in parallel, and a
-//! leader merges per-machine results (here: a distributed degree sum and
-//! per-partition WCC forests merged at the boundary).
+//! Use case C (§4.1): distributed-memory loading on the *partitioned
+//! request API* — the leader computes an edge-balanced 2D
+//! [`PartitionPlan`] from the O(|V|) offsets sidecar alone (§6: "loading
+//! from storage instead of processing"), ships its serializable metadata,
+//! and every "machine" (consumer thread) drains the same
+//! [`PartitionStream`]: tiles are decoded asynchronously ahead of
+//! consumption (prefetch window sized by the §3 LoadModel) and handed to
+//! whichever machine pulls next, while each machine folds its tiles into
+//! a shared union-find. The leader then checks exact edge coverage and
+//! WCC agreement with ground truth.
 //!
 //! ```bash
 //! cargo run --release --example distributed_partition
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use paragrapher::algorithms::jtcc::JtUnionFind;
-use paragrapher::coordinator::{GraphType, Options, Paragrapher, VertexRange};
+use paragrapher::algorithms::partitioned::for_each_partition;
+use paragrapher::coordinator::{GraphType, Options, Paragrapher};
 use paragrapher::formats::FormatKind;
 use paragrapher::graph::generators::Dataset;
+use paragrapher::partition::PartitionPlan;
 use paragrapher::storage::{DeviceKind, SimStore};
 use paragrapher::util::fmt_count;
 
@@ -36,66 +43,62 @@ fn main() -> anyhow::Result<()> {
     let n = graph.num_vertices();
     let m = graph.num_edges();
 
-    // 1. Partition by edge count using ONLY the offsets sidecar.
-    let offsets = graph.csx_get_offsets(0, n)?;
-    let mut boundaries = vec![0usize];
-    for k in 1..MACHINES {
-        let target = m * k as u64 / MACHINES as u64;
-        boundaries.push(offsets.partition_point(|&e| e < target).min(n));
-    }
-    boundaries.push(n);
-    println!("CW: {} vertices, {} edges over {MACHINES} machines", fmt_count(n as u64), fmt_count(m));
-    for w in boundaries.windows(2).enumerate() {
-        let (k, w) = w;
-        let edges = offsets[w[1]] - offsets[w[0]];
-        println!(
-            "  machine {k}: vertices [{}, {}) — {} edges",
-            w[0],
-            w[1],
-            fmt_count(edges)
-        );
-    }
+    // 1. Leader: an edge-balanced source×target tiling from the sidecar
+    //    index alone — O(p log n), no graph data touched. The plan is
+    //    plain serializable metadata a leader would ship to machines.
+    let plan = PartitionPlan::two_d(graph.offsets_index(), MACHINES, MACHINES);
+    println!(
+        "CW: {} vertices, {} edges — {}×{} tiles, balance factor {:.3}, prefetch window {}",
+        fmt_count(n as u64),
+        fmt_count(m),
+        MACHINES,
+        MACHINES,
+        plan.balance_factor(),
+        graph.auto_prefetch_window(),
+    );
 
-    // 2. Every machine selectively loads its own contiguous range and
-    //    builds a local union-find over the global vertex space.
+    // 2. Machines: MACHINES consumer threads drain one partitioned
+    //    request. Tiles decode ahead of consumption; each machine unions
+    //    its tiles' edges into the shared forest (work-stealing hand-off:
+    //    a slow machine never blocks the others).
+    let stream = graph.get_partitions(plan.clone())?;
     let global_uf = Arc::new(JtUnionFind::new(n, 3));
-    let mut per_machine_edges = vec![0u64; MACHINES];
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        let mut handles = Vec::new();
-        for k in 0..MACHINES {
-            let (lo, hi) = (boundaries[k], boundaries[k + 1]);
-            let graph = &graph;
-            let uf = Arc::clone(&global_uf);
-            handles.push(scope.spawn(move || -> anyhow::Result<u64> {
-                let block = graph.csx_get_subgraph_sync(VertexRange::new(lo, hi))?;
-                // "Machine-local" processing: union edges of this partition.
-                for i in 0..block.num_vertices() {
-                    let v = (lo + i) as u32;
-                    for &d in block.neighbors(i) {
-                        uf.union(v, d);
-                    }
-                }
-                Ok(block.num_edges())
-            }));
-        }
-        for (k, h) in handles.into_iter().enumerate() {
-            per_machine_edges[k] = h.join().expect("machine thread")?;
+    let tile_edges = AtomicU64::new(0);
+    let uf = Arc::clone(&global_uf);
+    for_each_partition(&stream, MACHINES, |tile| {
+        tile_edges.fetch_add(tile.num_edges(), Ordering::Relaxed);
+        for (s, d) in tile.iter_edges() {
+            uf.union(s, d);
         }
         Ok(())
     })?;
 
-    // 3. Leader check: all edges exactly covered, WCC matches truth.
-    let total: u64 = per_machine_edges.iter().sum();
-    assert_eq!(total, m, "machines must cover every edge exactly once");
+    // 3. Leader merge checks: every edge delivered exactly once across
+    //    all tiles, and the distributed WCC matches ground truth.
+    let total = tile_edges.load(Ordering::Relaxed);
+    assert_eq!(total, m, "tiles must cover every edge exactly once");
     let components = global_uf.count_components();
     let truth = paragrapher::algorithms::count_components(
         &paragrapher::algorithms::bfs::wcc_by_bfs(&data),
     );
     assert_eq!(components, truth);
+    let c = stream.counters();
     println!(
-        "leader: {} edges loaded across machines; {} components (matches ground truth ✓)",
+        "machines: {} edges over {} tiles; {} components (matches ground truth ✓)",
         fmt_count(total),
+        c.consumed,
         components
+    );
+    println!(
+        "interleaving: {:.1}% prefetch hit rate, {} consumer stalls, {} producer stalls",
+        c.prefetch_hit_rate() * 100.0,
+        c.consumer_stalls,
+        c.producer_stalls
+    );
+    // Machine-readable health record (what a leader would log per epoch).
+    println!(
+        "partition metrics: {}",
+        paragrapher::metrics::partition_report(&plan, &c, None).to_string_pretty()
     );
     Ok(())
 }

@@ -169,6 +169,47 @@ fn main() {
     );
     h.attach("offsets-ef-vs-plain", paragrapher::metrics::offsets_report(&offs_big));
 
+    // Interleaved-vs-sequential partitioned loading (the tentpole's §3
+    // experiment): per-tier modeled end-to-end time of a 16-partition 1D
+    // stream pipelined against a JT-CC-priced consumer, vs the
+    // load-then-execute baseline. Asserted bars: strictly below
+    // sequential, never below the pipeline floor max(Σload, Σconsume).
+    {
+        use paragrapher::bench::workloads::modeled_interleaved_run;
+        use paragrapher::partition::PartitionPlan;
+        let gi = generators::barabasi_albert(30_000, 10, 21);
+        for device in [DeviceKind::Hdd, DeviceKind::Ssd] {
+            let store_i = SimStore::new(device);
+            FormatKind::WebGraph.write_to_store(&gi, &store_i, "i");
+            let acct_i = IoAccount::new();
+            let offs_i =
+                webgraph::read_offsets(&store_i, "i", ReadCtx::default(), &acct_i).unwrap();
+            let plan = PartitionPlan::one_d(&offs_i, 16);
+            let run = modeled_interleaved_run(&store_i, "i", &plan, 4, 40.0).unwrap();
+            let name = format!("interleaved-vs-sequential/{}", device.name());
+            assert!(
+                run.interleaved < run.sequential,
+                "{name}: interleaved {} not below sequential {}",
+                run.interleaved,
+                run.sequential
+            );
+            assert!(
+                run.interleaved >= run.envelope_floor() - 1e-12,
+                "{name}: below the model envelope floor"
+            );
+            h.report(&name, "speedup_vs_sequential", run.speedup());
+            h.report(&name, "overlap_fraction", run.overlap);
+            let mut j = paragrapher::util::json::Json::obj();
+            j.set("interleaved_s", run.interleaved)
+                .set("sequential_s", run.sequential)
+                .set("load_s", run.load_seconds)
+                .set("consume_s", run.consume_seconds)
+                .set("window", run.window as f64)
+                .set("balance_factor", plan.balance_factor());
+            h.attach(&name, j);
+        }
+    }
+
     // Scan engines.
     let mut gaps: Vec<i64> = (0..1 << 20).map(|_| rng.next_below(64) as i64).collect();
     let s = h.bench("scan/native-1Mi", || {

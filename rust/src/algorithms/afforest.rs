@@ -17,9 +17,10 @@ use crate::graph::{CsrGraph, VertexId};
 use super::jtcc::JtUnionFind;
 
 /// Number of neighbors linked in the sampling phase (GAPBS default: 2).
-const SAMPLE_NEIGHBORS: usize = 2;
+/// Shared with the partitioned port so the two stay bit-compatible.
+pub(crate) const SAMPLE_NEIGHBORS: usize = 2;
 /// Vertices probed to estimate the largest component (GAPBS: 1024).
-const SAMPLE_PROBES: usize = 1024;
+pub(crate) const SAMPLE_PROBES: usize = 1024;
 
 /// Run Afforest over a fully-loaded CSR. Returns canonical labels.
 pub fn afforest(g: &CsrGraph, seed: u64) -> Vec<VertexId> {

@@ -9,11 +9,15 @@
 //!   the consumer of the XLA/Pallas `wcc_step` executable.
 //! * [`bfs`] — breadth-first search (use case A's repeated-access pattern
 //!   and the ground-truth oracle for component tests).
+//! * [`partitioned`] — interleaved ports of BFS / WCC / Afforest that
+//!   consume [`PartitionStream`](crate::partition::PartitionStream)s, so
+//!   computation runs while later partitions load.
 
 pub mod afforest;
 pub mod bfs;
 pub mod jtcc;
 pub mod label_prop;
+pub mod partitioned;
 
 use crate::graph::VertexId;
 

@@ -30,6 +30,15 @@
 //! recycles one ([`BufferPool::recycle`]) or the pool closes
 //! ([`BufferPool::close`]). Request latency therefore tracks actual buffer
 //! turnaround instead of a tuned poll constant.
+//!
+//! Two producers drive the protocol: the block request manager (user
+//! callbacks consume at `C_USER_ACCESS`, the full cycle) and the
+//! partition manager, which uses a claim as its decode-concurrency
+//! *token* only (`C_IDLE → C_REQUESTED → J_READING → C_IDLE`, the
+//! failure-path transitions): partitioned consumers own their decoded
+//! data outright, so the buffer recycles the moment the decode lands.
+//! Both park on the same condvar, so the pool is also the cross-request
+//! fairness point.
 
 use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Condvar;

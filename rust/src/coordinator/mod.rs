@@ -42,6 +42,8 @@ use anyhow::{bail, Context, Result};
 use crate::formats::source::{block_cost, GraphSource};
 use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::VertexId;
+use crate::model::LoadModel;
+use crate::partition::{self, LoadedPartition, Partition, PartitionPlan, PartitionStream};
 use crate::runtime::ScanEngine;
 use crate::storage::cache::CacheCounters;
 use crate::storage::sim::ReadCtx;
@@ -49,6 +51,11 @@ use crate::storage::{DecodedCache, IoAccount, SimStore};
 use crate::util::pool::ThreadPool;
 use buffer::{BlockMeta, BufferPool, BufferStatus};
 pub use request::{EdgeBlock, ReadRequest, VertexRange};
+
+/// Default calibrated single-core decompression bandwidth d (uncompressed
+/// bytes/s) used by [`PgGraph::load_model`] — the order of magnitude the
+/// `webgraph/calibrated-d` hot-path bench measures for this decoder.
+const DEFAULT_DECODE_BPS: f64 = 1.0e9;
 
 /// Graph types (paper Table 2). The trailing `_AP` of the paper's names
 /// (Asynchronous, Parallel) is the coordinator's operating mode here.
@@ -91,16 +98,23 @@ pub struct Options {
     /// default) decodes each block on its single pool worker with no extra
     /// threads. Each chunk worker carries its own [`IoAccount`], composed
     /// by max into [`GraphStats::decode_seconds`] so the §3 overlap model
-    /// still holds. Values > 1 spawn that many scoped threads per block
-    /// (and oversubscribe to `buffers × decode_workers` at peak) — worth
-    /// it for large blocks; a borrowed-job extension of the shared
-    /// `util::pool` is a ROADMAP item.
+    /// still holds. Values > 1 fan out as *borrowed scoped jobs* on the
+    /// shared coordinator worker pool (`ThreadPool::scoped_for`): the
+    /// decoding worker participates and idle pool workers help, so no
+    /// extra OS threads are spawned per block and the thread count stays
+    /// at `buffers` regardless of this knob.
     pub decode_workers: usize,
     /// Declared I/O pattern for the storage model.
     pub read_ctx: ReadCtx,
     /// Scan engine for the gap→ID phase (native Rust or the AOT-compiled
     /// XLA/Pallas executable).
     pub scan: Arc<dyn ScanEngine>,
+    /// Staging depth of partitioned requests (decoded-but-unconsumed
+    /// partitions a [`PartitionStream`] holds ahead of its consumers).
+    /// 0 (the default) sizes the window from the §3 [`LoadModel`] for the
+    /// opened store's device tier ([`PgGraph::auto_prefetch_window`]);
+    /// nonzero pins it.
+    pub prefetch_window: usize,
     /// Vertices per random-access decode unit ([`PgGraph::successors`]
     /// decodes the aligned block containing the requested vertex).
     pub source_block_vertices: usize,
@@ -127,6 +141,7 @@ impl std::fmt::Debug for Options {
             .field("decode_workers", &self.decode_workers)
             .field("read_ctx", &self.read_ctx)
             .field("scan", &self.scan.name())
+            .field("prefetch_window", &self.prefetch_window)
             .field("source_block_vertices", &self.source_block_vertices)
             .field("source_cache_cost", &self.source_cache_cost)
             .finish()
@@ -144,6 +159,7 @@ impl Clone for Options {
             decode_workers: self.decode_workers,
             read_ctx: self.read_ctx,
             scan: Arc::clone(&self.scan),
+            prefetch_window: self.prefetch_window,
             source_block_vertices: self.source_block_vertices,
             source_cache_cost: self.source_cache_cost,
             poll_interval: self.poll_interval,
@@ -160,6 +176,7 @@ impl Default for Options {
             decode_workers: 1,
             read_ctx: ReadCtx::default(),
             scan: Arc::new(crate::runtime::NativeScan),
+            prefetch_window: 0,
             // One source of truth for random-access cache geometry: the
             // formats-layer defaults, so PgGraph and WebGraphSource agree.
             source_block_vertices: crate::formats::SourceConfig::default().block_vertices,
@@ -267,6 +284,10 @@ pub struct GraphStats {
     pub requests_issued: AtomicU64,
     /// Per-vertex random accesses served via [`PgGraph::successors`].
     pub random_accesses: AtomicU64,
+    /// Partitioned requests issued ([`PgGraph::get_partitions`] family).
+    pub partition_requests: AtomicU64,
+    /// Partitions decoded and staged by partitioned requests.
+    pub partitions_staged: AtomicU64,
     /// Modeled block-decode time, nanoseconds: per block, the max over its
     /// chunk workers' virtual clocks (I/O + CPU), summed across blocks —
     /// the §3 overlap composition at `decode_workers` granularity.
@@ -340,6 +361,13 @@ impl PgGraph {
     /// plain `Vec<u64>` representation, bytes: `(compressed, plain)`.
     pub fn offsets_footprint(&self) -> (usize, usize) {
         (self.inner.offsets.size_bytes(), self.inner.offsets.plain_size_bytes())
+    }
+
+    /// The resident Elias–Fano offsets index — the sidecar structure
+    /// external partition planners build [`PartitionPlan`]s from
+    /// (`csx_get_offsets` materializes plain slices of the same index).
+    pub fn offsets_index(&self) -> &WgOffsets {
+        &self.inner.offsets
     }
 
     pub fn options(&self) -> Options {
@@ -442,10 +470,11 @@ impl PgGraph {
                     let scan = Arc::clone(&opts.scan);
                     let read_ctx = opts.read_ctx;
                     let decode_workers = opts.decode_workers;
+                    let pool_for_chunks = Arc::clone(&workers);
                     workers.execute(move || {
                         let decoded = decode_into_buffer(
                             &inner, buffer_id, meta, read_ctx, scan.as_ref(), decode_workers,
-                            &req3,
+                            &pool_for_chunks, &req3,
                         );
                         if !decoded {
                             return; // decode failed: buffer already recycled
@@ -579,6 +608,203 @@ impl PgGraph {
         self.csx_get_subgraph_sync(VertexRange::new(0, self.num_vertices()))
     }
 
+    /// The §3 [`LoadModel`] of this opened graph on its store's device
+    /// tier: σ from the device model at the configured read parallelism,
+    /// r from the actual compressed footprint, d the calibrated
+    /// decompression bandwidth (see `benches/hot_path.rs`,
+    /// `webgraph/calibrated-d`).
+    pub fn load_model(&self) -> LoadModel {
+        let opts = self.options();
+        let device = self.inner.store.device();
+        let sigma = device.aggregate_bandwidth(
+            opts.buffers.max(1),
+            opts.read_ctx.block,
+            opts.read_ctx.method,
+            opts.read_ctx.sequential,
+        );
+        let uncompressed = crate::bench::workloads::full_load_memory_bytes(
+            self.inner.meta.num_vertices,
+            self.inner.meta.num_edges,
+        );
+        let compressed = self
+            .inner
+            .store
+            .file_len(&format!("{}.graph", self.inner.base))
+            .unwrap_or(uncompressed)
+            .max(1);
+        LoadModel {
+            sigma,
+            r: uncompressed as f64 / compressed as f64,
+            d: DEFAULT_DECODE_BPS,
+        }
+    }
+
+    /// Model-driven staging depth for partitioned requests: how many
+    /// partitions the server keeps decoded ahead of consumption
+    /// ([`partition::prefetch_depth`] over [`Self::load_model`], assuming
+    /// consumers process about as fast as one decode core). Capped at
+    /// 2× the buffer pool so staging memory stays proportional to the
+    /// §5.5 buffer budget. Overridden by [`Options::prefetch_window`].
+    pub fn auto_prefetch_window(&self) -> usize {
+        let buffers = self.inner.pool.len();
+        partition::prefetch_depth(&self.load_model(), DEFAULT_DECODE_BPS, (2 * buffers).max(2))
+    }
+
+    /// Partitioned CSX request (§2's `csx_get_partitions`): an
+    /// edge-balanced 1D plan served as a [`PartitionStream`].
+    pub fn csx_get_partitions(&self, parts: usize) -> Result<PartitionStream> {
+        self.get_partitions(PartitionPlan::one_d(&self.inner.offsets, parts))
+    }
+
+    /// Partitioned CSX request over a 2D source×target tiling (the
+    /// distributed-memory layout of §4.1 use case C).
+    pub fn csx_get_partitions_2d(&self, rows: usize, cols: usize) -> Result<PartitionStream> {
+        self.get_partitions(PartitionPlan::two_d(&self.inner.offsets, rows, cols))
+    }
+
+    /// Partitioned COO request (§2's `coo_get_partitions`): exact
+    /// edge-split shares, cutting inside vertex rows when needed.
+    pub fn coo_get_partitions(&self, parts: usize) -> Result<PartitionStream> {
+        self.get_partitions(PartitionPlan::coo(&self.inner.offsets, parts))
+    }
+
+    /// Serve an arbitrary [`PartitionPlan`] (computed here or received
+    /// from a leader): partitions are decoded asynchronously ahead of
+    /// consumption into a staging window sized by the §3 model, with
+    /// decode concurrency backpressured through the buffer pool. Any
+    /// number of consumer threads may drain the returned stream.
+    pub fn get_partitions(&self, plan: PartitionPlan) -> Result<PartitionStream> {
+        plan.check()?;
+        if plan.num_vertices != self.inner.meta.num_vertices
+            || plan.num_edges != self.inner.meta.num_edges
+        {
+            bail!(
+                "plan is for a {}v/{}e graph, this graph has {}v/{}e",
+                plan.num_vertices,
+                plan.num_edges,
+                self.inner.meta.num_vertices,
+                self.inner.meta.num_edges
+            );
+        }
+        // `check()` is structural only; a foreign plan can tile [0, m)
+        // while still disagreeing with THIS graph's degree distribution
+        // (same n and m, different offsets). Cross-check every span
+        // against the sidecar — O(p) EF lookups — so a stale
+        // leader-shipped plan is rejected up front instead of underflowing
+        // the trim arithmetic or silently dropping edges.
+        for p in &plan.parts {
+            let row_span = (
+                self.inner.offsets.edge_offset(p.vertices.start),
+                self.inner.offsets.edge_offset(p.vertices.end),
+            );
+            let consistent = match plan.kind {
+                // Vertex-aligned kinds own their rows' exact edge span.
+                partition::PlanKind::OneD | partition::PlanKind::TwoD { .. } => {
+                    p.edge_span == row_span
+                }
+                // COO shares trim within their covering rows. Empty
+                // shares (row-less, as the planner emits them) carry an
+                // arbitrary empty span; anything with rows must contain
+                // its span, or the trim arithmetic below would underflow.
+                partition::PlanKind::Coo => {
+                    (p.edge_span.0 == p.edge_span.1 && p.vertices.is_empty())
+                        || (p.edge_span.0 >= row_span.0 && p.edge_span.1 <= row_span.1)
+                }
+            };
+            if !consistent {
+                bail!(
+                    "partition {}: edge span {:?} disagrees with this graph's offsets \
+                     (rows {}..{} span {:?}) — stale or foreign plan",
+                    p.index,
+                    p.edge_span,
+                    p.vertices.start,
+                    p.vertices.end,
+                    row_span
+                );
+            }
+        }
+        let opts = self.options();
+        let window = if opts.prefetch_window > 0 {
+            opts.prefetch_window
+        } else {
+            self.auto_prefetch_window()
+        };
+        self.inner.stats.partition_requests.fetch_add(1, Ordering::Relaxed);
+        let shared = crate::partition::stream::StreamShared::new(plan.num_parts(), window);
+
+        let inner = Arc::clone(&self.inner);
+        let workers = Arc::clone(&self.workers);
+        let shared2 = Arc::clone(&shared);
+        // The partition manager: reserves a window slot, claims a buffer
+        // (both block — backpressure), and hands the decode to a worker.
+        let handle = std::thread::Builder::new()
+            .name("pg-partition-manager".into())
+            .spawn(move || {
+                // Only a user cancel (or an already-poisoned stream) may end
+                // production quietly; losing the graph mid-stream must
+                // surface as an error, or consumers would mistake a
+                // truncated drain for a complete one.
+                let mut abort: Option<&str> = None;
+                let mut terminal = false;
+                for part in plan.parts {
+                    if inner.shutdown.load(Ordering::Acquire) {
+                        abort = Some("graph released while a partition stream was active");
+                        break;
+                    }
+                    // Staging-window backpressure. `false` means the stream
+                    // is already terminal: user-cancelled (quiet) or failed
+                    // (already poisoned) — nothing further to report.
+                    if !shared2.wait_for_window() {
+                        terminal = true;
+                        break;
+                    }
+                    // Decode-concurrency backpressure: park on the pool
+                    // condvar until a buffer is recycled (None: closed).
+                    let meta = BlockMeta {
+                        start_vertex: part.vertices.start,
+                        end_vertex: part.vertices.end,
+                        start_edge: part.edge_span.0,
+                        end_edge: part.edge_span.1,
+                    };
+                    let Some(buffer_id) = inner.pool.acquire_idle(meta) else {
+                        abort = Some("buffer pool closed while a partition stream was active");
+                        break;
+                    };
+                    let inner2 = Arc::clone(&inner);
+                    let shared3 = Arc::clone(&shared2);
+                    let scan = Arc::clone(&opts.scan);
+                    let read_ctx = opts.read_ctx;
+                    let decode_workers = opts.decode_workers;
+                    let chunk_pool = Arc::clone(&workers);
+                    workers.execute(move || {
+                        match decode_partition(
+                            &inner2, buffer_id, part, read_ctx, scan.as_ref(), decode_workers,
+                            &chunk_pool,
+                        ) {
+                            Ok(loaded) => {
+                                inner2.stats.partitions_staged.fetch_add(1, Ordering::Relaxed);
+                                shared3.push(loaded);
+                            }
+                            Err(e) => shared3.fail(e.to_string()),
+                        }
+                    });
+                }
+                if let Some(reason) = abort {
+                    // Poison: a shutdown truncation must not read as a
+                    // complete drain.
+                    shared2.fail(reason.to_string());
+                } else if terminal {
+                    // Cancelled/failed early exit: wake parked consumers.
+                    shared2.finish_producing();
+                }
+                // Clean path: the final decode's push marks the stream
+                // done once every partition has actually landed — marking
+                // it here would race the in-flight decodes.
+            })
+            .context("spawn partition manager")?;
+        Ok(PartitionStream::new(shared, handle))
+    }
+
     /// Random access: the successor list of one vertex, served through the
     /// decoded-block LRU (the out-of-core request type of §4.1 use case D).
     ///
@@ -685,6 +911,7 @@ impl Drop for PgGraph {
 /// ([`Decoder::decode_range_parallel`]); each carries its own virtual
 /// clock, and the block's modeled decode time — max over the chunk
 /// workers, per §3 — is accumulated into [`GraphStats::decode_seconds`].
+#[allow(clippy::too_many_arguments)]
 fn decode_into_buffer(
     inner: &GraphInner,
     buffer_id: usize,
@@ -692,6 +919,7 @@ fn decode_into_buffer(
     read_ctx: ReadCtx,
     scan: &dyn ScanEngine,
     decode_workers: usize,
+    chunk_pool: &ThreadPool,
     req: &ReadRequest,
 ) -> bool {
     let buf = inner.pool.get(buffer_id);
@@ -710,8 +938,16 @@ fn decode_into_buffer(
             read_ctx,
             &accounts[0],
         )?;
-        let block =
-            dec.decode_range_parallel(meta.start_vertex, meta.end_vertex, &accounts, scan)?;
+        // Intra-block fan-out runs as borrowed scoped jobs on the shared
+        // coordinator worker pool (the calling worker participates), not as
+        // fresh OS threads per block.
+        let block = dec.decode_range_parallel_on(
+            meta.start_vertex,
+            meta.end_vertex,
+            &accounts,
+            scan,
+            Some(chunk_pool),
+        )?;
         let mut data = buf.data.lock().expect("data lock");
         data.clear();
         data.offsets.extend_from_slice(&block.offsets);
@@ -745,6 +981,118 @@ fn decode_into_buffer(
             false
         }
     }
+}
+
+/// Producer-side partition decode: claim the buffer (C_REQUESTED ->
+/// J_READING), decode the partition's rows, filter to its tile, and
+/// recycle. The buffer serves as the decode-concurrency token only —
+/// consumers own their partitions outright (multi-consumer hand-off
+/// outlives any buffer reuse), so routing the decoded vectors through
+/// `BufferData` would both strip the buffer's warmed capacity (hurting
+/// the block-request path that relies on it) and add an unreachable
+/// hand-off state. The buffer is recycled on *every* exit path — a
+/// leaked claim would shrink the pool for the rest of the run.
+fn decode_partition(
+    inner: &GraphInner,
+    buffer_id: usize,
+    part: Partition,
+    read_ctx: ReadCtx,
+    scan: &dyn ScanEngine,
+    decode_workers: usize,
+    chunk_pool: &ThreadPool,
+) -> Result<LoadedPartition> {
+    let buf = inner.pool.get(buffer_id);
+    if !buf.try_claim(BufferStatus::CRequested, BufferStatus::JReading) {
+        // Not ours to recycle: another owner holds the status.
+        bail!("buffer {buffer_id} not in requested state");
+    }
+    let accounts: Vec<IoAccount> =
+        (0..decode_workers.max(1)).map(|_| IoAccount::new()).collect();
+    let result = (|| -> Result<DecodedBlock> {
+        let dec = Decoder::open(
+            &inner.store,
+            &inner.base,
+            &inner.meta,
+            &inner.offsets,
+            read_ctx,
+            &accounts[0],
+        )?;
+        let rows = dec.decode_range_parallel_on(
+            part.vertices.start,
+            part.vertices.end,
+            &accounts,
+            scan,
+            Some(chunk_pool),
+        )?;
+        let row_span = (
+            inner.offsets.edge_offset(part.vertices.start),
+            inner.offsets.edge_offset(part.vertices.end),
+        );
+        Ok(filter_partition_block(
+            rows,
+            &part,
+            row_span,
+            inner.meta.num_vertices,
+        ))
+    })();
+    match result {
+        Ok(block) => {
+            let modeled = crate::storage::vclock::phase_elapsed(&accounts);
+            inner.stats.decode_seconds.fetch_add((modeled * 1e9) as u64, Ordering::Relaxed);
+            inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
+            inner.stats.edges_decoded.fetch_add(block.num_edges(), Ordering::Relaxed);
+            inner.pool.recycle(buffer_id); // J_READING -> C_IDLE: token released
+            Ok(LoadedPartition { part, block })
+        }
+        Err(e) => {
+            inner.pool.recycle(buffer_id);
+            Err(e)
+        }
+    }
+}
+
+/// Restrict a partition's decoded rows to its tile: drop edges whose
+/// target falls outside `part.targets` (2D tiles) and edges outside
+/// `part.edge_span` (COO splits). 1D partitions pass through untouched.
+/// `row_span` is the global edge span of the decoded rows, which indexes
+/// the block's edges globally.
+fn filter_partition_block(
+    rows: DecodedBlock,
+    part: &Partition,
+    row_span: (u64, u64),
+    num_vertices: usize,
+) -> DecodedBlock {
+    let full_targets = part.targets.start == 0 && part.targets.end == num_vertices;
+    let exact_span = part.edge_span == row_span;
+    if full_targets && exact_span {
+        return rows;
+    }
+    // Local window of the COO trim (the whole block when exact_span).
+    let local_lo = (part.edge_span.0 - row_span.0) as usize;
+    let local_hi = (part.edge_span.1 - row_span.0) as usize;
+    let mut out = DecodedBlock {
+        first_vertex: rows.first_vertex,
+        offsets: Vec::with_capacity(rows.offsets.len()),
+        edges: Vec::new(),
+    };
+    out.offsets.push(0);
+    for i in 0..rows.num_vertices() {
+        let (s, e) = rows.vertex_span(i);
+        let (s, e) = (s.max(local_lo), e.min(local_hi));
+        if s < e {
+            let row = &rows.edges[s..e];
+            if full_targets {
+                out.edges.extend_from_slice(row);
+            } else {
+                // Rows are sorted: the tile's columns are one subslice.
+                let lo = row.partition_point(|&d| (d as usize) < part.targets.start);
+                let hi = row.partition_point(|&d| (d as usize) < part.targets.end);
+                out.edges.extend_from_slice(&row[lo..hi]);
+            }
+        }
+        out.offsets.push(out.edges.len() as u64);
+    }
+    out
 }
 
 /// Consumer-side completion: J_READ_COMPLETED -> C_USER_ACCESS, run the

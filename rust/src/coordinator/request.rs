@@ -1,4 +1,11 @@
 //! Read requests and the user-facing edge-block views.
+//!
+//! Two request families share these types: the callback-driven block
+//! requests (`csx_get_subgraph` / `coo_get_edges`, tracked by
+//! [`ReadRequest`]) and the pull-driven partitioned requests
+//! (`{csx,coo}_get_partitions`, tracked by
+//! [`PartitionStream`](crate::partition::PartitionStream) — same
+//! [`VertexRange`] vocabulary, consumer-pull instead of callback-push).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -26,6 +33,11 @@ impl VertexRange {
 
     pub fn is_empty(&self) -> bool {
         self.end <= self.start
+    }
+
+    /// Does the range contain vertex `v`?
+    pub fn contains(&self, v: usize) -> bool {
+        v >= self.start && v < self.end
     }
 }
 

@@ -11,8 +11,11 @@
 //! * an in-memory [`CsrGraph`] (every baseline CSX/COO loader produces
 //!   one) — the oracle implementation;
 //! * an opened coordinator handle
-//!   ([`PgGraph`](crate::coordinator::PgGraph)) — random access and block
-//!   streaming over the same graph.
+//!   ([`PgGraph`](crate::coordinator::PgGraph)) — random access, block
+//!   streaming, and pull-based partitioned requests
+//!   ([`PgGraph::get_partitions`](crate::coordinator::PgGraph::get_partitions),
+//!   which serves [`PartitionPlan`](crate::partition::PartitionPlan)s as
+//!   multi-consumer streams) over the same graph.
 //!
 //! `successors(v)` resolves bounded reference chains exactly like the
 //! webgraph-rs random-access reader: seek to the vertex's bit offset via

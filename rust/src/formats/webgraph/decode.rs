@@ -242,6 +242,23 @@ impl<'a> Decoder<'a> {
         accounts: &[IoAccount],
         scan: &dyn ScanEngine,
     ) -> Result<DecodedBlock> {
+        self.decode_range_parallel_on(v_start, v_end, accounts, scan, None)
+    }
+
+    /// [`Self::decode_range_parallel`] with the fan-out executed on an
+    /// existing [`ThreadPool`](crate::util::pool::ThreadPool) via borrowed
+    /// scoped jobs instead of spawning one scoped OS thread per chunk. The
+    /// caller always participates (`scoped_for`), so this is safe to call
+    /// *from* a pool worker — which is exactly what the coordinator's
+    /// per-block decode does when `decode_workers > 1`.
+    pub fn decode_range_parallel_on(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        accounts: &[IoAccount],
+        scan: &dyn ScanEngine,
+        pool: Option<&crate::util::pool::ThreadPool>,
+    ) -> Result<DecodedBlock> {
         let Some(first) = accounts.first() else {
             bail!("decode_range_parallel needs at least one account");
         };
@@ -253,10 +270,16 @@ impl<'a> Decoder<'a> {
             return first.time_cpu(|| self.decode_range_with_scan(v_start, v_end, first, scan));
         }
         let bounds = self.chunk_bounds(v_start, v_end, workers);
-        let parts = parallel_map(workers, workers, |t| {
+        let chunk = |t: usize| {
             let (a, b) = (bounds[t], bounds[t + 1]);
             accounts[t].time_cpu(|| self.decode_range_with_scan(a, b, &accounts[t], scan))
-        });
+        };
+        let parts = match pool {
+            Some(pool) => {
+                crate::util::pool::parallel_map_on(pool, workers, workers - 1, chunk)
+            }
+            None => parallel_map(workers, workers, chunk),
+        };
         let mut chunks = Vec::with_capacity(workers);
         for p in parts {
             chunks.push(p?);

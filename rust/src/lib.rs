@@ -7,10 +7,13 @@
 //!   API ([`coordinator`], event-driven over a sharded buffer pool), the
 //!   WebGraph-style compressed format, the GAPBS-style baseline formats and
 //!   the [`formats::GraphSource`] loading contract (block streaming plus
-//!   cached per-vertex random access), a calibrated virtual-time storage
-//!   simulator ([`storage`], including the decoded-block LRU), graph
-//!   algorithms ([`algorithms`], with out-of-core `*_on` variants) and the
-//!   §3 performance model ([`model`]).
+//!   cached per-vertex random access), the partitioned request subsystem
+//!   ([`partition`]: edge-balanced 1D/2D/COO plans, model-driven prefetch,
+//!   multi-consumer [`partition::PartitionStream`]s), a calibrated
+//!   virtual-time storage simulator ([`storage`], including the
+//!   decoded-block LRU), graph algorithms ([`algorithms`], with
+//!   out-of-core `*_on` and interleaved `partitioned` variants) and the §3
+//!   performance model ([`model`]).
 //! * **L2/L1 (build-time Python)** — the vectorizable decode phase
 //!   (gap→ID prefix-sum) and WCC label-propagation step, written in JAX +
 //!   Pallas, AOT-lowered to HLO text and executed from Rust via the PJRT C
@@ -26,6 +29,7 @@ pub mod formats;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+pub mod partition;
 pub mod runtime;
 pub mod storage;
 pub mod util;

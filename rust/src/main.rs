@@ -452,5 +452,52 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
         fmt_bytes(offs.plain_size_bytes() as u64),
         offs.size_bytes() as f64 * 100.0 / offs.plain_size_bytes() as f64
     );
+
+    // Partitioned-request health: a real 8-partition stream drained by two
+    // consumers through the coordinator (prefetch hit rate), plus the
+    // modeled HDD interleave overlap (deterministic virtual time).
+    let plan = paragrapher::partition::PartitionPlan::one_d(&offs, 8);
+    println!("| partition_plan_balance_factor | {:.3} |", plan.balance_factor());
+    {
+        let store = Arc::new(SimStore::new(DeviceKind::Dram));
+        FormatKind::WebGraph.write_to_store(&g, &store, "ci");
+        let pg = Paragrapher::init();
+        let graph = pg.open_graph(
+            Arc::clone(&store),
+            "ci",
+            GraphType::CsxWg400,
+            Options::default(),
+        )?;
+        let stream = graph.csx_get_partitions(8)?;
+        let edges = std::sync::atomic::AtomicU64::new(0);
+        paragrapher::algorithms::partitioned::for_each_partition(&stream, 2, |p| {
+            edges.fetch_add(p.num_edges(), std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        })?;
+        anyhow::ensure!(
+            edges.load(std::sync::atomic::Ordering::Relaxed) == graph.num_edges(),
+            "partition stream must deliver every edge exactly once"
+        );
+        let c = stream.counters();
+        println!(
+            "| partition_prefetch_hit_rate | {:.1}% ({} hits / {} stalls) |",
+            c.prefetch_hit_rate() * 100.0,
+            c.prefetch_hits,
+            c.consumer_stalls
+        );
+        println!("| partition_prefetch_window | {} |", graph.auto_prefetch_window());
+    }
+    {
+        let store = SimStore::new(DeviceKind::Hdd);
+        FormatKind::WebGraph.write_to_store(&g, &store, "ci");
+        let run = paragrapher::bench::workloads::modeled_interleaved_run(
+            &store, "ci", &plan, 4, 40.0,
+        )?;
+        println!(
+            "| interleave_overlap (HDD, modeled) | {:.1}% ({:.2}× vs load-then-execute) |",
+            run.overlap * 100.0,
+            run.speedup()
+        );
+    }
     Ok(())
 }

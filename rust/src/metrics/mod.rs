@@ -123,6 +123,29 @@ pub fn offsets_report(offsets: &crate::formats::webgraph::WgOffsets) -> Json {
     o
 }
 
+/// Render partitioned-request health as JSON: plan balance, prefetch hit
+/// rate, stall counts, and (when the caller computed one) the modeled
+/// interleave overlap fraction. Attached to bench results and the CI job
+/// summary.
+pub fn partition_report(
+    plan: &crate::partition::PartitionPlan,
+    counters: &crate::partition::StreamCounters,
+    overlap: Option<f64>,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("parts", plan.num_parts() as f64)
+        .set("balance_factor", plan.balance_factor())
+        .set("produced", counters.produced as f64)
+        .set("consumed", counters.consumed as f64)
+        .set("prefetch_hit_rate", counters.prefetch_hit_rate())
+        .set("consumer_stalls", counters.consumer_stalls as f64)
+        .set("producer_stalls", counters.producer_stalls as f64);
+    if let Some(ov) = overlap {
+        o.set("interleave_overlap", ov);
+    }
+    o
+}
+
 /// Format a cache hit rate for table output ("93.8% hit").
 pub fn fmt_hit_rate(counters: &CacheCounters) -> String {
     format!("{:.1}% hit", counters.hit_rate() * 100.0)

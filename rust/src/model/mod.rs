@@ -86,6 +86,60 @@ pub fn calibrate_d(uncompressed_bytes: u64, cpu_seconds: f64, workers: usize) ->
     uncompressed_bytes as f64 / cpu_seconds * workers as f64
 }
 
+/// End-to-end elapsed time of a partitioned load interleaved with
+/// execution: partition `i` takes `loads[i]` seconds to stage and
+/// `consumes[i]` seconds to process, the loader may run at most `window`
+/// partitions ahead of the consumer (the prefetch-window backpressure),
+/// and partitions are consumed in order. The recurrence
+///
+/// ```text
+///     S_i = max(C_{i-1}, L_i)                          (consume start)
+///     L_i = max(L_{i-1}, S_{i-window}) + loads[i]      (pipeline + window)
+///     C_i = S_i + consumes[i]
+/// ```
+///
+/// yields the classic two-stage bounded-buffer pipeline, where `S_j`
+/// (the gate) is the consume *start* of partition `j` — a staging slot is
+/// freed at hand-off, matching the `PartitionStream` protocol. The result
+/// is always ≥ max(Σloads, Σconsumes) (the §3 envelope floor — the slower
+/// side is the bottleneck) and ≤ Σloads + Σconsumes (the load-then-execute
+/// sequential baseline), with equality to the floor when the window hides
+/// all of the faster side's latency.
+pub fn interleaved_elapsed(loads: &[f64], consumes: &[f64], window: usize) -> f64 {
+    assert_eq!(loads.len(), consumes.len(), "one consume per load");
+    let window = window.max(1);
+    let mut load_done = 0.0f64;
+    let mut consume_done = 0.0f64;
+    let mut consume_starts: Vec<f64> = Vec::with_capacity(loads.len());
+    for i in 0..loads.len() {
+        let gate = if i >= window { consume_starts[i - window] } else { 0.0 };
+        load_done = load_done.max(gate) + loads[i];
+        let start = consume_done.max(load_done);
+        consume_starts.push(start);
+        consume_done = start + consumes[i];
+    }
+    consume_done
+}
+
+/// The load-then-execute baseline the interleaved pipeline is measured
+/// against: stage everything, then process everything.
+pub fn sequential_elapsed(loads: &[f64], consumes: &[f64]) -> f64 {
+    loads.iter().sum::<f64>() + consumes.iter().sum::<f64>()
+}
+
+/// Fraction of the smaller phase hidden by interleaving: 0 = fully serial,
+/// 1 = perfect overlap (elapsed hit the max(Σl, Σc) floor).
+pub fn overlap_fraction(loads: &[f64], consumes: &[f64], window: usize) -> f64 {
+    let l: f64 = loads.iter().sum();
+    let c: f64 = consumes.iter().sum();
+    let hideable = l.min(c);
+    if hideable <= 0.0 {
+        return 0.0;
+    }
+    let saved = sequential_elapsed(loads, consumes) - interleaved_elapsed(loads, consumes, window);
+    (saved / hideable).clamp(0.0, 1.0)
+}
+
 /// Serialize a curve for the bench JSON output.
 pub fn curve_to_json(curve: &[CurvePoint]) -> Json {
     let mut arr = Json::Arr(vec![]);
@@ -153,6 +207,47 @@ mod tests {
         let m = LoadModel { sigma: 500.0 * MB, r: 1.0, d: f64::INFINITY };
         assert_eq!(m.upper_bound(), 500.0 * MB);
         assert!(m.storage_bound());
+    }
+
+    #[test]
+    fn interleaved_pipeline_envelope() {
+        let loads = vec![1.0; 8];
+        let consumes = vec![0.5; 8];
+        let seq = sequential_elapsed(&loads, &consumes);
+        assert!((seq - 12.0).abs() < 1e-9);
+        for window in [1usize, 2, 4, 8] {
+            let t = interleaved_elapsed(&loads, &consumes, window);
+            assert!(t < seq, "window {window}: {t} must beat sequential {seq}");
+            assert!(t >= 8.0 - 1e-9, "window {window}: below the Σloads floor");
+            assert!(t <= seq + 1e-9);
+        }
+        // Load-bound pipeline with any window ≥ 1 hides all consumption
+        // except the last partition's: 8·1.0 + 0.5.
+        let t1 = interleaved_elapsed(&loads, &consumes, 1);
+        assert!((t1 - 8.5).abs() < 1e-9, "got {t1}");
+        assert!(overlap_fraction(&loads, &consumes, 1) > 0.85);
+    }
+
+    #[test]
+    fn interleaved_window_matters_when_consumer_is_slow() {
+        // Consumer-bound: one slow consume stalls a window-1 loader, a
+        // deeper window absorbs it.
+        let loads = vec![1.0, 1.0, 1.0, 1.0];
+        let consumes = vec![4.0, 0.1, 0.1, 4.0];
+        let shallow = interleaved_elapsed(&loads, &consumes, 1);
+        let deep = interleaved_elapsed(&loads, &consumes, 4);
+        assert!(deep <= shallow + 1e-9, "deeper window cannot be slower");
+        assert!(deep < sequential_elapsed(&loads, &consumes));
+        let floor = 4.0f64.max(consumes.iter().sum::<f64>());
+        assert!(deep >= floor - 1e-9);
+    }
+
+    #[test]
+    fn interleaved_degenerate_inputs() {
+        assert_eq!(interleaved_elapsed(&[], &[], 3), 0.0);
+        let t = interleaved_elapsed(&[2.0], &[3.0], 1);
+        assert!((t - 5.0).abs() < 1e-9, "single partition cannot overlap");
+        assert_eq!(overlap_fraction(&[], &[], 1), 0.0);
     }
 }
 

@@ -1,0 +1,524 @@
+//! The partitioned-request subsystem (§2's partitioned CSX/COO request
+//! families).
+//!
+//! The paper promises partition-granular loading for shared- and
+//! distributed-memory frameworks: a consumer (a GAPBS-style process, a
+//! cluster "machine", a NUMA worker) asks for *its* share of the graph and
+//! the library serves every share concurrently, overlapping loading with
+//! the consumer's computation. Three pieces implement that here:
+//!
+//! * **Planner** ([`PartitionPlan`]) — edge-balanced 1D (vertex-range) and
+//!   2D (source×target tile) plans plus exact edge-split COO plans, all
+//!   computed in O(p log n) from the Elias–Fano offsets index
+//!   (`edge_partition_point`) — the sidecar-only partitioning the paper's
+//!   §6 calls "loading from storage instead of processing". Plans carry
+//!   serializable metadata ([`PartitionPlan::to_json`]) so a leader can
+//!   compute once and ship shares to machines.
+//! * **Server** (coordinator `PgGraph::{csx,coo}_get_partitions`) — decodes
+//!   partitions *ahead* of consumption into a bounded staging window sized
+//!   by the §3 [`LoadModel`](crate::model::LoadModel) (see
+//!   [`prefetch_depth`]), with decode concurrency backpressured through
+//!   the coordinator's condvar [`BufferPool`](crate::coordinator::buffer).
+//! * **Consumers** ([`stream::PartitionStream`]) — a pull-based,
+//!   multi-consumer iterator with work-stealing hand-off: any number of
+//!   consumer threads drain the same stream, each `next()` handing out the
+//!   next staged partition. `algorithms::partitioned` ports BFS / WCC /
+//!   Afforest on top of it so computation runs *while* later partitions
+//!   load.
+
+pub mod stream;
+
+pub use stream::{LoadedPartition, PartitionStream, StreamCounters};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::VertexRange;
+use crate::formats::webgraph::WgOffsets;
+use crate::model::LoadModel;
+use crate::util::json::Json;
+
+/// How a [`PartitionPlan`] tiles the edge set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Vertex-aligned 1D split: each partition owns a consecutive source
+    /// vertex range (all of its rows' edges).
+    OneD,
+    /// 2D tiling: source-dimension edge-balanced row groups × even
+    /// target-vertex column ranges. Partition `(r, c)` owns the edges with
+    /// source in row group `r` *and* target in column range `c`.
+    TwoD { rows: usize, cols: usize },
+    /// Exact edge split (COO view): partition `k` owns global edges
+    /// `[m·k/p, m·(k+1)/p)`, cutting inside a vertex's list if needed.
+    Coo,
+}
+
+/// One partition of a plan — pure sidecar metadata, no graph data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    /// Position in the plan (stable across delivery order).
+    pub index: usize,
+    /// Source-vertex range covering this partition's edges.
+    pub vertices: VertexRange,
+    /// Global edge span `[start, end)`. For 1D/2D this is the *row* span of
+    /// `vertices` (a 2D tile's actual edge count is only known after
+    /// decode); for COO plans it is exact and edges outside it are trimmed.
+    pub edge_span: (u64, u64),
+    /// Target-vertex (column) range; `[0, n)` except for 2D tiles.
+    pub targets: VertexRange,
+}
+
+impl Partition {
+    /// Edges of the row span (exact for 1D/COO; an upper bound for 2D).
+    pub fn span_edges(&self) -> u64 {
+        self.edge_span.1 - self.edge_span.0
+    }
+}
+
+/// An edge-balanced partition plan over one graph, computed from the
+/// offsets sidecar alone in O(p log n).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionPlan {
+    pub kind: PlanKind,
+    pub num_vertices: usize,
+    pub num_edges: u64,
+    pub parts: Vec<Partition>,
+}
+
+/// Split `[0, n)` into `groups` source ranges of ~equal edge mass using
+/// O(groups · log n) Elias–Fano partition-point searches. Boundaries are
+/// monotone even on graphs with empty-vertex runs or extreme hubs (a hub
+/// heavier than `m/groups` simply gets a singleton group).
+fn edge_balanced_rows(offsets: &WgOffsets, n: usize, m: u64, groups: usize) -> Vec<usize> {
+    let groups = groups.max(1);
+    let mut bounds = Vec::with_capacity(groups + 1);
+    bounds.push(0usize);
+    for k in 1..groups {
+        let target = m * k as u64 / groups as u64;
+        // First vertex whose cumulative edge offset reaches the target.
+        let v = offsets.edge_partition_point(|e| e < target).min(n);
+        let prev = *bounds.last().expect("non-empty bounds");
+        bounds.push(v.max(prev));
+    }
+    bounds.push(n);
+    bounds
+}
+
+impl PartitionPlan {
+    /// Edge-balanced 1D plan: `parts` consecutive source-vertex ranges with
+    /// ~`m/parts` edges each (vertex-aligned; the partitioned counterpart
+    /// of `csx_get_subgraph`).
+    pub fn one_d(offsets: &WgOffsets, parts: usize) -> Self {
+        let n = offsets.num_vertices();
+        let m = offsets.num_edges();
+        let bounds = edge_balanced_rows(offsets, n, m, parts);
+        let plan_parts = bounds
+            .windows(2)
+            .enumerate()
+            .map(|(index, w)| Partition {
+                index,
+                vertices: VertexRange::new(w[0], w[1]),
+                edge_span: (offsets.edge_offset(w[0]), offsets.edge_offset(w[1])),
+                targets: VertexRange::new(0, n),
+            })
+            .collect();
+        Self { kind: PlanKind::OneD, num_vertices: n, num_edges: m, parts: plan_parts }
+    }
+
+    /// 2D plan: `rows` edge-balanced source row groups × `cols` even
+    /// target-vertex columns, row-major. Every edge lands in exactly one
+    /// tile (its source row group × its target column).
+    pub fn two_d(offsets: &WgOffsets, rows: usize, cols: usize) -> Self {
+        let n = offsets.num_vertices();
+        let m = offsets.num_edges();
+        let (rows, cols) = (rows.max(1), cols.max(1));
+        let row_bounds = edge_balanced_rows(offsets, n, m, rows);
+        let mut parts = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let vertices = VertexRange::new(row_bounds[r], row_bounds[r + 1]);
+            let edge_span =
+                (offsets.edge_offset(vertices.start), offsets.edge_offset(vertices.end));
+            for c in 0..cols {
+                let (t0, t1) = crate::util::chunk_range(n, cols, c);
+                parts.push(Partition {
+                    index: r * cols + c,
+                    vertices,
+                    edge_span,
+                    targets: VertexRange::new(t0, t1),
+                });
+            }
+        }
+        Self { kind: PlanKind::TwoD { rows, cols }, num_vertices: n, num_edges: m, parts }
+    }
+
+    /// Exact edge-split COO plan: partition `k` owns edges
+    /// `[m·k/p, m·(k+1)/p)` regardless of vertex boundaries — the finest
+    /// granularity of §4.2, perfectly balanced by construction.
+    pub fn coo(offsets: &WgOffsets, parts: usize) -> Self {
+        let n = offsets.num_vertices();
+        let m = offsets.num_edges();
+        let parts_n = parts.max(1);
+        let plan_parts = (0..parts_n)
+            .map(|k| {
+                let e0 = m * k as u64 / parts_n as u64;
+                let e1 = m * (k + 1) as u64 / parts_n as u64;
+                // Covering source-vertex span of [e0, e1): the row holding
+                // edge e0 through the row holding edge e1 - 1 (inclusive).
+                let (v0, v1) = if e0 == e1 {
+                    (0, 0)
+                } else {
+                    let v0 = offsets.edge_partition_point(|e| e <= e0).saturating_sub(1);
+                    let v1 = offsets.edge_partition_point(|e| e < e1).min(n);
+                    (v0, v1)
+                };
+                Partition {
+                    index: k,
+                    vertices: VertexRange::new(v0, v1),
+                    edge_span: (e0, e1),
+                    targets: VertexRange::new(0, n),
+                }
+            })
+            .collect();
+        Self { kind: PlanKind::Coo, num_vertices: n, num_edges: m, parts: plan_parts }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Edge-balance quality: max partition edge mass over the ideal
+    /// `m / parts` (1.0 = perfect). For 2D plans the row-span mass is
+    /// divided evenly over the row's tiles — the planner's *intent*, since
+    /// per-tile counts need a decode. ∞-free: empty graphs report 1.0.
+    pub fn balance_factor(&self) -> f64 {
+        if self.num_edges == 0 || self.parts.is_empty() {
+            return 1.0;
+        }
+        let ideal = self.num_edges as f64 / self.parts.len() as f64;
+        let max_mass = match self.kind {
+            PlanKind::TwoD { cols, .. } => self
+                .parts
+                .iter()
+                .map(|p| p.span_edges() as f64 / cols as f64)
+                .fold(0.0, f64::max),
+            _ => self.parts.iter().map(|p| p.span_edges() as f64).fold(0.0, f64::max),
+        };
+        max_mass / ideal
+    }
+
+    /// Validate internal consistency: spans within bounds, and — the
+    /// exactly-once guarantee — the edge spans *tile* `[0, m)`
+    /// contiguously (1D/COO; plus vertex-range tiling for 1D) or form a
+    /// proper row-major grid whose columns tile `[0, n)` per row group
+    /// (2D). A sum-only check would accept overlapping or gapped foreign
+    /// plans, which the server would then serve as silent double-delivery
+    /// / edge loss. Used by tests, `get_partitions`, and consumers
+    /// receiving a deserialized plan.
+    pub fn check(&self) -> Result<()> {
+        for (i, p) in self.parts.iter().enumerate() {
+            if p.index != i {
+                bail!("partition {i} carries index {}", p.index);
+            }
+            if p.vertices.start > p.vertices.end || p.vertices.end > self.num_vertices {
+                bail!("partition {i}: bad vertex range");
+            }
+            if p.edge_span.0 > p.edge_span.1 || p.edge_span.1 > self.num_edges {
+                bail!("partition {i}: bad edge span");
+            }
+            if p.targets.start > p.targets.end || p.targets.end > self.num_vertices {
+                bail!("partition {i}: bad target range");
+            }
+        }
+        match self.kind {
+            PlanKind::OneD | PlanKind::Coo => {
+                if self.parts.is_empty() {
+                    bail!("empty plan");
+                }
+                // Edge spans must tile [0, m) contiguously — not just sum
+                // to m — and only 2D tiles may narrow the target columns
+                // (a narrowed 1D/COO partition would silently drop edges
+                // at decode time).
+                let mut cursor = 0u64;
+                for p in &self.parts {
+                    if p.edge_span.0 != cursor {
+                        bail!(
+                            "partition {}: edge span starts at {} (expected {cursor})",
+                            p.index,
+                            p.edge_span.0
+                        );
+                    }
+                    cursor = p.edge_span.1;
+                    if p.targets.start != 0 || p.targets.end != self.num_vertices {
+                        bail!(
+                            "partition {}: {:?} plans must carry full targets",
+                            p.index,
+                            self.kind
+                        );
+                    }
+                }
+                if cursor != self.num_edges {
+                    bail!("plan covers {cursor} of {} edges", self.num_edges);
+                }
+                if matches!(self.kind, PlanKind::OneD) {
+                    // 1D additionally tiles the vertex space (complete
+                    // rows per partition).
+                    let mut v = 0usize;
+                    for p in &self.parts {
+                        if p.vertices.start != v {
+                            bail!("partition {}: vertex range not contiguous", p.index);
+                        }
+                        v = p.vertices.end;
+                    }
+                    if v != self.num_vertices {
+                        bail!("1D plan covers vertices 0..{v} of {}", self.num_vertices);
+                    }
+                }
+            }
+            PlanKind::TwoD { rows, cols } => {
+                if rows == 0 || cols == 0 || self.parts.len() != rows * cols {
+                    bail!(
+                        "2D plan has {} tiles, expected {rows}×{cols} (both nonzero)",
+                        self.parts.len()
+                    );
+                }
+                let mut row_v = 0usize;
+                let mut row_e = 0u64;
+                for r in 0..rows {
+                    let row = &self.parts[r * cols..(r + 1) * cols];
+                    // Row groups tile the vertex/edge space contiguously.
+                    if row[0].vertices.start != row_v || row[0].edge_span.0 != row_e {
+                        bail!("row group {r}: not contiguous with predecessor");
+                    }
+                    row_v = row[0].vertices.end;
+                    row_e = row[0].edge_span.1;
+                    // Tiles of one row share its range; columns tile [0, n).
+                    let mut col = 0usize;
+                    for t in row {
+                        if t.vertices != row[0].vertices || t.edge_span != row[0].edge_span {
+                            bail!("tile {}: row metadata mismatch", t.index);
+                        }
+                        if t.targets.start != col {
+                            bail!("tile {}: target columns not contiguous", t.index);
+                        }
+                        col = t.targets.end;
+                    }
+                    if col != self.num_vertices {
+                        bail!("row group {r}: columns cover 0..{col} of {}", self.num_vertices);
+                    }
+                }
+                if row_v != self.num_vertices || row_e != self.num_edges {
+                    bail!("2D row groups cover {row_v}v/{row_e}e of the graph");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serializable plan metadata (for a leader to ship to machines, and
+    /// for the CI metrics).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let kind = match self.kind {
+            PlanKind::OneD => "1d".to_string(),
+            PlanKind::TwoD { rows, cols } => format!("2d:{rows}x{cols}"),
+            PlanKind::Coo => "coo".to_string(),
+        };
+        o.set("kind", kind)
+            .set("num_vertices", self.num_vertices as f64)
+            .set("num_edges", self.num_edges as f64)
+            .set("balance_factor", self.balance_factor());
+        let pair = |a: f64, b: f64| Json::Arr(vec![Json::Num(a), Json::Num(b)]);
+        let mut arr = Json::Arr(vec![]);
+        for p in &self.parts {
+            let mut e = Json::obj();
+            e.set("v", pair(p.vertices.start as f64, p.vertices.end as f64))
+                .set("e", pair(p.edge_span.0 as f64, p.edge_span.1 as f64))
+                .set("t", pair(p.targets.start as f64, p.targets.end as f64));
+            arr.push(e);
+        }
+        o.set("parts", arr);
+        o
+    }
+}
+
+/// Model-driven prefetch depth: how many partitions the server stages
+/// ahead of consumption.
+///
+/// With load bandwidth `b = min(σ·r, d)` (§3's upper bound — what the
+/// staging pipeline can deliver) and the consumers' aggregate processing
+/// bandwidth `consume_bps` (uncompressed bytes/s), the loader can run
+/// `b / consume_bps` partitions ahead per partition consumed. Staging that
+/// many (+1 so the pipeline never starves between hand-offs) keeps both
+/// sides busy; staging more only buys memory pressure. On a slow tier
+/// (HDD: `b < consume`) the depth bottoms out at 2 — the loader cannot
+/// fill a deeper window anyway; on DRAM-class tiers it grows until
+/// `max_depth` (the memory budget, typically tied to the buffer count)
+/// caps it.
+pub fn prefetch_depth(model: &LoadModel, consume_bps: f64, max_depth: usize) -> usize {
+    let max_depth = max_depth.max(1);
+    if consume_bps <= 0.0 {
+        return max_depth;
+    }
+    let ratio = model.upper_bound() / consume_bps;
+    if !ratio.is_finite() {
+        return max_depth;
+    }
+    ((ratio.ceil() as usize).saturating_add(1)).clamp(1, max_depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::webgraph;
+    use crate::graph::generators;
+    use crate::graph::CsrGraph;
+
+    fn offsets_of(g: &CsrGraph) -> WgOffsets {
+        let (_, bit_offsets, _) = webgraph::compress(g, webgraph::WgParams::default());
+        WgOffsets::from_vecs(&bit_offsets, &g.offsets).expect("offsets")
+    }
+
+    #[test]
+    fn one_d_tiles_edges_exactly() {
+        for (gi, g) in [
+            generators::barabasi_albert(800, 6, 3),
+            generators::rmat(9, 6, 5), // skewed
+            CsrGraph::from_edges(50, &[(0, 1), (0, 2), (49, 0)]), // mostly empty vertices
+            CsrGraph::from_edges(10, &[]),                        // edgeless
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let offs = offsets_of(&g);
+            for parts in [1usize, 2, 3, 7, 16, 100] {
+                let plan = PartitionPlan::one_d(&offs, parts);
+                plan.check().unwrap_or_else(|e| panic!("graph {gi} parts {parts}: {e}"));
+                assert_eq!(plan.num_parts(), parts.max(1));
+                // Ranges tile [0, n).
+                assert_eq!(plan.parts[0].vertices.start, 0);
+                assert_eq!(plan.parts.last().unwrap().vertices.end, g.num_vertices());
+                for w in plan.parts.windows(2) {
+                    assert_eq!(w[0].vertices.end, w[1].vertices.start);
+                }
+                assert!(plan.balance_factor() >= 1.0 - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn coo_split_is_perfectly_balanced() {
+        let g = generators::rmat(9, 8, 7);
+        let offs = offsets_of(&g);
+        for parts in [1usize, 3, 8, 33] {
+            let plan = PartitionPlan::coo(&offs, parts);
+            plan.check().unwrap();
+            let max = plan.parts.iter().map(|p| p.span_edges()).max().unwrap();
+            let min = plan.parts.iter().map(|p| p.span_edges()).min().unwrap();
+            assert!(max - min <= 1, "parts {parts}: {min}..{max}");
+            // Max share is ceil(m/p) ⇒ factor ≤ 1 + p/m.
+            assert!(
+                plan.balance_factor() <= 1.0 + parts as f64 / plan.num_edges as f64 + 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn two_d_rows_and_columns_tile_the_square() {
+        let g = generators::barabasi_albert(600, 5, 11);
+        let offs = offsets_of(&g);
+        let plan = PartitionPlan::two_d(&offs, 3, 4);
+        plan.check().unwrap();
+        assert_eq!(plan.num_parts(), 12);
+        // Row-major tiles: every row group repeats over all 4 columns, and
+        // the columns tile [0, n) exactly.
+        for r in 0..3 {
+            let row = &plan.parts[r * 4..(r + 1) * 4];
+            assert_eq!(row[0].targets.start, 0);
+            assert_eq!(row[3].targets.end, g.num_vertices());
+            for w in row.windows(2) {
+                assert_eq!(w[0].vertices, w[1].vertices);
+                assert_eq!(w[0].targets.end, w[1].targets.start);
+            }
+        }
+    }
+
+    #[test]
+    fn planning_uses_only_the_sidecar_and_balances_skew() {
+        // A hub-heavy graph: balance must stay within 2× ideal when the
+        // hub itself is lighter than one share.
+        let g = generators::barabasi_albert(4000, 8, 17);
+        let offs = offsets_of(&g);
+        let plan = PartitionPlan::one_d(&offs, 8);
+        plan.check().unwrap();
+        assert!(
+            plan.balance_factor() < 2.0,
+            "1D balance factor {} too skewed",
+            plan.balance_factor()
+        );
+    }
+
+    #[test]
+    fn check_rejects_overlapping_and_gapped_plans() {
+        let g = generators::barabasi_albert(300, 4, 3);
+        let offs = offsets_of(&g);
+        let good = PartitionPlan::one_d(&offs, 4);
+        good.check().unwrap();
+        // Overlap: duplicate the first partition's span into the second —
+        // sums still equal m for a crafted pair, but tiling is violated.
+        let mut overlap = good.clone();
+        let first = overlap.parts[0];
+        overlap.parts[1].edge_span = first.edge_span;
+        overlap.parts[1].vertices = first.vertices;
+        assert!(overlap.check().is_err(), "overlapping spans must be rejected");
+        // Gap: shift a boundary without fixing the neighbor.
+        let mut gap = good.clone();
+        gap.parts[2].edge_span.0 += 1;
+        assert!(gap.check().is_err(), "gapped spans must be rejected");
+        // Degenerate 2D shapes.
+        let empty2d = PartitionPlan {
+            kind: PlanKind::TwoD { rows: 2, cols: 0 },
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            parts: Vec::new(),
+        };
+        assert!(empty2d.check().is_err(), "rows×0 grid must be rejected");
+        let empty = PartitionPlan {
+            kind: PlanKind::OneD,
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            parts: Vec::new(),
+        };
+        assert!(empty.check().is_err(), "empty 1D plan over a nonempty graph");
+    }
+
+    #[test]
+    fn plan_json_metadata() {
+        let g = generators::barabasi_albert(200, 4, 5);
+        let offs = offsets_of(&g);
+        let plan = PartitionPlan::two_d(&offs, 2, 2);
+        let s = plan.to_json().to_string_pretty();
+        assert!(s.contains("\"kind\""), "{s}");
+        assert!(s.contains("2d:2x2"), "{s}");
+        assert!(s.contains("\"balance_factor\""), "{s}");
+        assert!(s.contains("\"parts\""), "{s}");
+    }
+
+    #[test]
+    fn prefetch_depth_tracks_the_storage_tier() {
+        use crate::model::LoadModel;
+        let consume = 400e6; // consumer eats 400 MB/s of uncompressed CSR
+        let hdd = LoadModel { sigma: 160e6, r: 5.0, d: 1e9 };
+        let ssd = LoadModel { sigma: 3.6e9, r: 5.0, d: 4e9 };
+        let dram = LoadModel { sigma: 18e9, r: 5.0, d: 8e9 };
+        let d_hdd = prefetch_depth(&hdd, consume, 64);
+        let d_ssd = prefetch_depth(&ssd, consume, 64);
+        let d_dram = prefetch_depth(&dram, consume, 64);
+        assert!(d_hdd <= d_ssd && d_ssd <= d_dram, "{d_hdd} {d_ssd} {d_dram}");
+        assert!(d_hdd >= 2, "even a slow tier keeps one partition staged ahead");
+        // The memory cap binds on fast tiers.
+        assert_eq!(prefetch_depth(&dram, consume, 8), 8);
+        // Degenerate inputs stay sane.
+        assert_eq!(prefetch_depth(&hdd, 0.0, 16), 16);
+        let uncompressed = LoadModel { sigma: 1e9, r: 1.0, d: f64::INFINITY };
+        assert!(prefetch_depth(&uncompressed, 1e9, 16) >= 2);
+    }
+}

@@ -1,0 +1,418 @@
+//! Pull-based partition delivery: a bounded staging queue between the
+//! coordinator's partition server (producer side) and any number of
+//! consumer threads.
+//!
+//! The hand-off is *work-stealing*: consumers share one `next()` — whoever
+//! calls first takes the next staged partition, so a slow consumer never
+//! blocks the others (the multi-consumer drain the GAP/Ammar–Özsu-style
+//! evaluations need). Backpressure is two-level: decode concurrency is
+//! bounded by the coordinator's condvar
+//! [`BufferPool`](crate::coordinator::buffer::BufferPool) (a partition
+//! decode holds a buffer), and *staging depth* — decoded-but-unconsumed
+//! partitions — is bounded by the prefetch window
+//! ([`prefetch_depth`](super::prefetch_depth)): the producer parks on the
+//! stream's condvar when the window is full and is woken by the next
+//! consume.
+//!
+//! [`StreamCounters`] records the interleaving quality: a `next()` served
+//! from a non-empty window is a *prefetch hit* (the consumer never waited
+//! on storage); producer stalls count window-full backpressure events.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::Partition;
+use crate::formats::webgraph::DecodedBlock;
+use crate::graph::VertexId;
+
+/// One delivered partition: its plan metadata plus the decoded CSR slice
+/// (rows of `part.vertices`, edges filtered to `part.targets` for 2D tiles
+/// and trimmed to `part.edge_span` for COO plans). Owned by the consumer —
+/// the library buffer was recycled at hand-off.
+#[derive(Debug)]
+pub struct LoadedPartition {
+    pub part: Partition,
+    pub block: DecodedBlock,
+}
+
+impl LoadedPartition {
+    pub fn num_edges(&self) -> u64 {
+        self.block.num_edges()
+    }
+
+    /// Iterate the partition's `(src, dst)` pairs.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        let first = self.block.first_vertex;
+        (0..self.block.num_vertices()).flat_map(move |i| {
+            let v = (first + i) as VertexId;
+            self.block.neighbors(i).iter().map(move |&d| (v, d))
+        })
+    }
+
+    /// Successors of global vertex `v` within this partition (the rows of
+    /// 1D partitions are complete adjacency lists; 2D/COO rows are the
+    /// tile's filtered view).
+    pub fn neighbors(&self, v: usize) -> &[VertexId] {
+        self.block.neighbors(v - self.block.first_vertex)
+    }
+}
+
+/// Interleaving counters of one stream (cumulative, race-tolerant).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamCounters {
+    /// Partitions staged by the producer.
+    pub produced: u64,
+    /// Partitions handed to consumers.
+    pub consumed: u64,
+    /// `next()` calls served without waiting (window non-empty).
+    pub prefetch_hits: u64,
+    /// `next()` calls that had to park for the producer.
+    pub consumer_stalls: u64,
+    /// Producer waits on a full window (consumers were the bottleneck).
+    pub producer_stalls: u64,
+}
+
+impl StreamCounters {
+    /// Fraction of consumer pulls that never touched storage latency.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.consumer_stalls;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct StreamState {
+    ready: VecDeque<LoadedPartition>,
+    /// Window slots reserved by the producer (in-flight decodes + staged).
+    scheduled: usize,
+    /// Partitions pushed so far (staged + already consumed).
+    produced: usize,
+    /// Partitions handed out.
+    consumed: usize,
+    /// Producer finished (all partitions staged, or bailed on cancel).
+    done_producing: bool,
+    /// First decode failure; poisons the stream.
+    failed: Option<String>,
+}
+
+/// Shared core of a [`PartitionStream`] (producer and consumers both hold
+/// an `Arc`).
+#[derive(Debug)]
+pub struct StreamShared {
+    state: Mutex<StreamState>,
+    /// Consumers park here for items; the producer parks here for window
+    /// space. Both directions notify on every transition.
+    cv: Condvar,
+    window: usize,
+    total: usize,
+    cancelled: AtomicBool,
+    hits: AtomicU64,
+    consumer_stalls: AtomicU64,
+    producer_stalls: AtomicU64,
+}
+
+impl StreamShared {
+    pub(crate) fn new(total: usize, window: usize) -> Arc<Self> {
+        Arc::new(Self {
+            // A zero-partition stream is born exhausted — consumers must
+            // see Ok(None), not park for pushes that will never come.
+            state: Mutex::new(StreamState { done_producing: total == 0, ..Default::default() }),
+            cv: Condvar::new(),
+            window: window.max(1),
+            total,
+            cancelled: AtomicBool::new(false),
+            hits: AtomicU64::new(0),
+            consumer_stalls: AtomicU64::new(0),
+            producer_stalls: AtomicU64::new(0),
+        })
+    }
+
+    /// Producer: block until a staging-window slot is free, then *reserve*
+    /// it (or return false when producing should stop). The reservation
+    /// counts in-flight decodes as well as staged partitions, so the
+    /// dispatcher can never run more than `window` partitions ahead of
+    /// consumption even while every decode is still on a worker.
+    pub(crate) fn wait_for_window(&self) -> bool {
+        let mut g = self.state.lock().expect("stream lock");
+        let mut stalled = false;
+        loop {
+            if self.cancelled.load(Ordering::Acquire) || g.failed.is_some() {
+                return false;
+            }
+            if g.scheduled.saturating_sub(g.consumed) < self.window {
+                g.scheduled += 1;
+                return true;
+            }
+            if !stalled {
+                stalled = true;
+                self.producer_stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            g = self.cv.wait(g).expect("stream producer wait");
+        }
+    }
+
+    /// Producer: stage one decoded partition.
+    pub(crate) fn push(&self, item: LoadedPartition) {
+        let mut g = self.state.lock().expect("stream lock");
+        g.produced += 1;
+        if !self.cancelled.load(Ordering::Acquire) {
+            g.ready.push_back(item);
+        }
+        if g.produced >= self.total {
+            g.done_producing = true;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Producer: record a failed decode; poisons the stream.
+    pub(crate) fn fail(&self, message: String) {
+        let mut g = self.state.lock().expect("stream lock");
+        g.failed.get_or_insert(message);
+        g.done_producing = true;
+        self.cv.notify_all();
+    }
+
+    /// Producer: mark the end of production (used on cancellation exits so
+    /// consumers don't wait for partitions that will never arrive).
+    pub(crate) fn finish_producing(&self) {
+        let mut g = self.state.lock().expect("stream lock");
+        g.done_producing = true;
+        self.cv.notify_all();
+    }
+
+    fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+        let mut g = self.state.lock().expect("stream lock");
+        g.ready.clear(); // staged items will never be consumed
+        self.cv.notify_all();
+    }
+
+    fn next(&self) -> Result<Option<LoadedPartition>> {
+        let mut g = self.state.lock().expect("stream lock");
+        let mut stalled = false;
+        loop {
+            if let Some(e) = &g.failed {
+                bail!("partition stream failed: {e}");
+            }
+            if self.cancelled.load(Ordering::Acquire) {
+                return Ok(None);
+            }
+            if let Some(item) = g.ready.pop_front() {
+                g.consumed += 1;
+                if stalled {
+                    self.consumer_stalls.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                // Wake the producer parked on window space (and fellow
+                // consumers racing for remaining items).
+                self.cv.notify_all();
+                return Ok(Some(item));
+            }
+            if g.done_producing {
+                return Ok(None);
+            }
+            stalled = true;
+            g = self.cv.wait(g).expect("stream consumer wait");
+        }
+    }
+
+    fn counters(&self) -> StreamCounters {
+        let g = self.state.lock().expect("stream lock");
+        StreamCounters {
+            produced: g.produced as u64,
+            consumed: g.consumed as u64,
+            prefetch_hits: self.hits.load(Ordering::Relaxed),
+            consumer_stalls: self.consumer_stalls.load(Ordering::Relaxed),
+            producer_stalls: self.producer_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The consumer handle of a partitioned request — shareable across any
+/// number of consumer threads (`&self` everywhere, internally locked).
+/// Dropping the stream cancels outstanding production and joins the
+/// server's dispatcher thread.
+#[derive(Debug)]
+pub struct PartitionStream {
+    shared: Arc<StreamShared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PartitionStream {
+    /// Assemble a stream from its shared core and the server's dispatcher
+    /// handle (coordinator-internal constructor).
+    pub(crate) fn new(
+        shared: Arc<StreamShared>,
+        dispatcher: std::thread::JoinHandle<()>,
+    ) -> Self {
+        Self { shared, dispatcher: Some(dispatcher) }
+    }
+
+    /// Total partitions this stream will deliver when fully drained.
+    pub fn total_parts(&self) -> usize {
+        self.shared.total
+    }
+
+    /// Pull the next staged partition. Blocks while the producer is
+    /// behind; `Ok(None)` once the stream is exhausted or cancelled; `Err`
+    /// if any partition failed to decode. Safe to call from many threads —
+    /// each partition is handed to exactly one caller (work stealing).
+    pub fn next(&self) -> Result<Option<LoadedPartition>> {
+        self.shared.next()
+    }
+
+    /// Cancel: unscheduled partitions are dropped, staged ones discarded;
+    /// consumers see `Ok(None)`, the producer stops at the next window
+    /// check.
+    pub fn cancel(&self) {
+        self.shared.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.shared.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Interleaving counters (prefetch hit rate, stalls).
+    pub fn counters(&self) -> StreamCounters {
+        self.shared.counters()
+    }
+
+    /// Drain the whole stream on the calling thread (single-consumer
+    /// convenience; tests and oracles).
+    pub fn collect_all(&self) -> Result<Vec<LoadedPartition>> {
+        let mut out = Vec::new();
+        while let Some(p) = self.next()? {
+            out.push(p);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for PartitionStream {
+    fn drop(&mut self) {
+        self.shared.cancel();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::VertexRange;
+
+    fn dummy_partition(index: usize) -> LoadedPartition {
+        LoadedPartition {
+            part: Partition {
+                index,
+                vertices: VertexRange::new(0, 2),
+                edge_span: (0, 3),
+                targets: VertexRange::new(0, 2),
+            },
+            block: DecodedBlock {
+                first_vertex: 0,
+                offsets: vec![0, 2, 3],
+                edges: vec![1, 0, 1],
+            },
+        }
+    }
+
+    /// Stand-in producer thread for stream-only tests.
+    fn spawn_producer(shared: Arc<StreamShared>, total: usize) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            for i in 0..total {
+                if !shared.wait_for_window() {
+                    break;
+                }
+                shared.push(dummy_partition(i));
+            }
+            shared.finish_producing();
+        })
+    }
+
+    #[test]
+    fn two_consumers_drain_every_partition_once() {
+        let shared = StreamShared::new(40, 4);
+        let stream = PartitionStream::new(Arc::clone(&shared), spawn_producer(shared, 40));
+        let seen = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    while let Some(p) = stream.next().expect("next") {
+                        seen.lock().unwrap().push(p.part.index);
+                    }
+                });
+            }
+        });
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..40).collect::<Vec<_>>());
+        let c = stream.counters();
+        assert_eq!(c.produced, 40);
+        assert_eq!(c.consumed, 40);
+        assert_eq!(c.prefetch_hits + c.consumer_stalls, 40);
+    }
+
+    #[test]
+    fn window_bounds_staging_depth() {
+        let shared = StreamShared::new(10, 2);
+        let stream =
+            PartitionStream::new(Arc::clone(&shared), spawn_producer(Arc::clone(&shared), 10));
+        // Let the producer run ahead: it must stall at 2 staged.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        {
+            let g = shared.state.lock().unwrap();
+            assert!(g.ready.len() <= 2, "staging depth {} exceeds window", g.ready.len());
+        }
+        let all = stream.collect_all().unwrap();
+        assert_eq!(all.len(), 10);
+        assert!(stream.counters().producer_stalls >= 1);
+    }
+
+    #[test]
+    fn cancel_unblocks_everyone() {
+        let shared = StreamShared::new(1000, 1);
+        let stream =
+            PartitionStream::new(Arc::clone(&shared), spawn_producer(Arc::clone(&shared), 1000));
+        let _ = stream.next().unwrap();
+        stream.cancel();
+        // Consumers see exhaustion, not a hang.
+        assert!(stream.next().unwrap().is_none());
+        assert!(stream.is_cancelled());
+    }
+
+    #[test]
+    fn failure_poisons_the_stream() {
+        let shared = StreamShared::new(5, 2);
+        let s2 = Arc::clone(&shared);
+        let producer = std::thread::spawn(move || {
+            s2.push(dummy_partition(0));
+            s2.fail("disk on fire".into());
+        });
+        let stream = PartitionStream::new(shared, producer);
+        // The staged partition may or may not be consumed before the error
+        // lands; either way the error must surface, and then stick.
+        let mut saw_err = false;
+        for _ in 0..3 {
+            match stream.next() {
+                Err(e) => {
+                    assert!(e.to_string().contains("disk on fire"));
+                    saw_err = true;
+                    break;
+                }
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+            }
+        }
+        assert!(saw_err, "decode failure must reach consumers");
+    }
+}

@@ -16,18 +16,28 @@
 //! i-th set bit with a sampled select (one sample every [`SELECT_QUANTUM`]
 //! ones, then a popcount scan). The scan covers one inter-sample span,
 //! which averages ~2·[`SELECT_QUANTUM`] bits (global density of the
-//! high-bits vector is ~1/2), so access is O(1) *expected*. Worst case is
-//! a span stretched by one giant value gap — e.g. the edge-offsets entry
-//! of a hub vertex whose degree is far above the mean — where the scan is
-//! O(gap / 64) words for indices in that quantum; a sux-style sparse
-//! "spill" for stretched spans would make it worst-case O(1) and is noted
-//! as a ROADMAP item.
+//! high-bits vector is ~1/2), so access is O(1) *expected*. Spans
+//! stretched by one giant value gap — e.g. the edge-offsets entry of a
+//! hub vertex whose degree is far above the mean — would degrade the scan
+//! to O(gap / 64) words, so quanta wider than [`SPILL_SPAN_BITS`] carry a
+//! sux-style *spill*: the explicit position of every set bit in the
+//! quantum, making `get` worst-case O(1) on extreme hubs too.
 
 use std::fmt;
 
 /// One select sample per this many set bits. 64 keeps the scan within a
 /// couple of words (the high-bits vector holds ~2 bits per element).
 const SELECT_QUANTUM: usize = 64;
+
+/// A quantum whose set bits stretch over more than this many bits of the
+/// high vector gets an explicit spill (positions of all its ones). At the
+/// ~1/2 global density the typical span is ~2·[`SELECT_QUANTUM`] bits, so
+/// 16× that only triggers on genuinely skewed gaps; the spill then costs
+/// ≤ [`SELECT_QUANTUM`] words per stretched quantum.
+const SPILL_SPAN_BITS: usize = SELECT_QUANTUM * 32;
+
+/// Sentinel in `spill_index` marking a quantum without a spill.
+const NO_SPILL: u64 = u64::MAX;
 
 /// Errors from [`EliasFanoBuilder::push`] — a corrupt sidecar must surface
 /// as `Err`, never as a panic or an unbounded allocation.
@@ -76,6 +86,12 @@ pub struct EliasFano {
     highs: Vec<u64>,
     /// Bit position (in `highs`) of every `SELECT_QUANTUM`-th set bit.
     select_samples: Vec<u64>,
+    /// Per-quantum offset into `spill`, or [`NO_SPILL`]. Only quanta whose
+    /// span exceeds [`SPILL_SPAN_BITS`] are materialized.
+    spill_index: Vec<u64>,
+    /// Explicit bit positions of every one in each spilled quantum,
+    /// quantum-major.
+    spill: Vec<u64>,
 }
 
 /// Streaming builder: declare `len` and `universe` up front (both are in
@@ -117,6 +133,8 @@ impl EliasFanoBuilder {
                 lows: vec![0u64; low_words],
                 highs: vec![0u64; high_words],
                 select_samples: Vec::with_capacity(len / SELECT_QUANTUM + 1),
+                spill_index: Vec::new(),
+                spill: Vec::new(),
             },
             pushed: 0,
             last: 0,
@@ -159,7 +177,9 @@ impl EliasFanoBuilder {
         if self.pushed != self.ef.len {
             return Err(EfError::TooFew { pushed: self.pushed, expected: self.ef.len });
         }
-        Ok(self.ef)
+        let mut ef = self.ef;
+        ef.build_spill();
+        Ok(ef)
     }
 }
 
@@ -213,9 +233,57 @@ impl EliasFano {
         v & ((1u64 << l) - 1)
     }
 
+    /// One linear pass over the high-bits vector after construction:
+    /// any quantum of `SELECT_QUANTUM` consecutive ones spanning more than
+    /// [`SPILL_SPAN_BITS`] bits gets its positions materialized, so
+    /// [`Self::select1`] never scans a stretched span. O(highs) time, run
+    /// once per build; the spill is empty for well-behaved sequences.
+    fn build_spill(&mut self) {
+        let quanta = crate::util::ceil_div(self.len.max(1), SELECT_QUANTUM);
+        self.spill_index = vec![NO_SPILL; quanta];
+        self.spill.clear();
+        if self.len == 0 {
+            return;
+        }
+        let mut scratch: Vec<u64> = Vec::with_capacity(SELECT_QUANTUM);
+        let mut q = 0usize;
+        let mut word_idx = 0usize;
+        let mut word = self.highs[0];
+        let mut i = 0usize;
+        while i < self.len {
+            while word == 0 {
+                word_idx += 1;
+                word = self.highs[word_idx];
+            }
+            let pos = (word_idx * 64 + word.trailing_zeros() as usize) as u64;
+            word &= word - 1;
+            scratch.push(pos);
+            i += 1;
+            if i % SELECT_QUANTUM == 0 || i == self.len {
+                let span = (scratch[scratch.len() - 1] - scratch[0]) as usize;
+                if span > SPILL_SPAN_BITS {
+                    self.spill_index[q] = self.spill.len() as u64;
+                    self.spill.extend_from_slice(&scratch);
+                }
+                scratch.clear();
+                q += 1;
+            }
+        }
+    }
+
+    /// Number of quanta carrying an explicit spill (hub-span diagnostics).
+    pub fn spilled_quanta(&self) -> usize {
+        self.spill_index.iter().filter(|&&o| o != NO_SPILL).count()
+    }
+
     /// Bit position in `highs` of the i-th set bit.
     #[inline]
     fn select1(&self, i: usize) -> usize {
+        // Worst-case O(1) fast path: stretched quanta are materialized.
+        let spilled = self.spill_index[i / SELECT_QUANTUM];
+        if spilled != NO_SPILL {
+            return self.spill[spilled as usize + i % SELECT_QUANTUM] as usize;
+        }
         let sample = self.select_samples[i / SELECT_QUANTUM] as usize;
         // Ones still to skip; the sampled bit itself is the 0th.
         let mut remaining = i % SELECT_QUANTUM;
@@ -255,7 +323,12 @@ impl EliasFano {
 
     /// Heap footprint of the compressed structure in bytes.
     pub fn size_bytes(&self) -> usize {
-        (self.lows.len() + self.highs.len() + self.select_samples.len()) * 8
+        (self.lows.len()
+            + self.highs.len()
+            + self.select_samples.len()
+            + self.spill_index.len()
+            + self.spill.len())
+            * 8
             + std::mem::size_of::<Self>()
     }
 
@@ -398,6 +471,44 @@ mod tests {
             ef.size_bytes(),
             ef.plain_size_bytes()
         );
+    }
+
+    #[test]
+    fn hub_spans_are_spilled_and_exact() {
+        // An edge-offsets-like sequence with extreme hubs: mostly small
+        // degrees, but a few vertices whose degree stretches one select
+        // quantum far past SPILL_SPAN_BITS. Without the spill, get() inside
+        // those quanta scans O(gap/64) words; with it, every index is O(1)
+        // — and, crucially, still exact.
+        // low_bits adapts to the universe (≈ log2(u/n)), so a hub's jump in
+        // the high vector is ≈ gap / (u/n) ≈ n / hubs bits: two hubs among
+        // 10k values stretch their quanta by ~5000 bits — past the bar.
+        let mut values = Vec::new();
+        let mut acc = 0u64;
+        for v in 0..10_000u64 {
+            acc += if v == 2500 || v == 7500 { 1 << 30 } else { 1 + v % 3 };
+            values.push(acc);
+        }
+        let ef = EliasFano::from_monotone(&values).expect("build");
+        assert!(
+            ef.spilled_quanta() > 0,
+            "hub gaps of 2^22 must stretch at least one quantum past the spill bar"
+        );
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(ef.get(i), v, "index {i}");
+        }
+        // partition_point (binary search over get) stays consistent too.
+        for probe in [0u64, 1 << 21, 1 << 22, acc, acc + 1] {
+            assert_eq!(
+                ef.partition_point(|v| v < probe),
+                values.partition_point(|&v| v < probe),
+                "probe {probe}"
+            );
+        }
+        // A smooth sequence must not pay for the machinery.
+        let smooth: Vec<u64> = (0..10_000).map(|i| i * 3).collect();
+        let smooth_ef = EliasFano::from_monotone(&smooth).unwrap();
+        assert_eq!(smooth_ef.spilled_quanta(), 0, "no spill on uniform gaps");
     }
 
     #[test]

@@ -73,6 +73,192 @@ impl ThreadPool {
             .send(Box::new(job))
             .expect("pool workers gone");
     }
+
+    /// Run `f(0..parts)` across this pool's workers *borrowing from the
+    /// caller* — the scoped/borrowed-job submission the coordinator's
+    /// intra-block decode fan-out needs (ROADMAP item: `decode_workers > 1`
+    /// used to spawn that many scoped OS threads per block).
+    ///
+    /// Up to `max_helpers` helper jobs are enqueued on the pool; the caller
+    /// always participates in the index loop itself, so the call makes
+    /// progress even when every worker is busy (in particular when the
+    /// caller *is* a pool worker — no deadlock by construction). Blocks
+    /// until every index has finished, which is what makes handing
+    /// non-`'static` borrows to pool workers sound: the borrow provably
+    /// outlives every access.
+    ///
+    /// A panicking index is counted as finished (mirroring the pool's
+    /// catch-unwind policy) so the caller never hangs; error reporting
+    /// belongs in `f`'s own channel (e.g. a `Result` slot per index).
+    pub fn scoped_for<F>(&self, parts: usize, max_helpers: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if parts == 0 {
+            return;
+        }
+        let done = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let next = Arc::new(AtomicUsize::new(0));
+        // Lifetime erasure: hand `&f` to 'static pool jobs as a raw fat
+        // pointer. A helper only reconstructs the reference *after*
+        // claiming a valid index, and an index can only be claimable while
+        // this call is still blocked in `WaitAll` below (the caller loop
+        // drains the counter before it can return) — so the borrow is
+        // provably live at every dereference, even for helper jobs that
+        // reach the front of a saturated queue long after we returned
+        // (those see an exhausted counter and exit without touching `f`).
+        let f_wide: &(dyn Fn(usize) + Sync) = &f;
+        let f_ptr = ErasedFn(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f_wide)
+        });
+        let helpers = max_helpers.min(self.threads()).min(parts.saturating_sub(1));
+        for _ in 0..helpers {
+            let f_ptr = f_ptr;
+            let next = Arc::clone(&next);
+            let done = Arc::clone(&done);
+            self.execute(move || loop {
+                let Some(i) = next_claim(&next, parts) else { break };
+                // Count the index as done even if f(i) panics (drop
+                // guard), so the submitter's wait always terminates.
+                let _guard = DoneGuard(&done);
+                // SAFETY: a valid index was claimed, so the submitting
+                // scoped_for is still parked in WaitAll and `f` is alive.
+                let fp = unsafe { &*f_ptr.0 };
+                fp(i);
+            });
+        }
+        // Declared before the caller loop so it drops *after* the loop's
+        // guards: even if `f` panics on the caller thread, unwinding blocks
+        // here until every helper is done touching the borrow.
+        let _wait_all = WaitAll { done: &done, parts };
+        // Declared after WaitAll so it drops *first* during unwind: if the
+        // caller's `f` panics, the never-claimed tail of the index space
+        // would otherwise keep WaitAll parked forever (helpers may be
+        // absent or stuck behind the panicking caller's own pool slot).
+        // The guard retires that tail: it poisons the claim counter and
+        // counts every index that no one will ever claim, so WaitAll only
+        // waits for indices actually claimed by someone.
+        let mut abort = AbortGuard { next: &next, done: &done, parts, armed: true };
+        // The caller participates too: progress is guaranteed even when
+        // every pool worker is busy (e.g. when the caller IS one).
+        loop {
+            let Some(i) = next_claim(&next, parts) else { break };
+            let _guard = DoneGuard(&done);
+            f(i);
+        }
+        abort.armed = false; // clean exit: the counter is exhausted
+    }
+}
+
+/// Unwind-path bookkeeping for [`ThreadPool::scoped_for`]: retires the
+/// never-claimed tail of the index space so the final wait terminates
+/// even when the caller's closure panicked mid-loop.
+struct AbortGuard<'a> {
+    next: &'a Arc<AtomicUsize>,
+    done: &'a Arc<(Mutex<usize>, std::sync::Condvar)>,
+    parts: usize,
+    armed: bool,
+}
+
+impl Drop for AbortGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Poison the counter (helpers see an exhausted range; usize::MAX/2
+        // leaves headroom for their subsequent fetch_adds). `claimed` is
+        // exact: an index i was handed to some claimant iff i < claimed,
+        // and that claimant's DoneGuard counts it — so counting the tail
+        // here double-counts nothing.
+        let claimed = self.next.swap(usize::MAX / 2, Ordering::SeqCst).min(self.parts);
+        let missing = self.parts - claimed;
+        if missing > 0 {
+            let (mx, cv) = &**self.done;
+            let mut g = mx.lock().expect("scoped_for done lock");
+            *g += missing;
+            cv.notify_all();
+        }
+    }
+}
+
+/// Lifetime-erased closure pointer for [`ThreadPool::scoped_for`]. Only
+/// dereferenced after claiming a valid index (see the SAFETY argument at
+/// the use site).
+struct ErasedFn(*const (dyn Fn(usize) + Sync + 'static));
+impl Clone for ErasedFn {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl Copy for ErasedFn {}
+// SAFETY: the pointee is `Sync`, and liveness at every dereference is
+// guaranteed by the scoped_for claim protocol.
+unsafe impl Send for ErasedFn {}
+
+/// Blocks (on drop — so also during unwind) until all indices of a
+/// [`ThreadPool::scoped_for`] call are finished.
+struct WaitAll<'a> {
+    done: &'a Arc<(Mutex<usize>, std::sync::Condvar)>,
+    parts: usize,
+}
+
+impl Drop for WaitAll<'_> {
+    fn drop(&mut self) {
+        let (mx, cv) = &**self.done;
+        let mut g = mx.lock().expect("scoped_for done lock");
+        while *g < self.parts {
+            g = cv.wait(g).expect("scoped_for done wait");
+        }
+    }
+}
+
+/// Claim the next index below `parts`, or `None` when exhausted.
+#[inline]
+fn next_claim(next: &AtomicUsize, parts: usize) -> Option<usize> {
+    let i = next.fetch_add(1, Ordering::Relaxed);
+    if i < parts {
+        Some(i)
+    } else {
+        None
+    }
+}
+
+/// Counts one finished index on drop (also on unwind).
+struct DoneGuard<'a>(&'a Arc<(Mutex<usize>, std::sync::Condvar)>);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let (mx, cv) = &**self.0;
+        let mut g = mx.lock().expect("scoped_for done lock");
+        *g += 1;
+        cv.notify_all();
+    }
+}
+
+/// Ordered parallel map over `0..parts` executed on `pool` workers (plus
+/// the caller), borrowing from the caller like [`ThreadPool::scoped_for`].
+/// The pooled twin of [`parallel_map`].
+pub fn parallel_map_on<T, F>(pool: &ThreadPool, parts: usize, max_helpers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut slots: Vec<Option<T>> = (0..parts).map(|_| None).collect();
+    {
+        let slots_ptr = SendPtr(slots.as_mut_ptr());
+        pool.scoped_for(parts, max_helpers, |i| {
+            let value = f(i);
+            // SAFETY: each index is claimed exactly once, so writes are
+            // disjoint; scoped_for joins before `slots` is read.
+            unsafe {
+                slots_ptr.write(i, Some(value));
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("every slot filled")).collect()
 }
 
 impl Drop for ThreadPool {
@@ -227,5 +413,93 @@ mod tests {
     fn parallel_map_zero_parts() {
         let out: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_for_borrows_and_covers_all() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..123).map(|_| AtomicU64::new(0)).collect();
+        // `hits` is a caller borrow handed to pool workers — the ROADMAP
+        // borrowed-job semantics.
+        pool.scoped_for(123, 3, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn scoped_for_progresses_when_pool_is_saturated() {
+        // Every worker is parked on a gate; the caller's own loop must
+        // still finish all indices (no-deadlock-by-construction).
+        let pool = ThreadPool::new(2);
+        let gate = Arc::new(AtomicU64::new(0));
+        for _ in 0..2 {
+            let gate = Arc::clone(&gate);
+            pool.execute(move || {
+                while gate.load(Ordering::SeqCst) == 0 {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let sum = AtomicU64::new(0);
+        pool.scoped_for(50, 2, |i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..50u64).sum());
+        gate.store(1, Ordering::SeqCst); // release parked workers
+    }
+
+    #[test]
+    fn scoped_for_nested_from_a_pool_worker() {
+        // A pool job fanning out over the same pool (the coordinator's
+        // per-block decode pattern) must not deadlock.
+        let pool = Arc::new(ThreadPool::new(2));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let p2 = Arc::clone(&pool);
+        pool.execute(move || {
+            let acc = AtomicU64::new(0);
+            p2.scoped_for(40, 4, |i| {
+                acc.fetch_add(i as u64 + 1, Ordering::SeqCst);
+            });
+            tx.send(acc.load(Ordering::SeqCst)).unwrap();
+        });
+        let got = rx.recv_timeout(std::time::Duration::from_secs(30)).expect("nested fan-out");
+        assert_eq!(got, (1..=40u64).sum());
+    }
+
+    #[test]
+    fn scoped_for_caller_panic_unwinds_instead_of_hanging() {
+        // No helpers: the caller is the only claimant. A panic mid-loop
+        // must propagate (AbortGuard retires the unclaimed tail) rather
+        // than leave the unwinding thread parked in WaitAll forever.
+        let pool = ThreadPool::new(2);
+        let ran = AtomicU64::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_for(10, 0, |i| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if i == 0 {
+                    panic!("injected caller panic");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "loop stopped at the panic");
+        // The pool is still usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.scoped_for(5, 2, |i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_on_matches_parallel_map() {
+        let pool = ThreadPool::new(3);
+        let out = parallel_map_on(&pool, 77, 2, |i| i * i);
+        assert_eq!(out, (0..77).map(|i| i * i).collect::<Vec<_>>());
+        let empty: Vec<u32> = parallel_map_on(&pool, 0, 2, |_| unreachable!());
+        assert!(empty.is_empty());
     }
 }

@@ -1,0 +1,362 @@
+//! Integration tests of the partitioned request subsystem: plan coverage
+//! properties over the real coordinator, partitioned-algorithm equality
+//! with full-load oracles, prefetch/backpressure behaviour, and the §3
+//! interleaved-vs-sequential envelope.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use paragrapher::algorithms::partitioned::{
+    afforest_partitioned, bfs_partitioned, for_each_partition, wcc_jtcc_partitioned,
+    wcc_label_prop_partitioned,
+};
+use paragrapher::coordinator::{GraphType, Options, Paragrapher, PgGraph};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::{generators, CsrGraph, VertexId};
+use paragrapher::partition::PartitionPlan;
+use paragrapher::storage::{DeviceKind, SimStore};
+
+fn open_graph(g: &CsrGraph, buffers: usize) -> (Arc<SimStore>, PgGraph) {
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(g, "g") {
+        store.put(&name, data);
+    }
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store),
+            "g",
+            GraphType::CsxWg400,
+            Options { buffers, buffer_edges: 4096, ..Options::default() },
+        )
+        .expect("open");
+    (store, graph)
+}
+
+/// Drain a stream and return every delivered `(src, dst)` edge.
+fn drain_edges(graph: &PgGraph, plan: PartitionPlan, consumers: usize) -> Vec<(u32, u32)> {
+    let stream = graph.get_partitions(plan).expect("get_partitions");
+    let edges = Mutex::new(Vec::new());
+    for_each_partition(&stream, consumers, |p| {
+        let mut batch: Vec<(u32, u32)> = p.iter_edges().collect();
+        edges.lock().unwrap().append(&mut batch);
+        Ok(())
+    })
+    .expect("drain");
+    edges.into_inner().unwrap()
+}
+
+fn edge_multiset(g: &CsrGraph) -> HashMap<(u32, u32), usize> {
+    let mut m = HashMap::new();
+    for (s, d) in g.iter_edges() {
+        *m.entry((s, d)).or_insert(0) += 1;
+    }
+    m
+}
+
+fn assert_exact_cover(g: &CsrGraph, delivered: &[(u32, u32)]) {
+    let mut got: HashMap<(u32, u32), usize> = HashMap::new();
+    for &e in delivered {
+        *got.entry(e).or_insert(0) += 1;
+    }
+    assert_eq!(delivered.len() as u64, g.num_edges(), "edge count");
+    assert_eq!(got, edge_multiset(g), "edge multiset");
+}
+
+/// Property: every plan kind covers all m edges exactly once, through the
+/// real coordinator, on skewed and empty-vertex graphs.
+#[test]
+fn plans_cover_every_edge_exactly_once() {
+    let skewed = generators::rmat(9, 6, 5);
+    let mut sparse_edges = vec![(0u32, 1u32), (0, 40), (77, 3)];
+    sparse_edges.sort_unstable();
+    let sparse = CsrGraph::from_edges(120, &sparse_edges); // mostly empty vertices
+    for (gi, g) in [skewed, sparse, generators::barabasi_albert(700, 5, 9)]
+        .into_iter()
+        .enumerate()
+    {
+        let (_store, graph) = open_graph(&g, 3);
+        let offs = graph.offsets_index();
+        for (pi, plan) in [
+            PartitionPlan::one_d(offs, 5),
+            PartitionPlan::one_d(offs, 64),
+            PartitionPlan::two_d(offs, 3, 4),
+            PartitionPlan::two_d(offs, 1, 7),
+            PartitionPlan::coo(offs, 6),
+            PartitionPlan::coo(offs, 37),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            plan.check().expect("plan consistency");
+            let delivered = drain_edges(&graph, plan, 2);
+            assert_eq!(
+                delivered.len() as u64,
+                g.num_edges(),
+                "graph {gi} plan {pi}: delivered count"
+            );
+            assert_exact_cover(&g, &delivered);
+        }
+    }
+}
+
+/// Partitioned WCC / BFS / Afforest equal their full-load counterparts.
+#[test]
+fn partitioned_algorithms_match_full_load() {
+    let g = generators::rmat(9, 4, 11).symmetrize();
+    let (_store, graph) = open_graph(&g, 3);
+    let n = g.num_vertices();
+
+    // JT-CC over COO partitions == full-load JT-CC (order-invariant).
+    let full_uf = paragrapher::algorithms::jtcc::JtUnionFind::new(n, 5);
+    for (s, d) in g.iter_edges() {
+        full_uf.union(s, d);
+    }
+    let full = paragrapher::algorithms::canonicalize(&full_uf.labels());
+    let part = wcc_jtcc_partitioned(|| graph.coo_get_partitions(7), n, 3, 5).expect("jtcc");
+    assert_eq!(part, full);
+
+    // Label prop over 1D partitions == full-load label prop.
+    let full_lp = paragrapher::algorithms::label_prop::wcc_label_prop(
+        &g,
+        paragrapher::algorithms::label_prop::StepEngine::Native,
+    )
+    .expect("full label prop");
+    let part_lp =
+        wcc_label_prop_partitioned(|| graph.csx_get_partitions(6), n, 2).expect("part lp");
+    assert_eq!(part_lp, full_lp);
+
+    // BFS over 2D tiles == full-load BFS distances.
+    for src in [0u32, 99] {
+        let full_bfs = paragrapher::algorithms::bfs::bfs_distances(&g, src);
+        let part_bfs =
+            bfs_partitioned(|| graph.csx_get_partitions_2d(3, 3), n, 2, src).expect("bfs");
+        assert_eq!(part_bfs, full_bfs, "source {src}");
+    }
+
+    // Afforest over 1D partitions == full-load Afforest (same seed).
+    let full_aff = paragrapher::algorithms::afforest::afforest(&g, 7);
+    let part_aff =
+        afforest_partitioned(|| graph.csx_get_partitions(5), n, 2, 7).expect("afforest");
+    assert_eq!(
+        paragrapher::algorithms::count_components(&part_aff),
+        paragrapher::algorithms::count_components(&full_aff)
+    );
+    // Same component structure, not just the same count.
+    let truth = paragrapher::algorithms::canonicalize(
+        &paragrapher::algorithms::bfs::wcc_by_bfs(&g),
+    );
+    assert_eq!(part_aff, truth);
+}
+
+/// 2D tiles carry only their target columns; the per-row union of a row
+/// group's tiles reassembles the full adjacency.
+#[test]
+fn two_d_tiles_filter_targets() {
+    let g = generators::barabasi_albert(400, 6, 3);
+    let (_store, graph) = open_graph(&g, 2);
+    let plan = PartitionPlan::two_d(graph.offsets_index(), 2, 3);
+    let stream = graph.get_partitions(plan).expect("stream");
+    let collected: Mutex<Vec<(usize, usize, Vec<(u32, u32)>)>> = Mutex::new(Vec::new());
+    for_each_partition(&stream, 2, |p| {
+        for (_, d) in p.iter_edges() {
+            assert!(
+                p.part.targets.contains(d as usize),
+                "edge target {d} outside tile columns {:?}",
+                p.part.targets
+            );
+        }
+        collected.lock().unwrap().push((
+            p.part.vertices.start,
+            p.part.targets.start,
+            p.iter_edges().collect(),
+        ));
+        Ok(())
+    })
+    .expect("drain");
+    let mut all: Vec<(u32, u32)> =
+        collected.into_inner().unwrap().into_iter().flat_map(|(_, _, e)| e).collect();
+    let mut expect: Vec<(u32, u32)> = g.iter_edges().collect();
+    all.sort_unstable();
+    expect.sort_unstable();
+    assert_eq!(all, expect);
+}
+
+/// COO partitions deliver exact edge spans even when a cut lands inside a
+/// vertex's row.
+#[test]
+fn coo_partitions_trim_exactly() {
+    // One hub vertex with a long row guarantees in-row cuts.
+    let mut edges: Vec<(u32, u32)> = (1..60).map(|d| (0u32, d as u32)).collect();
+    edges.extend([(5, 0), (6, 2), (59, 1)]);
+    edges.sort_unstable();
+    let g = CsrGraph::from_edges(60, &edges);
+    let (_store, graph) = open_graph(&g, 2);
+    let plan = PartitionPlan::coo(graph.offsets_index(), 7);
+    let stream = graph.get_partitions(plan).expect("stream");
+    let counts = Mutex::new(Vec::new());
+    for_each_partition(&stream, 1, |p| {
+        counts.lock().unwrap().push((p.part.index, p.num_edges()));
+        Ok(())
+    })
+    .expect("drain");
+    let mut got = counts.into_inner().unwrap();
+    got.sort_unstable();
+    let m = g.num_edges();
+    for (k, (_, edges)) in got.iter().enumerate() {
+        let expect = m * (k as u64 + 1) / 7 - m * k as u64 / 7;
+        assert_eq!(*edges, expect, "partition {k} edge share");
+    }
+}
+
+/// The stream honors cancellation mid-flight and the pool leaks no
+/// buffers afterwards.
+#[test]
+fn cancellation_releases_buffers() {
+    let g = generators::barabasi_albert(3000, 8, 5);
+    let (_store, graph) = open_graph(&g, 2);
+    let stream = graph.csx_get_partitions(40).expect("stream");
+    // Consume a couple, then cancel.
+    let mut taken = 0;
+    while taken < 2 {
+        match stream.next().expect("next") {
+            Some(_) => taken += 1,
+            None => break,
+        }
+    }
+    stream.cancel();
+    assert!(stream.next().expect("after cancel").is_none());
+    drop(stream); // joins the dispatcher
+    // All buffers must be back in C_IDLE (leak check, as in the stress
+    // suite). In-flight decodes recycle on completion; give them a beat.
+    for _ in 0..200 {
+        if graph.idle_buffers() == 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(graph.idle_buffers(), 2, "cancelled stream leaked a buffer");
+    // The graph still serves requests afterwards.
+    let labels = wcc_jtcc_partitioned(|| graph.coo_get_partitions(4), g.num_vertices(), 2, 3)
+        .expect("post-cancel stream");
+    assert_eq!(labels.len(), g.num_vertices());
+}
+
+/// Interleaved end-to-end time sits strictly below load-then-execute and
+/// inside the §3 model envelope on a slow tier (acceptance criterion).
+#[test]
+fn interleaved_beats_sequential_within_envelope() {
+    let g = generators::barabasi_albert(4000, 8, 21);
+    let store = SimStore::new(DeviceKind::Hdd);
+    paragrapher::formats::FormatKind::WebGraph.write_to_store(&g, &store, "g");
+    let acct = paragrapher::storage::IoAccount::new();
+    let offs = webgraph::read_offsets(
+        &store,
+        "g",
+        paragrapher::storage::sim::ReadCtx::default(),
+        &acct,
+    )
+    .expect("offsets");
+    let plan = PartitionPlan::one_d(&offs, 12);
+    for window in [1usize, 3, 8] {
+        let run = paragrapher::bench::workloads::modeled_interleaved_run(
+            &store, "g", &plan, window, 40.0,
+        )
+        .expect("run");
+        assert!(
+            run.interleaved < run.sequential,
+            "window {window}: interleaved {} !< sequential {}",
+            run.interleaved,
+            run.sequential
+        );
+        assert!(
+            run.interleaved >= run.envelope_floor() - 1e-12,
+            "window {window}: below the §3 floor"
+        );
+        assert!(run.overlap > 0.0 && run.overlap <= 1.0);
+    }
+}
+
+/// The model-driven prefetch window adapts to the storage tier of the
+/// opened store: faster tiers stage deeper.
+#[test]
+fn prefetch_window_adapts_to_tier() {
+    let g = generators::barabasi_albert(2000, 6, 3);
+    let mut depths = Vec::new();
+    for device in [DeviceKind::Hdd, DeviceKind::Ssd, DeviceKind::Dram] {
+        let store = Arc::new(SimStore::new(device));
+        for (name, data) in webgraph::serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        let graph = Paragrapher::init()
+            .open_graph(
+                Arc::clone(&store),
+                "g",
+                GraphType::CsxWg400,
+                Options { buffers: 16, ..Options::default() },
+            )
+            .expect("open");
+        depths.push(graph.auto_prefetch_window());
+    }
+    assert!(depths[0] <= depths[1] && depths[1] <= depths[2], "depths {depths:?}");
+    assert!(depths[0] >= 1 && depths[2] <= 32);
+    // Pinning the window through Options overrides the model.
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(&g, "g") {
+        store.put(&name, data);
+    }
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store),
+            "g",
+            GraphType::CsxWg400,
+            Options { buffers: 2, prefetch_window: 1, ..Options::default() },
+        )
+        .expect("open");
+    let stream = graph.csx_get_partitions(6).expect("stream");
+    let edges = AtomicU64::new(0);
+    for_each_partition(&stream, 1, |p| {
+        edges.fetch_add(p.num_edges(), Ordering::Relaxed);
+        Ok(())
+    })
+    .expect("drain");
+    assert_eq!(edges.load(Ordering::Relaxed), g.num_edges());
+}
+
+/// Plan metadata survives serialization and a foreign plan is rejected.
+#[test]
+fn plan_validation_and_metadata() {
+    let g = generators::barabasi_albert(500, 4, 9);
+    let (_store, graph) = open_graph(&g, 2);
+    let plan = PartitionPlan::one_d(graph.offsets_index(), 4);
+    let json = plan.to_json().to_string_pretty();
+    assert!(json.contains("\"balance_factor\""), "{json}");
+
+    // A plan for a different graph must be rejected up front.
+    let other = generators::barabasi_albert(200, 3, 1);
+    let (_s2, graph2) = open_graph(&other, 2);
+    let foreign = PartitionPlan::one_d(graph2.offsets_index(), 4);
+    assert!(graph.get_partitions(foreign).is_err(), "foreign plan accepted");
+}
+
+/// Partitioned streaming on a weighted-capable handle and per-vertex rows:
+/// 1D partitions deliver complete adjacency rows in vertex order within
+/// each partition.
+#[test]
+fn one_d_rows_are_complete() {
+    let g = generators::similarity_blocks(300, 32, 8, 5);
+    let (_store, graph) = open_graph(&g, 2);
+    let stream = graph.csx_get_partitions(5).expect("stream");
+    for_each_partition(&stream, 2, |p| {
+        for i in 0..p.block.num_vertices() {
+            let v = p.block.first_vertex + i;
+            assert_eq!(
+                p.block.neighbors(i),
+                g.neighbors(v as VertexId),
+                "vertex {v} row"
+            );
+        }
+        Ok(())
+    })
+    .expect("drain");
+}
