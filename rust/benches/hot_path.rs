@@ -13,14 +13,17 @@ use paragrapher::runtime::{ArtifactSet, NativeScan, ScanEngine, XlaScanEngine};
 use paragrapher::storage::sim::ReadCtx;
 use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
 use paragrapher::util::bitstream::{BitReader, BitWriter};
-use paragrapher::util::codes::Code;
+use paragrapher::util::codes::{Code, CodeReader};
 use paragrapher::util::rng::Xoshiro256;
 
 fn main() {
     let mut h = Harness::new("hot_path");
     h.target_seconds = 1.0;
 
-    // Bitstream + codes.
+    // Bitstream + codes: the slow-path reference decoder vs the
+    // table-driven CodeReader on the same stream. The gap is the direct
+    // symbol-rate payoff of the 11-bit peek tables; the value distribution
+    // (power-law-ish small gaps) mirrors real residual streams.
     let mut rng = Xoshiro256::seed_from_u64(1);
     let values: Vec<u64> = (0..200_000).map(|_| rng.next_below(100_000)).collect();
     for code in [Code::Gamma, Code::Delta, Code::Zeta(3)] {
@@ -39,6 +42,26 @@ fn main() {
             acc
         });
         h.report(&name, "Mvalues_per_s", values.len() as f64 / s.min / 1e6);
+
+        let slow_min = s.min;
+        let name = format!("decode-table/{code:?}");
+        let s = h.bench(&name, || {
+            let mut r = BitReader::new(&bytes);
+            let mut reader = CodeReader::new(code);
+            let mut acc = 0u64;
+            for _ in 0..values.len() {
+                acc = acc.wrapping_add(reader.read(&mut r).unwrap());
+            }
+            acc
+        });
+        h.report(&name, "Mvalues_per_s", values.len() as f64 / s.min / 1e6);
+        h.report(&name, "speedup_vs_slow_path", slow_min / s.min);
+        let mut probe = CodeReader::new(code);
+        let mut r = BitReader::new(&bytes);
+        for _ in 0..values.len() {
+            let _ = probe.read(&mut r).unwrap();
+        }
+        h.report(&name, "table_hit_rate", probe.hit_rate());
     }
 
     // Encoder/decoder edge rates on a web-like graph.
@@ -63,6 +86,19 @@ fn main() {
     // The calibrated single-core decompression bandwidth d (bytes of
     // uncompressed CSR per second) — the §3 model's d.
     h.report("webgraph/calibrated-d", "MB_per_s", edges as f64 * 4.0 / s.min / 1e6);
+
+    // Same decode through one explicitly reused DecodeScratch: the
+    // steady-state (allocation-free) shape the coordinator's pool workers
+    // run block after block. Reported next to decode-full so scratch reuse
+    // and the decode tables stay visible as separate effects.
+    let mut scratch = webgraph::DecodeScratch::new();
+    let s = h.bench("webgraph/decode-full-warm-scratch", || {
+        dec.decode_range_scratch(0, meta.num_vertices, &acct, &NativeScan, &mut scratch)
+            .unwrap()
+            .num_edges()
+    });
+    h.report("webgraph/decode-full-warm-scratch", "ME_per_s", edges as f64 / s.min / 1e6);
+    h.report("webgraph/decode-full-warm-scratch", "table_hit_rate", scratch.table_hit_rate());
 
     let s = h.bench("webgraph/decode-single-vertex", || {
         dec.decode_vertex(10_000, &acct).unwrap().len()

@@ -911,6 +911,12 @@ impl Drop for PgGraph {
 /// ([`Decoder::decode_range_parallel`]); each carries its own virtual
 /// clock, and the block's modeled decode time — max over the chunk
 /// workers, per §3 — is accumulated into [`GraphStats::decode_seconds`].
+///
+/// Every chunk decodes through its worker thread's persistent
+/// [`DecodeScratch`](crate::formats::webgraph::DecodeScratch): the pool
+/// threads outlive individual blocks, so steady-state block decode reuses
+/// warmed parse/ring/residual buffers and performs no per-vertex heap
+/// allocation.
 #[allow(clippy::too_many_arguments)]
 fn decode_into_buffer(
     inner: &GraphInner,

@@ -10,13 +10,29 @@
 //! Decoding is two-phase:
 //!
 //! 1. **Bit parse** (inherently sequential): instantaneous codes →
-//!    [`AdjParts`] (copy blocks, intervals, residual *gaps*).
+//!    [`AdjParts`] (copy blocks, intervals, residual *gaps*). The parse
+//!    runs through the word-at-a-time [`BitReader`] and the table-driven
+//!    [`CodeReader`]s (11-bit peek, slow-path fallback) — this phase bounds
+//!    the paper's decompression bandwidth `d`, and the
+//!    `paragrapher calibrate-decode` subcommand measures what it achieves.
 //! 2. **Gap scan + merge** (vectorizable): residual gaps → absolute IDs via
 //!    an inclusive scan, then a 3-way sorted merge. The scan runs through a
 //!    [`ScanEngine`](crate::runtime::ScanEngine) — either native Rust or
 //!    the AOT-compiled Pallas kernel via PJRT — over one concatenated gap
 //!    array per decoded block ([`Decoder::decode_range_with_scan`]).
+//!
+//! All per-vertex state lives in a reusable [`DecodeScratch`]: parsed
+//! [`AdjParts`] (inner vectors keep their capacity), the concatenated gap
+//! array, and — instead of the former `Vec<Vec<VertexId>>` copy-list ring —
+//! a flat ring of `(vertex, start, end)` spans into the output edge vector
+//! (a decoded vertex's final list is already contiguous in `block.edges`,
+//! so in-window references need no copy at all). Steady-state block decode
+//! through a warmed scratch performs zero heap allocation in the per-vertex
+//! loop. Public entry points without an explicit scratch borrow a
+//! thread-local one, so the coordinator's pool workers reuse their scratch
+//! across blocks for free.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
@@ -27,7 +43,7 @@ use crate::runtime::ScanEngine;
 use crate::storage::sim::{ReadCtx, SimFile};
 use crate::storage::{IoAccount, SimStore};
 use crate::util::bitstream::BitReader;
-use crate::util::codes::{nat_to_int, read_gamma};
+use crate::util::codes::{nat_to_int, Code, CodeReader};
 use crate::util::pool::parallel_map;
 
 /// A decoded consecutive block of vertices: a little CSR slice.
@@ -79,6 +95,105 @@ struct AdjParts {
     gaps: Vec<i64>,
 }
 
+impl AdjParts {
+    /// Reset for reuse, keeping the inner vectors' capacity.
+    fn clear(&mut self) {
+        self.degree = 0;
+        self.reference = 0;
+        self.blocks.clear();
+        self.intervals.clear();
+        self.gaps.clear();
+    }
+}
+
+/// Reusable per-worker decode state. One scratch per thread (or one per
+/// explicit caller) makes the steady-state per-vertex decode loop
+/// allocation-free: every vector below retains its high-water capacity
+/// across blocks.
+pub struct DecodeScratch {
+    /// Parsed adjacency records of the block (index = local vertex).
+    parts: Vec<AdjParts>,
+    /// Concatenated residual gaps of the whole block (one scan call).
+    gap_array: Vec<i64>,
+    /// Per-vertex `(start, end)` spans into `gap_array`.
+    seg_bounds: Vec<(usize, usize)>,
+    /// Copy-list ring: slot -> `(vertex, start, end)` span of that vertex's
+    /// final list inside the output edge vector. Replaces the former
+    /// `Vec<Vec<VertexId>>` — in-window references read the decoded output
+    /// in place instead of keeping per-slot copies.
+    ring: Vec<(usize, usize, usize)>,
+    /// Expanded copy-list of the current vertex.
+    copied: Vec<VertexId>,
+    /// Validated residuals of the current vertex.
+    residuals: Vec<VertexId>,
+    /// Raw residual code values (batched run read).
+    raw: Vec<u64>,
+    /// Out-of-block reference lists (block-head references only).
+    out_cache: HashMap<usize, Vec<VertexId>>,
+    /// Table-driven γ reader (degrees, references, blocks, intervals).
+    gamma: CodeReader,
+    /// Table-driven residual reader (ζ_k by default), re-selected per
+    /// stream via [`Self::set_residual_code`].
+    residual: CodeReader,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        Self {
+            parts: Vec::new(),
+            gap_array: Vec::new(),
+            seg_bounds: Vec::new(),
+            ring: Vec::new(),
+            copied: Vec::new(),
+            residuals: Vec::new(),
+            raw: Vec::new(),
+            out_cache: HashMap::new(),
+            gamma: CodeReader::new(Code::Gamma),
+            residual: CodeReader::new(Code::Zeta(3)),
+        }
+    }
+
+    /// Select the residual code once per stream (a no-op when unchanged —
+    /// the common case of one scratch serving one graph). Accumulated
+    /// hit/miss counters survive the switch: they describe the scratch's
+    /// lifetime, not one stream.
+    fn set_residual_code(&mut self, code: Code) {
+        if self.residual.code() != code {
+            let mut next = CodeReader::new(code);
+            next.table_hits = self.residual.table_hits;
+            next.table_misses = self.residual.table_misses;
+            self.residual = next;
+        }
+    }
+
+    /// Decode-table counters accumulated by this scratch: `(hits, misses)`.
+    pub fn table_counters(&self) -> (u64, u64) {
+        (
+            self.gamma.table_hits + self.residual.table_hits,
+            self.gamma.table_misses + self.residual.table_misses,
+        )
+    }
+
+    /// Fraction of symbols decoded through the table fast path.
+    pub fn table_hit_rate(&self) -> f64 {
+        let (h, m) = self.table_counters();
+        crate::util::codes::hit_rate(h, m)
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch backing the scratch-less public entry points —
+    /// coordinator pool workers decode block after block through the same
+    /// warmed buffers.
+    static THREAD_SCRATCH: RefCell<DecodeScratch> = RefCell::new(DecodeScratch::new());
+}
+
 /// Random-access decoder over one compressed graph.
 pub struct Decoder<'a> {
     file: SimFile<'a>,
@@ -113,7 +228,8 @@ impl<'a> Decoder<'a> {
     }
 
     /// Decode vertices `[v_start, v_end)`, running the gap→ID phase of all
-    /// residuals of the block through `scan` in one batched call.
+    /// residuals of the block through `scan` in one batched call. Borrows
+    /// the calling thread's [`DecodeScratch`].
     pub fn decode_range_with_scan(
         &self,
         v_start: usize,
@@ -121,15 +237,44 @@ impl<'a> Decoder<'a> {
         acct: &IoAccount,
         scan: &dyn ScanEngine,
     ) -> Result<DecodedBlock> {
+        THREAD_SCRATCH.with(|s| {
+            self.decode_range_scratch(v_start, v_end, acct, scan, &mut s.borrow_mut())
+        })
+    }
+
+    /// [`Self::decode_range_with_scan`] through an explicit caller-owned
+    /// scratch (the primitive — callers that thread their own scratch also
+    /// get at its decode-table counters, e.g. `calibrate-decode`).
+    pub fn decode_range_scratch(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+        scan: &dyn ScanEngine,
+        scratch: &mut DecodeScratch,
+    ) -> Result<DecodedBlock> {
         let n = self.meta.num_vertices;
         if v_start > v_end || v_end > n {
             bail!("bad vertex range {v_start}..{v_end} (n={n})");
         }
-        let mut block =
-            DecodedBlock { first_vertex: v_start, offsets: vec![0u64], edges: Vec::new() };
-        if v_start == v_end {
+        let count = v_end - v_start;
+        let mut block = DecodedBlock {
+            first_vertex: v_start,
+            offsets: Vec::with_capacity(count + 1),
+            edges: Vec::new(),
+        };
+        block.offsets.push(0);
+        if count == 0 {
             return Ok(block);
         }
+        // The sidecar knows the block's exact edge total: reserve once.
+        // Capped: the count is unvalidated sidecar metadata at this point,
+        // and a forged self-consistent sidecar must not translate into an
+        // unbounded up-front allocation (fuzz-suite contract) — beyond the
+        // cap, ordinary doubling growth takes over.
+        let total_edges =
+            (self.offsets.edge_offset(v_end) - self.offsets.edge_offset(v_start)) as usize;
+        block.edges.reserve(total_edges.min(1 << 22));
 
         // One ranged read covering the whole block's bits.
         let bit0 = self.offsets.bit_offset(v_start);
@@ -140,83 +285,96 @@ impl<'a> Decoder<'a> {
 
         // Phase 1: bit-parse every vertex; stitch residual gaps into one
         // array (adjusting each segment head so a single inclusive scan
-        // yields absolute IDs for the whole block).
-        let mut parts_list: Vec<AdjParts> = Vec::with_capacity(v_end - v_start);
-        let mut gap_array: Vec<i64> = Vec::new();
-        let mut seg_bounds: Vec<(usize, usize)> = Vec::with_capacity(v_end - v_start);
-        let mut prev_last_abs: i64 = 0;
-        for v in v_start..v_end {
-            let mut reader = BitReader::at_bit(&bytes, self.offsets.bit_offset(v) - byte0 * 8)
+        // yields absolute IDs for the whole block). Records are
+        // back-to-back, so one streaming reader serves the whole block; the
+        // sidecar stays authoritative — on any position drift (corrupt
+        // stream or sidecar) the reader re-seeks to the recorded offset,
+        // preserving the historical per-vertex random-access behavior.
+        if scratch.parts.len() < count {
+            scratch.parts.resize_with(count, AdjParts::default);
+        }
+        scratch.set_residual_code(self.meta.params.residual_code());
+        scratch.gap_array.clear();
+        scratch.seg_bounds.clear();
+        scratch.seg_bounds.reserve(count);
+        {
+            let DecodeScratch { parts, gap_array, seg_bounds, raw, gamma, residual, .. } =
+                scratch;
+            let mut reader = BitReader::at_bit(&bytes, bit0 - byte0 * 8)
                 .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
-            let parts = self.read_parts(v, &mut reader)?;
-            let seg_start = gap_array.len();
-            if !parts.gaps.is_empty() {
-                let first_abs = parts.gaps[0];
-                let rest_sum: i64 = parts.gaps[1..].iter().sum();
-                gap_array.push(first_abs - prev_last_abs);
-                gap_array.extend_from_slice(&parts.gaps[1..]);
-                prev_last_abs = first_abs + rest_sum;
+            let mut prev_last_abs: i64 = 0;
+            for (i, v) in (v_start..v_end).enumerate() {
+                let want = self.offsets.bit_offset(v) - byte0 * 8;
+                if reader.bit_pos() != want {
+                    reader = BitReader::at_bit(&bytes, want)
+                        .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
+                }
+                let p = &mut parts[i];
+                self.read_parts_into(v, &mut reader, p, gamma, residual, raw)?;
+                let seg_start = gap_array.len();
+                if !p.gaps.is_empty() {
+                    let first_abs = p.gaps[0];
+                    let rest_sum: i64 = p.gaps[1..].iter().sum();
+                    gap_array.push(first_abs - prev_last_abs);
+                    gap_array.extend_from_slice(&p.gaps[1..]);
+                    prev_last_abs = first_abs + rest_sum;
+                }
+                seg_bounds.push((seg_start, gap_array.len()));
             }
-            seg_bounds.push((seg_start, gap_array.len()));
-            parts_list.push(parts);
         }
 
         // Phase 2: one scan call for the block (native or XLA/Pallas).
-        scan.inclusive_scan_i64(&mut gap_array)?;
+        scan.inclusive_scan_i64(&mut scratch.gap_array)?;
 
         // Phase 3: resolve references and merge.
         //
         // Hot path: decoding is sequential, and a reference always points at
         // most `window` vertices back, so a fixed ring of the last
-        // `window + 1` final lists answers every in-block reference with no
-        // hashing and no per-vertex allocation (perf pass: the former
-        // HashMap cache cost ~4× in decode throughput — EXPERIMENTS §Perf).
+        // `window + 1` *output spans* answers every in-block reference by
+        // slicing `block.edges` in place — no hashing, no per-vertex
+        // allocation, and (since the flat-span rewrite) no list copying
+        // either: the former `Vec<Vec<VertexId>>` ring duplicated every
+        // decoded list once (EXPERIMENTS §Perf).
         let win = self.meta.params.window as usize + 1;
-        let mut ring: Vec<Vec<VertexId>> = (0..win).map(|_| Vec::new()).collect();
-        let mut ring_vertex: Vec<usize> = vec![usize::MAX; win];
-        let mut out_cache: HashMap<usize, Vec<VertexId>> = HashMap::new();
-        let mut copied_scratch: Vec<VertexId> = Vec::new();
-        let mut residual_scratch: Vec<VertexId> = Vec::new();
+        scratch.ring.clear();
+        scratch.ring.resize(win, (usize::MAX, 0, 0));
+        scratch.out_cache.clear();
         for (i, v) in (v_start..v_end).enumerate() {
-            let parts = &parts_list[i];
-            copied_scratch.clear();
+            let parts = &scratch.parts[i];
+            scratch.copied.clear();
             if parts.reference > 0 {
                 let target = v - parts.reference;
                 if target >= v_start {
-                    let slot = target % win;
-                    if ring_vertex[slot] != target {
+                    let (rv, s, e) = scratch.ring[target % win];
+                    if rv != target {
                         bail!("reference window underflow at vertex {v} (corrupt stream?)");
                     }
-                    apply_blocks_into(v, &parts.blocks, &ring[slot], &mut copied_scratch)?;
-                } else if let Some(list) = out_cache.get(&target) {
-                    apply_blocks_into(v, &parts.blocks, list, &mut copied_scratch)?;
+                    apply_blocks_into(v, &parts.blocks, &block.edges[s..e], &mut scratch.copied)?;
+                } else if let Some(list) = scratch.out_cache.get(&target) {
+                    apply_blocks_into(v, &parts.blocks, list, &mut scratch.copied)?;
                 } else {
                     // Out-of-block reference: random-access decode (rare —
                     // only near the block head).
                     let mut c = HashMap::new();
                     let list = self.decode_one(target, &mut c, acct, 1)?;
-                    apply_blocks_into(v, &parts.blocks, &list, &mut copied_scratch)?;
-                    out_cache.insert(target, list);
+                    apply_blocks_into(v, &parts.blocks, &list, &mut scratch.copied)?;
+                    scratch.out_cache.insert(target, list);
                 }
             }
-            let (s, e) = seg_bounds[i];
-            validate_residuals_into(v, &gap_array[s..e], n, &mut residual_scratch)?;
-            let slot = v % win;
-            let (pre, _) = merge3_into(
+            let (s, e) = scratch.seg_bounds[i];
+            validate_residuals_into(v, &scratch.gap_array[s..e], n, &mut scratch.residuals)?;
+            merge3_into(
                 v,
                 parts.degree,
-                &copied_scratch,
+                &scratch.copied,
                 &parts.intervals,
-                &residual_scratch,
+                &scratch.residuals,
                 &mut block.edges,
             )?;
-            let _ = pre;
             block.offsets.push(block.edges.len() as u64);
-            // Park the final list in the ring for upcoming references.
+            // Park the final list's span in the ring for upcoming references.
             let start = block.edges.len() - parts.degree;
-            ring[slot].clear();
-            ring[slot].extend_from_slice(&block.edges[start..]);
-            ring_vertex[slot] = v;
+            scratch.ring[v % win] = (v, start, block.edges.len());
         }
         Ok(block)
     }
@@ -250,7 +408,9 @@ impl<'a> Decoder<'a> {
     /// scoped jobs instead of spawning one scoped OS thread per chunk. The
     /// caller always participates (`scoped_for`), so this is safe to call
     /// *from* a pool worker — which is exactly what the coordinator's
-    /// per-block decode does when `decode_workers > 1`.
+    /// per-block decode does when `decode_workers > 1`. Every worker
+    /// decodes through its own thread-local [`DecodeScratch`], so repeated
+    /// block decodes on a pool run allocation-free once warmed.
     pub fn decode_range_parallel_on(
         &self,
         v_start: usize,
@@ -353,7 +513,11 @@ impl<'a> Decoder<'a> {
         let local = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
         let mut reader = BitReader::at_bit(&local, bit0 - byte0 * 8)
             .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
-        let parts = self.read_parts(v, &mut reader)?;
+        let mut parts = AdjParts::default();
+        let mut gamma = CodeReader::new(Code::Gamma);
+        let mut residual = CodeReader::new(self.meta.params.residual_code());
+        let mut raw = Vec::new();
+        self.read_parts_into(v, &mut reader, &mut parts, &mut gamma, &mut residual, &mut raw)?;
         // Native scan of this vertex's gaps.
         let mut gaps = parts.gaps.clone();
         for i in 1..gaps.len() {
@@ -373,12 +537,22 @@ impl<'a> Decoder<'a> {
         Ok(list)
     }
 
-    /// Phase-1 bit parse of one adjacency record.
-    fn read_parts(&self, v: usize, reader: &mut BitReader<'_>) -> Result<AdjParts> {
-        let mut parts = AdjParts::default();
-        parts.degree = read_gamma(reader).map_err(|e| anyhow::anyhow!("degree: {e}"))? as usize;
+    /// Phase-1 bit parse of one adjacency record into a reusable
+    /// [`AdjParts`] (cleared here), through the table-driven readers.
+    fn read_parts_into(
+        &self,
+        v: usize,
+        reader: &mut BitReader<'_>,
+        parts: &mut AdjParts,
+        gamma: &mut CodeReader,
+        residual: &mut CodeReader,
+        raw: &mut Vec<u64>,
+    ) -> Result<()> {
+        parts.clear();
+        parts.degree =
+            gamma.read(reader).map_err(|e| anyhow::anyhow!("degree: {e}"))? as usize;
         if parts.degree == 0 {
-            return Ok(parts);
+            return Ok(());
         }
         // Successor lists are strictly increasing vertex ids in [0, n), so a
         // degree above n can only come from a corrupt stream. Rejecting it
@@ -389,37 +563,25 @@ impl<'a> Decoder<'a> {
             bail!("implausible degree {} at vertex {v} (n={n})", parts.degree);
         }
         parts.reference =
-            read_gamma(reader).map_err(|e| anyhow::anyhow!("reference: {e}"))? as usize;
+            gamma.read(reader).map_err(|e| anyhow::anyhow!("reference: {e}"))? as usize;
         if parts.reference > v {
             bail!("reference {} before vertex 0 at vertex {v}", parts.reference);
         }
         let mut copied_estimate = 0usize;
         if parts.reference > 0 {
             let block_count =
-                read_gamma(reader).map_err(|e| anyhow::anyhow!("block count: {e}"))? as usize;
+                gamma.read(reader).map_err(|e| anyhow::anyhow!("block count: {e}"))? as usize;
             if block_count > self.meta.num_vertices {
                 bail!("implausible block count {block_count} at vertex {v}");
             }
             parts.blocks.reserve(block_count);
             for i in 0..block_count {
-                let raw = read_gamma(reader).map_err(|e| anyhow::anyhow!("block: {e}"))?;
-                parts.blocks.push(if i == 0 { raw } else { raw + 1 });
+                let raw_len = gamma.read(reader).map_err(|e| anyhow::anyhow!("block: {e}"))?;
+                parts.blocks.push(if i == 0 { raw_len } else { raw_len + 1 });
             }
-            // Copy amount is only fully known with the ref list; estimate
-            // for residual-count: computed below from degree - intervals -
-            // copied, so we need the true copied count. We compute it when
-            // applying blocks; for the residual count we must know it now —
-            // the encoder guarantees: copied = sum of copy runs + implicit
-            // tail. The tail length depends on the ref list length, which we
-            // don't have yet. To keep phase 1 free of reference resolution,
-            // the *degree* equation is deferred: we read residuals until the
-            // bit cursor reaches... — impossible for instantaneous codes.
-            //
-            // Instead, the encoder writes copy runs that fully describe the
-            // copied count given the ref list length; we use the offsets
-            // sidecar: ref list length = degree of target = we can compute
-            // exactly from the *edge offsets* (O(1) sidecar lookup) — no
-            // graph data needed.
+            // The copied count needs the reference list's length, which the
+            // offsets sidecar answers in O(1) (degree of the target) — no
+            // graph data and no reference resolution in phase 1.
             let target = v - parts.reference;
             let ref_degree = self.offsets.degree(target);
             let mut pos = 0usize;
@@ -444,7 +606,7 @@ impl<'a> Decoder<'a> {
 
         // Intervals.
         let interval_count =
-            read_gamma(reader).map_err(|e| anyhow::anyhow!("interval count: {e}"))? as usize;
+            gamma.read(reader).map_err(|e| anyhow::anyhow!("interval count: {e}"))? as usize;
         if interval_count > parts.degree {
             bail!("implausible interval count at vertex {v}");
         }
@@ -457,20 +619,20 @@ impl<'a> Decoder<'a> {
         let mut prev_right: i64 = v as i64;
         for i in 0..interval_count {
             let left: i64 = if i == 0 {
-                let z = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval left: {e}"))?;
+                let z = gamma.read(reader).map_err(|e| anyhow::anyhow!("interval left: {e}"))?;
                 if z >= 2 * n_u + 2 {
                     bail!("interval left out of range at vertex {v}");
                 }
                 v as i64 + nat_to_int(z)
             } else {
-                let g = read_gamma(reader).map_err(|e| anyhow::anyhow!("interval gap: {e}"))?;
+                let g = gamma.read(reader).map_err(|e| anyhow::anyhow!("interval gap: {e}"))?;
                 if g >= n_u {
                     bail!("interval gap out of range at vertex {v}");
                 }
                 prev_right + 2 + g as i64
             };
             let len_raw =
-                read_gamma(reader).map_err(|e| anyhow::anyhow!("interval len: {e}"))?;
+                gamma.read(reader).map_err(|e| anyhow::anyhow!("interval len: {e}"))?;
             if len_raw > n_u {
                 bail!("interval length out of range at vertex {v}");
             }
@@ -484,35 +646,39 @@ impl<'a> Decoder<'a> {
             prev_right = left + len as i64 - 1;
         }
 
-        // Residual gaps. Each is bounded at parse time: residuals are
+        // Residual gaps, decoded as one batched run through the residual
+        // table. Each raw value is bounded before use: residuals are
         // strictly increasing ids in [0, n), so the first must land in that
         // range and every later gap is < n. Beyond semantic validation this
         // keeps the phase-1/2 i64 gap sums overflow-free on corrupt streams
-        // (a flipped bit in a ζ code must not become an arithmetic panic).
+        // (a flipped bit in a ζ code must not become an arithmetic panic) —
+        // and the run length itself is bounded by the degree guard above,
+        // so the batch read cannot over-allocate.
         let residual_count = parts
             .degree
             .checked_sub(copied_estimate + parts.intervals.len())
             .with_context(|| format!("degree accounting underflow at vertex {v}"))?;
         let n = self.meta.num_vertices as i64;
-        let code = self.meta.params.residual_code();
+        raw.clear();
+        residual
+            .read_run(reader, residual_count, raw)
+            .map_err(|e| anyhow::anyhow!("residual: {e}"))?;
         parts.gaps.reserve(residual_count);
-        for i in 0..residual_count {
+        for (i, &z) in raw.iter().enumerate() {
             if i == 0 {
-                let z = code.read(reader).map_err(|e| anyhow::anyhow!("residual: {e}"))?;
                 let first = v as i64 + nat_to_int(z);
                 if first < 0 || first >= n {
                     bail!("first residual {first} out of range at vertex {v}");
                 }
                 parts.gaps.push(first);
             } else {
-                let g = code.read(reader).map_err(|e| anyhow::anyhow!("residual gap: {e}"))?;
-                if g >= self.meta.num_vertices as u64 {
-                    bail!("residual gap {g} out of range at vertex {v}");
+                if z >= self.meta.num_vertices as u64 {
+                    bail!("residual gap {z} out of range at vertex {v}");
                 }
-                parts.gaps.push(1 + g as i64);
+                parts.gaps.push(1 + z as i64);
             }
         }
-        Ok(parts)
+        Ok(())
     }
 }
 
@@ -683,6 +849,64 @@ mod tests {
             let block = dec.decode_range(a, b, &acct).unwrap();
             assert_eq!(block.num_vertices(), b - a);
             for (i, v) in (a..b).enumerate() {
+                assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent_and_counts_table_hits() {
+        // One scratch across many decodes (different ranges, twice each)
+        // must give byte-identical blocks, and the decode tables must
+        // actually serve the stream.
+        let g = generators::similarity_blocks(800, 40, 12, 5);
+        let (store, acct) = setup(&g);
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let mut scratch = DecodeScratch::new();
+        let n = g.num_vertices();
+        for (a, b) in [(0, n), (13, 400), (700, n), (0, 1), (5, 5)] {
+            let fresh = dec.decode_range(a, b, &acct).unwrap();
+            let warm1 =
+                dec.decode_range_scratch(a, b, &acct, &crate::runtime::NativeScan, &mut scratch)
+                    .unwrap();
+            let warm2 =
+                dec.decode_range_scratch(a, b, &acct, &crate::runtime::NativeScan, &mut scratch)
+                    .unwrap();
+            assert_eq!(fresh, warm1, "range {a}..{b}");
+            assert_eq!(fresh, warm2, "range {a}..{b} (reused scratch)");
+        }
+        let (hits, misses) = scratch.table_counters();
+        assert!(hits > 0, "decode tables must serve a web-like stream");
+        // On this 800-vertex similarity graph the residual gaps are small
+        // (≈ n / degree ≈ 20), so most symbols sit inside the 11-bit
+        // tables; keep the floor conservative anyway.
+        assert!(
+            scratch.table_hit_rate() > 0.3,
+            "small symbols dominate: hit rate {} ({hits}/{misses})",
+            scratch.table_hit_rate()
+        );
+    }
+
+    #[test]
+    fn scratch_survives_graph_switch() {
+        // A thread-local (or otherwise shared) scratch must not leak state
+        // between different graphs/streams.
+        let g1 = generators::barabasi_albert(400, 6, 1);
+        let g2 = generators::road_lattice(20, 20, 3, 2);
+        let mut scratch = DecodeScratch::new();
+        for g in [&g1, &g2, &g1] {
+            let (store, acct) = setup(g);
+            let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+            let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+            let dec =
+                Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+            let n = g.num_vertices();
+            let block = dec
+                .decode_range_scratch(0, n, &acct, &crate::runtime::NativeScan, &mut scratch)
+                .unwrap();
+            for (i, v) in (0..n).enumerate() {
                 assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
             }
         }

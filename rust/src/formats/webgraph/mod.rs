@@ -29,7 +29,7 @@ mod decode;
 mod encode;
 pub mod integrity;
 
-pub use decode::{DecodedBlock, Decoder};
+pub use decode::{DecodeScratch, DecodedBlock, Decoder};
 pub use encode::{compress, CompressionStats};
 
 use anyhow::{bail, Context, Result};

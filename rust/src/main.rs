@@ -44,6 +44,7 @@ fn main() {
         "bench-storage" => cmd_bench_storage(&flags),
         "sweep" => cmd_sweep(&flags),
         "end-to-end" => cmd_end_to_end(&flags),
+        "calibrate-decode" => cmd_calibrate_decode(&flags),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -74,6 +75,8 @@ commands:
   bench-storage [--device DEV]                            Fig. 4 bandwidth grid
   sweep         --dataset D --device DEV                  Fig. 8 threads×buffer grid
   end-to-end    [--scale N]                               full pipeline + headline table
+  calibrate-decode [--scale N] [--seed N] [--repeats N] [--d B/s]
+                                                          measured vs modeled decompression bandwidth d
   ci-summary                                              markdown health metrics for CI"
     );
 }
@@ -402,6 +405,39 @@ fn cmd_end_to_end(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `calibrate-decode`: measure the achieved single-core decompression
+/// bandwidth `d` (the §3 model's sequential-phase bound) on a seeded
+/// generated graph and print it next to the model's assumed value — the
+/// feedback loop that keeps the performance model honest about what the
+/// word-at-a-time decode engine actually delivers. Markdown output so the
+/// CI job summary can ingest it directly.
+fn cmd_calibrate_decode(flags: &HashMap<String, String>) -> Result<()> {
+    let scale = flag_usize(flags, "scale", 1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    let repeats = flag_usize(flags, "repeats", 5);
+    let assumed_d = flag_f64(flags, "d", 1.0e9); // the §3 default assumption
+    let cal = paragrapher::bench::workloads::calibrate_decode(scale, seed, repeats)?;
+    println!(
+        "### decode calibration (BA {}×8, seed {seed}, best of {repeats})\n",
+        fmt_count(cal.vertices as u64)
+    );
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!("| decoded_edges | {} |", fmt_count(cal.edges));
+    println!("| compressed_stream | {} |", fmt_bytes(cal.stream_bytes));
+    println!("| decode_throughput | {} |", fmt_meps(cal.edges_per_sec() / 1e6));
+    println!("| measured_d | {} |", fmt_bw(cal.achieved_d()));
+    println!("| model_assumed_d | {} |", fmt_bw(assumed_d));
+    println!("| measured_over_assumed | {:.2}x |", cal.achieved_d() / assumed_d);
+    println!(
+        "| decode_table_hit_rate | {:.1}% ({} hits / {} misses) |",
+        cal.table_hit_rate() * 100.0,
+        cal.table_hits,
+        cal.table_misses
+    );
+    Ok(())
+}
+
 /// `ci-summary`: markdown health metrics for the CI job summary — encoder
 /// reference-chain depth, decoded-block cache hit rate, and the Elias–Fano
 /// offsets footprint, on a fixed seeded graph so drift is comparable
@@ -452,6 +488,26 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
         fmt_bytes(offs.plain_size_bytes() as u64),
         offs.size_bytes() as f64 * 100.0 / offs.plain_size_bytes() as f64
     );
+
+    // Decode-bandwidth calibration: measured d vs the §3 model's assumed
+    // d, plus the decode-table hit rate — the regression canary for the
+    // word-at-a-time decode engine.
+    {
+        let assumed_d = 1.0e9;
+        let cal = paragrapher::bench::workloads::calibrate_decode(1, 42, 3)?;
+        println!(
+            "| decode_measured_d | {} ({:.2}x of assumed {}) |",
+            fmt_bw(cal.achieved_d()),
+            cal.achieved_d() / assumed_d,
+            fmt_bw(assumed_d)
+        );
+        println!(
+            "| decode_table_hit_rate | {:.1}% ({} hits / {} misses) |",
+            cal.table_hit_rate() * 100.0,
+            cal.table_hits,
+            cal.table_misses
+        );
+    }
 
     // Partitioned-request health: a real 8-partition stream drained by two
     // consumers through the coordinator (prefetch hit rate), plus the

@@ -274,7 +274,9 @@ impl PartitionPlan {
                 }
             }
             PlanKind::TwoD { rows, cols } => {
-                if rows == 0 || cols == 0 || self.parts.len() != rows * cols {
+                // checked_mul: a foreign plan's grid dims are untrusted and
+                // must not panic the validator itself on overflow.
+                if rows == 0 || cols == 0 || rows.checked_mul(cols) != Some(self.parts.len()) {
                     bail!(
                         "2D plan has {} tiles, expected {rows}×{cols} (both nonzero)",
                         self.parts.len()
@@ -311,6 +313,96 @@ impl PartitionPlan {
             }
         }
         Ok(())
+    }
+
+    /// Parse a plan previously serialized with [`Self::to_json`] — the
+    /// cross-process leg of leader→machine plan shipping: the leader plans
+    /// once off its sidecar, serializes, and every machine reconstructs the
+    /// identical plan without touching the offsets index. The parsed plan
+    /// passes the full [`Self::check`] tiling validation before it is
+    /// returned, so an overlapping/gapped/truncated foreign document is
+    /// rejected here rather than served as silent double-delivery. The
+    /// derived `balance_factor` field in the document is ignored
+    /// (recomputed on demand).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        fn usize_field(doc: &Json, key: &str) -> Result<usize> {
+            Ok(u64_field(doc, key)? as usize)
+        }
+        fn u64_field(doc: &Json, key: &str) -> Result<u64> {
+            let v = doc
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("plan json: missing numeric {key:?}"))?;
+            num_to_u64(v).ok_or_else(|| anyhow::anyhow!("plan json: bad {key:?} value {v}"))
+        }
+        fn num_to_u64(v: f64) -> Option<u64> {
+            // Integral, non-negative, and inside f64's exact-integer range.
+            if v.fract() == 0.0 && (0.0..=9007199254740992.0).contains(&v) {
+                Some(v as u64)
+            } else {
+                None
+            }
+        }
+        fn pair(doc: &Json, key: &str) -> Result<(u64, u64)> {
+            let arr = doc
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("plan json: missing pair {key:?}"))?;
+            let [a, b] = arr else {
+                bail!("plan json: {key:?} must be a 2-element array");
+            };
+            let (a, b) = (a.as_f64().and_then(num_to_u64), b.as_f64().and_then(num_to_u64));
+            let (Some(a), Some(b)) = (a, b) else {
+                bail!("plan json: non-integer bound in {key:?}");
+            };
+            Ok((a, b))
+        }
+
+        let kind_s = doc
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("plan json: missing \"kind\""))?;
+        let kind = match kind_s {
+            "1d" => PlanKind::OneD,
+            "coo" => PlanKind::Coo,
+            other => {
+                let dims = other
+                    .strip_prefix("2d:")
+                    .and_then(|d| d.split_once('x'))
+                    .and_then(|(r, c)| r.parse::<usize>().ok().zip(c.parse::<usize>().ok()));
+                match dims {
+                    // Overflow-check the grid size here so `check()`'s
+                    // `rows * cols` below stays panic-free on tampered
+                    // documents.
+                    Some((rows, cols)) if rows.checked_mul(cols).is_some() => {
+                        PlanKind::TwoD { rows, cols }
+                    }
+                    Some(_) => bail!("plan json: 2d grid size overflows"),
+                    None => bail!("plan json: unknown kind {other:?}"),
+                }
+            }
+        };
+        let num_vertices = usize_field(doc, "num_vertices")?;
+        let num_edges = u64_field(doc, "num_edges")?;
+        let parts_json = doc
+            .get("parts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("plan json: missing \"parts\" array"))?;
+        let mut parts = Vec::with_capacity(parts_json.len());
+        for (index, p) in parts_json.iter().enumerate() {
+            let (v0, v1) = pair(p, "v")?;
+            let (e0, e1) = pair(p, "e")?;
+            let (t0, t1) = pair(p, "t")?;
+            parts.push(Partition {
+                index,
+                vertices: VertexRange::new(v0 as usize, v1 as usize),
+                edge_span: (e0, e1),
+                targets: VertexRange::new(t0 as usize, t1 as usize),
+            });
+        }
+        let plan = Self { kind, num_vertices, num_edges, parts };
+        plan.check()?;
+        Ok(plan)
     }
 
     /// Serializable plan metadata (for a leader to ship to machines, and
@@ -500,6 +592,65 @@ mod tests {
         assert!(s.contains("2d:2x2"), "{s}");
         assert!(s.contains("\"balance_factor\""), "{s}");
         assert!(s.contains("\"parts\""), "{s}");
+    }
+
+    #[test]
+    fn plan_json_round_trips_through_text() {
+        // The leader→machine shipping path: plan → to_json → text →
+        // Json::parse → from_json must reconstruct the identical plan, for
+        // every plan kind on every graph shape.
+        for g in [
+            generators::barabasi_albert(700, 6, 9),
+            generators::rmat(8, 5, 3),
+            CsrGraph::from_edges(40, &[(0, 1), (39, 0), (7, 8)]),
+            CsrGraph::from_edges(5, &[]),
+        ] {
+            let offs = offsets_of(&g);
+            let plans = [
+                PartitionPlan::one_d(&offs, 1),
+                PartitionPlan::one_d(&offs, 7),
+                PartitionPlan::two_d(&offs, 3, 4),
+                PartitionPlan::two_d(&offs, 1, 1),
+                PartitionPlan::coo(&offs, 5),
+            ];
+            for plan in plans {
+                let text = plan.to_json().to_string_pretty();
+                let doc = crate::util::json::Json::parse(&text).expect("parse");
+                let back = PartitionPlan::from_json(&doc)
+                    .unwrap_or_else(|e| panic!("{:?}: {e}", plan.kind));
+                assert_eq!(back, plan, "kind {:?}", plan.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_tampered_plans() {
+        let g = generators::barabasi_albert(300, 4, 3);
+        let offs = offsets_of(&g);
+        let plan = PartitionPlan::one_d(&offs, 4);
+
+        // An overlapping span (a would-be double delivery) fails check().
+        let mut overlap = plan.clone();
+        overlap.parts[1].edge_span = overlap.parts[0].edge_span;
+        overlap.parts[1].vertices = overlap.parts[0].vertices;
+        let doc = Json::parse(&overlap.to_json().to_string_pretty()).unwrap();
+        assert!(PartitionPlan::from_json(&doc).is_err());
+
+        // Structural damage: missing fields, bad kind, non-integer bounds.
+        let good_text = plan.to_json().to_string_pretty();
+        let missing = Json::parse(&good_text.replace("\"kind\"", "\"knid\"")).unwrap();
+        assert!(PartitionPlan::from_json(&missing).is_err());
+        let bad_kind = Json::parse(&good_text.replace("\"1d\"", "\"9d\"")).unwrap();
+        assert!(PartitionPlan::from_json(&bad_kind).is_err());
+        // A 2d grid whose rows×cols product overflows usize must be
+        // refused, not panic the validator.
+        let huge = good_text.replace("\"1d\"", "\"2d:4294967296x4294967296\"");
+        let huge2d = Json::parse(&huge).unwrap();
+        assert!(PartitionPlan::from_json(&huge2d).is_err());
+        let mut frac = Json::parse(&good_text).unwrap();
+        frac.set("num_edges", 1.5);
+        assert!(PartitionPlan::from_json(&frac).is_err());
+        assert!(PartitionPlan::from_json(&Json::Null).is_err());
     }
 
     #[test]

@@ -1,17 +1,30 @@
 //! MSB-first bit streams, the substrate of the WebGraph-style codec.
 //!
 //! WebGraph's instantaneous codes are defined on an MSB-first bit order: the
-//! first bit written is the most significant bit of the first byte. The
-//! reader keeps a 64-bit refill buffer so that the per-symbol cost is a few
-//! shifts (this matters: bit decoding is the sequential phase of graph
-//! decompression and bounds the paper's decompression bandwidth `d`).
+//! first bit written is the most significant bit of the first byte. Both
+//! sides work a word at a time (this matters: bit decoding is the sequential
+//! phase of graph decompression and bounds the paper's decompression
+//! bandwidth `d`):
+//!
+//! * [`BitReader`] keeps up to 128 buffered bits refilled by 8-byte
+//!   big-endian loads, so `read_bits`/`read_unary` are a couple of shifts
+//!   and a `leading_zeros` with no per-byte loop, and [`BitReader::peek_bits`]
+//!   can expose the next word-window without consuming it — the hook the
+//!   table-driven code decoders in [`codes`](super::codes) build on.
+//! * [`BitWriter`] merges pending bits and the incoming value in one `u128`
+//!   and flushes whole bytes in a single pass (the former byte-at-a-time
+//!   loop carried dead `if`/`continue` branches and cost one shift+mask per
+//!   byte).
 
 /// Append-only MSB-first bit writer backed by a `Vec<u8>`.
 #[derive(Debug, Default, Clone)]
 pub struct BitWriter {
     buf: Vec<u8>,
-    /// Bits already written into the final partial byte (0..8).
-    partial_bits: u32,
+    /// Pending bits not yet flushed to `buf`, left-aligned (MSB of `acc` is
+    /// the oldest pending bit). Always fewer than 8 after any public call.
+    acc: u64,
+    /// Number of valid bits in `acc` (0..8).
+    acc_bits: u32,
 }
 
 impl BitWriter {
@@ -20,47 +33,42 @@ impl BitWriter {
     }
 
     pub fn with_capacity(bytes: usize) -> Self {
-        Self { buf: Vec::with_capacity(bytes), partial_bits: 0 }
+        Self { buf: Vec::with_capacity(bytes), acc: 0, acc_bits: 0 }
     }
 
     /// Total number of bits written so far.
     #[inline]
     pub fn bit_len(&self) -> u64 {
-        if self.partial_bits == 0 {
-            self.buf.len() as u64 * 8
-        } else {
-            (self.buf.len() as u64 - 1) * 8 + self.partial_bits as u64
-        }
+        self.buf.len() as u64 * 8 + self.acc_bits as u64
     }
 
     /// Write the lowest `n` bits of `value`, MSB first. `n <= 64`.
+    ///
+    /// Single pass: the (< 8) pending bits and the incoming value are merged
+    /// left-aligned in a `u128`, whole bytes are flushed, and the tail stays
+    /// pending — no per-byte shift/mask loop.
     pub fn write_bits(&mut self, value: u64, n: u32) {
         debug_assert!(n <= 64);
         if n == 0 {
             return;
         }
         let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
-        let mut remaining = n;
-        while remaining > 0 {
-            if self.partial_bits == 0 {
-                self.buf.push(0);
-                self.partial_bits = 0;
-            }
-            let free = 8 - self.partial_bits;
-            let take = free.min(remaining);
-            let shift = remaining - take;
-            let chunk = ((value >> shift) & ((1u64 << take) - 1)) as u8;
-            let last = self.buf.last_mut().expect("buffer non-empty");
-            *last |= chunk << (free - take);
-            self.partial_bits = (self.partial_bits + take) % 8;
-            if self.partial_bits == 0 && remaining > take {
-                // Next iteration pushes a fresh byte.
-            }
-            remaining -= take;
-            if self.partial_bits == 0 && remaining > 0 {
-                continue;
-            }
+        // acc_bits < 8 and n <= 64, so the value lands at shift >= 56.
+        let mut merged =
+            ((self.acc as u128) << 64) | ((value as u128) << (128 - self.acc_bits - n));
+        let mut total = self.acc_bits + n;
+        if total >= 64 {
+            self.buf.extend_from_slice(&((merged >> 64) as u64).to_be_bytes());
+            merged <<= 64;
+            total -= 64;
         }
+        while total >= 8 {
+            self.buf.push((merged >> 120) as u8);
+            merged <<= 8;
+            total -= 8;
+        }
+        self.acc = (merged >> 64) as u64;
+        self.acc_bits = total;
     }
 
     /// Write a single bit.
@@ -72,34 +80,44 @@ impl BitWriter {
     /// Write `n` zero bits followed by a one bit (unary code for n).
     pub fn write_unary(&mut self, n: u64) {
         let mut left = n;
-        while left >= 32 {
-            self.write_bits(0, 32);
-            left -= 32;
+        while left >= 64 {
+            self.write_bits(0, 64);
+            left -= 64;
         }
+        // left <= 63, so left + 1 <= 64.
         self.write_bits(1, left as u32 + 1);
     }
 
     /// Pad to a byte boundary and return the underlying bytes.
-    pub fn into_bytes(self) -> Vec<u8> {
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.acc_bits > 0 {
+            // Pending bits are left-aligned; the low bits of the final byte
+            // stay zero (the historical padding).
+            self.buf.push((self.acc >> 56) as u8);
+        }
         self.buf
     }
 
     /// Current length in bytes (including the partial byte).
     pub fn byte_len(&self) -> usize {
-        self.buf.len()
+        self.buf.len() + (self.acc_bits > 0) as usize
     }
 }
 
-/// MSB-first bit reader over a byte slice with a 64-bit refill buffer.
+/// MSB-first bit reader over a byte slice with a 128-bit refill buffer
+/// (two 8-byte big-endian loads' worth, so any `read_bits(n <= 64)` is
+/// served without an intra-read refill).
 #[derive(Debug, Clone)]
 pub struct BitReader<'a> {
     data: &'a [u8],
     /// Index of the next byte to refill from.
     next_byte: usize,
-    /// Bits buffered, left-aligned (MSB of `acc` is the next bit).
-    acc: u64,
-    /// Number of valid bits in `acc`.
-    acc_bits: u32,
+    /// Bits buffered, left-aligned (MSB of `buf` is the next bit). Bits
+    /// below the valid region are always zero — [`Self::peek_bits`] relies
+    /// on that for its zero-padded end-of-stream window.
+    buf: u128,
+    /// Number of valid bits in `buf`.
+    valid: u32,
     /// Total bits consumed so far.
     consumed: u64,
 }
@@ -123,7 +141,7 @@ impl std::error::Error for BitstreamExhausted {}
 
 impl<'a> BitReader<'a> {
     pub fn new(data: &'a [u8]) -> Self {
-        Self { data, next_byte: 0, acc: 0, acc_bits: 0, consumed: 0 }
+        Self { data, next_byte: 0, buf: 0, valid: 0, consumed: 0 }
     }
 
     /// Start reading at an absolute bit offset (random access — this is what
@@ -135,12 +153,13 @@ impl<'a> BitReader<'a> {
         if byte > data.len() || (byte == data.len() && bit > 0) {
             return Err(BitstreamExhausted { wanted: 1, at: bit_offset });
         }
-        let mut r = Self { data, next_byte: byte, acc: 0, acc_bits: 0, consumed: bit_offset };
+        let mut r = Self { data, next_byte: byte, buf: 0, valid: 0, consumed: bit_offset };
         if bit > 0 {
+            // byte < data.len() here, so the refill buffers >= 8 bits.
             r.refill();
             // Drop the bits before the offset inside the first byte.
-            r.acc <<= bit;
-            r.acc_bits -= bit;
+            r.buf <<= bit;
+            r.valid -= bit;
         }
         Ok(r)
     }
@@ -154,51 +173,87 @@ impl<'a> BitReader<'a> {
     /// Remaining bits available.
     #[inline]
     pub fn remaining_bits(&self) -> u64 {
-        (self.data.len() - self.next_byte) as u64 * 8 + self.acc_bits as u64
+        (self.data.len() - self.next_byte) as u64 * 8 + self.valid as u64
     }
 
+    /// Top up the buffer: whole 8-byte big-endian words while they fit (and
+    /// exist), then single bytes for the stream tail. Post-condition: either
+    /// `valid > 64` or every remaining stream bit is buffered.
     #[inline]
     fn refill(&mut self) {
-        // Fast path: top up from a single 8-byte load (the symbol-decode
-        // hot loop refills every few symbols; byte-at-a-time refill was
-        // ~25% of decode time — EXPERIMENTS §Perf).
-        if self.acc_bits == 0 && self.next_byte + 8 <= self.data.len() {
-            let word = u64::from_be_bytes(
-                self.data[self.next_byte..self.next_byte + 8].try_into().unwrap(),
-            );
-            self.acc = word;
-            self.acc_bits = 64;
-            self.next_byte += 8;
-            return;
-        }
-        while self.acc_bits <= 56 && self.next_byte < self.data.len() {
-            self.acc |= (self.data[self.next_byte] as u64) << (56 - self.acc_bits);
-            self.acc_bits += 8;
-            self.next_byte += 1;
+        while self.valid <= 64 {
+            if self.next_byte + 8 <= self.data.len() {
+                let word = u64::from_be_bytes(
+                    self.data[self.next_byte..self.next_byte + 8].try_into().unwrap(),
+                );
+                // valid <= 64, so the word lands at shift 64 - valid >= 0.
+                self.buf |= (word as u128) << (64 - self.valid);
+                self.valid += 64;
+                self.next_byte += 8;
+            } else if self.next_byte < self.data.len() {
+                self.buf |= (self.data[self.next_byte] as u128) << (120 - self.valid);
+                self.valid += 8;
+                self.next_byte += 1;
+            } else {
+                break;
+            }
         }
     }
 
     /// Read `n` bits (MSB first), `n <= 64`.
+    #[inline]
     pub fn read_bits(&mut self, n: u32) -> Result<u64, BitstreamExhausted> {
         debug_assert!(n <= 64);
         if n == 0 {
             return Ok(0);
         }
-        if n <= 57 {
+        if self.valid < n {
             self.refill();
-            if self.acc_bits < n {
+            if self.valid < n {
                 return Err(BitstreamExhausted { wanted: n, at: self.consumed });
             }
-            let v = self.acc >> (64 - n);
-            self.acc <<= n;
-            self.acc_bits -= n;
-            self.consumed += n as u64;
-            Ok(v)
-        } else {
-            let hi = self.read_bits(32)?;
-            let lo = self.read_bits(n - 32)?;
-            Ok((hi << (n - 32)) | lo)
         }
+        let v = (self.buf >> (128 - n)) as u64;
+        self.buf <<= n;
+        self.valid -= n;
+        self.consumed += n as u64;
+        Ok(v)
+    }
+
+    /// Peek at the next `n` bits (MSB first, `1 <= n <= 64`) without
+    /// consuming them. Bits past the end of the stream read as zero — the
+    /// caller (the table-driven decoders) discovers genuine exhaustion when
+    /// it tries to [`Self::skip_bits`] the matched codeword.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u64 {
+        debug_assert!((1..=64).contains(&n));
+        if self.valid < n {
+            self.refill();
+        }
+        // Bits of `buf` below the valid region are zero, so a short window
+        // near the stream end is implicitly zero-padded.
+        (self.buf >> (128 - n)) as u64
+    }
+
+    /// Consume `n` bits previously examined with [`Self::peek_bits`]
+    /// (`n <= 64`). Errors — consuming nothing — if fewer than `n` bits
+    /// remain (the peek window was zero-padded).
+    #[inline]
+    pub fn skip_bits(&mut self, n: u32) -> Result<(), BitstreamExhausted> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(());
+        }
+        if self.valid < n {
+            self.refill();
+            if self.valid < n {
+                return Err(BitstreamExhausted { wanted: n, at: self.consumed });
+            }
+        }
+        self.buf <<= n;
+        self.valid -= n;
+        self.consumed += n as u64;
+        Ok(())
     }
 
     /// Read one bit.
@@ -208,35 +263,34 @@ impl<'a> BitReader<'a> {
     }
 
     /// Read a unary-coded value: the number of 0 bits before the next 1.
+    /// Branchless across refills: each iteration consumes either the whole
+    /// zero-prefix of the buffer via one `leading_zeros`, or the terminating
+    /// one — no per-bit loop.
     pub fn read_unary(&mut self) -> Result<u64, BitstreamExhausted> {
         let mut count = 0u64;
         loop {
-            self.refill();
-            if self.acc_bits == 0 {
-                return Err(BitstreamExhausted { wanted: 1, at: self.consumed });
+            if self.valid == 0 {
+                self.refill();
+                if self.valid == 0 {
+                    return Err(BitstreamExhausted { wanted: 1, at: self.consumed });
+                }
             }
-            if self.acc == 0 {
-                // All buffered bits are zero.
-                count += self.acc_bits as u64;
-                self.consumed += self.acc_bits as u64;
-                self.acc_bits = 0;
-                continue;
-            }
-            let zeros = self.acc.leading_zeros();
-            if zeros < self.acc_bits {
-                // The terminating 1 is inside the buffer.
+            let zeros = self.buf.leading_zeros();
+            if zeros < self.valid {
+                // The terminating 1 is inside the buffer. `used` can be 128
+                // (a full buffer of 127 zeros + the one).
                 let used = zeros + 1;
-                // `used` can be 64 (a full buffer of 63 zeros + the one).
-                self.acc = if used == 64 { 0 } else { self.acc << used };
-                self.acc_bits -= used;
+                self.buf = if used == 128 { 0 } else { self.buf << used };
+                self.valid -= used;
                 self.consumed += used as u64;
                 return Ok(count + zeros as u64);
-            } else {
-                count += self.acc_bits as u64;
-                self.consumed += self.acc_bits as u64;
-                self.acc = 0;
-                self.acc_bits = 0;
             }
+            // All buffered bits are zero (leading_zeros saturates past the
+            // valid region only when the region itself is all-zero).
+            count += self.valid as u64;
+            self.consumed += self.valid as u64;
+            self.buf = 0;
+            self.valid = 0;
         }
     }
 }
@@ -263,7 +317,7 @@ mod tests {
 
     #[test]
     fn unary_roundtrip() {
-        let values = [0u64, 1, 2, 7, 8, 31, 32, 33, 63, 64, 65, 100, 1000];
+        let values = [0u64, 1, 2, 7, 8, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129, 1000];
         let mut w = BitWriter::new();
         for &v in &values {
             w.write_unary(v);
@@ -351,11 +405,137 @@ mod tests {
     fn bit_len_tracks_writes() {
         let mut w = BitWriter::new();
         assert_eq!(w.bit_len(), 0);
+        assert_eq!(w.byte_len(), 0);
         w.write_bits(1, 1);
         assert_eq!(w.bit_len(), 1);
+        assert_eq!(w.byte_len(), 1);
         w.write_bits(0, 7);
         assert_eq!(w.bit_len(), 8);
+        assert_eq!(w.byte_len(), 1);
         w.write_bits(0b1010, 4);
         assert_eq!(w.bit_len(), 12);
+        assert_eq!(w.byte_len(), 2);
+    }
+
+    /// Satellite regression for the write_bits rewrite: every value of every
+    /// small width, at every bit misalignment, written then read back — the
+    /// write path has no untested (alignment × width) corner.
+    #[test]
+    fn exhaustive_small_width_roundtrip() {
+        for misalign in 0u32..8 {
+            for width in 1u32..=11 {
+                let mut w = BitWriter::new();
+                // Shift the stream start by `misalign` one-bits so the
+                // value crosses byte boundaries at every phase.
+                for _ in 0..misalign {
+                    w.write_bit(true);
+                }
+                let count = 1u64 << width;
+                for v in 0..count {
+                    w.write_bits(v, width);
+                }
+                assert_eq!(w.bit_len(), misalign as u64 + count * width as u64);
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                for _ in 0..misalign {
+                    assert!(r.read_bit().unwrap());
+                }
+                for v in 0..count {
+                    assert_eq!(
+                        r.read_bits(width).unwrap(),
+                        v,
+                        "width {width} misalign {misalign}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Wide writes at every misalignment (the u128 merge path where
+    /// `acc_bits + n` crosses 64).
+    #[test]
+    fn wide_write_roundtrip() {
+        for misalign in 0u32..8 {
+            for width in 57u32..=64 {
+                let vals = [
+                    0u64,
+                    1,
+                    u64::MAX >> (64 - width),
+                    0xDEAD_BEEF_CAFE_F00D & (u64::MAX >> (64 - width)),
+                ];
+                let mut w = BitWriter::new();
+                for _ in 0..misalign {
+                    w.write_bit(false);
+                }
+                for &v in &vals {
+                    w.write_bits(v, width);
+                }
+                let bytes = w.into_bytes();
+                let mut r = BitReader::at_bit(&bytes, misalign as u64).unwrap();
+                for &v in &vals {
+                    assert_eq!(r.read_bits(width).unwrap(), v, "width {width} misalign {misalign}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peek_then_skip_matches_read() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut w = BitWriter::new();
+        let vals: Vec<(u64, u32)> = (0..500)
+            .map(|_| {
+                let width = 1 + (rng.next_u64() % 64) as u32;
+                let v = rng.next_u64() & (if width == 64 { u64::MAX } else { (1 << width) - 1 });
+                (v, width)
+            })
+            .collect();
+        for &(v, width) in &vals {
+            w.write_bits(v, width);
+        }
+        let bytes = w.into_bytes();
+        let mut peeked = BitReader::new(&bytes);
+        let mut read = BitReader::new(&bytes);
+        for &(v, width) in &vals {
+            // A peek of up to 64 bits whose top `width` bits are the value.
+            let window = peeked.peek_bits(64);
+            assert_eq!(window >> (64 - width), v);
+            peeked.skip_bits(width).unwrap();
+            assert_eq!(read.read_bits(width).unwrap(), v);
+            assert_eq!(peeked.bit_pos(), read.bit_pos());
+        }
+    }
+
+    #[test]
+    fn peek_past_end_is_zero_padded_and_skip_errors() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1011, 4);
+        let bytes = w.into_bytes(); // one byte: 1011_0000
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8).unwrap(), 0b1011_0000);
+        // Stream exhausted: peek reads zeros, skip refuses.
+        assert_eq!(r.peek_bits(11), 0);
+        assert!(r.skip_bits(1).is_err());
+        assert_eq!(r.bit_pos(), 8, "failed skip consumes nothing");
+        // Mid-stream: the peek window extends past the end zero-padded.
+        let mut r2 = BitReader::new(&bytes);
+        assert_eq!(r2.read_bits(2).unwrap(), 0b10);
+        // 6 real bits "110000" left-aligned in the 11-bit window.
+        assert_eq!(r2.peek_bits(11), 0b110000 << 5);
+        assert!(r2.skip_bits(6).is_ok());
+        assert!(r2.skip_bits(1).is_err());
+    }
+
+    #[test]
+    fn remaining_bits_is_exact() {
+        let bytes = [0xAAu8; 20];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.remaining_bits(), 160);
+        r.read_bits(3).unwrap();
+        assert_eq!(r.remaining_bits(), 157);
+        r.read_unary().unwrap(); // "0" then "1": consumes 2 bits (0xAA = 10101010)
+        assert_eq!(r.remaining_bits() + r.bit_pos(), 160);
+        let mut r3 = BitReader::at_bit(&bytes, 155).unwrap();
+        assert_eq!(r3.remaining_bits(), 5);
     }
 }

@@ -4,6 +4,20 @@
 //! residual gaps that can be negative.
 //!
 //! All codes operate on the MSB-first [`BitWriter`]/[`BitReader`] streams.
+//!
+//! Two decode paths exist per family:
+//!
+//! * the **slow path** (`read_gamma`/`read_delta`/`read_zeta`/…) decodes
+//!   field by field and is the retained reference implementation (the
+//!   differential fuzz suite pins the fast path against it);
+//! * the **table path** ([`CodeReader`]) peeks [`PEEK_BITS`] bits once and
+//!   resolves any short codeword with a single lookup — the common case for
+//!   WebGraph streams, where degrees, copy blocks, interval fields and
+//!   residual gaps are overwhelmingly small. Long codewords fall back to
+//!   the slow path. Tables exist for γ, δ and ζ_k (k = 1..=4) and are built
+//!   once per process ([`decode_table`]).
+
+use std::sync::OnceLock;
 
 use super::bitstream::{BitReader, BitWriter, BitstreamExhausted};
 
@@ -233,6 +247,169 @@ impl Code {
     }
 }
 
+/// Width of the table-driven decode peek. 11 bits covers γ(x) for x < 63,
+/// δ(x) for x < 127 and the first few ζ shells — in practice well over 90%
+/// of the symbols of a WebGraph stream — while keeping each table at
+/// 2^11 entries (16 KiB).
+pub const PEEK_BITS: u32 = 11;
+const TABLE_LEN: usize = 1 << PEEK_BITS;
+
+/// Precomputed decode table for one code family: for every [`PEEK_BITS`]-bit
+/// window, the decoded value and codeword length when the window starts with
+/// a short (≤ `PEEK_BITS`-bit) codeword; length 0 marks a long codeword
+/// (slow-path fallback).
+pub struct DecodeTable {
+    entries: Vec<(u32, u8)>,
+}
+
+impl DecodeTable {
+    /// Build by enumerating coded values until the first codeword longer
+    /// than the peek window (codeword lengths are non-decreasing in the
+    /// value for γ, δ and ζ_k, so nothing short is skipped).
+    fn build(code: Code) -> Self {
+        let mut entries = vec![(0u32, 0u8); TABLE_LEN];
+        for x in 0..(2 * TABLE_LEN as u64) {
+            let mut w = BitWriter::new();
+            code.write(&mut w, x);
+            let len = w.bit_len();
+            if len > PEEK_BITS as u64 {
+                break;
+            }
+            let len = len as u32;
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let cw = r.read_bits(len).expect("codeword bits");
+            // Every window starting with this codeword maps to (x, len).
+            let lo = (cw << (PEEK_BITS - len)) as usize;
+            for slot in &mut entries[lo..lo + (1 << (PEEK_BITS - len))] {
+                debug_assert_eq!(slot.1, 0, "prefix-free codewords cannot collide");
+                *slot = (x as u32, len as u8);
+            }
+        }
+        Self { entries }
+    }
+
+    /// Resolve a [`PEEK_BITS`]-bit window: `(value, codeword_len)`, len 0 =
+    /// long codeword.
+    #[inline]
+    pub fn lookup(&self, window: u64) -> (u32, u8) {
+        self.entries[window as usize]
+    }
+}
+
+static GAMMA_TABLE: OnceLock<DecodeTable> = OnceLock::new();
+static DELTA_TABLE: OnceLock<DecodeTable> = OnceLock::new();
+static ZETA_TABLES: [OnceLock<DecodeTable>; 4] =
+    [OnceLock::new(), OnceLock::new(), OnceLock::new(), OnceLock::new()];
+
+/// The shared decode table for `code`, built on first use; `None` for
+/// families without one (unary is already a single `leading_zeros`; Golomb
+/// is parameterized by an unbounded `m`; ζ_k beyond 4 is unused by the
+/// WebGraph encoder).
+pub fn decode_table(code: Code) -> Option<&'static DecodeTable> {
+    match code {
+        Code::Gamma => Some(GAMMA_TABLE.get_or_init(|| DecodeTable::build(code))),
+        Code::Delta => Some(DELTA_TABLE.get_or_init(|| DecodeTable::build(code))),
+        Code::Zeta(k @ 1..=4) => {
+            Some(ZETA_TABLES[(k - 1) as usize].get_or_init(|| DecodeTable::build(code)))
+        }
+        _ => None,
+    }
+}
+
+/// Table-accelerated decoder for one code family, selected once per stream:
+/// the per-symbol cost of a short codeword is one peek, one table load and
+/// one skip. Carries hit/miss counters (the CI table-hit-rate canary).
+pub struct CodeReader {
+    code: Code,
+    table: Option<&'static DecodeTable>,
+    /// Symbols decoded through the table fast path.
+    pub table_hits: u64,
+    /// Symbols that fell back to the slow path (long codeword or a family
+    /// without a table).
+    pub table_misses: u64,
+}
+
+impl CodeReader {
+    pub fn new(code: Code) -> Self {
+        Self { code, table: decode_table(code), table_hits: 0, table_misses: 0 }
+    }
+
+    /// The code family this reader decodes.
+    #[inline]
+    pub fn code(&self) -> Code {
+        self.code
+    }
+
+    /// Decode one symbol: table fast path, slow-path fallback. Exactly
+    /// equivalent to [`Code::read`] — same values, same bit positions, same
+    /// error-ness (the differential fuzz suite asserts this).
+    #[inline]
+    pub fn read(&mut self, r: &mut BitReader<'_>) -> Result<u64, BitstreamExhausted> {
+        if let Some(t) = self.table {
+            let (v, len) = t.lookup(r.peek_bits(PEEK_BITS));
+            if len != 0 {
+                // A zero-padded window can only match an entry whose length
+                // exceeds the remaining bits — skip_bits turns that into
+                // the same exhaustion error the slow path would produce.
+                r.skip_bits(len as u32)?;
+                self.table_hits += 1;
+                return Ok(v as u64);
+            }
+        }
+        self.table_misses += 1;
+        self.code.read(r)
+    }
+
+    /// Batched run decode (the residual-run shape): `count` symbols appended
+    /// to `out`. Amortizes the table dispatch across the run — one peek and
+    /// one lookup per symbol, no per-symbol match on the code family.
+    pub fn read_run(
+        &mut self,
+        r: &mut BitReader<'_>,
+        count: usize,
+        out: &mut Vec<u64>,
+    ) -> Result<(), BitstreamExhausted> {
+        out.reserve(count);
+        if let Some(t) = self.table {
+            for _ in 0..count {
+                let (v, len) = t.lookup(r.peek_bits(PEEK_BITS));
+                if len != 0 {
+                    r.skip_bits(len as u32)?;
+                    self.table_hits += 1;
+                    out.push(v as u64);
+                } else {
+                    self.table_misses += 1;
+                    out.push(self.code.read(r)?);
+                }
+            }
+        } else {
+            self.table_misses += count as u64;
+            for _ in 0..count {
+                out.push(self.code.read(r)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fraction of symbols served by the table (1.0 when nothing decoded).
+    pub fn hit_rate(&self) -> f64 {
+        hit_rate(self.table_hits, self.table_misses)
+    }
+}
+
+/// Shared hit/miss → rate convention (1.0 when nothing was decoded) — one
+/// definition for the reader, the decode scratch, and the calibration
+/// report, so the CI canary and the bench numbers cannot silently diverge.
+pub fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        1.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +524,96 @@ mod tests {
             let mut r = BitReader::new(&bytes);
             for x in 0..max {
                 assert_eq!(read_minimal_binary(&mut r, max, bit_width(max)).unwrap(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn table_reader_matches_slow_path_exactly() {
+        // Every value around the short/long codeword boundary for every
+        // tabled family, plus large values forcing the slow-path fallback.
+        let mut values: Vec<u64> = (0..2048).collect();
+        values.extend([4095, 4096, 100_000, 1 << 33, u64::MAX >> 2]);
+        for code in [
+            Code::Gamma,
+            Code::Delta,
+            Code::Zeta(1),
+            Code::Zeta(2),
+            Code::Zeta(3),
+            Code::Zeta(4),
+            Code::Zeta(5), // no table: pure fallback
+            Code::Unary,   // no table
+        ] {
+            let vals: Vec<u64> = match code {
+                Code::Unary => values.iter().map(|&v| v % 500).collect(),
+                // The ζ writer's shell arithmetic (`left << k`) needs
+                // h·k + k ≤ 63, i.e. values below ~2^58; stay well under.
+                Code::Zeta(_) => values.iter().map(|&v| v.min(1 << 40)).collect(),
+                _ => values.clone(),
+            };
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                code.write(&mut w, v);
+            }
+            let bytes = w.into_bytes();
+            let mut fast = BitReader::new(&bytes);
+            let mut slow = BitReader::new(&bytes);
+            let mut reader = CodeReader::new(code);
+            for &v in &vals {
+                assert_eq!(reader.read(&mut fast).unwrap(), v, "{code:?} value {v}");
+                assert_eq!(code.read(&mut slow).unwrap(), v);
+                assert_eq!(fast.bit_pos(), slow.bit_pos(), "{code:?} value {v}");
+            }
+            assert_eq!(reader.table_hits + reader.table_misses, vals.len() as u64);
+            if matches!(code, Code::Gamma | Code::Delta) {
+                assert!(reader.table_hits > 0, "{code:?} small values must hit the table");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_run_matches_symbol_by_symbol() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for code in [Code::Gamma, Code::Zeta(3), Code::Golomb(16)] {
+            let vals: Vec<u64> = (0..3000).map(|_| rng.next_below(1 << 14)).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                code.write(&mut w, v);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let mut reader = CodeReader::new(code);
+            let mut out = Vec::new();
+            reader.read_run(&mut r, vals.len(), &mut out).unwrap();
+            assert_eq!(out, vals, "{code:?}");
+            // And a truncated run errors instead of inventing symbols.
+            let cut = &bytes[..bytes.len() / 2];
+            let mut r2 = BitReader::new(cut);
+            let mut out2 = Vec::new();
+            assert!(reader.read_run(&mut r2, vals.len(), &mut out2).is_err(), "{code:?}");
+        }
+    }
+
+    #[test]
+    fn table_reader_near_stream_end() {
+        // A single short codeword at the very end of the stream: the peek
+        // window is zero-padded but the decode must still be exact, and one
+        // more read must error.
+        for code in [Code::Gamma, Code::Delta, Code::Zeta(3)] {
+            for v in 0..64u64 {
+                let mut w = BitWriter::new();
+                code.write(&mut w, v);
+                let bit_len = w.bit_len();
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                let mut reader = CodeReader::new(code);
+                assert_eq!(reader.read(&mut r).unwrap(), v, "{code:?} value {v}");
+                assert_eq!(r.bit_pos(), bit_len);
+                // Whatever padding remains is under 8 zero bits — another
+                // symbol read must fail, identically to the slow path.
+                let fast_err = reader.read(&mut r).is_err();
+                let mut slow = BitReader::at_bit(&bytes, bit_len).unwrap();
+                assert_eq!(fast_err, code.read(&mut slow).is_err(), "{code:?} value {v}");
             }
         }
     }

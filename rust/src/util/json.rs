@@ -1,5 +1,9 @@
-//! A minimal JSON value + writer (serde is unavailable offline). Used by the
-//! bench harness to emit machine-readable results next to the human tables.
+//! A minimal JSON value, writer and parser (serde is unavailable offline).
+//! The writer emits machine-readable bench results next to the human
+//! tables; the parser ([`Json::parse`]) completes the round-trip so
+//! serialized artifacts — notably
+//! [`PartitionPlan::to_json`](crate::partition::PartitionPlan::to_json) —
+//! can be shipped across processes and read back.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -42,6 +46,49 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s, 0, true);
         s
+    }
+
+    /// Parse a JSON document (full JSON: nested containers, string escapes
+    /// incl. `\uXXXX` surrogate pairs, signed/fractional/exponent numbers).
+    /// Errors carry a byte position. Trailing non-whitespace is rejected.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { text, bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field access (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
@@ -111,6 +158,259 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Recursive-descent parser over the raw bytes (ASCII structure; string
+/// contents decoded as UTF-8/escapes). Depth-limited so adversarial
+/// nesting cannot overflow the stack.
+struct Parser<'a> {
+    /// The document as text (for one-scalar decodes in strings) …
+    text: &'a str,
+    /// … and the same bytes (for all ASCII structure scanning).
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+const MAX_DEPTH: usize = 128;
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = BTreeMap::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    let val = self.value(depth + 1)?;
+                    map.insert(key, val);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(map));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let digits = |p: &mut Self| {
+            let before = p.pos;
+            while matches!(p.peek(), Some(b'0'..=b'9')) {
+                p.pos += 1;
+            }
+            p.pos > before
+        };
+        if !digits(self) {
+            return Err(format!("expected digits at byte {}", self.pos));
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !digits(self) {
+                return Err(format!("expected fraction digits at byte {}", self.pos));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !digits(self) {
+                return Err(format!("expected exponent digits at byte {}", self.pos));
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("non-UTF-8 number at byte {start}"))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(format!("unterminated string at byte {}", self.pos));
+            };
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let Some(esc) = self.peek() else {
+                        return Err(format!("dangling escape at byte {}", self.pos));
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: require \uXXXX low half.
+                                if self.peek() == Some(b'\\') {
+                                    self.pos += 1;
+                                    self.expect(b'u')?;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(format!(
+                                            "bad low surrogate at byte {}",
+                                            self.pos
+                                        ));
+                                    }
+                                    let cp = 0x10000
+                                        + ((hi - 0xD800) << 10)
+                                        + (lo - 0xDC00);
+                                    char::from_u32(cp)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(hi)
+                            };
+                            match c {
+                                Some(c) => out.push(c),
+                                None => {
+                                    return Err(format!(
+                                        "bad \\u escape at byte {}",
+                                        self.pos
+                                    ))
+                                }
+                            }
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos - 1)),
+                    }
+                }
+                _ if b < 0x20 => {
+                    return Err(format!("raw control char at byte {}", self.pos));
+                }
+                _ if b < 0x80 => {
+                    out.push(b as char);
+                    self.pos += 1;
+                }
+                _ => {
+                    // One multi-byte UTF-8 scalar. `pos` only ever advances
+                    // by whole scalars, so it sits on a char boundary and
+                    // the O(1) str slice below cannot fail; decoding one
+                    // `char` (not re-validating the whole tail) keeps
+                    // string parsing linear.
+                    let c = self
+                        .text
+                        .get(self.pos..)
+                        .and_then(|rest| rest.chars().next())
+                        .ok_or_else(|| format!("bad UTF-8 at byte {}", self.pos))?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(format!("truncated \\u escape at byte {}", self.pos));
+        }
+        // Exactly 4 hex digits (from_str_radix alone would also accept a
+        // leading '+').
+        let digits = &self.bytes[self.pos..self.pos + 4];
+        if !digits.iter().all(u8::is_ascii_hexdigit) {
+            return Err(format!("bad \\u escape at byte {}", self.pos));
+        }
+        let s = std::str::from_utf8(digits).expect("hex digits are ASCII");
+        let v = u32::from_str_radix(s, 16)
+            .map_err(|_| format!("bad \\u escape at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(v)
     }
 }
 
@@ -190,5 +490,79 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::Arr(vec![]).to_string_pretty(), "[]");
         assert_eq!(Json::obj().to_string_pretty(), "{}");
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let mut o = Json::obj();
+        o.set("name", "plan \"x\"\n")
+            .set("count", 42u64)
+            .set("ratio", 1.625)
+            .set("neg", -3.5)
+            .set("flag", true)
+            .set("nothing", Json::Null)
+            .set("rows", vec![1u64, 2, 3]);
+        let mut nested = Json::Arr(vec![]);
+        nested.push(Json::obj().set("v", vec![0u64, 10]).clone());
+        o.set("parts", nested);
+        let text = o.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, o);
+        // And the parse→write→parse fixpoint holds.
+        assert_eq!(Json::parse(&back.to_string_pretty()).unwrap(), back);
+    }
+
+    #[test]
+    fn parse_scalars_and_numbers() {
+        assert_eq!(Json::parse(" null ").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-17").unwrap(), Json::Num(-17.0));
+        assert_eq!(Json::parse("2.5e3").unwrap(), Json::Num(2500.0));
+        assert_eq!(Json::parse("1E-2").unwrap(), Json::Num(0.01));
+        assert_eq!(
+            Json::parse("9007199254740991").unwrap(),
+            Json::Num(9007199254740991.0)
+        );
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        assert_eq!(
+            Json::parse(r#""a\"b\\c\nd\te\u0041\u00e9""#).unwrap(),
+            Json::Str("a\"b\\c\nd\teAé".to_string())
+        );
+        // Surrogate pair (U+1F600).
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("😀".to_string())
+        );
+        // Raw multi-byte UTF-8 passes through.
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".to_string()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "[1 2]", "{\"a\"}", "{\"a\":}", "01x", "nul", "\"\\q\"",
+            "\"unterminated", "[1]extra", "\"\\ud800\"", "--1", "1.", "+1",
+            "\"\\u+041\"", "\"\\u00g1\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Deep nesting is bounded, not a stack overflow.
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"k": [1, 2], "s": "x"}"#).unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(v.get("k").unwrap().as_arr().unwrap()[0].as_f64(), Some(1.0));
+        assert!(v.get("missing").is_none());
+        assert!(Json::Null.get("k").is_none());
     }
 }

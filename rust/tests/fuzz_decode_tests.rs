@@ -18,8 +18,8 @@ use paragrapher::formats::webgraph::{self, WgMeta, WgOffsets, WgParams};
 use paragrapher::graph::{generators, CsrGraph};
 use paragrapher::storage::sim::ReadCtx;
 use paragrapher::storage::{DeviceKind, IoAccount, SimStore};
-use paragrapher::util::bitstream::BitWriter;
-use paragrapher::util::codes::{int_to_nat, write_gamma, write_zeta};
+use paragrapher::util::bitstream::{BitReader, BitWriter};
+use paragrapher::util::codes::{int_to_nat, write_gamma, write_zeta, Code, CodeReader};
 use paragrapher::util::rng::Xoshiro256;
 
 const TRUNCATED_GRAPH_CASES: usize = 60;
@@ -27,6 +27,9 @@ const BITFLIP_CASES: usize = 120;
 const TRUNCATED_OFFSETS_CASES: usize = 30;
 const OFFSETS_BITFLIP_CASES: usize = 30;
 const ADVERSARIAL_CASES: usize = 11;
+const DIFFERENTIAL_VALID_CASES: usize = 60;
+const DIFFERENTIAL_GARBAGE_CASES: usize = 120;
+const DIFFERENTIAL_TRUNCATION_CASES: usize = 40;
 
 #[test]
 fn corpus_meets_the_size_bar() {
@@ -36,6 +39,10 @@ fn corpus_meets_the_size_bar() {
             + TRUNCATED_OFFSETS_CASES
             + OFFSETS_BITFLIP_CASES
             + ADVERSARIAL_CASES
+            >= 200
+    );
+    assert!(
+        DIFFERENTIAL_VALID_CASES + DIFFERENTIAL_GARBAGE_CASES + DIFFERENTIAL_TRUNCATION_CASES
             >= 200
     );
 }
@@ -378,4 +385,183 @@ fn adversarial_streams_error_fast_without_allocating() {
     }))
     .expect("no panic");
     assert!(r.is_err(), "empty stream");
+}
+
+// ---------------------------------------------------------------------------
+// Differential suite: the table-driven fast path (CodeReader) pitted against
+// the retained slow-path reference (Code::read) — identical values, identical
+// bit positions, identical error-ness, on valid, garbage, and truncated
+// streams. This is the contract that lets the decoder select the table path
+// per stream without a correctness risk.
+// ---------------------------------------------------------------------------
+
+/// Every code family the decoder may select a table for, plus table-less
+/// families that must fall through to the reference untouched.
+const DIFF_CODES: [Code; 8] = [
+    Code::Gamma,
+    Code::Delta,
+    Code::Zeta(1),
+    Code::Zeta(2),
+    Code::Zeta(3),
+    Code::Zeta(4),
+    Code::Zeta(5),
+    Code::Unary,
+];
+
+/// Decode `bytes` twice — fast and slow — asserting lockstep agreement
+/// symbol by symbol until the first error (which must strike both sides).
+/// Returns how many symbols decoded successfully.
+fn assert_lockstep(code: Code, bytes: &[u8], max_symbols: usize, ctx: &str) -> usize {
+    let mut fast = BitReader::new(bytes);
+    let mut slow = BitReader::new(bytes);
+    let mut reader = CodeReader::new(code);
+    for i in 0..max_symbols {
+        let f = reader.read(&mut fast);
+        let s = code.read(&mut slow);
+        match (f, s) {
+            (Ok(fv), Ok(sv)) => {
+                assert_eq!(fv, sv, "{ctx}: symbol {i} value");
+                assert_eq!(
+                    fast.bit_pos(),
+                    slow.bit_pos(),
+                    "{ctx}: symbol {i} bit position"
+                );
+            }
+            (f, s) => {
+                assert!(
+                    f.is_err() && s.is_err(),
+                    "{ctx}: symbol {i} error disagreement (fast {:?}, slow {:?})",
+                    f.is_ok(),
+                    s.is_ok()
+                );
+                return i;
+            }
+        }
+    }
+    max_symbols
+}
+
+/// Valid seeded streams: mixtures of small (table-resident), boundary and
+/// huge (slow-path) values for every family; full agreement, zero errors.
+#[test]
+fn differential_valid_streams() {
+    for case in 0..DIFFERENTIAL_VALID_CASES {
+        let code = DIFF_CODES[case % DIFF_CODES.len()];
+        let mut rng = Xoshiro256::seed_from_u64(0xD1FF + case as u64);
+        let values: Vec<u64> = (0..400)
+            .map(|i| match i % 5 {
+                0 => rng.next_below(16),                 // tiny: always table
+                1 => rng.next_below(2048),               // around the table edge
+                2 => rng.next_below(1 << 20),            // mid: slow path
+                3 => 2040 + rng.next_below(16),          // straddles PEEK_BITS
+                _ => rng.next_below(1 << 40),            // huge: slow path
+            })
+            .map(|v| if code == Code::Unary { v % 700 } else { v })
+            .collect();
+        let mut w = BitWriter::new();
+        for &v in &values {
+            code.write(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let decoded =
+            assert_lockstep(code, &bytes, values.len(), &format!("valid case {case} {code:?}"));
+        assert_eq!(decoded, values.len(), "case {case} {code:?}: no spurious error");
+        // And the decoded values are the written ones (against the writer,
+        // not just against the other decoder).
+        let mut r = BitReader::new(&bytes);
+        let mut reader = CodeReader::new(code);
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(reader.read(&mut r).unwrap(), v, "case {case} {code:?} symbol {i}");
+        }
+    }
+}
+
+/// Pure garbage: random byte blobs. Whatever happens — values, positions,
+/// and the first error — must be identical between the two paths.
+#[test]
+fn differential_garbage_streams() {
+    for case in 0..DIFFERENTIAL_GARBAGE_CASES {
+        let code = DIFF_CODES[case % DIFF_CODES.len()];
+        let mut rng = Xoshiro256::seed_from_u64(0x6A4B + case as u64);
+        let len = 1 + rng.next_below(96) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        assert_lockstep(code, &bytes, 4096, &format!("garbage case {case} {code:?}"));
+    }
+}
+
+/// Valid streams cut at every kind of boundary (including mid-codeword and
+/// inside the final byte): agreement up to and including the first error.
+#[test]
+fn differential_truncated_streams() {
+    for case in 0..DIFFERENTIAL_TRUNCATION_CASES {
+        let code = DIFF_CODES[case % DIFF_CODES.len()];
+        let mut rng = Xoshiro256::seed_from_u64(0x7A11C + case as u64);
+        let values: Vec<u64> = (0..200)
+            .map(|_| {
+                let v = rng.next_below(1 << 16);
+                if code == Code::Unary {
+                    v % 300
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &v in &values {
+            code.write(&mut w, v);
+        }
+        let full = w.into_bytes();
+        let keep = (full.len() as u64 * rng.next_below(100) / 100) as usize;
+        let cut = &full[..keep];
+        let decoded =
+            assert_lockstep(code, cut, values.len(), &format!("trunc case {case} {code:?}"));
+        // Everything decoded before the cut point must be the real prefix.
+        let mut r = BitReader::new(cut);
+        let mut reader = CodeReader::new(code);
+        for (i, &v) in values.iter().take(decoded).enumerate() {
+            assert_eq!(reader.read(&mut r).unwrap(), v, "case {case} {code:?} symbol {i}");
+        }
+    }
+}
+
+/// Hand-built adversarial windows targeting the table edge: codewords whose
+/// length is exactly PEEK_BITS, exactly PEEK_BITS+1, and streams ending one
+/// bit short of a short codeword.
+#[test]
+fn differential_table_edge_cases() {
+    use paragrapher::util::codes::PEEK_BITS;
+    for code in [Code::Gamma, Code::Delta, Code::Zeta(3)] {
+        // Find the values whose codeword lengths straddle the peek window.
+        let mut at_edge = None;
+        let mut past_edge = None;
+        for x in 0..(1u64 << 14) {
+            let mut w = BitWriter::new();
+            code.write(&mut w, x);
+            if w.bit_len() == PEEK_BITS as u64 && at_edge.is_none() {
+                at_edge = Some(x);
+            }
+            if w.bit_len() == PEEK_BITS as u64 + 1 && past_edge.is_none() {
+                past_edge = Some(x);
+            }
+            if at_edge.is_some() && past_edge.is_some() {
+                break;
+            }
+        }
+        for x in at_edge.into_iter().chain(past_edge) {
+            // The codeword alone, then the codeword with its last bit cut.
+            let mut w = BitWriter::new();
+            code.write(&mut w, x);
+            let bit_len = w.bit_len();
+            let bytes = w.into_bytes();
+            assert_lockstep(code, &bytes, 2, &format!("edge {code:?} x={x}"));
+            // Truncate to bit_len - 1 bits by rebuilding the prefix.
+            let mut r = BitReader::new(&bytes);
+            let mut cutw = BitWriter::new();
+            for _ in 0..bit_len - 1 {
+                cutw.write_bit(r.read_bit().unwrap());
+            }
+            let cut = cutw.into_bytes();
+            assert_lockstep(code, &cut, 2, &format!("edge-cut {code:?} x={x}"));
+        }
+    }
 }

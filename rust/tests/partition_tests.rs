@@ -100,6 +100,36 @@ fn plans_cover_every_edge_exactly_once() {
     }
 }
 
+/// Property: every plan kind survives the cross-process shipping leg —
+/// to_json → text → Json::parse → from_json reconstructs the identical
+/// plan, and the reconstructed ("received") plan is served by the real
+/// coordinator with exact edge coverage, as if a leader had shipped it to
+/// a machine.
+#[test]
+fn shipped_plan_round_trips_and_serves() {
+    use paragrapher::util::json::Json;
+    let g = generators::rmat(8, 5, 21);
+    let (_store, graph) = open_graph(&g, 3);
+    let offs = graph.offsets_index();
+    for plan in [
+        PartitionPlan::one_d(offs, 6),
+        PartitionPlan::two_d(offs, 2, 3),
+        PartitionPlan::coo(offs, 9),
+    ] {
+        let wire = plan.to_json().to_string_pretty();
+        let received =
+            PartitionPlan::from_json(&Json::parse(&wire).expect("parse")).expect("from_json");
+        assert_eq!(received, plan, "kind {:?}", plan.kind);
+        let delivered = drain_edges(&graph, received, 2);
+        assert_exact_cover(&g, &delivered);
+    }
+    // A tampered document must be refused before it reaches the server.
+    let wire = PartitionPlan::one_d(offs, 4).to_json().to_string_pretty();
+    let mut doc = Json::parse(&wire).unwrap();
+    doc.set("num_edges", (g.num_edges() + 1) as f64);
+    assert!(PartitionPlan::from_json(&doc).is_err(), "edge-count mismatch accepted");
+}
+
 /// Partitioned WCC / BFS / Afforest equal their full-load counterparts.
 #[test]
 fn partitioned_algorithms_match_full_load() {
