@@ -296,6 +296,53 @@ pub fn calibrate_decode(scale: usize, seed: u64, repeats: usize) -> Result<Decod
     })
 }
 
+/// Measured throughput of the decoder's phase-2 hot loop, Melem/s:
+/// `(fused, split)` — the fused scan+validate+narrow pass
+/// ([`ScanEngine::scan_validate_u32`](crate::runtime::ScanEngine::scan_validate_u32))
+/// vs the former scan-then-validate shape — over a seeded `len`-element
+/// gap array, best of `repeats`. The `ci-summary` regression canary.
+pub fn measure_fused_scan(len: usize, repeats: usize) -> (f64, f64) {
+    use crate::runtime::NativeScan;
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(5);
+    let src: Vec<i64> = (0..len).map(|_| rng.next_below(48) as i64).collect();
+    let upper = 1u64 << 40;
+    let mut buf = vec![0i64; len];
+    let mut out: Vec<u32> = Vec::new();
+    let mut fused = f64::INFINITY;
+    let mut split = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        buf.copy_from_slice(&src);
+        let t0 = std::time::Instant::now();
+        let v = NativeScan.scan_validate_u32(&mut buf, upper, &mut out).expect("fused scan");
+        fused = fused.min(t0.elapsed().as_secs_f64().max(1e-9));
+        assert!(v.is_none(), "seeded gaps are in range");
+        buf.copy_from_slice(&src);
+        let t0 = std::time::Instant::now();
+        scan_then_validate_reference(&mut buf, upper, &mut out);
+        split = split.min(t0.elapsed().as_secs_f64().max(1e-9));
+    }
+    (len as f64 / fused / 1e6, len as f64 / split / 1e6)
+}
+
+/// The pre-fusion phase-2 reference shape — inclusive scan, then a
+/// separate validate-and-narrow walk. One shared definition so the
+/// `hot_path` bench and [`measure_fused_scan`] time the *same* baseline
+/// (it is also the shape of the `ScanEngine` trait default). Panics on a
+/// validation failure: baseline inputs are in range by construction.
+pub fn scan_then_validate_reference(buf: &mut [i64], upper: u64, out: &mut Vec<u32>) {
+    use crate::runtime::NativeScan;
+    NativeScan.inclusive_scan_i64(buf).expect("scan");
+    out.clear();
+    out.reserve(buf.len());
+    let hi = upper as i64;
+    let mut prev = -1i64;
+    for &s in buf.iter() {
+        assert!(s >= 0 && s < hi && s >= prev, "validation");
+        out.push(s as u32);
+        prev = s;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -374,6 +421,13 @@ mod tests {
             "structure fields alone must clear the floor: {}",
             cal.table_hit_rate()
         );
+    }
+
+    #[test]
+    fn fused_scan_measurement_is_sane() {
+        let (fused, split) = measure_fused_scan(1 << 14, 2);
+        assert!(fused > 0.0, "fused throughput measured");
+        assert!(split > 0.0, "split throughput measured");
     }
 
     #[test]

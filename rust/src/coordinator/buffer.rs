@@ -39,6 +39,23 @@
 //! data outright, so the buffer recycles the moment the decode lands.
 //! Both park on the same condvar, so the pool is also the cross-request
 //! fairness point.
+//!
+//! **Zero-copy delivery — who owns `data` at each status.** On the block
+//! path the producer does not decode into a scratch block and copy: while
+//! the buffer is in `J_READING` the decoder writes *directly* into
+//! [`BufferData`]'s vectors through a
+//! [`DecodeSink`](crate::formats::webgraph::DecodeSink) — the claim made
+//! the producer the buffer's sole owner, so holding the `data` mutex
+//! across the decode contends with no one. At `J_READ_COMPLETED` →
+//! `C_USER_ACCESS` the consumer borrows the same vectors as the user's
+//! [`EdgeBlock`](crate::coordinator::EdgeBlock) views (edge-trimmed COO
+//! callbacks *slice* them rather than copy); the recycle back to `C_IDLE`
+//! only clears lengths, so the vectors' high-water capacity survives and
+//! steady-state blocks decode into warmed, allocation-free storage. A
+//! decode that fails mid-block leaves partial `data` behind — harmless,
+//! because the failure path recycles straight to `C_IDLE` and the next
+//! producer's sink clears before writing; no status ever exposes
+//! partially-written data to a reader.
 
 use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Condvar;

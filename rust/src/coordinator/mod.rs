@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::formats::source::{block_cost, GraphSource};
-use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
+use crate::formats::webgraph::{self, DecodeSink, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::VertexId;
 use crate::model::LoadModel;
 use crate::partition::{self, LoadedPartition, Partition, PartitionPlan, PartitionStream};
@@ -290,8 +290,39 @@ pub struct GraphStats {
     pub partitions_staged: AtomicU64,
     /// Modeled block-decode time, nanoseconds: per block, the max over its
     /// chunk workers' virtual clocks (I/O + CPU), summed across blocks —
-    /// the §3 overlap composition at `decode_workers` granularity.
+    /// the §3 overlap composition at `decode_workers` granularity. A
+    /// weighted graph's sidecar read is its own (post-decode) phase, added
+    /// on top of the chunk-worker max.
     pub decode_seconds: AtomicU64,
+    /// Bytes of decoded payload (offsets, edges, weights) written straight
+    /// into coordinator buffers or handed out as borrowed views — each one
+    /// a byte the former decode-then-copy pipeline materialized twice.
+    /// Grows on every sink-backed block decode and every COO trim view.
+    pub copy_bytes_avoided: AtomicU64,
+    /// Bytes of decoded payload the block-request path *did* copy after
+    /// decode. The zero-copy invariant: stays 0 with `decode_workers == 1`
+    /// (the default); a multi-worker fan-out counts its vertex-order stitch
+    /// here (chunks decode into per-chunk owned storage by design).
+    pub delivery_copy_bytes: AtomicU64,
+    /// Edges delivered through the block-request (callback) path, paired
+    /// with [`Self::delivery_wall_ns`] for the delivery-throughput canary.
+    pub delivery_edges: AtomicU64,
+    /// Wall nanoseconds spent producing block-request payloads (decode +
+    /// weights read), summed across blocks.
+    pub delivery_wall_ns: AtomicU64,
+}
+
+impl GraphStats {
+    /// Delivered edges per wall second on the block-request path (0.0
+    /// before anything was delivered) — the `delivery-throughput` counter
+    /// proving the zero-copy pipeline's win end to end.
+    pub fn delivery_throughput(&self) -> f64 {
+        let ns = self.delivery_wall_ns.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.delivery_edges.load(Ordering::Relaxed) as f64 / (ns as f64 / 1e9)
+    }
 }
 
 struct GraphInner {
@@ -324,6 +355,14 @@ pub struct PgGraph {
 /// when the callback returns (`csx_release_read_buffers` is automatic).
 pub type BlockCallback = Arc<dyn Fn(&EdgeBlock<'_>) + Send + Sync>;
 
+thread_local! {
+    /// Per-callback-thread offsets scratch for `coo_get_edges` trim views:
+    /// the rebased offsets (the only per-block data the zero-copy trim
+    /// still writes) reuse one warmed vector per thread.
+    static COO_TRIM_SCRATCH: std::cell::RefCell<Vec<u64>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
 impl PgGraph {
     pub fn num_vertices(&self) -> usize {
         self.inner.meta.num_vertices
@@ -349,6 +388,25 @@ impl PgGraph {
     /// Modeled block-decode seconds (see [`GraphStats::decode_seconds`]).
     pub fn decode_seconds(&self) -> f64 {
         self.inner.stats.decode_seconds.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Payload bytes delivered without a post-decode copy (see
+    /// [`GraphStats::copy_bytes_avoided`]).
+    pub fn copy_bytes_avoided(&self) -> u64 {
+        self.inner.stats.copy_bytes_avoided.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes the block-request path copied after decode — 0 under
+    /// the default single-worker decode (see
+    /// [`GraphStats::delivery_copy_bytes`]).
+    pub fn delivery_copy_bytes(&self) -> u64 {
+        self.inner.stats.delivery_copy_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Delivered edges per wall second on the block-request path (see
+    /// [`GraphStats::delivery_throughput`]).
+    pub fn delivery_throughput(&self) -> f64 {
+        self.inner.stats.delivery_throughput()
     }
 
     /// Buffers currently in C_IDLE — equals the pool size whenever no
@@ -505,43 +563,76 @@ impl PgGraph {
 
     /// `csx_get_subgraph`, blocking: waits for completion and returns the
     /// assembled subgraph (Fig. 2's synchronous call).
+    ///
+    /// Assembly is write-in-place: the result's exact shape is known up
+    /// front from the Elias–Fano sidecar (degree sums), so each delivered
+    /// block copies its rows once into their final position — no per-block
+    /// `to_vec`, no sort, no second concatenation pass. Blocks tile the
+    /// range and every decoded block's shape is validated against the
+    /// sidecar before delivery, so the slots are disjoint and exact
+    /// regardless of completion order.
     pub fn csx_get_subgraph_sync(&self, range: VertexRange) -> Result<DecodedBlock> {
-        #[allow(clippy::type_complexity)]
-        let collected: Arc<Mutex<Vec<(usize, Vec<u64>, Vec<VertexId>)>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let c2 = Arc::clone(&collected);
+        let n = self.inner.meta.num_vertices;
+        if range.start > range.end || range.end > n {
+            bail!("bad vertex range {}..{}", range.start, range.end);
+        }
+        let offs = &self.inner.offsets;
+        let base_edge = offs.edge_offset(range.start);
+        let total_edges = (offs.edge_offset(range.end) - base_edge) as usize;
+        let assembled = Arc::new(Mutex::new(DecodedBlock {
+            first_vertex: range.start,
+            offsets: vec![0u64; range.len() + 1],
+            // Reserve exact capacity once, capped by the decoder's shared
+            // forged-sidecar guard: blocks land by resize-to-fit, which is
+            // a no-op within the reservation.
+            edges: Vec::with_capacity(total_edges.min(webgraph::MAX_SIDECAR_RESERVE_EDGES)),
+        }));
+        let a2 = Arc::clone(&assembled);
+        let delivered = Arc::new(AtomicU64::new(0));
+        let d2 = Arc::clone(&delivered);
+        let start_v = range.start;
         let req = self.csx_get_subgraph(
             range,
             Arc::new(move |blk: &EdgeBlock<'_>| {
-                c2.lock().expect("collect lock").push((
-                    blk.start_vertex,
-                    blk.offsets.to_vec(),
-                    blk.edges.to_vec(),
-                ));
+                let mut out = a2.lock().expect("assemble lock");
+                let lo = (blk.start_edge - base_edge) as usize;
+                let hi = lo + blk.edges.len();
+                if out.edges.len() < hi {
+                    out.edges.resize(hi, 0);
+                }
+                out.edges[lo..hi].copy_from_slice(blk.edges);
+                let vi0 = blk.start_vertex - start_v;
+                for (i, &o) in blk.offsets.iter().enumerate().skip(1) {
+                    out.offsets[vi0 + i] = lo as u64 + o;
+                }
+                d2.fetch_add(1, Ordering::AcqRel);
             }),
         )?;
         req.wait();
         if let Some(e) = req.error() {
             bail!("load failed: {e}");
         }
-        let mut parts = collected.lock().expect("collect lock");
-        parts.sort_by_key(|(sv, _, _)| *sv);
-        let mut block = DecodedBlock {
-            first_vertex: range.start,
-            offsets: vec![0],
-            edges: Vec::new(),
-        };
-        for (_, offs, edges) in parts.iter() {
-            let base = block.edges.len() as u64;
-            block.edges.extend_from_slice(edges);
-            block.offsets.extend(offs.iter().skip(1).map(|o| base + o));
+        // In-place assembly needs *every* block to have landed; a quietly
+        // truncated delivery (graph released mid-request) must not read as
+        // a well-formed subgraph with zeroed holes.
+        if delivered.load(Ordering::Acquire) != req.total_blocks() {
+            bail!("blocking load truncated: graph released mid-request");
         }
-        Ok(block)
+        let mut out = assembled.lock().expect("assemble lock");
+        Ok(std::mem::replace(
+            &mut *out,
+            DecodedBlock { first_vertex: 0, offsets: Vec::new(), edges: Vec::new() },
+        ))
     }
 
     /// `coo_get_edges`: edge-granular request `[start_edge, end_edge)` —
     /// the finest-granularity base of §4.2. Blocks are delivered with the
     /// first/last vertex lists trimmed to the requested edge range.
+    ///
+    /// Trimming is zero-copy: the delivered [`EdgeBlock`] *slices* the
+    /// library buffer's edge (and weight) arrays in place; only the
+    /// rebased offsets — a per-vertex quantity, small next to the edges —
+    /// are written into the callback thread's reusable scratch.
     pub fn coo_get_edges(
         &self,
         start_edge: u64,
@@ -556,48 +647,59 @@ impl PgGraph {
         // Vertex span covering the edge range.
         let v_first = offs.edge_partition_point(|e| e <= start_edge).saturating_sub(1);
         let v_last = offs.edge_partition_point(|e| e < end_edge);
-        let trim = move |blk: &EdgeBlock<'_>| -> Option<(Vec<u64>, Vec<VertexId>, usize, u64)> {
+        let user = callback;
+        let inner = Arc::clone(&self.inner);
+        let cb: BlockCallback = Arc::new(move |blk: &EdgeBlock<'_>| {
             // Trim the block's edges to [start_edge, end_edge).
             let blk_start = blk.start_edge;
             let blk_end = blk.start_edge + blk.num_edges();
             let lo = start_edge.max(blk_start);
             let hi = end_edge.min(blk_end);
             if lo >= hi {
-                return None;
+                return;
             }
             let lo_local = (lo - blk_start) as usize;
             let hi_local = (hi - blk_start) as usize;
-            let edges = blk.edges[lo_local..hi_local].to_vec();
-            // Rebase offsets to the trimmed window.
-            let mut offsets = Vec::with_capacity(blk.num_vertices() + 1);
-            let mut first_v = None;
-            for i in 0..blk.num_vertices() {
-                let (s, e) = (blk.offsets[i] as usize, blk.offsets[i + 1] as usize);
-                if e <= lo_local || s >= hi_local {
-                    continue;
+            // Rebase offsets to the trimmed window, into the callback
+            // thread's reusable scratch — callback threads trim their
+            // blocks concurrently (no request-wide serialization point),
+            // and a panicking user callback unwinds cleanly (a RefCell
+            // borrow releases on unwind; a mutex would stay poisoned).
+            COO_TRIM_SCRATCH.with(|cell| {
+                let mut offsets = cell.borrow_mut();
+                offsets.clear();
+                let mut first_v = None;
+                for i in 0..blk.num_vertices() {
+                    let (s, e) = (blk.offsets[i] as usize, blk.offsets[i + 1] as usize);
+                    if e <= lo_local || s >= hi_local {
+                        continue;
+                    }
+                    if first_v.is_none() {
+                        first_v = Some(blk.start_vertex + i);
+                        offsets.push(0);
+                    }
+                    offsets.push((e.min(hi_local) - lo_local) as u64);
                 }
-                if first_v.is_none() {
-                    first_v = Some(blk.start_vertex + i);
-                    offsets.push(0);
+                let first_v = first_v.unwrap_or(blk.start_vertex);
+                // The edges (and weights) the view borrows instead of
+                // copying.
+                let mut lane = std::mem::size_of::<VertexId>();
+                if blk.weights.is_some() {
+                    lane += std::mem::size_of::<crate::graph::Weight>();
                 }
-                offsets.push((e.min(hi_local) - lo_local) as u64);
-            }
-            Some((offsets, edges, first_v.unwrap_or(blk.start_vertex), lo))
-        };
-        let user = callback;
-        let cb: BlockCallback = Arc::new(move |blk: &EdgeBlock<'_>| {
-            if let Some((offsets, edges, first_v, lo)) = trim(blk) {
+                let viewed = ((hi_local - lo_local) * lane) as u64;
+                inner.stats.copy_bytes_avoided.fetch_add(viewed, Ordering::Relaxed);
                 let trimmed = EdgeBlock {
                     buffer_id: blk.buffer_id,
                     start_vertex: first_v,
                     end_vertex: first_v + offsets.len().saturating_sub(1),
                     start_edge: lo,
                     offsets: &offsets,
-                    edges: &edges,
-                    weights: None,
+                    edges: &blk.edges[lo_local..hi_local],
+                    weights: blk.weights.map(|w| &w[lo_local..hi_local]),
                 };
                 user(&trimmed);
-            }
+            });
         });
         self.csx_get_subgraph(VertexRange::new(v_first, v_last.max(v_first)), cb)
     }
@@ -903,14 +1005,30 @@ impl Drop for PgGraph {
     }
 }
 
-/// Producer-side block decode: claim C_REQUESTED -> J_READING, fill the
-/// buffer, publish J_READ_COMPLETED (or fail back to C_IDLE). Returns true
-/// when the buffer holds a decoded block (status J_READ_COMPLETED).
+/// Producer-side block decode: claim C_REQUESTED -> J_READING, decode
+/// *straight into* the buffer's storage, publish J_READ_COMPLETED (or fail
+/// back to C_IDLE). Returns true when the buffer holds a decoded block
+/// (status J_READ_COMPLETED).
 ///
-/// The decode itself fans out over `decode_workers` chunk workers
-/// ([`Decoder::decode_range_parallel`]); each carries its own virtual
-/// clock, and the block's modeled decode time — max over the chunk
-/// workers, per §3 — is accumulated into [`GraphStats::decode_seconds`].
+/// Zero-copy delivery: the claimed buffer's `BufferData` vectors are
+/// pre-reserved off the Elias–Fano sidecar and handed to the decoder as a
+/// [`DecodeSink`], so the default (`decode_workers == 1`) path materializes
+/// no intermediate `DecodedBlock` and performs no post-decode memcpy — the
+/// former `extend_from_slice` hand-off is gone, and every payload byte is
+/// counted in [`GraphStats::copy_bytes_avoided`]. A weighted graph's
+/// sidecar decodes its `f32`s straight into `data.weights` off the
+/// borrowed file image (no intermediate byte vector) on the zero-copy
+/// reader. Holding `buf.data` across the decode is safe: the status
+/// protocol makes J_READING the producer's exclusive-ownership state.
+///
+/// With `decode_workers > 1` the decode fans out over chunk workers as
+/// borrowed scoped jobs on the shared coordinator pool
+/// ([`Decoder::decode_range_parallel_sink`]); chunks decode into per-chunk
+/// owned storage and the vertex-order stitch lands directly in the buffer
+/// — one copy, counted in [`GraphStats::delivery_copy_bytes`]. Each chunk
+/// worker carries its own virtual clock; the block's modeled decode time —
+/// max over the chunk workers, plus the sequential weights phase — is
+/// accumulated into [`GraphStats::decode_seconds`].
 ///
 /// Every chunk decodes through its worker thread's persistent
 /// [`DecodeScratch`](crate::formats::webgraph::DecodeScratch): the pool
@@ -935,7 +1053,14 @@ fn decode_into_buffer(
     }
     let accounts: Vec<IoAccount> =
         (0..decode_workers.max(1)).map(|_| IoAccount::new()).collect();
-    let result = (|| -> Result<()> {
+    // The weights sidecar read is a sequential phase *after* the chunk
+    // fan-out, so it gets its own account and composes additively with the
+    // chunk-worker max — billing it to `accounts[0]` (as the pre-zero-copy
+    // pipeline did) let it hide under a slower sibling chunk whenever
+    // worker 0 was not the block's critical path.
+    let weights_acct = IoAccount::new();
+    let t0 = Instant::now();
+    let result = (|| -> Result<(u64, u64)> {
         let dec = Decoder::open(
             &inner.store,
             &inner.base,
@@ -944,40 +1069,83 @@ fn decode_into_buffer(
             read_ctx,
             &accounts[0],
         )?;
-        // Intra-block fan-out runs as borrowed scoped jobs on the shared
-        // coordinator worker pool (the calling worker participates), not as
-        // fresh OS threads per block.
-        let block = dec.decode_range_parallel_on(
-            meta.start_vertex,
-            meta.end_vertex,
-            &accounts,
-            scan,
-            Some(chunk_pool),
-        )?;
         let mut data = buf.data.lock().expect("data lock");
         data.clear();
-        data.offsets.extend_from_slice(&block.offsets);
-        data.edges.extend_from_slice(&block.edges);
+        // Pre-reserve the exact block shape off the sidecar (capped by the
+        // decoder's shared guard, so a forged sidecar cannot force an
+        // unbounded allocation).
+        data.offsets.reserve(meta.num_vertices() + 1);
+        data.edges
+            .reserve((meta.num_edges() as usize).min(webgraph::MAX_SIDECAR_RESERVE_EDGES));
+        let stitched = {
+            let buffer::BufferData { offsets, edges, .. } = &mut *data;
+            let mut sink = DecodeSink::new(offsets, edges);
+            dec.decode_range_parallel_sink(
+                meta.start_vertex,
+                meta.end_vertex,
+                &accounts,
+                scan,
+                Some(chunk_pool),
+                &mut sink,
+            )?
+        };
+        // The stream's degrees are authoritative for the decode, but the
+        // rest of the delivery pipeline (COO trims, sync assembly, edge
+        // accounting) derives positions from the sidecar — a disagreement
+        // must fail the block, not silently misplace edges.
+        if data.offsets.len() != meta.num_vertices() + 1
+            || *data.offsets.last().unwrap_or(&0) != meta.num_edges()
+        {
+            bail!(
+                "decoded block shape disagrees with the offsets sidecar at vertices {}..{}",
+                meta.start_vertex,
+                meta.end_vertex
+            );
+        }
         if inner.gtype.weighted() {
             let name = format!("{}.weights", inner.base);
             let file = inner
                 .store
                 .open(&name)
                 .with_context(|| format!("missing {name}"))?;
-            let bytes =
-                file.read(meta.start_edge * 4, meta.num_edges() * 4, read_ctx, &accounts[0]);
-            data.weights.extend(
-                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+            read_weights_into(
+                &file,
+                meta.start_edge * 4,
+                meta.num_edges() * 4,
+                read_ctx,
+                &weights_acct,
+                &mut data.weights,
             );
+            if data.weights.len() as u64 != meta.num_edges() {
+                bail!("weights sidecar truncated at edges {}..{}", meta.start_edge, meta.end_edge);
+            }
         }
-        Ok(())
+        let payload = (data.offsets.len() * std::mem::size_of::<u64>()
+            + data.edges.len() * std::mem::size_of::<VertexId>()
+            + data.weights.len() * std::mem::size_of::<crate::graph::Weight>())
+            as u64;
+        Ok((payload, stitched))
     })();
     match result {
-        Ok(()) => {
-            let modeled = crate::storage::vclock::phase_elapsed(&accounts);
+        Ok((payload, stitched)) => {
+            let modeled =
+                crate::storage::vclock::phase_elapsed(&accounts) + weights_acct.elapsed_seconds();
             inner.stats.decode_seconds.fetch_add((modeled * 1e9) as u64, Ordering::Relaxed);
             inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
             inner.stats.edges_decoded.fetch_add(meta.num_edges(), Ordering::Relaxed);
+            // Zero-copy accounting: the former pipeline memcpy'd the whole
+            // payload from an owned block into the buffer; the sink path
+            // copies only the fan-out stitch (0 on the default path).
+            inner
+                .stats
+                .copy_bytes_avoided
+                .fetch_add(payload.saturating_sub(stitched), Ordering::Relaxed);
+            inner.stats.delivery_copy_bytes.fetch_add(stitched, Ordering::Relaxed);
+            inner.stats.delivery_edges.fetch_add(meta.num_edges(), Ordering::Relaxed);
+            inner
+                .stats
+                .delivery_wall_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             buf.set_status(BufferStatus::JReadCompleted);
             true
         }
@@ -989,6 +1157,23 @@ fn decode_into_buffer(
     }
 }
 
+/// Decode a `.weights` sidecar span (little-endian `f32`s) straight into
+/// `out` — no intermediate byte vector on the default zero-copy reader;
+/// the managed `BufferedCopy` reader keeps its modeled staging pipeline.
+fn read_weights_into(
+    file: &crate::storage::SimFile<'_>,
+    byte_offset: u64,
+    byte_len: u64,
+    ctx: ReadCtx,
+    acct: &IoAccount,
+    out: &mut Vec<crate::graph::Weight>,
+) {
+    out.clear();
+    let bytes = file.read_borrowed(byte_offset, byte_len, ctx, acct);
+    out.reserve(bytes.len() / 4);
+    out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+}
+
 /// Producer-side partition decode: claim the buffer (C_REQUESTED ->
 /// J_READING), decode the partition's rows, filter to its tile, and
 /// recycle. The buffer serves as the decode-concurrency token only —
@@ -996,8 +1181,13 @@ fn decode_into_buffer(
 /// outlives any buffer reuse), so routing the decoded vectors through
 /// `BufferData` would both strip the buffer's warmed capacity (hurting
 /// the block-request path that relies on it) and add an unreachable
-/// hand-off state. The buffer is recycled on *every* exit path — a
-/// leaked claim would shrink the pool for the rest of the run.
+/// hand-off state. For the same reason partition decode deliberately stays
+/// on the *owned* (`decode_range_parallel_on`) path rather than the
+/// zero-copy `DecodeSink`: the decoded vectors ARE the deliverable the
+/// consumer keeps, there is no second home to copy them into, and a sink
+/// aimed at the recycled buffer would reintroduce exactly the hand-off
+/// copy the sink exists to remove. The buffer is recycled on *every* exit
+/// path — a leaked claim would shrink the pool for the rest of the run.
 fn decode_partition(
     inner: &GraphInner,
     buffer_id: usize,

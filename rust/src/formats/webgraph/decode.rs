@@ -15,22 +15,36 @@
 //!    [`CodeReader`]s (11-bit peek, slow-path fallback) — this phase bounds
 //!    the paper's decompression bandwidth `d`, and the
 //!    `paragrapher calibrate-decode` subcommand measures what it achieves.
-//! 2. **Gap scan + merge** (vectorizable): residual gaps → absolute IDs via
-//!    an inclusive scan, then a 3-way sorted merge. The scan runs through a
-//!    [`ScanEngine`](crate::runtime::ScanEngine) — either native Rust or
-//!    the AOT-compiled Pallas kernel via PJRT — over one concatenated gap
-//!    array per decoded block ([`Decoder::decode_range_with_scan`]).
+//! 2. **Fused gap scan + validate + merge** (vectorizable): residual gaps →
+//!    absolute IDs via an inclusive scan *fused* with the bounds validation
+//!    and `u32` narrowing
+//!    ([`ScanEngine::scan_validate_u32`](crate::runtime::ScanEngine::scan_validate_u32)
+//!    — one batched pass over the block-level gap array instead of a scan
+//!    plus a separate per-vertex validation walk), then a 3-way sorted
+//!    merge. Engines with offloaded scans (the AOT-compiled Pallas kernel
+//!    via PJRT) fall back to scan-then-validate through the trait default.
 //!
 //! All per-vertex state lives in a reusable [`DecodeScratch`]: parsed
 //! [`AdjParts`] (inner vectors keep their capacity), the concatenated gap
-//! array, and — instead of the former `Vec<Vec<VertexId>>` copy-list ring —
-//! a flat ring of `(vertex, start, end)` spans into the output edge vector
-//! (a decoded vertex's final list is already contiguous in `block.edges`,
-//! so in-window references need no copy at all). Steady-state block decode
-//! through a warmed scratch performs zero heap allocation in the per-vertex
-//! loop. Public entry points without an explicit scratch borrow a
-//! thread-local one, so the coordinator's pool workers reuse their scratch
-//! across blocks for free.
+//! array with its narrowed absolutes, and — instead of the former
+//! `Vec<Vec<VertexId>>` copy-list ring — a flat ring of
+//! `(vertex, start, end)` spans into the output edge vector (a decoded
+//! vertex's final list is already contiguous in the output, so in-window
+//! references need no copy at all). Steady-state block decode through a
+//! warmed scratch performs zero heap allocation in the per-vertex loop.
+//! Public entry points without an explicit scratch borrow a thread-local
+//! one, so the coordinator's pool workers reuse their scratch across blocks
+//! for free.
+//!
+//! **Zero-copy delivery:** every range decode bottoms out in a
+//! [`DecodeSink`] — two caller-owned vectors the decode appends offsets and
+//! edges into directly. [`Decoder::decode_range`] and friends pass the
+//! fields of a fresh [`DecodedBlock`]; the coordinator passes its claimed
+//! buffer's storage ([`decode_range_sink`](Decoder::decode_range_sink)), so
+//! block delivery materializes no intermediate block and performs no
+//! post-decode memcpy. The compressed stream bytes are likewise *borrowed*
+//! from the store's page-cache image on the default zero-copy reader
+//! (copied only under the managed `BufferedCopy` reader model).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -75,6 +89,39 @@ impl DecodedBlock {
     pub fn neighbors(&self, i: usize) -> &[VertexId] {
         let (s, e) = self.vertex_span(i);
         &self.edges[s..e]
+    }
+}
+
+/// Cap (in edges) on any up-front allocation derived from sidecar
+/// metadata, which is unvalidated against the stream at reserve time: a
+/// forged self-consistent sidecar must not translate into an unbounded
+/// allocation (fuzz-suite contract) — beyond the cap, ordinary doubling
+/// growth takes over. One constant shared by the decoder's edge reserve,
+/// the coordinator's buffer pre-reserve and the blocking-load assembly, so
+/// the "pre-reserve makes the decode's reserve a no-op" zero-copy property
+/// cannot silently diverge between the sites.
+pub const MAX_SIDECAR_RESERVE_EDGES: usize = 1 << 22;
+
+/// Caller-owned output storage a range decode writes into *directly* — the
+/// zero-copy delivery primitive. The coordinator passes its claimed
+/// buffer's `BufferData` vectors (pre-reserved off the Elias–Fano sidecar);
+/// the owned-block entry points pass the fields of a fresh
+/// [`DecodedBlock`]. Either way the decode is the same code path: no
+/// intermediate block, no post-decode memcpy.
+///
+/// Contract: the decode **clears** both vectors, then writes `count + 1`
+/// local offsets (starting at 0) and the concatenated successor lists.
+/// Existing capacity is reused — a warmed buffer cycling through the
+/// coordinator pool serves block after block allocation-free. On error the
+/// vectors hold partial output and must not be interpreted.
+pub struct DecodeSink<'a> {
+    offsets: &'a mut Vec<u64>,
+    edges: &'a mut Vec<VertexId>,
+}
+
+impl<'a> DecodeSink<'a> {
+    pub fn new(offsets: &'a mut Vec<u64>, edges: &'a mut Vec<VertexId>) -> Self {
+        Self { offsets, edges }
     }
 }
 
@@ -124,8 +171,10 @@ pub struct DecodeScratch {
     ring: Vec<(usize, usize, usize)>,
     /// Expanded copy-list of the current vertex.
     copied: Vec<VertexId>,
-    /// Validated residuals of the current vertex.
-    residuals: Vec<VertexId>,
+    /// Narrowed absolute residuals of the whole block, produced by the
+    /// fused scan+validate pass in one shot; per-vertex slices are indexed
+    /// by `seg_bounds` (replaces the former per-vertex validated copy).
+    abs_ids: Vec<VertexId>,
     /// Raw residual code values (batched run read).
     raw: Vec<u64>,
     /// Out-of-block reference lists (block-head references only).
@@ -151,7 +200,7 @@ impl DecodeScratch {
             seg_bounds: Vec::new(),
             ring: Vec::new(),
             copied: Vec::new(),
-            residuals: Vec::new(),
+            abs_ids: Vec::new(),
             raw: Vec::new(),
             out_cache: HashMap::new(),
             gamma: CodeReader::new(Code::Gamma),
@@ -243,8 +292,8 @@ impl<'a> Decoder<'a> {
     }
 
     /// [`Self::decode_range_with_scan`] through an explicit caller-owned
-    /// scratch (the primitive — callers that thread their own scratch also
-    /// get at its decode-table counters, e.g. `calibrate-decode`).
+    /// scratch (callers that thread their own scratch also get at its
+    /// decode-table counters, e.g. `calibrate-decode`).
     pub fn decode_range_scratch(
         &self,
         v_start: usize,
@@ -253,35 +302,76 @@ impl<'a> Decoder<'a> {
         scan: &dyn ScanEngine,
         scratch: &mut DecodeScratch,
     ) -> Result<DecodedBlock> {
+        let mut block = DecodedBlock {
+            first_vertex: v_start,
+            offsets: Vec::new(),
+            edges: Vec::new(),
+        };
+        let mut sink = DecodeSink::new(&mut block.offsets, &mut block.edges);
+        self.decode_range_sink_scratch(v_start, v_end, acct, scan, scratch, &mut sink)?;
+        Ok(block)
+    }
+
+    /// Decode vertices `[v_start, v_end)` straight into caller-owned
+    /// storage (zero-copy delivery) through the calling thread's
+    /// [`DecodeScratch`]. The coordinator's block pipeline passes the
+    /// claimed buffer's vectors here, so delivery performs no intermediate
+    /// `DecodedBlock` allocation and no post-decode memcpy.
+    pub fn decode_range_sink(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+        scan: &dyn ScanEngine,
+        sink: &mut DecodeSink<'_>,
+    ) -> Result<()> {
+        THREAD_SCRATCH.with(|s| {
+            self.decode_range_sink_scratch(v_start, v_end, acct, scan, &mut s.borrow_mut(), sink)
+        })
+    }
+
+    /// [`Self::decode_range_sink`] through an explicit caller-owned scratch
+    /// — the primitive every range decode bottoms out in.
+    pub fn decode_range_sink_scratch(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+        scan: &dyn ScanEngine,
+        scratch: &mut DecodeScratch,
+        sink: &mut DecodeSink<'_>,
+    ) -> Result<()> {
         let n = self.meta.num_vertices;
         if v_start > v_end || v_end > n {
             bail!("bad vertex range {v_start}..{v_end} (n={n})");
         }
         let count = v_end - v_start;
-        let mut block = DecodedBlock {
-            first_vertex: v_start,
-            offsets: Vec::with_capacity(count + 1),
-            edges: Vec::new(),
-        };
-        block.offsets.push(0);
+        let out_offsets: &mut Vec<u64> = &mut *sink.offsets;
+        let out_edges: &mut Vec<VertexId> = &mut *sink.edges;
+        out_offsets.clear();
+        out_edges.clear();
+        out_offsets.reserve(count + 1);
+        out_offsets.push(0);
         if count == 0 {
-            return Ok(block);
+            return Ok(());
         }
-        // The sidecar knows the block's exact edge total: reserve once.
-        // Capped: the count is unvalidated sidecar metadata at this point,
-        // and a forged self-consistent sidecar must not translate into an
-        // unbounded up-front allocation (fuzz-suite contract) — beyond the
-        // cap, ordinary doubling growth takes over.
+        // The sidecar knows the block's exact edge total: reserve once,
+        // capped by the shared forged-sidecar guard. (A sink whose caller
+        // pre-reserved off the same sidecar makes this a no-op.)
         let total_edges =
             (self.offsets.edge_offset(v_end) - self.offsets.edge_offset(v_start)) as usize;
-        block.edges.reserve(total_edges.min(1 << 22));
+        out_edges.reserve(total_edges.min(MAX_SIDECAR_RESERVE_EDGES));
 
-        // One ranged read covering the whole block's bits.
+        // One ranged read covering the whole block's bits. On the default
+        // zero-copy reader the bytes are *borrowed* from the store's
+        // page-cache image — no per-block staging copy; the managed
+        // `BufferedCopy` reader keeps its modeled staging pipeline (the
+        // Fig. 10 contrast).
         let bit0 = self.offsets.bit_offset(v_start);
         let bit1 = self.offsets.bit_offset(v_end);
         let byte0 = bit0 / 8;
         let byte1 = (bit1 + 7) / 8;
-        let bytes = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
+        let bytes = self.file.read_borrowed(byte0, byte1 - byte0, self.ctx, acct);
 
         // Phase 1: bit-parse every vertex; stitch residual gaps into one
         // array (adjusting each segment head so a single inclusive scan
@@ -323,15 +413,24 @@ impl<'a> Decoder<'a> {
             }
         }
 
-        // Phase 2: one scan call for the block (native or XLA/Pallas).
-        scan.inclusive_scan_i64(&mut scratch.gap_array)?;
+        // Phase 2: one *fused* scan + validate + narrow call for the block
+        // (native unrolled pass, or scan-then-validate on offload engines).
+        // In-segment gaps are ≥ 1 by parse-time validation, so the range
+        // check subsumes the old strict-monotonicity walk; mapping a
+        // violation back to its vertex is the cold path.
+        if let Some(bad) =
+            scan.scan_validate_u32(&mut scratch.gap_array, n as u64, &mut scratch.abs_ids)?
+        {
+            let vi = scratch.seg_bounds.partition_point(|&(_, e)| e <= bad.index);
+            bail!("residual {} out of range at vertex {}", bad.value, v_start + vi);
+        }
 
         // Phase 3: resolve references and merge.
         //
         // Hot path: decoding is sequential, and a reference always points at
         // most `window` vertices back, so a fixed ring of the last
         // `window + 1` *output spans* answers every in-block reference by
-        // slicing `block.edges` in place — no hashing, no per-vertex
+        // slicing the output edges in place — no hashing, no per-vertex
         // allocation, and (since the flat-span rewrite) no list copying
         // either: the former `Vec<Vec<VertexId>>` ring duplicated every
         // decoded list once (EXPERIMENTS §Perf).
@@ -349,7 +448,7 @@ impl<'a> Decoder<'a> {
                     if rv != target {
                         bail!("reference window underflow at vertex {v} (corrupt stream?)");
                     }
-                    apply_blocks_into(v, &parts.blocks, &block.edges[s..e], &mut scratch.copied)?;
+                    apply_blocks_into(v, &parts.blocks, &out_edges[s..e], &mut scratch.copied)?;
                 } else if let Some(list) = scratch.out_cache.get(&target) {
                     apply_blocks_into(v, &parts.blocks, list, &mut scratch.copied)?;
                 } else {
@@ -362,21 +461,20 @@ impl<'a> Decoder<'a> {
                 }
             }
             let (s, e) = scratch.seg_bounds[i];
-            validate_residuals_into(v, &scratch.gap_array[s..e], n, &mut scratch.residuals)?;
             merge3_into(
                 v,
                 parts.degree,
                 &scratch.copied,
                 &parts.intervals,
-                &scratch.residuals,
-                &mut block.edges,
+                &scratch.abs_ids[s..e],
+                out_edges,
             )?;
-            block.offsets.push(block.edges.len() as u64);
+            out_offsets.push(out_edges.len() as u64);
             // Park the final list's span in the ring for upcoming references.
-            let start = block.edges.len() - parts.degree;
-            scratch.ring[v % win] = (v, start, block.edges.len());
+            let start = out_edges.len() - parts.degree;
+            scratch.ring[v % win] = (v, start, out_edges.len());
         }
-        Ok(block)
+        Ok(())
     }
 
     /// Decode vertices `[v_start, v_end)` in parallel: the range is split
@@ -419,6 +517,33 @@ impl<'a> Decoder<'a> {
         scan: &dyn ScanEngine,
         pool: Option<&crate::util::pool::ThreadPool>,
     ) -> Result<DecodedBlock> {
+        let mut block = DecodedBlock {
+            first_vertex: v_start,
+            offsets: Vec::new(),
+            edges: Vec::new(),
+        };
+        let mut sink = DecodeSink::new(&mut block.offsets, &mut block.edges);
+        self.decode_range_parallel_sink(v_start, v_end, accounts, scan, pool, &mut sink)?;
+        Ok(block)
+    }
+
+    /// [`Self::decode_range_parallel_on`] into caller-owned storage.
+    /// Returns the number of bytes *copied* into the sink after decode:
+    /// 0 on the single-worker path (chunks of one decode straight into the
+    /// sink — fully zero-copy), or the stitched payload when the fan-out
+    /// ran — chunk workers decode concurrently into per-chunk owned blocks
+    /// (they cannot share one grow-in-place vector), so the vertex-order
+    /// stitch into the sink is the single remaining copy, replacing the
+    /// former stitch-into-a-block *plus* block-into-buffer memcpy.
+    pub fn decode_range_parallel_sink(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        accounts: &[IoAccount],
+        scan: &dyn ScanEngine,
+        pool: Option<&crate::util::pool::ThreadPool>,
+        sink: &mut DecodeSink<'_>,
+    ) -> Result<u64> {
         let Some(first) = accounts.first() else {
             bail!("decode_range_parallel needs at least one account");
         };
@@ -427,7 +552,8 @@ impl<'a> Decoder<'a> {
             bail!("bad vertex range {v_start}..{v_end} (n={})", self.meta.num_vertices);
         }
         if workers == 1 || v_end - v_start < workers * 2 {
-            return first.time_cpu(|| self.decode_range_with_scan(v_start, v_end, first, scan));
+            first.time_cpu(|| self.decode_range_sink(v_start, v_end, first, scan, sink))?;
+            return Ok(0);
         }
         let bounds = self.chunk_bounds(v_start, v_end, workers);
         let chunk = |t: usize| {
@@ -450,18 +576,23 @@ impl<'a> Decoder<'a> {
         // load_full stitch did).
         first.time_cpu(|| {
             let total_edges: usize = chunks.iter().map(|c| c.edges.len()).sum();
-            let mut out = DecodedBlock {
-                first_vertex: v_start,
-                offsets: Vec::with_capacity(v_end - v_start + 1),
-                edges: Vec::with_capacity(total_edges),
-            };
-            out.offsets.push(0);
-            for c in chunks {
-                let base = out.edges.len() as u64;
-                out.edges.extend_from_slice(&c.edges);
-                out.offsets.extend(c.offsets[1..].iter().map(|o| base + o));
+            let out_offsets: &mut Vec<u64> = &mut *sink.offsets;
+            let out_edges: &mut Vec<VertexId> = &mut *sink.edges;
+            out_offsets.clear();
+            out_edges.clear();
+            out_offsets.reserve(v_end - v_start + 1);
+            out_edges.reserve(total_edges);
+            out_offsets.push(0);
+            let mut copied = 0u64;
+            for c in &chunks {
+                let base = out_edges.len() as u64;
+                out_edges.extend_from_slice(&c.edges);
+                out_offsets.extend(c.offsets[1..].iter().map(|o| base + o));
+                copied += (c.edges.len() * std::mem::size_of::<VertexId>()
+                    + (c.offsets.len() - 1) * std::mem::size_of::<u64>())
+                    as u64;
             }
-            Ok(out)
+            Ok(copied)
         })
     }
 
@@ -715,22 +846,12 @@ fn apply_blocks_into(
     Ok(())
 }
 
-/// Check scanned residuals are strictly increasing and in range.
+/// Check scanned residuals are strictly increasing and in range — the
+/// random-access (`decode_one`) validator. The block path folds this into
+/// the fused scan pass instead
+/// ([`ScanEngine::scan_validate_u32`](crate::runtime::ScanEngine::scan_validate_u32)).
 fn validate_residuals(v: usize, scanned: &[i64], n: usize) -> Result<Vec<VertexId>> {
     let mut out = Vec::with_capacity(scanned.len());
-    validate_residuals_into(v, scanned, n, &mut out)?;
-    Ok(out)
-}
-
-/// [`validate_residuals`] into a reusable scratch buffer (hot path).
-fn validate_residuals_into(
-    v: usize,
-    scanned: &[i64],
-    n: usize,
-    out: &mut Vec<VertexId>,
-) -> Result<()> {
-    out.clear();
-    out.reserve(scanned.len());
     let mut prev = -1i64;
     for &r in scanned {
         if r < 0 || r as usize >= n {
@@ -742,7 +863,7 @@ fn validate_residuals_into(
         out.push(r as VertexId);
         prev = r;
     }
-    Ok(())
+    Ok(out)
 }
 
 /// Merge three sorted successor sequences into the final list.
@@ -908,6 +1029,91 @@ mod tests {
                 .unwrap();
             for (i, v) in (0..n).enumerate() {
                 assert_eq!(block.neighbors(i), g.neighbors(v as VertexId), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn sink_decode_matches_decode_range_oracle() {
+        // Reference-chain-heavy stream (small window, deep chains): the
+        // sink path must produce byte-identical output to the owned-block
+        // oracle, including across sink reuse (stale capacity must never
+        // leak into a later decode).
+        let g = generators::similarity_blocks(900, 36, 12, 7);
+        let store = SimStore::new(DeviceKind::Dram);
+        let params = WgParams { window: 4, max_ref_chain: 6, ..WgParams::default() };
+        for (name, data) in serialize_with(&g, "g", params) {
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let n = g.num_vertices();
+        let mut offsets: Vec<u64> = Vec::new();
+        let mut edges: Vec<VertexId> = Vec::new();
+        // Biggest range first so later (smaller) decodes run inside stale
+        // capacity — the clearing contract is what keeps them correct.
+        for (a, b) in [(0, n), (3, 500), (499, 503), (n - 20, n), (13, 13), (0, 1)] {
+            let oracle = dec.decode_range(a, b, &acct).unwrap();
+            let mut sink = DecodeSink::new(&mut offsets, &mut edges);
+            dec.decode_range_sink(a, b, &acct, &crate::runtime::NativeScan, &mut sink)
+                .unwrap();
+            assert_eq!(offsets, oracle.offsets, "range {a}..{b}");
+            assert_eq!(edges, oracle.edges, "range {a}..{b}");
+        }
+        // And the parallel sink path: single-worker fan-out reports zero
+        // copied bytes (fully zero-copy), multi-worker reports the stitch.
+        let one = [IoAccount::new()];
+        let mut sink = DecodeSink::new(&mut offsets, &mut edges);
+        let copied = dec
+            .decode_range_parallel_sink(0, n, &one, &crate::runtime::NativeScan, None, &mut sink)
+            .unwrap();
+        assert_eq!(copied, 0, "single-worker sink decode is zero-copy");
+        let oracle = dec.decode_range(0, n, &acct).unwrap();
+        assert_eq!(offsets, oracle.offsets);
+        assert_eq!(edges, oracle.edges);
+        let four: Vec<IoAccount> = (0..4).map(|_| IoAccount::new()).collect();
+        let mut sink = DecodeSink::new(&mut offsets, &mut edges);
+        let copied = dec
+            .decode_range_parallel_sink(0, n, &four, &crate::runtime::NativeScan, None, &mut sink)
+            .unwrap();
+        assert!(copied > 0, "fan-out stitch is the one remaining copy");
+        assert_eq!(offsets, oracle.offsets);
+        assert_eq!(edges, oracle.edges);
+    }
+
+    #[test]
+    fn sink_decode_fails_like_the_oracle_on_corrupt_streams() {
+        // Same corruption, same verdict: whenever the owned-block decode
+        // errors, the sink decode must error too (and vice versa) — the
+        // coordinator's failure path depends on this agreement.
+        let g = generators::barabasi_albert(400, 6, 3);
+        let store = SimStore::new(DeviceKind::Dram);
+        for (name, mut data) in serialize(&g, "g") {
+            if name.ends_with(".graph") {
+                let mid = data.len() / 3;
+                for b in data.iter_mut().skip(mid).take(48) {
+                    *b = !*b;
+                }
+            }
+            store.put(&name, data);
+        }
+        let acct = IoAccount::new();
+        let meta = read_meta(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let offs = read_offsets(&store, "g", ReadCtx::default(), &acct).unwrap();
+        let dec = Decoder::open(&store, "g", &meta, &offs, ReadCtx::default(), &acct).unwrap();
+        let n = g.num_vertices();
+        let mut offsets = Vec::new();
+        let mut edges = Vec::new();
+        for (a, b) in [(0, n), (50, 350), (0, 10)] {
+            let oracle = dec.decode_range(a, b, &acct);
+            let mut sink = DecodeSink::new(&mut offsets, &mut edges);
+            let sunk = dec.decode_range_sink(a, b, &acct, &crate::runtime::NativeScan, &mut sink);
+            assert_eq!(oracle.is_err(), sunk.is_err(), "range {a}..{b}");
+            if let Ok(block) = oracle {
+                assert_eq!(offsets, block.offsets, "range {a}..{b}");
+                assert_eq!(edges, block.edges, "range {a}..{b}");
             }
         }
     }

@@ -29,7 +29,9 @@ mod decode;
 mod encode;
 pub mod integrity;
 
-pub use decode::{DecodeScratch, DecodedBlock, Decoder};
+pub use decode::{
+    DecodeScratch, DecodeSink, DecodedBlock, Decoder, MAX_SIDECAR_RESERVE_EDGES,
+};
 pub use encode::{compress, CompressionStats};
 
 use anyhow::{bail, Context, Result};

@@ -509,6 +509,41 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
         );
     }
 
+    // Zero-copy delivery canaries: a full block-request load through the
+    // coordinator — payload bytes delivered without a post-decode copy,
+    // the post-decode copies themselves (invariant: 0 on the default
+    // single-worker path), delivery throughput — plus the fused phase-2
+    // scan throughput against the former scan-then-validate shape.
+    {
+        let store = Arc::new(SimStore::new(DeviceKind::Dram));
+        FormatKind::WebGraph.write_to_store(&g, &store, "ci");
+        let pg = Paragrapher::init();
+        let graph = pg.open_graph(
+            Arc::clone(&store),
+            "ci",
+            GraphType::CsxWg400,
+            Options::default(),
+        )?;
+        let block = graph.load_whole_graph()?;
+        anyhow::ensure!(block.num_edges() == graph.num_edges(), "ci load lost edges");
+        anyhow::ensure!(
+            graph.delivery_copy_bytes() == 0,
+            "zero-copy invariant violated: {} bytes copied post-decode",
+            graph.delivery_copy_bytes()
+        );
+        println!("| copy_bytes_avoided | {} |", fmt_bytes(graph.copy_bytes_avoided()));
+        println!("| delivery_copy_bytes | {} (invariant: 0) |", graph.delivery_copy_bytes());
+        println!(
+            "| delivery_throughput | {} |",
+            fmt_meps(graph.delivery_throughput() / 1e6)
+        );
+        let (fused, split) = paragrapher::bench::workloads::measure_fused_scan(1 << 20, 5);
+        println!(
+            "| fused_scan_throughput | {fused:.0} Melem/s ({:.2}x vs scan-then-validate {split:.0} Melem/s) |",
+            fused / split
+        );
+    }
+
     // Partitioned-request health: a real 8-partition stream drained by two
     // consumers through the coordinator (prefetch hit rate), plus the
     // modeled HDD interleave overlap (deterministic virtual time).

@@ -9,7 +9,9 @@
 //! Exposed engines:
 //! * [`ScanEngine`] — the gap→ID inclusive scan used by the decoder's
 //!   phase 2 ([`NativeScan`] in Rust, [`XlaScanEngine`] through the Pallas
-//!   kernel's HLO).
+//!   kernel's HLO). The trait also carries the *fused* variant
+//!   ([`ScanEngine::scan_validate_u32`]) that folds the decoder's former
+//!   separate validation walk into the scan itself.
 //! * `ArtifactSet::wcc_step_block` — one label-propagation step over a fixed-shape edge
 //!   block (the analytics consumer used by examples/benches).
 
@@ -19,12 +21,63 @@ pub use exec::{ArtifactSet, XlaScanEngine, GAP_SCAN_BLOCK, WCC_BLOCK};
 
 use anyhow::Result;
 
+/// First element of a fused scan whose running sum left `[0, upper)` —
+/// returned by [`ScanEngine::scan_validate_u32`] so the decoder can map the
+/// flat index back to the offending vertex on the (cold) error path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScanViolation {
+    /// Index into the gap array of the first out-of-range running sum.
+    pub index: usize,
+    /// The out-of-range running sum itself.
+    pub value: i64,
+}
+
 /// Inclusive scan over i64 gaps: `out[i] = sum(gaps[0..=i])`. The decoder
 /// concatenates all residual gaps of a decoded block into one array and
 /// calls this once per block (phase 2 of decoding).
 pub trait ScanEngine: Send + Sync {
     fn name(&self) -> &'static str;
+
     fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()>;
+
+    /// Fused gap→absolute inclusive scan + bounds validation + `u32`
+    /// narrowing: scans `gaps` in place, writes each running sum (narrowed
+    /// to `u32`) into `out` (cleared first), and reports the first sum
+    /// outside `[0, upper)` as `Ok(Some(_))`.
+    ///
+    /// This is the decoder's phase-2 hot loop: the former pipeline scanned
+    /// the block's gap array, then *re-walked* every per-vertex segment to
+    /// range-check and narrow the absolutes — two passes over the same
+    /// cache lines. Strict monotonicity folds into this single pass
+    /// structurally: in-segment gaps are validated `≥ 1` at parse time, so
+    /// every in-range running sum is automatically strictly increasing
+    /// within its segment, and the old `r <= prev` walk is subsumed.
+    ///
+    /// On a violation, the contents of `gaps`/`out` beyond the reported
+    /// index are unspecified (the caller is about to fail the decode).
+    ///
+    /// The default implementation composes `inclusive_scan_i64` with a
+    /// separate validation walk, so offload engines (XLA/Pallas) keep
+    /// working unchanged; [`NativeScan`] overrides it with a single
+    /// unrolled, auto-vectorizable pass.
+    fn scan_validate_u32(
+        &self,
+        gaps: &mut [i64],
+        upper: u64,
+        out: &mut Vec<u32>,
+    ) -> Result<Option<ScanViolation>> {
+        self.inclusive_scan_i64(gaps)?;
+        out.clear();
+        out.reserve(gaps.len());
+        let hi = upper.min(i64::MAX as u64) as i64;
+        for (i, &s) in gaps.iter().enumerate() {
+            if s < 0 || s >= hi {
+                return Ok(Some(ScanViolation { index: i, value: s }));
+            }
+            out.push(s as u32);
+        }
+        Ok(None)
+    }
 }
 
 /// Pure-Rust scan (the default, and the oracle for the XLA path).
@@ -38,16 +91,91 @@ impl ScanEngine for NativeScan {
     fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()> {
         let mut acc = 0i64;
         for g in gaps.iter_mut() {
-            acc += *g;
+            acc = acc.wrapping_add(*g);
             *g = acc;
         }
         Ok(())
+    }
+
+    /// One pass, 8-wide unrolled: the only loop-carried dependency is the
+    /// running accumulator (one chain per 8 elements); the bounds folds and
+    /// the narrowing stores have no cross-iteration dependence, so the
+    /// compiler vectorizes them. Violations accumulate into a sign-bit mask
+    /// (`s` in `[0, hi)` iff `s | (hi-1 - s)` is non-negative) and the
+    /// exact index is recovered by a scalar re-walk only on the error path.
+    fn scan_validate_u32(
+        &self,
+        gaps: &mut [i64],
+        upper: u64,
+        out: &mut Vec<u32>,
+    ) -> Result<Option<ScanViolation>> {
+        // Resize without clearing first: the loop below unconditionally
+        // writes every element, and a clear-then-resize would memset the
+        // whole (warmed, steady-state) output before overwriting it again.
+        out.resize(gaps.len(), 0);
+        let hi = upper.min(i64::MAX as u64) as i64;
+        let n1 = hi.wrapping_sub(1);
+        let mut acc = 0i64;
+        let mut bad = 0i64;
+        for (g, o) in gaps.chunks_exact_mut(8).zip(out.chunks_exact_mut(8)) {
+            let s0 = acc.wrapping_add(g[0]);
+            let s1 = s0.wrapping_add(g[1]);
+            let s2 = s1.wrapping_add(g[2]);
+            let s3 = s2.wrapping_add(g[3]);
+            let s4 = s3.wrapping_add(g[4]);
+            let s5 = s4.wrapping_add(g[5]);
+            let s6 = s5.wrapping_add(g[6]);
+            let s7 = s6.wrapping_add(g[7]);
+            acc = s7;
+            g[0] = s0;
+            g[1] = s1;
+            g[2] = s2;
+            g[3] = s3;
+            g[4] = s4;
+            g[5] = s5;
+            g[6] = s6;
+            g[7] = s7;
+            bad |= s0 | n1.wrapping_sub(s0);
+            bad |= s1 | n1.wrapping_sub(s1);
+            bad |= s2 | n1.wrapping_sub(s2);
+            bad |= s3 | n1.wrapping_sub(s3);
+            bad |= s4 | n1.wrapping_sub(s4);
+            bad |= s5 | n1.wrapping_sub(s5);
+            bad |= s6 | n1.wrapping_sub(s6);
+            bad |= s7 | n1.wrapping_sub(s7);
+            o[0] = s0 as u32;
+            o[1] = s1 as u32;
+            o[2] = s2 as u32;
+            o[3] = s3 as u32;
+            o[4] = s4 as u32;
+            o[5] = s5 as u32;
+            o[6] = s6 as u32;
+            o[7] = s7 as u32;
+        }
+        let tail = gaps.len() - gaps.len() % 8;
+        for (g, o) in gaps[tail..].iter_mut().zip(out[tail..].iter_mut()) {
+            let s = acc.wrapping_add(*g);
+            acc = s;
+            *g = s;
+            bad |= s | n1.wrapping_sub(s);
+            *o = s as u32;
+        }
+        if bad < 0 {
+            // Cold path: some element left the range — find the first.
+            for (i, &s) in gaps.iter().enumerate() {
+                if s < 0 || s >= hi {
+                    return Ok(Some(ScanViolation { index: i, value: s }));
+                }
+            }
+        }
+        Ok(None)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Xoshiro256;
 
     #[test]
     fn native_scan_basics() {
@@ -56,5 +184,109 @@ mod tests {
         assert_eq!(v, vec![5, 3, 6, 6, 0]);
         let mut empty: Vec<i64> = vec![];
         NativeScan.inclusive_scan_i64(&mut empty).unwrap();
+    }
+
+    /// The trait-default (scan + walk) is the oracle for the fused override.
+    struct DefaultPath;
+    impl ScanEngine for DefaultPath {
+        fn name(&self) -> &'static str {
+            "default-path"
+        }
+        fn inclusive_scan_i64(&self, gaps: &mut [i64]) -> Result<()> {
+            NativeScan.inclusive_scan_i64(gaps)
+        }
+    }
+
+    #[test]
+    fn fused_matches_scan_then_validate_on_clean_input() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 100, 1000] {
+            // Small non-negative gaps: sums stay well inside [0, upper).
+            let gaps: Vec<i64> = (0..len).map(|_| rng.next_below(5) as i64).collect();
+            let upper = (gaps.iter().sum::<i64>() + 1) as u64;
+            let mut a = gaps.clone();
+            let mut b = gaps.clone();
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            let va = NativeScan.scan_validate_u32(&mut a, upper, &mut out_a).unwrap();
+            let vb = DefaultPath.scan_validate_u32(&mut b, upper, &mut out_b).unwrap();
+            assert_eq!(va, None, "len {len}");
+            assert_eq!(vb, None, "len {len}");
+            assert_eq!(a, b, "len {len}: in-place absolutes");
+            assert_eq!(out_a, out_b, "len {len}: narrowed output");
+            let expect: Vec<u32> = gaps
+                .iter()
+                .scan(0i64, |acc, &g| {
+                    *acc += g;
+                    Some(*acc as u32)
+                })
+                .collect();
+            assert_eq!(out_a, expect, "len {len}");
+        }
+    }
+
+    #[test]
+    fn fused_flags_first_violation() {
+        // Below zero, at the upper bound, and far above — at every lane
+        // alignment — must report the same first index as the oracle walk.
+        for len in [1usize, 5, 8, 9, 16, 33] {
+            for bad_at in 0..len {
+                for bad_gap in [-1000i64, 100, 1_000_000] {
+                    let mut gaps = vec![1i64; len];
+                    gaps[bad_at] = bad_gap;
+                    let upper = 50u64;
+                    let mut a = gaps.clone();
+                    let mut out = Vec::new();
+                    let va = NativeScan.scan_validate_u32(&mut a, upper, &mut out).unwrap();
+                    let mut b = gaps.clone();
+                    let mut out_b = Vec::new();
+                    let vb =
+                        DefaultPath.scan_validate_u32(&mut b, upper, &mut out_b).unwrap();
+                    assert_eq!(va, vb, "len {len} bad_at {bad_at} gap {bad_gap}");
+                    // Prefix sums before `bad_at` are 1..=bad_at, all in
+                    // range; the spiked element is always the first (and
+                    // only reported) violation.
+                    let v = va.expect("spiked sum must be flagged");
+                    assert_eq!(v.index, bad_at);
+                    assert_eq!(v.value, bad_at as i64 + bad_gap);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_rejects_everything_on_empty_range() {
+        // upper = 0: no value is in range.
+        let mut gaps = vec![0i64, 1];
+        let mut out = Vec::new();
+        let v = NativeScan.scan_validate_u32(&mut gaps, 0, &mut out).unwrap();
+        assert_eq!(v, Some(ScanViolation { index: 0, value: 0 }));
+        // And an empty array is clean regardless of the bound.
+        let mut empty: Vec<i64> = Vec::new();
+        assert_eq!(NativeScan.scan_validate_u32(&mut empty, 0, &mut out).unwrap(), None);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fused_randomized_against_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for case in 0..200 {
+            let len = rng.next_below(64) as usize;
+            let upper = 1 + rng.next_below(1000);
+            let gaps: Vec<i64> = (0..len)
+                .map(|_| rng.next_below(40) as i64 - 4) // occasionally negative
+                .collect();
+            let mut a = gaps.clone();
+            let mut b = gaps.clone();
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            let va = NativeScan.scan_validate_u32(&mut a, upper, &mut out_a).unwrap();
+            let vb = DefaultPath.scan_validate_u32(&mut b, upper, &mut out_b).unwrap();
+            assert_eq!(va, vb, "case {case}");
+            if va.is_none() {
+                assert_eq!(out_a, out_b, "case {case}");
+                assert_eq!(a, b, "case {case}");
+            }
+        }
     }
 }

@@ -183,6 +183,29 @@ impl<'s> SimFile<'s> {
         }
     }
 
+    /// Read `[offset, offset+len)` honoring the declared reader model in
+    /// one place: *borrowed* bytes on the default zero-copy reader,
+    /// a staged owned copy under the managed `BufferedCopy` model (the
+    /// Fig. 10 contrast). Every lane of the zero-copy delivery pipeline
+    /// (graph stream, weights sidecar, future property lanes) should read
+    /// through this helper rather than re-rolling the dispatch — calling
+    /// plain [`read`](Self::read) would silently take the copy path even
+    /// under the zero-copy reader.
+    pub fn read_borrowed(
+        &self,
+        offset: u64,
+        len: u64,
+        ctx: ReadCtx,
+        acct: &IoAccount,
+    ) -> std::borrow::Cow<'_, [u8]> {
+        match ctx.reader_impl {
+            ReaderImpl::ZeroCopy => {
+                std::borrow::Cow::Borrowed(self.read_zero_copy(offset, len, ctx, acct))
+            }
+            ReaderImpl::BufferedCopy => std::borrow::Cow::Owned(self.read(offset, len, ctx, acct)),
+        }
+    }
+
     /// Borrow the bytes directly (the C-like path) while still charging
     /// virtual I/O for the cold fraction of the range.
     pub fn read_zero_copy(
@@ -278,6 +301,21 @@ mod tests {
         let cold2 = IoAccount::new();
         f.read(0, 2 << 20, ReadCtx::default(), &cold2);
         assert!(cold2.io_seconds() > cold.io_seconds() * 0.5);
+    }
+
+    #[test]
+    fn read_borrowed_honors_the_reader_model() {
+        let s = store_with_file(DeviceKind::Dram, 4096);
+        let f = s.open("f").unwrap();
+        let acct = IoAccount::new();
+        let ctx = ReadCtx::default();
+        let zc = f.read_borrowed(10, 100, ctx, &acct);
+        assert!(matches!(zc, std::borrow::Cow::Borrowed(_)), "default reader borrows");
+        let ctx2 = ReadCtx { reader_impl: ReaderImpl::BufferedCopy, ..ctx };
+        let bc = f.read_borrowed(10, 100, ctx2, &acct);
+        assert!(matches!(bc, std::borrow::Cow::Owned(_)), "managed reader stages a copy");
+        assert_eq!(&*zc, &*bc, "both reader models return identical bytes");
+        assert_eq!(zc.len(), 100);
     }
 
     #[test]

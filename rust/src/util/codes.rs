@@ -14,8 +14,12 @@
 //!   resolves any short codeword with a single lookup — the common case for
 //!   WebGraph streams, where degrees, copy blocks, interval fields and
 //!   residual gaps are overwhelmingly small. Long codewords fall back to
-//!   the slow path. Tables exist for γ, δ and ζ_k (k = 1..=4) and are built
-//!   once per process ([`decode_table`]).
+//!   the slow path. Process-global tables exist for γ, δ, ζ_k (k = 1..=4)
+//!   and unary, built once ([`decode_table`]); Golomb — parameterized by an
+//!   unbounded `m`, so unsuitable for a global registry — gets a
+//!   *per-reader* table built at [`CodeReader::new`] whenever any of its
+//!   codewords fits the peek window (small `m`, the geometric-gap regime
+//!   Golomb residual streams actually use).
 
 use std::sync::OnceLock;
 
@@ -264,8 +268,12 @@ pub struct DecodeTable {
 
 impl DecodeTable {
     /// Build by enumerating coded values until the first codeword longer
-    /// than the peek window (codeword lengths are non-decreasing in the
-    /// value for γ, δ and ζ_k, so nothing short is skipped).
+    /// than the peek window. Codeword lengths are non-decreasing in the
+    /// value for every tabled family — γ, δ, ζ_k trivially; unary is
+    /// `x + 1`; Golomb's quotient grows by whole shells and its
+    /// minimal-binary remainder is non-decreasing within a shell, with the
+    /// last codeword of shell `q` exactly as long as the first of shell
+    /// `q + 1` — so nothing short is skipped.
     fn build(code: Code) -> Self {
         let mut entries = vec![(0u32, 0u8); TABLE_LEN];
         for x in 0..(2 * TABLE_LEN as u64) {
@@ -295,25 +303,54 @@ impl DecodeTable {
     pub fn lookup(&self, window: u64) -> (u32, u8) {
         self.entries[window as usize]
     }
+
+    /// Does any codeword of the family fit the peek window? A table with no
+    /// short codewords (e.g. Golomb with a large `m`) is pure overhead —
+    /// every lookup would miss — so [`CodeReader::new`] discards it.
+    fn has_short_codewords(&self) -> bool {
+        self.entries.iter().any(|&(_, len)| len != 0)
+    }
 }
 
 static GAMMA_TABLE: OnceLock<DecodeTable> = OnceLock::new();
 static DELTA_TABLE: OnceLock<DecodeTable> = OnceLock::new();
+static UNARY_TABLE: OnceLock<DecodeTable> = OnceLock::new();
 static ZETA_TABLES: [OnceLock<DecodeTable>; 4] =
     [OnceLock::new(), OnceLock::new(), OnceLock::new(), OnceLock::new()];
 
 /// The shared decode table for `code`, built on first use; `None` for
-/// families without one (unary is already a single `leading_zeros`; Golomb
-/// is parameterized by an unbounded `m`; ζ_k beyond 4 is unused by the
-/// WebGraph encoder).
+/// families without a process-global one (Golomb is parameterized by an
+/// unbounded `m` — [`CodeReader::new`] builds a per-reader table for small
+/// `m` instead; ζ_k beyond 4 is unused by the WebGraph encoder).
 pub fn decode_table(code: Code) -> Option<&'static DecodeTable> {
     match code {
         Code::Gamma => Some(GAMMA_TABLE.get_or_init(|| DecodeTable::build(code))),
         Code::Delta => Some(DELTA_TABLE.get_or_init(|| DecodeTable::build(code))),
+        Code::Unary => Some(UNARY_TABLE.get_or_init(|| DecodeTable::build(code))),
         Code::Zeta(k @ 1..=4) => {
             Some(ZETA_TABLES[(k - 1) as usize].get_or_init(|| DecodeTable::build(code)))
         }
         _ => None,
+    }
+}
+
+/// The decode table a [`CodeReader`] drives: shared (process-global
+/// families) or owned (per-reader Golomb tables, whose `m` cannot index a
+/// static registry).
+enum TableHandle {
+    None,
+    Shared(&'static DecodeTable),
+    Owned(Box<DecodeTable>),
+}
+
+impl TableHandle {
+    #[inline]
+    fn get(&self) -> Option<&DecodeTable> {
+        match self {
+            TableHandle::None => None,
+            TableHandle::Shared(t) => Some(t),
+            TableHandle::Owned(t) => Some(t),
+        }
     }
 }
 
@@ -322,7 +359,7 @@ pub fn decode_table(code: Code) -> Option<&'static DecodeTable> {
 /// one skip. Carries hit/miss counters (the CI table-hit-rate canary).
 pub struct CodeReader {
     code: Code,
-    table: Option<&'static DecodeTable>,
+    table: TableHandle,
     /// Symbols decoded through the table fast path.
     pub table_hits: u64,
     /// Symbols that fell back to the slow path (long codeword or a family
@@ -332,7 +369,28 @@ pub struct CodeReader {
 
 impl CodeReader {
     pub fn new(code: Code) -> Self {
-        Self { code, table: decode_table(code), table_hits: 0, table_misses: 0 }
+        let table = match decode_table(code) {
+            Some(t) => TableHandle::Shared(t),
+            // Golomb residual streams: build a per-reader table when the
+            // family has short codewords at all (the shortest is
+            // `1 + ceil(log2 m) - 1` bits for remainder 0, so any
+            // `m ≤ 2^PEEK_BITS` is worth probing). The build enumerates at
+            // most `2 · 2^PEEK_BITS` codewords once per reader — and a
+            // reader decodes a whole stream, so the cost amortizes exactly
+            // like the per-stream table *selection* already does.
+            None => match code {
+                Code::Golomb(m) if m >= 1 && m <= (1 << PEEK_BITS) => {
+                    let t = DecodeTable::build(code);
+                    if t.has_short_codewords() {
+                        TableHandle::Owned(Box::new(t))
+                    } else {
+                        TableHandle::None
+                    }
+                }
+                _ => TableHandle::None,
+            },
+        };
+        Self { code, table, table_hits: 0, table_misses: 0 }
     }
 
     /// The code family this reader decodes.
@@ -346,7 +404,7 @@ impl CodeReader {
     /// error-ness (the differential fuzz suite asserts this).
     #[inline]
     pub fn read(&mut self, r: &mut BitReader<'_>) -> Result<u64, BitstreamExhausted> {
-        if let Some(t) = self.table {
+        if let Some(t) = self.table.get() {
             let (v, len) = t.lookup(r.peek_bits(PEEK_BITS));
             if len != 0 {
                 // A zero-padded window can only match an entry whose length
@@ -371,7 +429,7 @@ impl CodeReader {
         out: &mut Vec<u64>,
     ) -> Result<(), BitstreamExhausted> {
         out.reserve(count);
-        if let Some(t) = self.table {
+        if let Some(t) = self.table.get() {
             for _ in 0..count {
                 let (v, len) = t.lookup(r.peek_bits(PEEK_BITS));
                 if len != 0 {
@@ -542,7 +600,7 @@ mod tests {
             Code::Zeta(3),
             Code::Zeta(4),
             Code::Zeta(5), // no table: pure fallback
-            Code::Unary,   // no table
+            Code::Unary,   // static table (short runs) + slow-path tail
         ] {
             let vals: Vec<u64> = match code {
                 Code::Unary => values.iter().map(|&v| v % 500).collect(),
@@ -565,10 +623,86 @@ mod tests {
                 assert_eq!(fast.bit_pos(), slow.bit_pos(), "{code:?} value {v}");
             }
             assert_eq!(reader.table_hits + reader.table_misses, vals.len() as u64);
-            if matches!(code, Code::Gamma | Code::Delta) {
+            if matches!(code, Code::Gamma | Code::Delta | Code::Unary) {
                 assert!(reader.table_hits > 0, "{code:?} small values must hit the table");
             }
         }
+    }
+
+    #[test]
+    fn unary_and_golomb_tables_match_slow_path() {
+        // The unary static table and the per-reader Golomb tables must be
+        // bit-exact with the field-by-field reference, across the
+        // short/long codeword boundary, and carry honest hit counters.
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        let mut cases: Vec<(Code, Vec<u64>)> = vec![(
+            Code::Unary,
+            (0..500).map(|_| rng.next_below(40)).collect(),
+        )];
+        for m in [1u64, 2, 3, 5, 8, 16, 63, 100, 512] {
+            // Keep x/m bounded so the unary quotient stays sane, while
+            // still crossing the table edge (quotients past the window);
+            // every 4th value is tiny so table hits are guaranteed, not
+            // left to the draw.
+            let vals: Vec<u64> = (0..500)
+                .map(|i| {
+                    if i % 4 == 0 {
+                        rng.next_below(8)
+                    } else {
+                        rng.next_below(m * 40)
+                    }
+                })
+                .collect();
+            cases.push((Code::Golomb(m), vals));
+        }
+        for (code, vals) in cases {
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                code.write(&mut w, v);
+            }
+            let bytes = w.into_bytes();
+            let mut fast = BitReader::new(&bytes);
+            let mut slow = BitReader::new(&bytes);
+            let mut reader = CodeReader::new(code);
+            for &v in &vals {
+                assert_eq!(reader.read(&mut fast).unwrap(), v, "{code:?} value {v}");
+                assert_eq!(code.read(&mut slow).unwrap(), v, "{code:?} value {v}");
+                assert_eq!(fast.bit_pos(), slow.bit_pos(), "{code:?} value {v}");
+            }
+            assert_eq!(reader.table_hits + reader.table_misses, vals.len() as u64);
+            assert!(reader.table_hits > 0, "{code:?}: small codewords must hit the table");
+            assert!(reader.hit_rate() > 0.0);
+        }
+        // Large m: every codeword is longer than the window — the reader
+        // must degrade to a no-table fallback, not a 100%-miss table.
+        for m in [2048u64, 4096, 1 << 40] {
+            let code = Code::Golomb(m);
+            let vals: Vec<u64> = (0..50).map(|i| i * (m / 2).max(1) % (m * 4)).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                code.write(&mut w, v);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let mut reader = CodeReader::new(code);
+            for &v in &vals {
+                assert_eq!(reader.read(&mut r).unwrap(), v, "m={m} value {v}");
+            }
+            assert_eq!(reader.table_hits, 0, "m={m}: nothing fits the window");
+        }
+        // Batched runs take the same table path.
+        let mut reader = CodeReader::new(Code::Golomb(16));
+        let vals: Vec<u64> = (0..2000).map(|i| (i * 7) % 600).collect();
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            Code::Golomb(16).write(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        let mut out = Vec::new();
+        reader.read_run(&mut r, vals.len(), &mut out).unwrap();
+        assert_eq!(out, vals);
+        assert!(reader.table_hits > 0);
     }
 
     #[test]

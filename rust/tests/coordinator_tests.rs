@@ -177,6 +177,189 @@ fn coo_edge_granular_requests_trim_correctly() {
 }
 
 #[test]
+fn block_request_path_is_zero_copy() {
+    // The tentpole invariant: with the default single-worker decode, every
+    // delivered payload byte lands in the buffer straight from the decoder
+    // — zero post-decode copies — and the counters prove it.
+    let g = generators::barabasi_albert(2500, 7, 19);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 3, buffer_edges: 4000, ..Options::default() },
+    );
+    let block = graph.load_whole_graph().expect("load");
+    assert_eq!(block.num_edges(), g.num_edges());
+    assert_eq!(
+        graph.delivery_copy_bytes(),
+        0,
+        "single-worker block delivery must not copy after decode"
+    );
+    // Offsets (8 B each) + edges (4 B each) at minimum were delivered
+    // copy-free; the whole graph flowed through.
+    let floor = g.num_edges() * 4;
+    assert!(
+        graph.copy_bytes_avoided() >= floor,
+        "copy_bytes_avoided {} must cover at least the edge payload {floor}",
+        graph.copy_bytes_avoided()
+    );
+    assert!(graph.delivery_throughput() > 0.0, "delivery throughput is measured");
+
+    // Fan-out decode: the vertex-order stitch is the one permitted copy —
+    // counted, and never larger than the payload it assembles.
+    let graph2 = open(
+        &store,
+        "g",
+        Options { buffers: 2, decode_workers: 4, buffer_edges: 1 << 13, ..Options::default() },
+    );
+    let block2 = graph2.load_whole_graph().expect("load");
+    assert_eq!(block2.num_edges(), g.num_edges());
+    assert!(
+        graph2.delivery_copy_bytes() > 0,
+        "multi-worker fan-out stitches through one counted copy"
+    );
+}
+
+#[test]
+fn sink_decode_failure_recycles_buffers_and_pool_survives() {
+    // A sink-backed decode that fails mid-block must return its buffer to
+    // C_IDLE (never wedging the pool), and the same graph handle must
+    // serve later requests once the stream is healthy again.
+    let g = generators::barabasi_albert(3000, 6, 53);
+    let store = store_with(&g, "g", DeviceKind::Dram);
+    let good: Vec<u8> = webgraph::serialize(&g, "g")
+        .into_iter()
+        .find(|(name, _)| name.ends_with(".graph"))
+        .map(|(_, data)| data)
+        .expect("graph stream");
+    let buffers = 3;
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers, buffer_edges: 1500, ..Options::default() },
+    );
+    assert_eq!(graph.idle_buffers(), buffers);
+    // Truncate the stream under the opened graph: early blocks decode,
+    // later blocks fail mid-request.
+    store.put("g.graph", good[..good.len() / 8].to_vec());
+    let result = graph.load_whole_graph();
+    assert!(result.is_err(), "truncated stream must fail the load");
+    assert_eq!(
+        graph.idle_buffers(),
+        buffers,
+        "every buffer must return to C_IDLE after a failed sink decode"
+    );
+    // Heal the stream: the pool must not be wedged.
+    store.put("g.graph", good);
+    store.drop_cache();
+    let block = graph.load_whole_graph().expect("pool must survive the failure");
+    assert_eq!(block.num_edges(), g.num_edges());
+    for v in 0..g.num_vertices() {
+        assert_eq!(block.neighbors(v), g.neighbors(v as VertexId), "vertex {v}");
+    }
+    assert_eq!(graph.idle_buffers(), buffers);
+}
+
+#[test]
+fn coo_trimmed_views_deliver_weights() {
+    // COO trim hands out borrowed views now — including the weight lane,
+    // which the copy-based trim used to drop.
+    let mut edges = Vec::new();
+    let mut wv = 0.25f32;
+    for v in 0..300u32 {
+        for d in 0..(v % 5) {
+            edges.push((v, (v * 3 + d) % 300, wv));
+            wv = (wv * 1.3).fract() + 0.05;
+        }
+    }
+    let g = CsrGraph::from_weighted_edges(300, &edges);
+    let store = store_with(&g, "w", DeviceKind::Dram);
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store),
+            "w",
+            GraphType::CsxWg404,
+            Options { buffer_edges: 97, ..Options::default() },
+        )
+        .expect("open weighted");
+    let m = g.num_edges();
+    let (lo, hi) = (m / 4, m - m / 6);
+    type Triple = (VertexId, VertexId, u32);
+    let collected: Arc<Mutex<Vec<Triple>>> = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    let req = graph
+        .coo_get_edges(
+            lo,
+            hi,
+            Arc::new(move |blk| {
+                let w = blk.weights.expect("trimmed views keep the weight lane");
+                assert_eq!(w.len() as u64, blk.num_edges(), "weights align with edges");
+                let mut out = c2.lock().unwrap();
+                for ((s, d), &wt) in blk.iter_edges().zip(w.iter()) {
+                    out.push((s, d, wt.to_bits()));
+                }
+            }),
+        )
+        .expect("coo request");
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    let mut got = collected.lock().unwrap().clone();
+    got.sort();
+    let mut expected: Vec<Triple> = g
+        .iter_edges()
+        .zip(g.weights.iter())
+        .enumerate()
+        .filter(|(i, _)| (*i as u64) >= lo && (*i as u64) < hi)
+        .map(|(_, ((s, d), &w))| (s, d, w.to_bits()))
+        .collect();
+    expected.sort();
+    assert_eq!(got, expected);
+    assert!(graph.copy_bytes_avoided() > 0, "trim views are counted as avoided copies");
+}
+
+#[test]
+fn weighted_fan_out_decode_accounts_the_weights_phase() {
+    // decode_workers > 1 on a weighted graph: the weights sidecar read is
+    // its own modeled phase (added to the chunk-worker max), and the
+    // delivered weights stay exact.
+    let mut edges = Vec::new();
+    for v in 0..800u32 {
+        for d in 0..(v % 9) {
+            edges.push((v, (v + 7 * d + 1) % 800, (v as f32) * 0.5 + d as f32));
+        }
+    }
+    let g = CsrGraph::from_weighted_edges(800, &edges);
+    let store = store_with(&g, "w", DeviceKind::Hdd);
+    let graph = Paragrapher::init()
+        .open_graph(
+            Arc::clone(&store),
+            "w",
+            GraphType::CsxWg404,
+            Options { decode_workers: 3, buffer_edges: 1 << 11, ..Options::default() },
+        )
+        .expect("open weighted");
+    type WeightPart = (u64, Vec<f32>);
+    let got: Arc<Mutex<Vec<WeightPart>>> = Arc::new(Mutex::new(Vec::new()));
+    let g2 = Arc::clone(&got);
+    let req = graph
+        .csx_get_subgraph(
+            VertexRange::new(0, 800),
+            Arc::new(move |blk| {
+                let w = blk.weights.expect("weights present");
+                g2.lock().unwrap().push((blk.start_edge, w.to_vec()));
+            }),
+        )
+        .expect("request");
+    req.wait();
+    assert!(!req.is_failed(), "{:?}", req.error());
+    let mut parts = got.lock().unwrap().clone();
+    parts.sort_by_key(|(se, _)| *se);
+    let all: Vec<f32> = parts.into_iter().flat_map(|(_, w)| w).collect();
+    assert_eq!(all, g.weights);
+    assert!(graph.decode_seconds() > 0.0, "weights phase lands in the modeled time");
+}
+
+#[test]
 fn csx_get_offsets_matches_graph() {
     let g = generators::rmat(7, 8, 17);
     let store = store_with(&g, "g", DeviceKind::Dram);

@@ -30,6 +30,7 @@ const ADVERSARIAL_CASES: usize = 11;
 const DIFFERENTIAL_VALID_CASES: usize = 60;
 const DIFFERENTIAL_GARBAGE_CASES: usize = 120;
 const DIFFERENTIAL_TRUNCATION_CASES: usize = 40;
+const DIFFERENTIAL_GOLOMB_UNARY_CASES: usize = 44;
 
 #[test]
 fn corpus_meets_the_size_bar() {
@@ -45,6 +46,7 @@ fn corpus_meets_the_size_bar() {
         DIFFERENTIAL_VALID_CASES + DIFFERENTIAL_GARBAGE_CASES + DIFFERENTIAL_TRUNCATION_CASES
             >= 200
     );
+    assert!(DIFFERENTIAL_GOLOMB_UNARY_CASES >= 40, "unary/Golomb table corpus");
 }
 
 /// Seeded corpus graphs: three shapes that exercise intervals, references
@@ -520,6 +522,112 @@ fn differential_truncated_streams() {
         let mut reader = CodeReader::new(code);
         for (i, &v) in values.iter().take(decoded).enumerate() {
             assert_eq!(reader.read(&mut r).unwrap(), v, "case {case} {code:?} symbol {i}");
+        }
+    }
+}
+
+/// Golomb parameters for the unary/Golomb table differential corpus:
+/// degenerate (m = 1, unary-shaped), non-power-of-two remainders (the
+/// truncated minimal-binary split), powers of two, the largest m with any
+/// short codeword, and m past the table bound (no-table fallback).
+const GOLOMB_MS: [u64; 10] = [1, 2, 3, 5, 7, 8, 60, 64, 1000, 2048];
+
+/// Unary + per-reader Golomb tables vs the slow-path reference: valid
+/// streams, pure garbage, and truncations for every `m` class — the
+/// satellite corpus pinning the new table families exactly the way the
+/// γ/δ/ζ suite pins the static ones.
+#[test]
+fn differential_golomb_and_unary_tables() {
+    for case in 0..DIFFERENTIAL_GOLOMB_UNARY_CASES {
+        let code = if case % (GOLOMB_MS.len() + 1) == GOLOMB_MS.len() {
+            Code::Unary
+        } else {
+            Code::Golomb(GOLOMB_MS[case % (GOLOMB_MS.len() + 1)])
+        };
+        let mut rng = Xoshiro256::seed_from_u64(0x601B + case as u64);
+        match case % 3 {
+            // Valid streams: small (table-resident) and past-the-window
+            // values; full agreement, zero errors.
+            0 => {
+                let values: Vec<u64> = (0..300)
+                    .map(|i| {
+                        let bound = match code {
+                            Code::Golomb(m) => m * 30, // quotients cross the window
+                            _ => 500,
+                        };
+                        if i % 4 == 0 {
+                            rng.next_below(8)
+                        } else {
+                            rng.next_below(bound.max(1))
+                        }
+                    })
+                    .collect();
+                let mut w = BitWriter::new();
+                for &v in &values {
+                    code.write(&mut w, v);
+                }
+                let bytes = w.into_bytes();
+                let decoded = assert_lockstep(
+                    code,
+                    &bytes,
+                    values.len(),
+                    &format!("golomb/unary valid case {case} {code:?}"),
+                );
+                assert_eq!(decoded, values.len(), "case {case} {code:?}");
+                let mut r = BitReader::new(&bytes);
+                let mut reader = CodeReader::new(code);
+                for (i, &v) in values.iter().enumerate() {
+                    assert_eq!(
+                        reader.read(&mut r).unwrap(),
+                        v,
+                        "case {case} {code:?} symbol {i}"
+                    );
+                }
+            }
+            // Garbage blobs: values, positions and the first error must be
+            // identical between the table and slow paths.
+            1 => {
+                let len = 1 + rng.next_below(80) as usize;
+                let bytes: Vec<u8> =
+                    (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                assert_lockstep(
+                    code,
+                    &bytes,
+                    2048,
+                    &format!("golomb/unary garbage case {case} {code:?}"),
+                );
+            }
+            // Truncations at arbitrary byte boundaries.
+            _ => {
+                let bound = match code {
+                    Code::Golomb(m) => m * 20,
+                    _ => 200,
+                };
+                let values: Vec<u64> =
+                    (0..150).map(|_| rng.next_below(bound.max(1))).collect();
+                let mut w = BitWriter::new();
+                for &v in &values {
+                    code.write(&mut w, v);
+                }
+                let full = w.into_bytes();
+                let keep = (full.len() as u64 * rng.next_below(100) / 100) as usize;
+                let cut = &full[..keep];
+                let decoded = assert_lockstep(
+                    code,
+                    cut,
+                    values.len(),
+                    &format!("golomb/unary trunc case {case} {code:?}"),
+                );
+                let mut r = BitReader::new(cut);
+                let mut reader = CodeReader::new(code);
+                for (i, &v) in values.iter().take(decoded).enumerate() {
+                    assert_eq!(
+                        reader.read(&mut r).unwrap(),
+                        v,
+                        "case {case} {code:?} symbol {i}"
+                    );
+                }
+            }
         }
     }
 }
