@@ -118,6 +118,12 @@ pub struct Options {
     /// Vertices per random-access decode unit ([`PgGraph::successors`]
     /// decodes the aligned block containing the requested vertex).
     pub source_block_vertices: usize,
+    /// Simulated OS page-cache budget in bytes applied to the store at open
+    /// time (`None` keeps the store's current capacity — the
+    /// [`DEFAULT_CACHE_BYTES`](crate::storage::DEFAULT_CACHE_BYTES) 8 GiB
+    /// unless the caller already sized it). On a rooted (mmap-backed) store,
+    /// shrinking the budget also drops the evicted pages' real residency.
+    pub cache_budget: Option<u64>,
     /// Decoded-block cache capacity in cost units (≈ edges + vertices);
     /// 0 disables caching. Like the buffer pool, fixed at open time.
     pub source_cache_cost: u64,
@@ -144,6 +150,7 @@ impl std::fmt::Debug for Options {
             .field("prefetch_window", &self.prefetch_window)
             .field("source_block_vertices", &self.source_block_vertices)
             .field("source_cache_cost", &self.source_cache_cost)
+            .field("cache_budget", &self.cache_budget)
             .finish()
     }
 }
@@ -162,6 +169,7 @@ impl Clone for Options {
             prefetch_window: self.prefetch_window,
             source_block_vertices: self.source_block_vertices,
             source_cache_cost: self.source_cache_cost,
+            cache_budget: self.cache_budget,
             poll_interval: self.poll_interval,
         }
     }
@@ -181,6 +189,7 @@ impl Default for Options {
             // formats-layer defaults, so PgGraph and WebGraphSource agree.
             source_block_vertices: crate::formats::SourceConfig::default().block_vertices,
             source_cache_cost: crate::formats::SourceConfig::default().cache_cost,
+            cache_budget: None,
             poll_interval: Duration::from_micros(200),
         }
     }
@@ -225,6 +234,10 @@ impl Paragrapher {
         if !self.supported.contains(&gtype) {
             bail!("unsupported graph type {gtype:?}");
         }
+        options.read_ctx.validate()?;
+        if let Some(budget) = options.cache_budget {
+            store.set_cache_capacity(budget);
+        }
         let t0 = Instant::now();
         let meta_acct = IoAccount::new();
         let meta = webgraph::read_meta(&store, base, options.read_ctx, &meta_acct)?;
@@ -266,6 +279,27 @@ impl Paragrapher {
         })
     }
 
+    /// Open a graph straight from an on-disk directory through the
+    /// mmap-backed real-file store: builds a rooted
+    /// [`GraphStore`](crate::storage::GraphStore) over `dir` (every sidecar
+    /// mapped, borrowed reads serving true zero-copy slices of the mapping)
+    /// and delegates to [`Self::open_graph`]. `device` picks the billing
+    /// model for cold pages, so the §3 load model keeps holding on real
+    /// files.
+    pub fn open_graph_from_dir(
+        &self,
+        dir: &std::path::Path,
+        device: crate::storage::DeviceKind,
+        base: &str,
+        gtype: GraphType,
+        options: Options,
+    ) -> Result<PgGraph> {
+        let cache = options.cache_budget.unwrap_or(crate::storage::DEFAULT_CACHE_BYTES);
+        let store =
+            Arc::new(crate::storage::GraphStore::open_dir_with(dir, device.model(), cache)?);
+        self.open_graph(store, base, gtype, options)
+    }
+
     /// Release a graph (`paragrapher_release_graph`): joins library threads
     /// and drops the simulated OS cache — §4.1's "return the computational
     /// resources as they were before calling".
@@ -300,9 +334,11 @@ pub struct GraphStats {
     /// Grows on every sink-backed block decode and every COO trim view.
     pub copy_bytes_avoided: AtomicU64,
     /// Bytes of decoded payload the block-request path *did* copy after
-    /// decode. The zero-copy invariant: stays 0 with `decode_workers == 1`
-    /// (the default); a multi-worker fan-out counts its vertex-order stitch
-    /// here (chunks decode into per-chunk owned storage by design).
+    /// decode. The zero-copy invariant: stays 0 on single- *and*
+    /// multi-worker decodes — the fan-out pre-partitions the sink off the
+    /// offsets sidecar and chunk workers write disjoint slices in place.
+    /// The only remaining contributor is the stitched fallback a block
+    /// larger than the sidecar-reserve guard takes.
     pub delivery_copy_bytes: AtomicU64,
     /// Edges delivered through the block-request (callback) path, paired
     /// with [`Self::delivery_wall_ns`] for the delivery-throughput canary.
@@ -1023,9 +1059,11 @@ impl Drop for PgGraph {
 ///
 /// With `decode_workers > 1` the decode fans out over chunk workers as
 /// borrowed scoped jobs on the shared coordinator pool
-/// ([`Decoder::decode_range_parallel_sink`]); chunks decode into per-chunk
-/// owned storage and the vertex-order stitch lands directly in the buffer
-/// — one copy, counted in [`GraphStats::delivery_copy_bytes`]. Each chunk
+/// ([`Decoder::decode_range_parallel_sink`]): the sink is pre-sized off
+/// the offsets sidecar and each chunk writes its disjoint slice of the
+/// buffer in place — no post-decode stitch, so
+/// [`GraphStats::delivery_copy_bytes`] stays 0 on this path too (only the
+/// oversized-block stitched fallback still counts there). Each chunk
 /// worker carries its own virtual clock; the block's modeled decode time —
 /// max over the chunk workers, plus the sequential weights phase — is
 /// accumulated into [`GraphStats::decode_seconds`].
@@ -1135,7 +1173,8 @@ fn decode_into_buffer(
             inner.stats.edges_decoded.fetch_add(meta.num_edges(), Ordering::Relaxed);
             // Zero-copy accounting: the former pipeline memcpy'd the whole
             // payload from an owned block into the buffer; the sink path
-            // copies only the fan-out stitch (0 on the default path).
+            // writes in place on both worker shapes (stitched is 0 except
+            // the oversized-block fallback).
             inner
                 .stats
                 .copy_bytes_avoided

@@ -48,6 +48,7 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -122,6 +123,79 @@ pub struct DecodeSink<'a> {
 impl<'a> DecodeSink<'a> {
     pub fn new(offsets: &'a mut Vec<u64>, edges: &'a mut Vec<VertexId>) -> Self {
         Self { offsets, edges }
+    }
+}
+
+/// Edge-output abstraction of the range-decode core: either a growable
+/// vector (sequential sink decode, owned blocks) or a fixed pre-partitioned
+/// window a fan-out chunk worker fills *in place*
+/// ([`Decoder::decode_range_parallel_sink`]). Positions are relative to the
+/// start of this store's output, which is what the decode ring and the
+/// emitted local offsets speak anyway.
+trait EdgeStore {
+    /// Edges written so far (== the next write position).
+    fn pos(&self) -> usize;
+    fn push_edge(&mut self, v: usize, id: VertexId) -> Result<()>;
+    fn extend_edges(&mut self, v: usize, ids: &[VertexId]) -> Result<()>;
+    /// Re-borrow an already-written span (in-window reference resolution).
+    fn span(&self, start: usize, end: usize) -> &[VertexId];
+}
+
+impl EdgeStore for Vec<VertexId> {
+    fn pos(&self) -> usize {
+        self.len()
+    }
+
+    fn push_edge(&mut self, _v: usize, id: VertexId) -> Result<()> {
+        self.push(id);
+        Ok(())
+    }
+
+    fn extend_edges(&mut self, _v: usize, ids: &[VertexId]) -> Result<()> {
+        self.extend_from_slice(ids);
+        Ok(())
+    }
+
+    fn span(&self, start: usize, end: usize) -> &[VertexId] {
+        &self[start..end]
+    }
+}
+
+/// A chunk worker's disjoint window of the pre-sized sink edge vector. The
+/// window's length is the chunk's sidecar-declared edge span; a stream that
+/// decodes past it can only be corrupt (or the sidecar forged), so
+/// overflowing writes bail instead of growing.
+struct FixedEdges<'b> {
+    buf: &'b mut [VertexId],
+    cursor: usize,
+}
+
+impl EdgeStore for FixedEdges<'_> {
+    fn pos(&self) -> usize {
+        self.cursor
+    }
+
+    fn push_edge(&mut self, v: usize, id: VertexId) -> Result<()> {
+        if self.cursor >= self.buf.len() {
+            bail!("decoded edges exceed the sidecar's edge span at vertex {v} (corrupt sidecar?)");
+        }
+        self.buf[self.cursor] = id;
+        self.cursor += 1;
+        Ok(())
+    }
+
+    fn extend_edges(&mut self, v: usize, ids: &[VertexId]) -> Result<()> {
+        let end = self.cursor + ids.len();
+        if end > self.buf.len() {
+            bail!("decoded edges exceed the sidecar's edge span at vertex {v} (corrupt sidecar?)");
+        }
+        self.buf[self.cursor..end].copy_from_slice(ids);
+        self.cursor = end;
+        Ok(())
+    }
+
+    fn span(&self, start: usize, end: usize) -> &[VertexId] {
+        &self.buf[start..end]
     }
 }
 
@@ -361,6 +435,28 @@ impl<'a> Decoder<'a> {
         let total_edges =
             (self.offsets.edge_offset(v_end) - self.offsets.edge_offset(v_start)) as usize;
         out_edges.reserve(total_edges.min(MAX_SIDECAR_RESERVE_EDGES));
+        self.decode_range_core(v_start, v_end, acct, scan, scratch, out_edges, &mut |pos| {
+            out_offsets.push(pos)
+        })
+    }
+
+    /// Phases 1–3 of a range decode into an [`EdgeStore`], emitting one
+    /// cumulative store-relative edge count per vertex through
+    /// `emit_offset`. The output-shape bookkeeping (clearing, reserving or
+    /// pre-sizing, the leading 0 offset) belongs to the callers; here
+    /// `v_start < v_end` always holds.
+    fn decode_range_core<E: EdgeStore>(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        acct: &IoAccount,
+        scan: &dyn ScanEngine,
+        scratch: &mut DecodeScratch,
+        out_edges: &mut E,
+        emit_offset: &mut dyn FnMut(u64),
+    ) -> Result<()> {
+        let n = self.meta.num_vertices;
+        let count = v_end - v_start;
 
         // One ranged read covering the whole block's bits. On the default
         // zero-copy reader the bytes are *borrowed* from the store's
@@ -448,7 +544,8 @@ impl<'a> Decoder<'a> {
                     if rv != target {
                         bail!("reference window underflow at vertex {v} (corrupt stream?)");
                     }
-                    apply_blocks_into(v, &parts.blocks, &out_edges[s..e], &mut scratch.copied)?;
+                    let ref_list = out_edges.span(s, e);
+                    apply_blocks_into(v, &parts.blocks, ref_list, &mut scratch.copied)?;
                 } else if let Some(list) = scratch.out_cache.get(&target) {
                     apply_blocks_into(v, &parts.blocks, list, &mut scratch.copied)?;
                 } else {
@@ -469,10 +566,10 @@ impl<'a> Decoder<'a> {
                 &scratch.abs_ids[s..e],
                 out_edges,
             )?;
-            out_offsets.push(out_edges.len() as u64);
+            emit_offset(out_edges.pos() as u64);
             // Park the final list's span in the ring for upcoming references.
-            let start = out_edges.len() - parts.degree;
-            scratch.ring[v % win] = (v, start, out_edges.len());
+            let start = out_edges.pos() - parts.degree;
+            scratch.ring[v % win] = (v, start, out_edges.pos());
         }
         Ok(())
     }
@@ -528,13 +625,18 @@ impl<'a> Decoder<'a> {
     }
 
     /// [`Self::decode_range_parallel_on`] into caller-owned storage.
-    /// Returns the number of bytes *copied* into the sink after decode:
-    /// 0 on the single-worker path (chunks of one decode straight into the
-    /// sink — fully zero-copy), or the stitched payload when the fan-out
-    /// ran — chunk workers decode concurrently into per-chunk owned blocks
-    /// (they cannot share one grow-in-place vector), so the vertex-order
-    /// stitch into the sink is the single remaining copy, replacing the
-    /// former stitch-into-a-block *plus* block-into-buffer memcpy.
+    /// Returns the number of bytes *copied* into the sink after decode.
+    /// Both fan-out shapes are zero-copy now: a single worker decodes
+    /// straight into the sink, and the multi-worker path pre-sizes the sink
+    /// off the Elias–Fano sidecar (which knows every chunk's exact edge
+    /// span) and has each chunk worker decode *in place* into its disjoint
+    /// slice of the output — the former vertex-order stitch copy is gone,
+    /// so the return is 0 on both paths. The one exception: a range whose
+    /// sidecar-declared edge total exceeds [`MAX_SIDECAR_RESERVE_EDGES`]
+    /// (the shared forged-sidecar allocation guard) cannot be pre-sized
+    /// from unvalidated metadata, so it falls back to owned per-chunk
+    /// blocks plus a counted stitch. Coordinator blocks are bounded well
+    /// under the guard, so delivery stays zero-copy end to end.
     pub fn decode_range_parallel_sink(
         &self,
         v_start: usize,
@@ -555,6 +657,114 @@ impl<'a> Decoder<'a> {
             first.time_cpu(|| self.decode_range_sink(v_start, v_end, first, scan, sink))?;
             return Ok(0);
         }
+        let e0 = self.offsets.edge_offset(v_start);
+        let total_edges = (self.offsets.edge_offset(v_end) - e0) as usize;
+        if total_edges > MAX_SIDECAR_RESERVE_EDGES {
+            return self.decode_range_parallel_stitched(v_start, v_end, accounts, scan, pool, sink);
+        }
+        let count = v_end - v_start;
+        let bounds = self.chunk_bounds(v_start, v_end, workers);
+        // Pre-size the sink off the sidecar. The zeroing is real CPU work
+        // charged to worker 0's clock — it *replaces* the former stitch
+        // charge, so the modeled load time keeps covering output assembly.
+        first.time_cpu(|| {
+            sink.offsets.clear();
+            sink.edges.clear();
+            sink.offsets.resize(count + 1, 0);
+            sink.edges.resize(total_edges, 0);
+        });
+        // Carve the output into disjoint per-chunk windows, handed to the
+        // workers through take-once slots (the pool's shared-closure
+        // fan-out indexes a common `Fn`, so `&mut` slices cannot be moved
+        // into per-worker closures directly). `offsets[0]` stays 0.
+        struct ChunkTask<'x> {
+            offsets: &'x mut [u64],
+            edges: &'x mut [VertexId],
+            /// Edges preceding this chunk within the range (offset rebase).
+            e_base: u64,
+        }
+        let mut tasks: Vec<Mutex<Option<ChunkTask<'_>>>> = Vec::with_capacity(workers);
+        let mut rem_off: &mut [u64] = &mut sink.offsets[1..];
+        let mut rem_edges: &mut [VertexId] = sink.edges.as_mut_slice();
+        for t in 0..workers {
+            let (a, b) = (bounds[t], bounds[t + 1]);
+            let e_base = self.offsets.edge_offset(a) - e0;
+            let chunk_edges =
+                (self.offsets.edge_offset(b) - self.offsets.edge_offset(a)) as usize;
+            let (o, rest_o) = rem_off.split_at_mut(b - a);
+            let (e, rest_e) = rem_edges.split_at_mut(chunk_edges);
+            rem_off = rest_o;
+            rem_edges = rest_e;
+            tasks.push(Mutex::new(Some(ChunkTask { offsets: o, edges: e, e_base })));
+        }
+        let run = |t: usize| -> Result<()> {
+            let task = tasks[t]
+                .lock()
+                .expect("chunk task lock")
+                .take()
+                .expect("chunk task is taken exactly once");
+            let ChunkTask { offsets, edges, e_base } = task;
+            let (a, b) = (bounds[t], bounds[t + 1]);
+            accounts[t].time_cpu(|| {
+                let mut fixed = FixedEdges { buf: edges, cursor: 0 };
+                let mut filled = 0usize;
+                if a < b {
+                    THREAD_SCRATCH.with(|s| {
+                        self.decode_range_core(
+                            a,
+                            b,
+                            &accounts[t],
+                            scan,
+                            &mut s.borrow_mut(),
+                            &mut fixed,
+                            &mut |pos| {
+                                offsets[filled] = e_base + pos;
+                                filled += 1;
+                            },
+                        )
+                    })?;
+                }
+                // The stream must land exactly on the sidecar's declared
+                // spans — in-place delivery leaves no slack to absorb drift.
+                if fixed.cursor != fixed.buf.len() || filled != offsets.len() {
+                    bail!(
+                        "chunk {a}..{b} decoded {}/{} edges and {}/{} offsets \
+                         declared by the sidecar (corrupt sidecar?)",
+                        fixed.cursor,
+                        fixed.buf.len(),
+                        filled,
+                        offsets.len()
+                    );
+                }
+                Ok(())
+            })
+        };
+        let results = match pool {
+            Some(pool) => crate::util::pool::parallel_map_on(pool, workers, workers - 1, run),
+            None => parallel_map(workers, workers, run),
+        };
+        for r in results {
+            r?;
+        }
+        Ok(0)
+    }
+
+    /// Owned-chunks fallback of [`Self::decode_range_parallel_sink`] for
+    /// ranges whose sidecar-declared edge total exceeds the shared
+    /// allocation guard: chunk workers decode into per-chunk owned blocks
+    /// (ordinary doubling growth, each bounded by its own reserve guard)
+    /// and the vertex-order stitch into the sink is counted and returned.
+    fn decode_range_parallel_stitched(
+        &self,
+        v_start: usize,
+        v_end: usize,
+        accounts: &[IoAccount],
+        scan: &dyn ScanEngine,
+        pool: Option<&crate::util::pool::ThreadPool>,
+        sink: &mut DecodeSink<'_>,
+    ) -> Result<u64> {
+        let first = accounts.first().expect("caller checked accounts");
+        let workers = accounts.len();
         let bounds = self.chunk_bounds(v_start, v_end, workers);
         let chunk = |t: usize| {
             let (a, b) = (bounds[t], bounds[t + 1]);
@@ -879,17 +1089,18 @@ fn merge3(
     Ok(out)
 }
 
-/// Merge three sorted successor sequences, appending to `out`. Returns the
-/// (start, end) span written. Fast paths: when only one sequence is
+/// Merge three sorted successor sequences, appending to `out` (any
+/// [`EdgeStore`]: a growable vector or a fixed in-place window). Returns
+/// the (start, end) span written. Fast paths: when only one sequence is
 /// non-empty (the common case for reference-free vertices) the merge is a
 /// bulk copy.
-fn merge3_into(
+fn merge3_into<E: EdgeStore>(
     v: usize,
     degree: usize,
     copied: &[VertexId],
     intervals: &[VertexId],
     residuals: &[VertexId],
-    out: &mut Vec<VertexId>,
+    out: &mut E,
 ) -> Result<(usize, usize)> {
     if copied.len() + intervals.len() + residuals.len() != degree {
         bail!(
@@ -899,15 +1110,15 @@ fn merge3_into(
             residuals.len()
         );
     }
-    let start = out.len();
+    let start = out.pos();
     let non_empty =
         usize::from(!copied.is_empty()) + usize::from(!intervals.is_empty())
             + usize::from(!residuals.is_empty());
     if non_empty <= 1 {
-        out.extend_from_slice(copied);
-        out.extend_from_slice(intervals);
-        out.extend_from_slice(residuals);
-        return Ok((start, out.len()));
+        out.extend_edges(v, copied)?;
+        out.extend_edges(v, intervals)?;
+        out.extend_edges(v, residuals)?;
+        return Ok((start, out.pos()));
     }
     let (mut a, mut b, mut c) = (0usize, 0usize, 0usize);
     for _ in 0..degree {
@@ -925,9 +1136,9 @@ fn merge3_into(
         } else {
             c += 1;
         }
-        out.push(m);
+        out.push_edge(v, m)?;
     }
-    Ok((start, out.len()))
+    Ok((start, out.pos()))
 }
 
 #[cfg(test)]
@@ -1062,8 +1273,9 @@ mod tests {
             assert_eq!(offsets, oracle.offsets, "range {a}..{b}");
             assert_eq!(edges, oracle.edges, "range {a}..{b}");
         }
-        // And the parallel sink path: single-worker fan-out reports zero
-        // copied bytes (fully zero-copy), multi-worker reports the stitch.
+        // And the parallel sink path: both fan-out shapes are zero-copy —
+        // a single worker decodes straight into the sink, multiple workers
+        // write disjoint pre-partitioned slices of it in place.
         let one = [IoAccount::new()];
         let mut sink = DecodeSink::new(&mut offsets, &mut edges);
         let copied = dec
@@ -1078,7 +1290,7 @@ mod tests {
         let copied = dec
             .decode_range_parallel_sink(0, n, &four, &crate::runtime::NativeScan, None, &mut sink)
             .unwrap();
-        assert!(copied > 0, "fan-out stitch is the one remaining copy");
+        assert_eq!(copied, 0, "pre-partitioned fan-out writes the sink in place");
         assert_eq!(offsets, oracle.offsets);
         assert_eq!(edges, oracle.edges);
     }

@@ -28,6 +28,8 @@
 //! `max_ref_chain` bound that keeps random access O(chain) — the knob that
 //! trades compression ratio r against decompression bandwidth d (§3, §6).
 
+use anyhow::Result;
+
 use super::WgParams;
 use crate::graph::{CsrGraph, VertexId};
 use crate::util::bitstream::BitWriter;
@@ -107,6 +109,128 @@ pub fn compress(graph: &CsrGraph, params: WgParams) -> (Vec<u8>, Vec<u64>, Compr
     bit_offsets.push(w.bit_len());
     stats.total_bits = w.bit_len();
     (w.into_bytes(), bit_offsets, stats)
+}
+
+/// Everything [`compress_stream`] keeps besides the emitted `.graph` bytes:
+/// the (γ-compressed) offset-delta streams the sidecar is assembled from,
+/// plus the usual counters. The delta streams are the streaming replacement
+/// for `compress`'s plain `Vec<u64>` of bit offsets — ~3 B/vertex instead
+/// of 16, so the writer's footprint never approaches the graph's.
+pub struct StreamedCompression {
+    pub num_edges: u64,
+    pub total_bits: u64,
+    /// γ-coded bit-offset deltas (n+1 entries; record lengths) and the
+    /// exact bit count of that stream (its byte form is padded).
+    pub bit_deltas: Vec<u8>,
+    pub bit_delta_bits: u64,
+    /// γ-coded edge-offset deltas (n+1 entries; the degrees).
+    pub edge_deltas: Vec<u8>,
+    pub edge_delta_bits: u64,
+    pub stats: CompressionStats,
+}
+
+/// Compress a graph defined by a per-vertex successor oracle, streaming the
+/// `.graph` bytes out through `emit` as they complete — the out-of-core
+/// writer. Memory stays O(window · max degree) for the reference ring plus
+/// the compressed offset-delta streams, never O(|E|). `successors` must
+/// fill `out` (cleared by the caller) with a sorted duplicate-free list;
+/// the produced stream is bit-identical to [`compress`] over the same
+/// lists (same greedy reference choice, same chain-depth accounting).
+pub fn compress_stream(
+    n: usize,
+    params: WgParams,
+    mut successors: impl FnMut(usize, &mut Vec<VertexId>),
+    mut emit: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<StreamedCompression> {
+    const FLUSH_BYTES: usize = 1 << 20;
+    let mut w = BitWriter::new();
+    let mut bits_w = BitWriter::new();
+    let mut edges_w = BitWriter::new();
+    let mut stats = CompressionStats::default();
+    let wcap = params.window as usize;
+    // Reference ring: the last `window` lists with their chain depths in
+    // slot `u % wcap`. Candidates r in 1..=min(window, v) touch exactly
+    // the wcap most recent vertices, so slots never collide in a window.
+    let mut ring: Vec<(Vec<VertexId>, u32)> = (0..wcap).map(|_| (Vec::new(), 0)).collect();
+    let mut cur: Vec<VertexId> = Vec::new();
+    let mut pending: Vec<u8> = Vec::new();
+    let mut prev_bit = 0u64;
+    let mut m = 0u64;
+    let mut prev_edges = 0u64;
+    for v in 0..n {
+        write_gamma(&mut bits_w, w.bit_len() - prev_bit);
+        prev_bit = w.bit_len();
+        write_gamma(&mut edges_w, m - prev_edges);
+        prev_edges = m;
+        cur.clear();
+        successors(v, &mut cur);
+        debug_assert!(cur.windows(2).all(|p| p[0] < p[1]), "successor lists must be sorted");
+        m += cur.len() as u64;
+        write_gamma(&mut w, cur.len() as u64);
+        if cur.is_empty() {
+            if wcap > 0 {
+                let slot = &mut ring[v % wcap];
+                slot.0.clear();
+                slot.1 = 0;
+            }
+            continue;
+        }
+        // Same greedy reference choice as `compress`, against the ring.
+        let mut best: Option<(u32, u32, EncodedAdj)> = None;
+        let no_ref = encode_adjacency(v as u64, &cur, &[], params);
+        for r in 1..=params.window.min(v as u32) {
+            let (ref_list, depth) = &ring[(v - r as usize) % wcap];
+            if *depth + 1 > params.max_ref_chain || ref_list.is_empty() {
+                continue;
+            }
+            let enc = encode_adjacency(v as u64, &cur, ref_list, params);
+            if enc.bits < best.as_ref().map(|(_, _, e)| e.bits).unwrap_or(u64::MAX) {
+                best = Some((r, depth + 1, enc));
+            }
+        }
+        let (r, depth, enc) = match best {
+            Some((r, d, enc)) if enc.bits < no_ref.bits => {
+                stats.vertices_with_reference += 1;
+                stats.max_ref_chain_depth = stats.max_ref_chain_depth.max(d);
+                (r, d, enc)
+            }
+            _ => (0, 0, no_ref),
+        };
+        stats.copied_edges += enc.copied as u64;
+        stats.interval_edges += enc.interval_edges as u64;
+        stats.residual_edges += enc.residuals as u64;
+        write_gamma(&mut w, r as u64);
+        enc.write(&mut w, params);
+        if wcap > 0 {
+            let slot = &mut ring[v % wcap];
+            std::mem::swap(&mut slot.0, &mut cur);
+            slot.1 = depth;
+        }
+        w.drain_full_bytes_into(&mut pending);
+        if pending.len() >= FLUSH_BYTES {
+            emit(&pending)?;
+            pending.clear();
+        }
+    }
+    // Final sidecar entries (offsets have n+1 of each), then the padded
+    // stream tail.
+    write_gamma(&mut bits_w, w.bit_len() - prev_bit);
+    write_gamma(&mut edges_w, m - prev_edges);
+    let total_bits = w.bit_len();
+    stats.total_bits = total_bits;
+    pending.extend_from_slice(&w.into_bytes());
+    if !pending.is_empty() {
+        emit(&pending)?;
+    }
+    Ok(StreamedCompression {
+        num_edges: m,
+        total_bits,
+        bit_delta_bits: bits_w.bit_len(),
+        bit_deltas: bits_w.into_bytes(),
+        edge_delta_bits: edges_w.bit_len(),
+        edge_deltas: edges_w.into_bytes(),
+        stats,
+    })
 }
 
 /// One vertex's encoded adjacency description (pre-serialization).
@@ -326,6 +450,44 @@ mod tests {
         let (_, _, s2) = compress(&run, WgParams::default());
         assert!(s2.interval_edges >= 180, "long run must be intervalized");
         let _ = stats;
+    }
+
+    #[test]
+    fn streamed_compression_is_bit_identical_to_batch() {
+        use crate::graph::VertexId;
+        use crate::util::bitstream::BitReader;
+        use crate::util::codes::read_gamma;
+        let g = generators::web_locality(600, 8, 0.9, 0.6, 3);
+        let (stream, bit_offsets, batch_stats) = compress(&g, WgParams::default());
+        let mut streamed = Vec::new();
+        let out = compress_stream(
+            g.num_vertices(),
+            WgParams::default(),
+            |v, out| out.extend_from_slice(g.neighbors(v as VertexId)),
+            |bytes| {
+                streamed.extend_from_slice(bytes);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(streamed, stream, "streamed .graph bytes must match batch");
+        assert_eq!(out.num_edges, g.num_edges());
+        assert_eq!(out.total_bits, *bit_offsets.last().unwrap());
+        assert_eq!(out.stats.vertices_with_reference, batch_stats.vertices_with_reference);
+        assert_eq!(out.stats.total_bits, batch_stats.total_bits);
+        // The γ-delta streams decode back to the batch offsets arrays.
+        let mut r = BitReader::new(&out.bit_deltas);
+        let mut acc = 0u64;
+        for (v, &want) in bit_offsets.iter().enumerate() {
+            acc += read_gamma(&mut r).unwrap();
+            assert_eq!(acc, want, "bit offset {v}");
+        }
+        let mut r = BitReader::new(&out.edge_deltas);
+        let mut acc = 0u64;
+        for (v, &want) in g.offsets.iter().enumerate() {
+            acc += read_gamma(&mut r).unwrap();
+            assert_eq!(acc, want, "edge offset {v}");
+        }
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod integrity;
 pub use decode::{
     DecodeScratch, DecodeSink, DecodedBlock, Decoder, MAX_SIDECAR_RESERVE_EDGES,
 };
-pub use encode::{compress, CompressionStats};
+pub use encode::{compress, compress_stream, CompressionStats, StreamedCompression};
 
 use anyhow::{bail, Context, Result};
 
@@ -137,6 +137,78 @@ pub fn serialize_with(graph: &CsrGraph, base: &str, params: WgParams) -> Vec<(St
         files.push((format!("{base}.weights"), w));
     }
     files
+}
+
+/// Stream-compress a generator-defined (unweighted) graph straight into
+/// `dir` as the WebGraph file family — the graph never exists in memory.
+/// `.graph` bytes hit the disk as they are encoded
+/// ([`compress_stream`]'s flush cadence); the offsets sidecar is assembled
+/// afterwards from the γ-compressed delta streams the encoder kept. Every
+/// produced file is byte-identical to [`serialize_with`] over the same
+/// successor lists, so all open paths read it unchanged — this is the
+/// out-of-core fixture writer for graphs larger than the page-cache
+/// budget (or RAM).
+pub fn write_stream_to_dir(
+    dir: &std::path::Path,
+    base: &str,
+    n: usize,
+    params: WgParams,
+    successors: impl FnMut(usize, &mut Vec<crate::graph::VertexId>),
+) -> Result<StreamedCompression> {
+    use std::io::Write;
+    let graph_path = dir.join(format!("{base}.graph"));
+    let mut graph_file = std::fs::File::create(&graph_path)
+        .with_context(|| format!("create {}", graph_path.display()))?;
+    let out = compress_stream(n, params, successors, |bytes| {
+        graph_file.write_all(bytes).context("write .graph stream")
+    })?;
+    drop(graph_file);
+
+    // v2 sidecar: header + the two γ-delta streams joined at *bit*
+    // granularity (their standalone byte forms are padded; re-packing
+    // through one BitWriter reproduces `serialize_with`'s single unpadded
+    // stream exactly).
+    let mut offsets = Vec::with_capacity(32 + out.bit_deltas.len() + out.edge_deltas.len());
+    offsets.extend_from_slice(&OFFSETS_MAGIC_V2.to_le_bytes());
+    offsets.extend_from_slice(&(n as u64).to_le_bytes());
+    offsets.extend_from_slice(&out.num_edges.to_le_bytes());
+    offsets.extend_from_slice(&out.total_bits.to_le_bytes());
+    let mut w = crate::util::bitstream::BitWriter::with_capacity(
+        out.bit_deltas.len() + out.edge_deltas.len(),
+    );
+    append_bits(&mut w, &out.bit_deltas, out.bit_delta_bits)?;
+    append_bits(&mut w, &out.edge_deltas, out.edge_delta_bits)?;
+    offsets.extend_from_slice(&w.into_bytes());
+    let offsets_path = dir.join(format!("{base}.offsets"));
+    std::fs::write(&offsets_path, offsets)
+        .with_context(|| format!("write {}", offsets_path.display()))?;
+
+    let properties = format!(
+        "version=1\nnodes={}\narcs={}\nwindow={}\nmaxrefchain={}\nzetak={}\nminintervallength={}\nweighted=false\n",
+        n, out.num_edges, params.window, params.max_ref_chain, params.zeta_k,
+        params.min_interval_len
+    );
+    let props_path = dir.join(format!("{base}.properties"));
+    std::fs::write(&props_path, properties)
+        .with_context(|| format!("write {}", props_path.display()))?;
+    Ok(out)
+}
+
+/// Append the first `nbits` bits of `bytes` (an MSB-first, byte-padded
+/// stream) onto `w`, preserving bit alignment across the join.
+fn append_bits(
+    w: &mut crate::util::bitstream::BitWriter,
+    bytes: &[u8],
+    nbits: u64,
+) -> Result<()> {
+    let mut r = crate::util::bitstream::BitReader::new(bytes);
+    let mut left = nbits;
+    while left > 0 {
+        let take = left.min(64) as u32;
+        w.write_bits(r.read_bits(take).map_err(|e| anyhow::anyhow!("{e}"))?, take);
+        left -= u64::from(take);
+    }
+    Ok(())
 }
 
 /// Read and parse `{base}.properties`.
@@ -547,6 +619,36 @@ mod tests {
                 "probe {probe}"
             );
         }
+    }
+
+    #[test]
+    fn write_stream_to_dir_matches_serialize() {
+        let n = 400usize;
+        let mut edges = Vec::new();
+        let mut list = Vec::new();
+        for v in 0..n {
+            generators::synthetic_successors(v, n, 12, 9, &mut list);
+            for &d in &list {
+                edges.push((v as crate::graph::VertexId, d));
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges);
+        let dir = std::env::temp_dir().join(format!("pg_stream_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = write_stream_to_dir(&dir, "s", n, WgParams::default(), |v, out| {
+            generators::synthetic_successors(v, n, 12, 9, out)
+        })
+        .unwrap();
+        assert_eq!(out.num_edges, g.num_edges());
+        for (name, data) in serialize_with(&g, "s", WgParams::default()) {
+            let ondisk = std::fs::read(dir.join(&name)).unwrap();
+            assert_eq!(ondisk, data, "{name} must be byte-identical to the batch writer");
+        }
+        // And the real-file (mmap) store opens and decodes it.
+        let store = crate::storage::GraphStore::open_dir(&dir, DeviceKind::Ssd).unwrap();
+        let loaded = load_full(&store, "s", ReadCtx::default(), &accounts(2)).unwrap();
+        assert_eq!(loaded, g);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -177,6 +177,48 @@ pub fn web_locality(
     CsrGraph::from_edges(n, &edges)
 }
 
+/// Per-vertex successor oracle for out-of-core experiments: deterministic
+/// in `(v, n, deg, seed)` alone, O(deg) time and memory — the streaming
+/// compressor and the verification oracle call it independently, so a
+/// larger-than-RAM graph never has to exist materialized anywhere.
+///
+/// Lists mimic [`web_locality`]'s structure: a consecutive run right after
+/// `v` (interval-friendly, and heavily overlapping between neighbors so
+/// reference compression fires), power-law local gaps (small ζ residuals),
+/// and occasional far jumps. Output is sorted, duplicate-free, and never
+/// contains `v` itself; its length is ≤ `deg` (dedup may trim a few).
+pub fn synthetic_successors(v: usize, n: usize, deg: usize, seed: u64, out: &mut Vec<VertexId>) {
+    out.clear();
+    if n <= 1 || deg == 0 {
+        return;
+    }
+    let mut rng =
+        Xoshiro256::seed_from_u64(seed ^ (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // Consecutive run after v. Values (v + 1 + i) mod n with i < n - 1
+    // never land back on v.
+    let run = (deg / 2).min(n - 1);
+    for i in 0..run {
+        out.push(((v + 1 + i) % n) as VertexId);
+    }
+    let target = deg.min(n - 1);
+    while out.len() < target {
+        let d = if rng.next_bool(0.9) {
+            // Power-law gap around v, as in `web_locality`.
+            let u = rng.next_f64().max(1e-9);
+            let gap = (u.powf(-0.7) - 1.0) as i64;
+            let sign = if rng.next_bool(0.5) { 1 } else { -1 };
+            (v as i64 + sign * (1 + gap.min(n as i64 / 8))).rem_euclid(n as i64) as VertexId
+        } else {
+            rng.next_below(n as u64) as VertexId
+        };
+        if d as usize != v {
+            out.push(d);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+}
+
 /// Erdős–Rényi G(n, m): m distinct directed edges chosen uniformly.
 pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
     let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -334,6 +376,20 @@ mod tests {
         g.validate().unwrap();
         let avg = g.num_edges() as f64 / g.num_vertices() as f64;
         assert!(avg > 20.0, "similarity graph should be dense, avg {avg}");
+    }
+
+    #[test]
+    fn synthetic_successors_deterministic_sorted_unique() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for v in [0usize, 1, 500, 999] {
+            synthetic_successors(v, 1000, 16, 7, &mut a);
+            synthetic_successors(v, 1000, 16, 7, &mut b);
+            assert_eq!(a, b, "vertex {v} must be reproducible");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted unique at {v}");
+            assert!(!a.contains(&(v as VertexId)), "no self-loop at {v}");
+            assert!(!a.is_empty() && a.len() <= 16, "bounded degree at {v}");
+        }
     }
 
     #[test]

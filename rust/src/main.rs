@@ -45,6 +45,7 @@ fn main() {
         "sweep" => cmd_sweep(&flags),
         "end-to-end" => cmd_end_to_end(&flags),
         "calibrate-decode" => cmd_calibrate_decode(&flags),
+        "out-of-core" => cmd_out_of_core(&flags),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -77,7 +78,12 @@ commands:
   end-to-end    [--scale N]                               full pipeline + headline table
   calibrate-decode [--scale N] [--seed N] [--repeats N] [--d B/s]
                                                           measured vs modeled decompression bandwidth d
-  ci-summary                                              markdown health metrics for CI"
+  out-of-core   [--vertices N] [--degree D] [--budget-mb N] [--device DEV] [--workers N]
+                [--seed N] [--dir PATH] [--assert-rss] [--keep]
+                                                          larger-than-budget load via the mmap store
+  ci-summary                                              markdown health metrics for CI
+
+most load-path commands also take --cache-mb N (simulated page-cache budget, default 8192)"
     );
 }
 
@@ -109,6 +115,12 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usi
 
 fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
     flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// `--cache-mb N` → a simulated page-cache budget in bytes for
+/// [`Options::cache_budget`]; absent = keep the store's default (8 GiB).
+fn cache_budget_flag(flags: &HashMap<String, String>) -> Option<u64> {
+    flags.get("cache-mb").and_then(|s| s.parse::<u64>().ok()).map(|mb| mb << 20)
 }
 
 fn datasets_from(flags: &HashMap<String, String>) -> Result<Vec<Dataset>> {
@@ -223,6 +235,7 @@ fn cmd_load(flags: &HashMap<String, String>) -> Result<()> {
             buffers: threads,
             buffer_edges,
             read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+            cache_budget: cache_budget_flag(flags),
             ..Options::default()
         };
         let graph = pg.open_graph(Arc::clone(&store), &base, GraphType::CsxWg400, opts)?;
@@ -277,6 +290,7 @@ fn cmd_wcc(flags: &HashMap<String, String>) -> Result<()> {
         let opts = Options {
             buffers: threads,
             read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+            cache_budget: cache_budget_flag(flags),
             ..Options::default()
         };
         let graph = pg.open_graph(Arc::clone(&store), &base, GraphType::CsxWg400, opts)?;
@@ -361,6 +375,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
                 buffers: threads,
                 buffer_edges,
                 read_ctx: ReadCtx { threads, ..ReadCtx::default() },
+                cache_budget: cache_budget_flag(flags),
                 ..Options::default()
             };
             let graph =
@@ -438,6 +453,155 @@ fn cmd_calibrate_decode(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `out-of-core`: the larger-than-RAM proof. Stream-write a compressed
+/// graph bigger than the configured page-cache budget to real files (the
+/// graph never exists in memory), load it back through the mmap-backed
+/// store with the budget enforced — model eviction mirrored to
+/// `madvise(DONTNEED)` so real residency tracks the virtual cache — and
+/// verify every decoded edge against the regenerating oracle. One decode
+/// pass per read method gives the mmap-vs-pread comparison on the same
+/// fixture. Markdown output for the CI job summary.
+fn cmd_out_of_core(flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::formats::webgraph::{self, DecodeSink, Decoder, WgParams};
+    use paragrapher::graph::generators;
+    use paragrapher::storage::reader::ReaderImpl;
+    use paragrapher::storage::GraphStore;
+
+    let n = flag_usize(flags, "vertices", 1 << 22);
+    let deg = flag_usize(flags, "degree", 16);
+    let budget = (flag_usize(flags, "budget-mb", 16) as u64) << 20;
+    let device =
+        DeviceKind::parse(flag(flags, "device", "SSD")).context("unknown --device")?;
+    let workers = flag_usize(flags, "workers", 4).max(1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    let dir = match flags.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join("pg_out_of_core"),
+    };
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+
+    // Phase 1: stream the fixture to disk (generator → encoder window →
+    // 1 MiB flushes; footprint stays O(window · degree) + the γ-compressed
+    // offset deltas).
+    let t0 = std::time::Instant::now();
+    let streamed =
+        webgraph::write_stream_to_dir(&dir, "ooc", n, WgParams::default(), |v, out| {
+            generators::synthetic_successors(v, n, deg, seed, out)
+        })?;
+    let gen_wall = t0.elapsed().as_secs_f64();
+    let m = streamed.num_edges;
+    let compressed: u64 = ["ooc.graph", "ooc.offsets", "ooc.properties"]
+        .iter()
+        .map(|f| std::fs::metadata(dir.join(f)).map(|md| md.len()).unwrap_or(0))
+        .sum();
+
+    // Phase 2: chunked decode through the mmap store under the budget.
+    // ~1M-edge chunks keep the resident working set far below the fixture.
+    let chunk_v = (((1u64 << 20) * n as u64) / m.max(1)).max(1) as usize;
+    let mut rows: Vec<(&str, f64, f64)> = Vec::new();
+    for (label, method, reader, verify) in [
+        ("load/mmap", ReadMethod::Mmap, ReaderImpl::ZeroCopy, true),
+        ("load/pread", ReadMethod::Pread, ReaderImpl::ZeroCopy, false),
+        ("load/buffered-copy", ReadMethod::Pread, ReaderImpl::BufferedCopy, false),
+    ] {
+        let store = GraphStore::open_dir_with(&dir, device.model(), budget)?;
+        let acct0 = IoAccount::new();
+        let ctx =
+            ReadCtx { threads: workers, method, reader_impl: reader, ..ReadCtx::default() };
+        let meta = webgraph::read_meta(&store, "ooc", ctx, &acct0)?;
+        let offsets = webgraph::read_offsets(&store, "ooc", ctx, &acct0)?;
+        let dec = Decoder::open(&store, "ooc", &meta, &offsets, ctx, &acct0)?;
+        let accounts: Vec<IoAccount> = (0..workers).map(|_| IoAccount::new()).collect();
+        let scan = paragrapher::runtime::NativeScan;
+        let mut off_buf: Vec<u64> = Vec::new();
+        let mut edge_buf: Vec<paragrapher::graph::VertexId> = Vec::new();
+        let mut oracle: Vec<paragrapher::graph::VertexId> = Vec::new();
+        let mut stitched = 0u64;
+        let mut edges_seen = 0u64;
+        let t = std::time::Instant::now();
+        let mut vs = 0usize;
+        while vs < n {
+            let ve = (vs + chunk_v).min(n);
+            let mut sink = DecodeSink::new(&mut off_buf, &mut edge_buf);
+            stitched +=
+                dec.decode_range_parallel_sink(vs, ve, &accounts, &scan, None, &mut sink)?;
+            edges_seen += *off_buf.last().unwrap_or(&0);
+            if verify {
+                for v in vs..ve {
+                    let (a, b) = (off_buf[v - vs] as usize, off_buf[v - vs + 1] as usize);
+                    generators::synthetic_successors(v, n, deg, seed, &mut oracle);
+                    anyhow::ensure!(
+                        edge_buf[a..b] == oracle[..],
+                        "decode disagrees with the oracle at vertex {v}"
+                    );
+                }
+            }
+            vs = ve;
+        }
+        let wall = t.elapsed().as_secs_f64();
+        anyhow::ensure!(edges_seen == m, "{label}: decoded {edges_seen} of {m} edges");
+        anyhow::ensure!(stitched == 0, "{label}: fan-out copied {stitched} bytes post-decode");
+        let io = accounts.iter().map(|a| a.io_seconds()).sum::<f64>() + acct0.io_seconds();
+        rows.push((label, wall, io));
+    }
+    let peak = peak_rss_bytes();
+
+    println!("### out-of-core load (mmap-backed real-file store)\n");
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!(
+        "| graph | {} vertices, {} edges (synthetic stream, seed {seed}) |",
+        fmt_count(n as u64),
+        fmt_count(m)
+    );
+    println!(
+        "| compressed_on_disk | {} ({:.2} bits/edge) |",
+        fmt_bytes(compressed),
+        streamed.total_bits as f64 / m.max(1) as f64
+    );
+    println!("| page_cache_budget | {} ({}) |", fmt_bytes(budget), device.name());
+    println!("| generate_wall | {gen_wall:.2}s (streamed, never materialized) |");
+    for (label, wall, io) in &rows {
+        println!(
+            "| {label} | {wall:.2}s wall ({}), modeled I/O {io:.2}s |",
+            fmt_meps(m as f64 / wall / 1e6)
+        );
+    }
+    println!("| oracle | every edge verified on the mmap pass |");
+    println!("| delivery_copy_bytes | 0 (pre-partitioned fan-out, {workers} workers) |");
+    if let Some(p) = peak {
+        println!(
+            "| peak_rss | {} ({:.0}% of compressed) |",
+            fmt_bytes(p),
+            p as f64 * 100.0 / compressed.max(1) as f64
+        );
+    }
+    if flags.contains_key("assert-rss") {
+        let p = peak.context("VmHWM unavailable; cannot --assert-rss")?;
+        anyhow::ensure!(
+            p < compressed,
+            "peak RSS {} is not below the {} compressed fixture",
+            fmt_bytes(p),
+            fmt_bytes(compressed)
+        );
+        println!("| rss_assertion | PASS (peak RSS below the on-disk fixture) |");
+    }
+    if !flags.contains_key("keep") && !flags.contains_key("dir") {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(())
+}
+
+/// Process-lifetime peak RSS (`VmHWM`) from /proc — the out-of-core
+/// measurement. `None` off Linux.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 =
+        line.trim_start_matches("VmHWM:").trim().trim_end_matches("kB").trim().parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// `ci-summary`: markdown health metrics for the CI job summary — encoder
 /// reference-chain depth, decoded-block cache hit rate, and the Elias–Fano
 /// offsets footprint, on a fixed seeded graph so drift is comparable
@@ -509,6 +673,46 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
         );
     }
 
+    // Real-file store canaries: the configurable page-cache budget and a
+    // warm mmap-vs-pread round-trip over the same on-disk fixture through
+    // the mmap-backed store.
+    {
+        let dir = std::env::temp_dir().join(format!("pg_ci_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).context("create ci store dir")?;
+        let store = paragrapher::storage::GraphStore::open_dir_with(
+            &dir,
+            DeviceKind::Ssd.model(),
+            64 << 20,
+        )?;
+        for (name, data) in webgraph::serialize(&g, "ci") {
+            store.put(&name, data);
+        }
+        println!(
+            "| page_cache_budget | {} (default {}) |",
+            fmt_bytes(store.cache_capacity_bytes()),
+            fmt_bytes(paragrapher::storage::DEFAULT_CACHE_BYTES)
+        );
+        let run = |method: ReadMethod| -> Result<f64> {
+            let ctx = paragrapher::storage::ReadCtx { method, ..Default::default() };
+            let accounts: Vec<IoAccount> = (0..2).map(|_| IoAccount::new()).collect();
+            let warm = webgraph::load_full(&store, "ci", ctx, &accounts)?;
+            anyhow::ensure!(warm.num_edges() == g.num_edges(), "ci store load lost edges");
+            let t = std::time::Instant::now();
+            webgraph::load_full(&store, "ci", ctx, &accounts)?;
+            Ok(t.elapsed().as_secs_f64())
+        };
+        let mmap_w = run(ReadMethod::Mmap)?;
+        let pread_w = run(ReadMethod::Pread)?;
+        println!(
+            "| mmap_vs_pread (warm, on-disk fixture) | {:.1}ms vs {:.1}ms ({:.2}x) |",
+            mmap_w * 1e3,
+            pread_w * 1e3,
+            mmap_w / pread_w
+        );
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // Zero-copy delivery canaries: a full block-request load through the
     // coordinator — payload bytes delivered without a post-decode copy,
     // the post-decode copies themselves (invariant: 0 on the default
@@ -533,6 +737,25 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
         );
         println!("| copy_bytes_avoided | {} |", fmt_bytes(graph.copy_bytes_avoided()));
         println!("| delivery_copy_bytes | {} (invariant: 0) |", graph.delivery_copy_bytes());
+        // Multi-worker fan-out now pre-partitions the sink and writes
+        // disjoint slices in place — the invariant holds there too.
+        let graph_mw = pg.open_graph(
+            Arc::clone(&store),
+            "ci",
+            GraphType::CsxWg400,
+            Options { decode_workers: 4, ..Options::default() },
+        )?;
+        let block_mw = graph_mw.load_whole_graph()?;
+        anyhow::ensure!(block_mw.num_edges() == g.num_edges(), "multi-worker ci load lost edges");
+        anyhow::ensure!(
+            graph_mw.delivery_copy_bytes() == 0,
+            "multi-worker zero-copy invariant violated: {} bytes stitched",
+            graph_mw.delivery_copy_bytes()
+        );
+        println!(
+            "| delivery_copy_bytes (4 decode workers) | {} (invariant: 0) |",
+            graph_mw.delivery_copy_bytes()
+        );
         println!(
             "| delivery_throughput | {} |",
             fmt_meps(graph.delivery_throughput() / 1e6)

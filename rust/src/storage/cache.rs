@@ -69,6 +69,34 @@ impl PageCache {
         populate: bool,
         file_len: u64,
     ) -> u64 {
+        self.access_impl(file_id, offset, len, populate, file_len, None)
+    }
+
+    /// Like [`access`](Self::access), but also appends every evicted
+    /// `(file_id, page_index)` to `evicted`. Rooted stores use this to
+    /// mirror model evictions onto real mappings (`MADV_DONTNEED`), so the
+    /// mappings' resident set tracks the modeled cache budget.
+    pub fn access_reporting(
+        &self,
+        file_id: u64,
+        offset: u64,
+        len: u64,
+        populate: bool,
+        file_len: u64,
+        evicted: &mut Vec<(u64, u64)>,
+    ) -> u64 {
+        self.access_impl(file_id, offset, len, populate, file_len, Some(evicted))
+    }
+
+    fn access_impl(
+        &self,
+        file_id: u64,
+        offset: u64,
+        len: u64,
+        populate: bool,
+        file_len: u64,
+        mut evicted: Option<&mut Vec<(u64, u64)>>,
+    ) -> u64 {
         if len == 0 {
             return 0;
         }
@@ -90,6 +118,9 @@ impl PageCache {
                 if inner.order.len() as u64 >= inner.capacity_pages {
                     if let Some(old) = inner.order.pop_front() {
                         inner.pages.remove(&old);
+                        if let Some(out) = evicted.as_deref_mut() {
+                            out.push(old);
+                        }
                     }
                 }
                 inner.pages.insert((file_id, p), ());
@@ -97,6 +128,27 @@ impl PageCache {
             }
         }
         missed_bytes
+    }
+
+    /// Modeled cache budget, bytes (page-granular).
+    pub fn capacity_bytes(&self) -> u64 {
+        let inner = self.inner.lock().expect("cache lock");
+        inner.capacity_pages * CACHE_PAGE
+    }
+
+    /// Re-budget the cache; shrinking evicts FIFO immediately, reporting
+    /// the evicted `(file_id, page_index)` pairs.
+    pub fn set_capacity(&self, capacity_bytes: u64, evicted: &mut Vec<(u64, u64)>) {
+        let mut inner = self.inner.lock().expect("cache lock");
+        inner.capacity_pages = (capacity_bytes / CACHE_PAGE).max(1);
+        while inner.order.len() as u64 > inner.capacity_pages {
+            if let Some(old) = inner.order.pop_front() {
+                inner.pages.remove(&old);
+                evicted.push(old);
+            } else {
+                break;
+            }
+        }
     }
 
     /// Drop everything — the `flushcache` discipline between experiments.
@@ -314,6 +366,21 @@ mod tests {
         c.access(1, CACHE_PAGE, CACHE_PAGE, true, FLEN); // page 1
         c.access(1, 2 * CACHE_PAGE, CACHE_PAGE, true, FLEN); // evicts page 0
         assert_eq!(c.access(1, 0, CACHE_PAGE, true, FLEN), CACHE_PAGE, "page 0 evicted");
+    }
+
+    #[test]
+    fn eviction_reporting_and_rebudget() {
+        let c = PageCache::new(2 * CACHE_PAGE);
+        let mut ev = Vec::new();
+        c.access_reporting(1, 0, 2 * CACHE_PAGE, true, FLEN, &mut ev);
+        assert!(ev.is_empty(), "no evictions while under budget");
+        c.access_reporting(1, 2 * CACHE_PAGE, CACHE_PAGE, true, FLEN, &mut ev);
+        assert_eq!(ev, vec![(1, 0)], "FIFO eviction reported");
+        assert_eq!(c.capacity_bytes(), 2 * CACHE_PAGE);
+        let mut ev2 = Vec::new();
+        c.set_capacity(CACHE_PAGE, &mut ev2);
+        assert_eq!(ev2.len(), 1, "shrink evicts the overflow immediately");
+        assert!(c.resident_bytes() <= CACHE_PAGE);
     }
 
     #[test]

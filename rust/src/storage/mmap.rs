@@ -1,0 +1,260 @@
+//! Minimal read-only `mmap(2)` wrapper (no external crates — the build is
+//! fully offline, so the raw libc symbols are declared here directly).
+//!
+//! [`MmapRegion`] maps a whole file `PROT_READ`/`MAP_SHARED` and hands out
+//! `&[u8]` views of it: the real-file backing of the store's zero-copy
+//! read path. [`MmapRegion::advise`] forwards `madvise(2)` hints
+//! (sequential/random access patterns from `ReadCtx.sequential`,
+//! `MADV_DONTNEED` when the model's page cache evicts) so the *resident*
+//! footprint of a mapping tracks the configured page-cache budget instead
+//! of growing to the file size — the mechanism behind the out-of-core
+//! bounded-RSS guarantee.
+//!
+//! Safety contract (see DESIGN.md §Store abstraction): a mapped file must
+//! not be truncated or rewritten while the store holds its mapping —
+//! shrinking the file would turn in-flight borrowed slices into faulting
+//! references. The store only maps files it owns under its root directory
+//! and never writes to a file after mapping it. `MADV_DONTNEED` on a
+//! read-only shared file mapping merely drops resident pages (later
+//! accesses re-fault from the file), so it is safe even while borrowed
+//! slices are live.
+
+use std::fs::File;
+use std::io::Result as IoResult;
+
+/// `madvise(2)` access-pattern hints (Linux numeric values; best-effort
+/// no-ops where unsupported).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advice {
+    Normal,
+    Random,
+    Sequential,
+    WillNeed,
+    DontNeed,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_SHARED: c_int = 1;
+    pub const MAP_FAILED: *mut c_void = !0usize as *mut c_void;
+
+    pub fn advice_value(a: super::Advice) -> c_int {
+        match a {
+            super::Advice::Normal => 0,
+            super::Advice::Random => 1,
+            super::Advice::Sequential => 2,
+            super::Advice::WillNeed => 3,
+            super::Advice::DontNeed => 4,
+        }
+    }
+}
+
+/// Hardware page granularity assumed for hint alignment. `madvise` demands
+/// a page-aligned start address; 4 KiB divides every practical page size's
+/// ancestor on the platforms we target, and an unaligned hint is rejected
+/// (not corrupted) by the kernel, so a wrong guess only costs the hint.
+pub const OS_PAGE: u64 = 4096;
+
+/// A read-only shared mapping of one whole file.
+#[cfg(unix)]
+pub struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+unsafe impl Send for MmapRegion {}
+#[cfg(unix)]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(unix)]
+impl MmapRegion {
+    /// Map `file` (entirely). Empty files get a valid zero-length region
+    /// without calling `mmap` (which rejects length 0).
+    pub fn map(file: &File) -> IoResult<Self> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(Self { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr: ptr as *mut u8, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: the region stays mapped for the lifetime of `self`, and
+        // the store never mutates or truncates a file while mapped.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Advise the whole mapping.
+    pub fn advise(&self, advice: Advice) {
+        self.advise_range(0, self.len as u64, advice);
+    }
+
+    /// Advise `[offset, offset+len)`, widened outward to `OS_PAGE`
+    /// alignment and clamped to the mapping. Best effort: hint failures are
+    /// ignored (they only affect residency, never correctness).
+    pub fn advise_range(&self, offset: u64, len: u64, advice: Advice) {
+        if self.len == 0 || len == 0 {
+            return;
+        }
+        let start = (offset.min(self.len as u64) / OS_PAGE) * OS_PAGE;
+        let end = offset.saturating_add(len).min(self.len as u64);
+        if end <= start {
+            return;
+        }
+        unsafe {
+            let _ = sys::madvise(
+                self.ptr.add(start as usize) as *mut std::os::raw::c_void,
+                (end - start) as usize,
+                sys::advice_value(advice),
+            );
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            unsafe {
+                let _ = sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion").field("len", &self.len).finish()
+    }
+}
+
+/// Portable fallback: the file is read into memory once at map time. The
+/// store's modeled billing is identical; only the real-RSS bound of the
+/// out-of-core path needs true mappings (and is gated on unix).
+#[cfg(not(unix))]
+#[derive(Debug)]
+pub struct MmapRegion {
+    data: Vec<u8>,
+}
+
+#[cfg(not(unix))]
+impl MmapRegion {
+    pub fn map(file: &File) -> IoResult<Self> {
+        use std::io::Read;
+        let mut data = Vec::new();
+        let mut f = file.try_clone()?;
+        f.read_to_end(&mut data)?;
+        Ok(Self { data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn advise(&self, _advice: Advice) {}
+
+    pub fn advise_range(&self, _offset: u64, _len: u64, _advice: Advice) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pg_mmap_test_{}_{}", std::process::id(), name));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(data).unwrap();
+        f.sync_all().unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 239) as u8).collect();
+        let p = tmp_file("contents", &data);
+        let f = File::open(&p).unwrap();
+        let m = MmapRegion::map(&f).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.as_slice(), &data[..]);
+        // Hints never affect contents.
+        m.advise(Advice::Sequential);
+        m.advise_range(4096, 8192, Advice::DontNeed);
+        assert_eq!(m.as_slice(), &data[..]);
+        drop(m);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let p = tmp_file("empty", &[]);
+        let f = File::open(&p).unwrap();
+        let m = MmapRegion::map(&f).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        m.advise(Advice::Random); // no-op, must not crash
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn unaligned_hints_are_harmless() {
+        let data = vec![7u8; 3 * OS_PAGE as usize + 17];
+        let p = tmp_file("hints", &data);
+        let f = File::open(&p).unwrap();
+        let m = MmapRegion::map(&f).unwrap();
+        m.advise_range(1, 1, Advice::WillNeed);
+        m.advise_range(OS_PAGE + 3, 10 * OS_PAGE, Advice::DontNeed); // clamped
+        m.advise_range(u64::MAX - 5, 100, Advice::Normal); // off the end
+        assert_eq!(m.as_slice()[OS_PAGE as usize], 7);
+        let _ = std::fs::remove_file(&p);
+    }
+}

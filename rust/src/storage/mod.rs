@@ -21,12 +21,15 @@
 
 pub mod cache;
 pub mod device;
+pub mod mmap;
 pub mod reader;
 pub mod sim;
+pub mod store;
 pub mod vclock;
 
 pub use cache::{CacheCounters, DecodedCache};
 pub use device::{DeviceKind, DeviceModel};
 pub use reader::ReadMethod;
 pub use sim::{SimFile, SimStore};
+pub use store::{GraphStore, ReadCtx, StoreFile, DEFAULT_CACHE_BYTES};
 pub use vclock::IoAccount;

@@ -1,347 +1,9 @@
-//! The simulated store: named file images served through the device model.
+//! Compatibility alias for the historical simulated-store names.
 //!
-//! All format loaders read through [`SimFile::read`], which returns real
-//! bytes and charges virtual I/O time to the caller's [`IoAccount`]. A read
-//! context ([`ReadCtx`]) captures the experiment's declared parallelism and
-//! access method — the knobs of the paper's Fig. 4/Fig. 8 sweeps.
+//! The store grew a real-file (mmap) backing and moved to
+//! [`super::store`]; `SimStore`/`SimFile` are now the same type as
+//! [`GraphStore`](super::store::GraphStore)/[`StoreFile`](super::store::StoreFile)
+//! with the in-memory backing selected by the constructors. Existing code
+//! (and the module path `storage::sim::ReadCtx`) keeps compiling unchanged.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
-
-use super::cache::PageCache;
-use super::device::DeviceModel;
-use super::reader::{ReadMethod, ReaderImpl};
-use super::vclock::IoAccount;
-use crate::storage::DeviceKind;
-
-/// Declared read pattern for an experiment: how many concurrent readers
-/// share the device, the request block size, the syscall method, and
-/// whether each reader scans a contiguous chunk.
-#[derive(Debug, Clone, Copy)]
-pub struct ReadCtx {
-    pub threads: usize,
-    pub block: u64,
-    pub method: ReadMethod,
-    pub sequential: bool,
-    pub reader_impl: ReaderImpl,
-}
-
-impl Default for ReadCtx {
-    fn default() -> Self {
-        Self {
-            threads: 1,
-            block: 4 << 20,
-            method: ReadMethod::Pread,
-            sequential: true,
-            reader_impl: ReaderImpl::ZeroCopy,
-        }
-    }
-}
-
-#[derive(Debug)]
-struct StoreInner {
-    files: HashMap<String, Arc<FileImage>>,
-    next_id: u64,
-}
-
-#[derive(Debug)]
-struct FileImage {
-    id: u64,
-    data: Vec<u8>,
-}
-
-/// One simulated machine's storage: a device model, a page cache and a set
-/// of file images.
-pub struct SimStore {
-    device: DeviceModel,
-    cache: PageCache,
-    inner: RwLock<StoreInner>,
-    /// Total virtual bytes charged to the device (all readers).
-    device_bytes: AtomicU64,
-}
-
-impl SimStore {
-    pub fn new(kind: DeviceKind) -> Self {
-        // 8 GiB of model page-cache RAM by default (a fraction of the
-        // paper's 256 GB machines, matching our scaled datasets).
-        Self::with_device(kind.model())
-    }
-
-    /// Store for *scaled* experiments: seek latency shrunk to match the
-    /// dataset scale-down (see `DeviceModel::new_scaled`).
-    pub fn new_scaled(kind: DeviceKind) -> Self {
-        Self::with_device(DeviceModel::new_scaled(kind))
-    }
-
-    pub fn with_device(device: DeviceModel) -> Self {
-        Self {
-            device,
-            cache: PageCache::new(8u64 << 30),
-            inner: RwLock::new(StoreInner { files: HashMap::new(), next_id: 1 }),
-            device_bytes: AtomicU64::new(0),
-        }
-    }
-
-    pub fn with_cache_capacity(kind: DeviceKind, cache_bytes: u64) -> Self {
-        Self {
-            device: kind.model(),
-            cache: PageCache::new(cache_bytes),
-            inner: RwLock::new(StoreInner { files: HashMap::new(), next_id: 1 }),
-            device_bytes: AtomicU64::new(0),
-        }
-    }
-
-    pub fn device(&self) -> &DeviceModel {
-        &self.device
-    }
-
-    /// Install a file image.
-    pub fn put(&self, name: &str, data: Vec<u8>) {
-        let mut inner = self.inner.write().expect("store lock");
-        let id = inner.next_id;
-        inner.next_id += 1;
-        inner.files.insert(name.to_string(), Arc::new(FileImage { id, data }));
-    }
-
-    pub fn open(&self, name: &str) -> Option<SimFile<'_>> {
-        let inner = self.inner.read().expect("store lock");
-        inner.files.get(name).map(|img| SimFile { img: Arc::clone(img), store: self })
-    }
-
-    pub fn file_len(&self, name: &str) -> Option<u64> {
-        let inner = self.inner.read().expect("store lock");
-        inner.files.get(name).map(|img| img.data.len() as u64)
-    }
-
-    pub fn remove(&self, name: &str) -> bool {
-        let mut inner = self.inner.write().expect("store lock");
-        inner.files.remove(name).is_some()
-    }
-
-    pub fn list(&self) -> Vec<String> {
-        let inner = self.inner.read().expect("store lock");
-        let mut names: Vec<String> = inner.files.keys().cloned().collect();
-        names.sort();
-        names
-    }
-
-    /// Drop the simulated OS page cache (the paper's flushcache discipline).
-    pub fn drop_cache(&self) {
-        self.cache.drop_cache();
-    }
-
-    pub fn cache_stats(&self) -> (u64, u64) {
-        self.cache.stats()
-    }
-
-    pub fn device_bytes(&self) -> u64 {
-        self.device_bytes.load(Ordering::Relaxed)
-    }
-}
-
-/// Handle to one simulated file.
-pub struct SimFile<'s> {
-    img: Arc<FileImage>,
-    store: &'s SimStore,
-}
-
-impl<'s> SimFile<'s> {
-    pub fn len(&self) -> u64 {
-        self.img.data.len() as u64
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.img.data.is_empty()
-    }
-
-    /// Read `[offset, offset+len)` into a fresh Vec, charging virtual time.
-    /// Out-of-range reads are truncated at EOF like `pread`.
-    pub fn read(&self, offset: u64, len: u64, ctx: ReadCtx, acct: &IoAccount) -> Vec<u8> {
-        let slice = self.read_zero_copy(offset, len, ctx, acct);
-        match ctx.reader_impl {
-            ReaderImpl::ZeroCopy => slice.to_vec(),
-            ReaderImpl::BufferedCopy => {
-                // Managed-style path: stage through an intermediate buffer in
-                // bounded sub-copies (the JVM ByteBuffer pipeline), costing
-                // real CPU that the account measures.
-                acct.time_cpu(|| {
-                    let mut out = Vec::with_capacity(slice.len());
-                    let mut staged = vec![0u8; 64 << 10];
-                    for chunk in slice.chunks(staged.len()) {
-                        let staged = &mut staged[..chunk.len()];
-                        staged.copy_from_slice(chunk);
-                        // Bounds-checked element-wise append, deliberately
-                        // not a memcpy: models managed-runtime overhead.
-                        for &b in staged.iter() {
-                            out.push(b);
-                        }
-                    }
-                    out
-                })
-            }
-        }
-    }
-
-    /// Read `[offset, offset+len)` honoring the declared reader model in
-    /// one place: *borrowed* bytes on the default zero-copy reader,
-    /// a staged owned copy under the managed `BufferedCopy` model (the
-    /// Fig. 10 contrast). Every lane of the zero-copy delivery pipeline
-    /// (graph stream, weights sidecar, future property lanes) should read
-    /// through this helper rather than re-rolling the dispatch — calling
-    /// plain [`read`](Self::read) would silently take the copy path even
-    /// under the zero-copy reader.
-    pub fn read_borrowed(
-        &self,
-        offset: u64,
-        len: u64,
-        ctx: ReadCtx,
-        acct: &IoAccount,
-    ) -> std::borrow::Cow<'_, [u8]> {
-        match ctx.reader_impl {
-            ReaderImpl::ZeroCopy => {
-                std::borrow::Cow::Borrowed(self.read_zero_copy(offset, len, ctx, acct))
-            }
-            ReaderImpl::BufferedCopy => std::borrow::Cow::Owned(self.read(offset, len, ctx, acct)),
-        }
-    }
-
-    /// Borrow the bytes directly (the C-like path) while still charging
-    /// virtual I/O for the cold fraction of the range.
-    pub fn read_zero_copy(
-        &self,
-        offset: u64,
-        len: u64,
-        ctx: ReadCtx,
-        acct: &IoAccount,
-    ) -> &[u8] {
-        let file_len = self.img.data.len() as u64;
-        let start = offset.min(file_len);
-        let end = offset.saturating_add(len).min(file_len);
-        let actual = end - start;
-        if actual > 0 {
-            let populate = ctx.method.buffered();
-            let cold =
-                self.store.cache.access(self.img.id, start, actual, populate, file_len);
-            if cold > 0 {
-                // Charged at the *actual* request granularity: small
-                // scattered requests pay proportionally more seek.
-                let t = self.store.device.request_time(
-                    cold,
-                    ctx.threads,
-                    cold.min(ctx.block.max(1)),
-                    ctx.method,
-                    ctx.sequential,
-                );
-                acct.charge_io(t, cold);
-                self.store.device_bytes.fetch_add(cold, Ordering::Relaxed);
-            } else {
-                // Warm hit: charge DRAM-speed access instead of device speed.
-                let dram = DeviceKind::Dram.model();
-                let t = dram.request_time(actual, ctx.threads, ctx.block, ctx.method, true);
-                acct.charge_io(t, 0);
-            }
-        }
-        &self.img.data[start as usize..end as usize]
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn store_with_file(kind: DeviceKind, len: usize) -> SimStore {
-        let s = SimStore::new(kind);
-        let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
-        s.put("f", data);
-        s
-    }
-
-    #[test]
-    fn read_returns_correct_bytes() {
-        let s = store_with_file(DeviceKind::Ssd, 10_000);
-        let f = s.open("f").unwrap();
-        let acct = IoAccount::new();
-        let got = f.read(100, 50, ReadCtx::default(), &acct);
-        let expect: Vec<u8> = (100..150).map(|i| (i % 251) as u8).collect();
-        assert_eq!(got, expect);
-        assert!(acct.io_seconds() > 0.0);
-    }
-
-    #[test]
-    fn eof_truncation() {
-        let s = store_with_file(DeviceKind::Ssd, 100);
-        let f = s.open("f").unwrap();
-        let acct = IoAccount::new();
-        assert_eq!(f.read(90, 50, ReadCtx::default(), &acct).len(), 10);
-        assert_eq!(f.read(200, 10, ReadCtx::default(), &acct).len(), 0);
-    }
-
-    #[test]
-    fn hdd_slower_than_ssd() {
-        let acct_h = IoAccount::new();
-        let acct_s = IoAccount::new();
-        let sh = store_with_file(DeviceKind::Hdd, 4 << 20);
-        let ss = store_with_file(DeviceKind::Ssd, 4 << 20);
-        sh.open("f").unwrap().read(0, 4 << 20, ReadCtx::default(), &acct_h);
-        ss.open("f").unwrap().read(0, 4 << 20, ReadCtx::default(), &acct_s);
-        assert!(acct_h.io_seconds() > 5.0 * acct_s.io_seconds());
-    }
-
-    #[test]
-    fn warm_reads_are_cheap_until_drop() {
-        let s = store_with_file(DeviceKind::Hdd, 2 << 20);
-        let f = s.open("f").unwrap();
-        let cold = IoAccount::new();
-        f.read(0, 2 << 20, ReadCtx::default(), &cold);
-        let warm = IoAccount::new();
-        f.read(0, 2 << 20, ReadCtx::default(), &warm);
-        assert!(warm.io_seconds() < cold.io_seconds() / 100.0);
-        s.drop_cache();
-        let cold2 = IoAccount::new();
-        f.read(0, 2 << 20, ReadCtx::default(), &cold2);
-        assert!(cold2.io_seconds() > cold.io_seconds() * 0.5);
-    }
-
-    #[test]
-    fn read_borrowed_honors_the_reader_model() {
-        let s = store_with_file(DeviceKind::Dram, 4096);
-        let f = s.open("f").unwrap();
-        let acct = IoAccount::new();
-        let ctx = ReadCtx::default();
-        let zc = f.read_borrowed(10, 100, ctx, &acct);
-        assert!(matches!(zc, std::borrow::Cow::Borrowed(_)), "default reader borrows");
-        let ctx2 = ReadCtx { reader_impl: ReaderImpl::BufferedCopy, ..ctx };
-        let bc = f.read_borrowed(10, 100, ctx2, &acct);
-        assert!(matches!(bc, std::borrow::Cow::Owned(_)), "managed reader stages a copy");
-        assert_eq!(&*zc, &*bc, "both reader models return identical bytes");
-        assert_eq!(zc.len(), 100);
-    }
-
-    #[test]
-    fn buffered_copy_costs_cpu() {
-        let s = store_with_file(DeviceKind::Dram, 4 << 20);
-        let f = s.open("f").unwrap();
-        let zc = IoAccount::new();
-        let ctx = ReadCtx::default();
-        let a = f.read(0, 4 << 20, ctx, &zc);
-        s.drop_cache();
-        let bc = IoAccount::new();
-        let ctx2 = ReadCtx { reader_impl: ReaderImpl::BufferedCopy, ..ctx };
-        let b = f.read(0, 4 << 20, ctx2, &bc);
-        assert_eq!(a, b, "both reader impls must return identical bytes");
-        assert!(bc.cpu_seconds() > zc.cpu_seconds());
-    }
-
-    #[test]
-    fn store_listing_and_removal() {
-        let s = SimStore::new(DeviceKind::Ssd);
-        s.put("b", vec![1]);
-        s.put("a", vec![2]);
-        assert_eq!(s.list(), vec!["a".to_string(), "b".to_string()]);
-        assert_eq!(s.file_len("a"), Some(1));
-        assert!(s.remove("a"));
-        assert!(!s.remove("a"));
-        assert!(s.open("a").is_none());
-    }
-}
+pub use super::store::{GraphStore as SimStore, ReadCtx, StoreFile as SimFile};

@@ -25,6 +25,10 @@ pub struct BitWriter {
     acc: u64,
     /// Number of valid bits in `acc` (0..8).
     acc_bits: u32,
+    /// Bytes handed out through [`Self::drain_full_bytes_into`]. Length
+    /// queries stay *stream-absolute* across drains, so offset bookkeeping
+    /// built on [`Self::bit_len`] is oblivious to streaming flushes.
+    drained: u64,
 }
 
 impl BitWriter {
@@ -33,13 +37,13 @@ impl BitWriter {
     }
 
     pub fn with_capacity(bytes: usize) -> Self {
-        Self { buf: Vec::with_capacity(bytes), acc: 0, acc_bits: 0 }
+        Self { buf: Vec::with_capacity(bytes), acc: 0, acc_bits: 0, drained: 0 }
     }
 
-    /// Total number of bits written so far.
+    /// Total number of bits written so far (including drained bytes).
     #[inline]
     pub fn bit_len(&self) -> u64 {
-        self.buf.len() as u64 * 8 + self.acc_bits as u64
+        (self.drained + self.buf.len() as u64) * 8 + self.acc_bits as u64
     }
 
     /// Write the lowest `n` bits of `value`, MSB first. `n <= 64`.
@@ -88,7 +92,9 @@ impl BitWriter {
         self.write_bits(1, left as u32 + 1);
     }
 
-    /// Pad to a byte boundary and return the underlying bytes.
+    /// Pad to a byte boundary and return the underlying bytes (only the
+    /// bytes *not yet* drained — the whole stream when the writer was never
+    /// drained, the padded tail of a streaming writer otherwise).
     pub fn into_bytes(mut self) -> Vec<u8> {
         if self.acc_bits > 0 {
             // Pending bits are left-aligned; the low bits of the final byte
@@ -98,9 +104,22 @@ impl BitWriter {
         self.buf
     }
 
-    /// Current length in bytes (including the partial byte).
+    /// Current length in bytes (including drained bytes and the partial
+    /// byte).
     pub fn byte_len(&self) -> usize {
-        self.buf.len() + (self.acc_bits > 0) as usize
+        self.drained as usize + self.buf.len() + (self.acc_bits > 0) as usize
+    }
+
+    /// Move every *complete* byte accumulated so far into `out`, keeping
+    /// only the sub-byte pending tail. This is the streaming hook of the
+    /// out-of-core compressor: the caller flushes drained bytes to disk and
+    /// the writer's memory footprint stays bounded by the flush cadence
+    /// while [`Self::bit_len`]/[`Self::byte_len`] keep reporting
+    /// stream-absolute positions.
+    pub fn drain_full_bytes_into(&mut self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.buf);
+        self.drained += self.buf.len() as u64;
+        self.buf.clear();
     }
 }
 
@@ -415,6 +434,26 @@ mod tests {
         w.write_bits(0b1010, 4);
         assert_eq!(w.bit_len(), 12);
         assert_eq!(w.byte_len(), 2);
+    }
+
+    /// Streaming drains must not perturb the emitted bytes or the
+    /// stream-absolute length counters the offsets sidecar is built from.
+    #[test]
+    fn draining_preserves_stream_and_global_lengths() {
+        let mut w = BitWriter::new();
+        let mut file = Vec::new();
+        let mut undrained = BitWriter::new();
+        for i in 0..1000u64 {
+            w.write_bits(i, 11);
+            undrained.write_bits(i, 11);
+            if i % 37 == 0 {
+                w.drain_full_bytes_into(&mut file);
+            }
+            assert_eq!(w.bit_len(), undrained.bit_len());
+            assert_eq!(w.byte_len(), undrained.byte_len());
+        }
+        file.extend_from_slice(&w.into_bytes());
+        assert_eq!(file, undrained.into_bytes());
     }
 
     /// Satellite regression for the write_bits rewrite: every value of every

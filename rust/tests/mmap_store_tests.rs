@@ -1,0 +1,197 @@
+//! Integration tests of the mmap-backed real-file [`GraphStore`]: golden
+//! round-trip against the in-memory store (identical decode output and
+//! stats counters), `MmapDirect` rejection at open, bounded residency
+//! under a small page-cache budget, multi-worker zero-copy delivery on
+//! real files, and a small-scale out-of-core load verified against the
+//! regenerating streaming oracle.
+
+use std::sync::Arc;
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher};
+use paragrapher::formats::webgraph::{self, DecodeSink, Decoder, WgParams};
+use paragrapher::graph::{generators, VertexId};
+use paragrapher::storage::{DeviceKind, GraphStore, IoAccount, ReadCtx, ReadMethod, SimStore};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pg_mmap_{}_{}", tag, std::process::id()));
+    // A fresh directory per run: stale fixtures from a crashed run must not
+    // leak into this one.
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Serialize `g` both into an in-memory store and as real files under a
+/// fresh temp dir opened through the mmap backend.
+fn both_stores(
+    g: &paragrapher::graph::CsrGraph,
+    tag: &str,
+) -> (Arc<SimStore>, Arc<GraphStore>, std::path::PathBuf) {
+    let mem = Arc::new(SimStore::new(DeviceKind::Dram));
+    let dir = temp_dir(tag);
+    for (name, data) in webgraph::serialize(g, "g") {
+        mem.put(&name, data.clone());
+        std::fs::write(dir.join(&name), data).unwrap();
+    }
+    let mapped = Arc::new(GraphStore::open_dir(&dir, DeviceKind::Dram).unwrap());
+    (mem, mapped, dir)
+}
+
+#[test]
+fn golden_fixture_roundtrip_matches_sim_store() {
+    let g = generators::barabasi_albert(1200, 6, 9);
+    let (mem, mapped, dir) = both_stores(&g, "golden");
+    let pg = Paragrapher::init();
+    let opts = || Options {
+        buffer_edges: 2000,
+        read_ctx: ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() },
+        ..Options::default()
+    };
+    let via_mem = pg.open_graph(Arc::clone(&mem), "g", GraphType::CsxWg400, opts()).unwrap();
+    let via_map = pg.open_graph(Arc::clone(&mapped), "g", GraphType::CsxWg400, opts()).unwrap();
+    let block_mem = via_mem.load_whole_graph().unwrap();
+    let block_map = via_map.load_whole_graph().unwrap();
+    assert_eq!(block_mem, block_map, "decode output must not depend on the backing");
+    assert_eq!(block_map.num_edges(), g.num_edges());
+    // Count-type stats counters must be identical across backings (the
+    // time-type ones measure real CPU and legitimately differ).
+    use std::sync::atomic::Ordering::Relaxed;
+    let (sm, sp) = (via_mem.stats(), via_map.stats());
+    assert_eq!(sm.blocks_decoded.load(Relaxed), sp.blocks_decoded.load(Relaxed));
+    assert_eq!(sm.edges_decoded.load(Relaxed), sp.edges_decoded.load(Relaxed));
+    assert_eq!(sm.requests_issued.load(Relaxed), sp.requests_issued.load(Relaxed));
+    assert_eq!(sm.copy_bytes_avoided.load(Relaxed), sp.copy_bytes_avoided.load(Relaxed));
+    assert_eq!(sp.delivery_copy_bytes.load(Relaxed), 0, "zero-copy on the mmap store");
+    assert_eq!(sm.delivery_copy_bytes.load(Relaxed), 0, "zero-copy on the sim store");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mmap_direct_is_rejected_at_open() {
+    let g = generators::barabasi_albert(300, 4, 2);
+    let store = Arc::new(SimStore::new(DeviceKind::Ssd));
+    for (name, data) in webgraph::serialize(&g, "g") {
+        store.put(&name, data);
+    }
+    let pg = Paragrapher::init();
+    let opts = Options {
+        read_ctx: ReadCtx { method: ReadMethod::MmapDirect, ..ReadCtx::default() },
+        ..Options::default()
+    };
+    let err = pg.open_graph(store, "g", GraphType::CsxWg400, opts).unwrap_err();
+    assert!(
+        err.to_string().contains("MmapDirect"),
+        "rejection must name the offending method: {err}"
+    );
+}
+
+#[test]
+fn budgeted_mmap_decode_bounds_model_residency() {
+    let g = generators::barabasi_albert(6000, 8, 5);
+    let (_, _, dir) = both_stores(&g, "budget");
+    let budget = 32u64 << 10; // 2 cache pages — far below the fixture
+    let graph_bytes = std::fs::metadata(dir.join("g.graph")).unwrap().len();
+    assert!(graph_bytes > budget, "fixture ({graph_bytes} B) must exceed the {budget} B budget");
+    let store = GraphStore::open_dir_with(&dir, DeviceKind::Ssd.model(), budget).unwrap();
+    let acct = IoAccount::new();
+    let ctx = ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() };
+    let meta = webgraph::read_meta(&store, "g", ctx, &acct).unwrap();
+    let offsets = webgraph::read_offsets(&store, "g", ctx, &acct).unwrap();
+    let dec = Decoder::open(&store, "g", &meta, &offsets, ctx, &acct).unwrap();
+    let n = g.num_vertices();
+    let mut off_buf = Vec::new();
+    let mut edge_buf: Vec<VertexId> = Vec::new();
+    let mut vs = 0usize;
+    while vs < n {
+        let ve = (vs + 500).min(n);
+        let mut sink = DecodeSink::new(&mut off_buf, &mut edge_buf);
+        dec.decode_range_sink(vs, ve, &acct, &paragrapher::runtime::NativeScan, &mut sink)
+            .unwrap();
+        for v in vs..ve {
+            let (a, b) = (off_buf[v - vs] as usize, off_buf[v - vs + 1] as usize);
+            assert_eq!(&edge_buf[a..b], g.neighbors(v as VertexId), "vertex {v}");
+        }
+        assert!(
+            store.cache_resident_bytes() <= budget,
+            "modeled residency {} exceeds the {} budget",
+            store.cache_resident_bytes(),
+            budget
+        );
+        vs = ve;
+    }
+    assert!(acct.io_seconds() > 0.0, "cold pages must be billed to the device model");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_worker_delivery_on_real_files_is_zero_copy() {
+    let g = generators::web_locality(3000, 8, 0.9, 0.6, 4);
+    let (_, mapped, dir) = both_stores(&g, "workers");
+    let pg = Paragrapher::init();
+    let opts = Options {
+        buffers: 2,
+        decode_workers: 3,
+        buffer_edges: 4000,
+        read_ctx: ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() },
+        ..Options::default()
+    };
+    let graph = pg.open_graph(Arc::clone(&mapped), "g", GraphType::CsxWg400, opts).unwrap();
+    let block = graph.load_whole_graph().unwrap();
+    assert_eq!(block.num_edges(), g.num_edges());
+    assert_eq!(
+        graph.delivery_copy_bytes(),
+        0,
+        "pre-partitioned fan-out must write the sink in place"
+    );
+    assert!(graph.copy_bytes_avoided() > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn small_out_of_core_load_matches_streaming_oracle() {
+    let (n, deg, seed) = (3000usize, 10usize, 11u64);
+    let dir = temp_dir("ooc");
+    let streamed = webgraph::write_stream_to_dir(&dir, "ooc", n, WgParams::default(), |v, out| {
+        generators::synthetic_successors(v, n, deg, seed, out)
+    })
+    .unwrap();
+    let budget = 32u64 << 10;
+    let store = GraphStore::open_dir_with(&dir, DeviceKind::Ssd.model(), budget).unwrap();
+    let acct = IoAccount::new();
+    let ctx = ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() };
+    let meta = webgraph::read_meta(&store, "ooc", ctx, &acct).unwrap();
+    let offsets = webgraph::read_offsets(&store, "ooc", ctx, &acct).unwrap();
+    let dec = Decoder::open(&store, "ooc", &meta, &offsets, ctx, &acct).unwrap();
+    let accounts: Vec<IoAccount> = (0..2).map(|_| IoAccount::new()).collect();
+    let mut off_buf = Vec::new();
+    let mut edge_buf: Vec<VertexId> = Vec::new();
+    let mut oracle: Vec<VertexId> = Vec::new();
+    let mut stitched = 0u64;
+    let mut edges_seen = 0u64;
+    let mut vs = 0usize;
+    while vs < n {
+        let ve = (vs + 700).min(n);
+        let mut sink = DecodeSink::new(&mut off_buf, &mut edge_buf);
+        stitched += dec
+            .decode_range_parallel_sink(
+                vs,
+                ve,
+                &accounts,
+                &paragrapher::runtime::NativeScan,
+                None,
+                &mut sink,
+            )
+            .unwrap();
+        edges_seen += *off_buf.last().unwrap();
+        for v in vs..ve {
+            let (a, b) = (off_buf[v - vs] as usize, off_buf[v - vs + 1] as usize);
+            generators::synthetic_successors(v, n, deg, seed, &mut oracle);
+            assert_eq!(&edge_buf[a..b], &oracle[..], "vertex {v}");
+        }
+        assert!(store.cache_resident_bytes() <= budget, "residency exceeds budget");
+        vs = ve;
+    }
+    assert_eq!(edges_seen, streamed.num_edges);
+    assert_eq!(stitched, 0, "chunk fan-out must write the sink in place");
+    std::fs::remove_dir_all(&dir).ok();
+}
