@@ -1,104 +1,112 @@
-//! Use case C (§4.1): distributed-memory loading on the *partitioned
-//! request API* — the leader computes an edge-balanced 2D
-//! [`PartitionPlan`] from the O(|V|) offsets sidecar alone (§6: "loading
-//! from storage instead of processing"), ships its serializable metadata,
-//! and every "machine" (consumer thread) drains the same
-//! [`PartitionStream`]: tiles are decoded asynchronously ahead of
-//! consumption (prefetch window sized by the §3 LoadModel) and handed to
-//! whichever machine pulls next, while each machine folds its tiles into
-//! a shared union-find. The leader then checks exact edge coverage and
-//! WCC agreement with ground truth.
+//! Use case C (§4.1), now on *real processes*: the leader computes an
+//! edge-balanced 2D [`PartitionPlan`] from the O(|V|) offsets sidecar
+//! alone (§6: "loading from storage instead of processing"), serializes
+//! it over a length-prefixed socket, and every worker — a separate OS
+//! process re-spawned from this same binary — opens the on-disk graph
+//! itself, admits the shipped plan against its *own* Elias–Fano sidecar,
+//! decodes leased tiles through its own coordinator, and streams
+//! per-tile edge summaries back.
+//!
+//! The second run injects a deterministic fault (`kill-worker:0`
+//! mid-tile) to show the lease/retile protocol: the leader observes the
+//! transport EOF, returns the orphaned tiles to the pending pool, and
+//! the survivor finishes them — full edge coverage, checked tile-by-tile
+//! against the single-process full-load oracle.
 //!
 //! ```bash
 //! cargo run --release --example distributed_partition
 //! ```
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-
-use paragrapher::algorithms::jtcc::JtUnionFind;
-use paragrapher::algorithms::partitioned::for_each_partition;
 use paragrapher::coordinator::{GraphType, Options, Paragrapher};
-use paragrapher::formats::FormatKind;
+use paragrapher::distributed::{
+    oracle_tile_summaries, run_leader, run_worker, LeaderConfig, RunReport, WorkerConfig,
+};
+use paragrapher::formats::webgraph;
 use paragrapher::graph::generators::Dataset;
-use paragrapher::partition::PartitionPlan;
-use paragrapher::storage::{DeviceKind, SimStore};
+use paragrapher::storage::DeviceKind;
 use paragrapher::util::fmt_count;
 
-const MACHINES: usize = 4;
+const WORKERS: usize = 2;
+const TILES: usize = 4; // 4×4 source×target grid
+
+fn check_against_oracle(report: &RunReport, oracle: &[(u64, u64)]) {
+    for t in &report.tiles {
+        assert_eq!(
+            (t.edges, t.checksum),
+            oracle[t.tile],
+            "tile {} disagrees with the single-process oracle",
+            t.tile
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    let data = Dataset::Cw.generate(1, 42);
-    let store = Arc::new(SimStore::new(DeviceKind::Nas)); // shared NAS, like the paper's cluster
-    FormatKind::WebGraph.write_to_store(&data, &store, "cw");
-    store.drop_cache();
+    // Worker mode: the leader re-spawns this same example binary with
+    // `worker --connect … --dir …` argv; everything after the subcommand
+    // is the worker's own flag set.
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) == Some("worker") {
+        return run_worker(&WorkerConfig::from_args(&args[2..])?);
+    }
 
-    let pg = Paragrapher::init();
-    let graph = pg.open_graph(
-        Arc::clone(&store),
+    // Leader: write a real on-disk fixture every process opens
+    // independently (the paper's shared-filesystem cluster shape).
+    let data = Dataset::Cw.generate(1, 42);
+    let dir = std::env::temp_dir().join(format!("pg_example_dist_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    for (name, bytes) in webgraph::serialize(&data, "cw") {
+        std::fs::write(dir.join(&name), &bytes)?;
+    }
+    let exe = std::env::current_exe()?;
+    let mut cfg = LeaderConfig::new(
+        &dir,
         "cw",
         GraphType::CsxWg400,
-        Options { buffers: 2, buffer_edges: 32 << 10, ..Options::default() },
+        DeviceKind::Ssd,
+        vec![exe.to_string_lossy().into_owned(), "worker".to_string()],
+    );
+    cfg.workers = WORKERS;
+    cfg.rows = TILES;
+    cfg.cols = TILES;
+
+    // Run 1: clean two-process load.
+    let clean = run_leader(&cfg)?;
+    println!(
+        "CW: {}×{} tiles over {} worker processes — {} edges delivered in {:.2}s",
+        TILES,
+        TILES,
+        clean.workers_spawned,
+        fmt_count(clean.edges_delivered),
+        clean.wall_seconds,
+    );
+
+    // Single-process oracle over the *same* shipped plan.
+    let pg = Paragrapher::init();
+    let graph = pg.open_graph_from_dir(
+        &dir,
+        DeviceKind::Ssd,
+        "cw",
+        GraphType::CsxWg400,
+        Options::default(),
     )?;
-    let n = graph.num_vertices();
-    let m = graph.num_edges();
+    let oracle = oracle_tile_summaries(&graph, clean.plan.clone())?;
+    pg.release_graph(graph);
+    check_against_oracle(&clean, &oracle);
+    println!("every tile matches the single-process full-load oracle ✓");
 
-    // 1. Leader: an edge-balanced source×target tiling from the sidecar
-    //    index alone — O(p log n), no graph data touched. The plan is
-    //    plain serializable metadata a leader would ship to machines.
-    let plan = PartitionPlan::two_d(graph.offsets_index(), MACHINES, MACHINES);
+    // Run 2: worker 0 is killed after its first tile, mid-second-tile.
+    // The leader retiles the orphaned span across the survivor.
+    cfg.fault_args = vec![(0, "kill-after:1".to_string())];
+    let faulted = run_leader(&cfg)?;
+    assert!(faulted.workers_lost >= 1, "fault injection lost no worker");
+    assert!(faulted.retiled_tiles >= 1, "worker death retiled no tiles");
+    check_against_oracle(&faulted, &oracle);
     println!(
-        "CW: {} vertices, {} edges — {}×{} tiles, balance factor {:.3}, prefetch window {}",
-        fmt_count(n as u64),
-        fmt_count(m),
-        MACHINES,
-        MACHINES,
-        plan.balance_factor(),
-        graph.auto_prefetch_window(),
+        "fault run: {} worker lost mid-tile, {} tile(s) retiled to survivors — coverage and \
+         checksums still match the oracle ✓",
+        faulted.workers_lost, faulted.retiled_tiles,
     );
 
-    // 2. Machines: MACHINES consumer threads drain one partitioned
-    //    request. Tiles decode ahead of consumption; each machine unions
-    //    its tiles' edges into the shared forest (work-stealing hand-off:
-    //    a slow machine never blocks the others).
-    let stream = graph.get_partitions(plan.clone())?;
-    let global_uf = Arc::new(JtUnionFind::new(n, 3));
-    let tile_edges = AtomicU64::new(0);
-    let uf = Arc::clone(&global_uf);
-    for_each_partition(&stream, MACHINES, |tile| {
-        tile_edges.fetch_add(tile.num_edges(), Ordering::Relaxed);
-        for (s, d) in tile.iter_edges() {
-            uf.union(s, d);
-        }
-        Ok(())
-    })?;
-
-    // 3. Leader merge checks: every edge delivered exactly once across
-    //    all tiles, and the distributed WCC matches ground truth.
-    let total = tile_edges.load(Ordering::Relaxed);
-    assert_eq!(total, m, "tiles must cover every edge exactly once");
-    let components = global_uf.count_components();
-    let truth = paragrapher::algorithms::count_components(
-        &paragrapher::algorithms::bfs::wcc_by_bfs(&data),
-    );
-    assert_eq!(components, truth);
-    let c = stream.counters();
-    println!(
-        "machines: {} edges over {} tiles; {} components (matches ground truth ✓)",
-        fmt_count(total),
-        c.consumed,
-        components
-    );
-    println!(
-        "interleaving: {:.1}% prefetch hit rate, {} consumer stalls, {} producer stalls",
-        c.prefetch_hit_rate() * 100.0,
-        c.consumer_stalls,
-        c.producer_stalls
-    );
-    // Machine-readable health record (what a leader would log per epoch).
-    println!(
-        "partition metrics: {}",
-        paragrapher::metrics::partition_report(&plan, &c, None).to_string_pretty()
-    );
+    std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }

@@ -219,6 +219,26 @@ pub fn full_load_memory_bytes(num_vertices: usize, num_edges: u64) -> u64 {
     (num_vertices as u64 + 1) * 8 + num_edges * 4
 }
 
+/// Modeled speedup of `workers` processes decoding one shared-storage
+/// graph, against the same §3 model single-process: every process reads
+/// the same device (the σ·r limb is *shared*) but decompresses
+/// independently (the d limb scales), so
+///
+/// ```text
+///     speedup(w) = min(σ·r, w·d) / min(σ·r, d)
+/// ```
+///
+/// — linear while decode-bound, flat once the storage limb binds. The
+/// `distributed_scaling` ci-summary row prints this next to the measured
+/// multi-process wall-clock ratio.
+pub fn modeled_distributed_speedup(model: &crate::model::LoadModel, workers: usize) -> f64 {
+    let one = model.upper_bound();
+    if one <= 0.0 {
+        return 1.0;
+    }
+    (model.sigma * model.r).min(model.d * workers.max(1) as f64) / one
+}
+
 /// Result of one decode-bandwidth calibration ([`calibrate_decode`]).
 #[derive(Debug, Clone, Copy)]
 pub struct DecodeCalibration {

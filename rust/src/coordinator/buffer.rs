@@ -268,7 +268,10 @@ impl BufferPool {
             let s = (start + k) % shards;
             for b in &self.buffers[self.shard_bounds[s]..self.shard_bounds[s + 1]] {
                 if b.try_claim(BufferStatus::CIdle, BufferStatus::CRequested) {
-                    *b.meta.lock().expect("meta lock") = meta;
+                    // The winner overwrites the metadata wholesale, so a
+                    // poisoned lock (panicked prior owner) carries no torn
+                    // state worth propagating.
+                    *crate::coordinator::lock_recover(&b.meta) = meta;
                     return Some(b.id);
                 }
             }
@@ -288,7 +291,10 @@ impl BufferPool {
             if let Some(id) = self.request_idle(meta) {
                 return Some(id);
             }
-            let guard = self.idle_mx.lock().expect("idle lock");
+            // The payload is `()` — the lock only orders wakeups — so
+            // poison (a requester that panicked while parked) is harmless;
+            // recovering keeps every later request path alive.
+            let guard = crate::coordinator::lock_recover(&self.idle_mx);
             // Re-check while holding the lock: a recycle between the scan
             // above and the wait below must not become a lost wakeup —
             // recyclers notify while holding the same lock.
@@ -301,7 +307,7 @@ impl BufferPool {
             let _ = self
                 .idle_cv
                 .wait_timeout(guard, ACQUIRE_WATCHDOG)
-                .expect("idle cv wait");
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
@@ -310,7 +316,7 @@ impl BufferPool {
     /// via raw `set_status`) so waiters observe the transition.
     pub fn recycle(&self, id: usize) {
         self.get(id).set_status(BufferStatus::CIdle);
-        let _guard = self.idle_mx.lock().expect("idle lock");
+        let _guard = crate::coordinator::lock_recover(&self.idle_mx);
         self.idle_cv.notify_all();
     }
 
@@ -318,7 +324,8 @@ impl BufferPool {
     /// for all current and future callers (shutdown path).
     pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
-        let _guard = self.idle_mx.lock().expect("idle lock");
+        // Shutdown must always complete — recover poison and wake everyone.
+        let _guard = crate::coordinator::lock_recover(&self.idle_mx);
         self.idle_cv.notify_all();
     }
 

@@ -85,6 +85,53 @@ impl GraphType {
     }
 }
 
+/// Structured coordinator errors, carried inside `anyhow::Error` on the
+/// request paths so callers (and the distributed worker loop) can match on
+/// the failure class instead of string-scraping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PgError {
+    /// The handle can no longer serve requests: it was released, its buffer
+    /// pool closed, or internal state was poisoned by a panicked library
+    /// thread. One panicked dispatcher must degrade the handle into clean
+    /// errors like this — not cascade a panic into every later request.
+    Closed(String),
+    /// A persistent artifact failed validation: a truncated/corrupt sidecar
+    /// or a shipped plan that disagrees with the opened graph.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for PgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PgError::Closed(why) => write!(f, "graph handle closed: {why}"),
+            PgError::Corrupt(why) => write!(f, "corrupt input: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for PgError {}
+
+/// Lock `m`, mapping poisoning to a clean [`PgError::Closed`] instead of
+/// propagating the sibling thread's panic. Request-path entry points go
+/// through this so a panicked dispatcher turns subsequent requests into
+/// orderly failures rather than a poisoned-lock panic cascade.
+pub(crate) fn lock_clean<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> std::result::Result<std::sync::MutexGuard<'a, T>, PgError> {
+    m.lock()
+        .map_err(|_| PgError::Closed(format!("{what} poisoned by a panicked library thread")))
+}
+
+/// Lock `m`, recovering the guard from a poisoned mutex. Only for state
+/// that stays structurally valid across a panic — plain counters/config,
+/// or data the next owner fully overwrites before reading — and for
+/// shutdown/recycle paths, which must always complete: a drop handler that
+/// panics on a poisoned lock would abort the process mid-unwind.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Library options (`get_set_options`): the two Fig. 8 knobs plus the read
 /// context and the decode engine.
 pub struct Options {
@@ -465,14 +512,18 @@ impl PgGraph {
     }
 
     pub fn options(&self) -> Options {
-        self.inner.options.lock().expect("options lock").clone()
+        // Recovery (not expect): `Options` is plain config, structurally
+        // valid even if a user closure panicked inside `set_options` — that
+        // panic must not wedge every later request behind a poisoned lock.
+        lock_recover(&self.inner.options).clone()
     }
 
     /// Set options; takes effect for subsequent requests. (The buffer pool
     /// and worker count are fixed at open time, as in the library, where
     /// "the user may change these values" *before* starting to read.)
+    /// A panicking `f` unwinds to the caller; the handle stays usable.
     pub fn set_options(&self, f: impl FnOnce(&mut Options)) {
-        let mut o = self.inner.options.lock().expect("options lock");
+        let mut o = lock_recover(&self.inner.options);
         f(&mut o);
     }
 
@@ -593,7 +644,9 @@ impl PgGraph {
                 }
             })
             .context("spawn request manager")?;
-        self.dispatchers.lock().expect("dispatchers lock").push(handle);
+        // Recovery: the handle vector stays valid across a sibling panic,
+        // and release()/Drop must still be able to join this dispatcher.
+        lock_recover(&self.dispatchers).push(handle);
         Ok(req)
     }
 
@@ -630,7 +683,10 @@ impl PgGraph {
         let req = self.csx_get_subgraph(
             range,
             Arc::new(move |blk: &EdgeBlock<'_>| {
-                let mut out = a2.lock().expect("assemble lock");
+                // Recovery is sound here: a sibling callback that panicked
+                // mid-assembly never bumped `delivered`, so the truncation
+                // guard below rejects the torn result regardless.
+                let mut out = lock_recover(&a2);
                 let lo = (blk.start_edge - base_edge) as usize;
                 let hi = lo + blk.edges.len();
                 if out.edges.len() < hi {
@@ -654,7 +710,7 @@ impl PgGraph {
         if delivered.load(Ordering::Acquire) != req.total_blocks() {
             bail!("blocking load truncated: graph released mid-request");
         }
-        let mut out = assembled.lock().expect("assemble lock");
+        let mut out = lock_recover(&assembled);
         Ok(std::mem::replace(
             &mut *out,
             DecodedBlock { first_vertex: 0, offsets: Vec::new(), edges: Vec::new() },
@@ -806,12 +862,14 @@ impl PgGraph {
         self.get_partitions(PartitionPlan::coo(&self.inner.offsets, parts))
     }
 
-    /// Serve an arbitrary [`PartitionPlan`] (computed here or received
-    /// from a leader): partitions are decoded asynchronously ahead of
-    /// consumption into a staging window sized by the §3 model, with
-    /// decode concurrency backpressured through the buffer pool. Any
-    /// number of consumer threads may drain the returned stream.
-    pub fn get_partitions(&self, plan: PartitionPlan) -> Result<PartitionStream> {
+    /// Admission check for a plan before any decode is dispatched:
+    /// structural `check()`, the `(n, m)` cross-check against this
+    /// graph's metadata, and a per-partition span cross-check against
+    /// this graph's EF sidecar. A worker MUST run this on every
+    /// leader-shipped plan — a stale plan for a different build of the
+    /// same-named graph otherwise fails deep inside decode (or worse,
+    /// silently drops edges) instead of at admission.
+    pub fn validate_plan(&self, plan: &PartitionPlan) -> Result<()> {
         plan.check()?;
         if plan.num_vertices != self.inner.meta.num_vertices
             || plan.num_edges != self.inner.meta.num_edges
@@ -831,36 +889,113 @@ impl PgGraph {
         // leader-shipped plan is rejected up front instead of underflowing
         // the trim arithmetic or silently dropping edges.
         for p in &plan.parts {
-            let row_span = (
-                self.inner.offsets.edge_offset(p.vertices.start),
-                self.inner.offsets.edge_offset(p.vertices.end),
-            );
-            let consistent = match plan.kind {
-                // Vertex-aligned kinds own their rows' exact edge span.
-                partition::PlanKind::OneD | partition::PlanKind::TwoD { .. } => {
-                    p.edge_span == row_span
-                }
-                // COO shares trim within their covering rows. Empty
-                // shares (row-less, as the planner emits them) carry an
-                // arbitrary empty span; anything with rows must contain
-                // its span, or the trim arithmetic below would underflow.
-                partition::PlanKind::Coo => {
-                    (p.edge_span.0 == p.edge_span.1 && p.vertices.is_empty())
-                        || (p.edge_span.0 >= row_span.0 && p.edge_span.1 <= row_span.1)
-                }
-            };
-            if !consistent {
-                bail!(
-                    "partition {}: edge span {:?} disagrees with this graph's offsets \
-                     (rows {}..{} span {:?}) — stale or foreign plan",
-                    p.index,
-                    p.edge_span,
-                    p.vertices.start,
-                    p.vertices.end,
-                    row_span
-                );
-            }
+            self.partition_consistent(p, plan.kind)?;
         }
+        Ok(())
+    }
+
+    /// One partition's span cross-checked against this graph's offsets.
+    /// Also bounds-checks the vertex range, since the single-tile path
+    /// ([`decode_partition_block`](Self::decode_partition_block)) has no
+    /// surrounding `plan.check()` to catch an out-of-range row.
+    fn partition_consistent(&self, p: &Partition, kind: partition::PlanKind) -> Result<()> {
+        if p.vertices.end > self.inner.meta.num_vertices
+            || p.vertices.start > p.vertices.end
+            || p.edge_span.0 > p.edge_span.1
+            || p.edge_span.1 > self.inner.meta.num_edges
+        {
+            bail!(
+                "partition {}: rows {}..{} span {:?} out of range for a {}v/{}e graph",
+                p.index,
+                p.vertices.start,
+                p.vertices.end,
+                p.edge_span,
+                self.inner.meta.num_vertices,
+                self.inner.meta.num_edges
+            );
+        }
+        let row_span = (
+            self.inner.offsets.edge_offset(p.vertices.start),
+            self.inner.offsets.edge_offset(p.vertices.end),
+        );
+        let consistent = match kind {
+            // Vertex-aligned kinds own their rows' exact edge span.
+            partition::PlanKind::OneD | partition::PlanKind::TwoD { .. } => {
+                p.edge_span == row_span
+            }
+            // COO shares trim within their covering rows. Empty
+            // shares (row-less, as the planner emits them) carry an
+            // arbitrary empty span; anything with rows must contain
+            // its span, or the trim arithmetic would underflow.
+            partition::PlanKind::Coo => {
+                (p.edge_span.0 == p.edge_span.1 && p.vertices.is_empty())
+                    || (p.edge_span.0 >= row_span.0 && p.edge_span.1 <= row_span.1)
+            }
+        };
+        if !consistent {
+            bail!(
+                "partition {}: edge span {:?} disagrees with this graph's offsets \
+                 (rows {}..{} span {:?}) — stale or foreign plan",
+                p.index,
+                p.edge_span,
+                p.vertices.start,
+                p.vertices.end,
+                row_span
+            );
+        }
+        Ok(())
+    }
+
+    /// Decode ONE partition synchronously, blocking the caller until its
+    /// block is staged. This is the distributed worker's entry point: the
+    /// leader leases tiles one at a time, so a worker decodes exactly the
+    /// tile it holds a lease on — no speculative prefetch of tiles that
+    /// may be retiled to a sibling.
+    ///
+    /// The partition is cross-checked against this graph's sidecar first
+    /// (same admission rule as [`validate_plan`](Self::validate_plan));
+    /// on a closed/released handle this returns [`PgError::Closed`]
+    /// instead of wedging on the drained buffer pool.
+    pub fn decode_partition_block(
+        &self,
+        part: Partition,
+        kind: partition::PlanKind,
+    ) -> Result<LoadedPartition> {
+        self.partition_consistent(&part, kind)?;
+        if self.inner.shutdown.load(Ordering::Acquire) {
+            return Err(PgError::Closed("graph released".into()).into());
+        }
+        let opts = self.options();
+        let meta = BlockMeta {
+            start_vertex: part.vertices.start,
+            end_vertex: part.vertices.end,
+            start_edge: part.edge_span.0,
+            end_edge: part.edge_span.1,
+        };
+        let Some(buffer_id) = self.inner.pool.acquire_idle(meta) else {
+            return Err(PgError::Closed("buffer pool closed".into()).into());
+        };
+        self.inner.stats.partition_requests.fetch_add(1, Ordering::Relaxed);
+        let loaded = decode_partition(
+            &self.inner,
+            buffer_id,
+            part,
+            opts.read_ctx,
+            opts.scan.as_ref(),
+            opts.decode_workers,
+            &self.workers,
+        )?;
+        self.inner.stats.partitions_staged.fetch_add(1, Ordering::Relaxed);
+        Ok(loaded)
+    }
+
+    /// Serve an arbitrary [`PartitionPlan`] (computed here or received
+    /// from a leader): partitions are decoded asynchronously ahead of
+    /// consumption into a staging window sized by the §3 model, with
+    /// decode concurrency backpressured through the buffer pool. Any
+    /// number of consumer threads may drain the returned stream.
+    pub fn get_partitions(&self, plan: PartitionPlan) -> Result<PartitionStream> {
+        self.validate_plan(&plan)?;
         let opts = self.options();
         let window = if opts.prefetch_window > 0 {
             opts.prefetch_window
@@ -995,7 +1130,10 @@ impl PgGraph {
         self.inner.pool.close(); // wake any parked request managers
         self.inner.decoded_cache.clear();
         let handles: Vec<_> = {
-            let mut d = self.dispatchers.lock().expect("dispatchers lock");
+            // Shutdown must complete even after a dispatcher panicked
+            // (which poisons this lock); the Vec itself is never left
+            // torn by a panic elsewhere.
+            let mut d = lock_recover(&self.dispatchers);
             d.drain(..).collect()
         };
         for h in handles {
@@ -1032,7 +1170,8 @@ impl Drop for PgGraph {
         self.inner.shutdown.store(true, Ordering::Release);
         self.inner.pool.close(); // wake any parked request managers
         let handles: Vec<_> = {
-            let mut d = self.dispatchers.lock().expect("dispatchers lock");
+            // Same poison recovery as `release`: drop must never panic.
+            let mut d = lock_recover(&self.dispatchers);
             d.drain(..).collect()
         };
         for h in handles {
@@ -1107,7 +1246,12 @@ fn decode_into_buffer(
             read_ctx,
             &accounts[0],
         )?;
-        let mut data = buf.data.lock().expect("data lock");
+        // A sibling thread that panicked while holding this buffer's data
+        // poisons the lock; this block is about to overwrite the payload
+        // wholesale, so surface it as a failed block (`PgError::Closed`
+        // through `record_failure`) rather than cascading the panic into
+        // this dispatcher too.
+        let mut data = lock_clean(&buf.data, "buffer data")?;
         data.clear();
         // Pre-reserve the exact block shape off the sidecar (capped by the
         // decoder's shared guard, so a forged sidecar cannot force an
@@ -1153,10 +1297,10 @@ fn decode_into_buffer(
                 read_ctx,
                 &weights_acct,
                 &mut data.weights,
-            );
-            if data.weights.len() as u64 != meta.num_edges() {
-                bail!("weights sidecar truncated at edges {}..{}", meta.start_edge, meta.end_edge);
-            }
+            )
+            .with_context(|| {
+                format!("weights sidecar at edges {}..{}", meta.start_edge, meta.end_edge)
+            })?;
         }
         let payload = (data.offsets.len() * std::mem::size_of::<u64>()
             + data.edges.len() * std::mem::size_of::<VertexId>()
@@ -1199,6 +1343,12 @@ fn decode_into_buffer(
 /// Decode a `.weights` sidecar span (little-endian `f32`s) straight into
 /// `out` — no intermediate byte vector on the default zero-copy reader;
 /// the managed `BufferedCopy` reader keeps its modeled staging pipeline.
+///
+/// A truncated or corrupt sidecar (short read past EOF, or a byte length
+/// that is not a multiple of 4) is a [`PgError::Corrupt`] error, never a
+/// panic: the store clamps out-of-range reads at EOF like `pread`, so a
+/// truncated file surfaces here as `bytes.len() < byte_len` and must fail
+/// the block cleanly.
 fn read_weights_into(
     file: &crate::storage::SimFile<'_>,
     byte_offset: u64,
@@ -1206,11 +1356,19 @@ fn read_weights_into(
     ctx: ReadCtx,
     acct: &IoAccount,
     out: &mut Vec<crate::graph::Weight>,
-) {
+) -> std::result::Result<(), PgError> {
     out.clear();
     let bytes = file.read_borrowed(byte_offset, byte_len, ctx, acct);
+    if bytes.len() as u64 != byte_len || bytes.len() % 4 != 0 {
+        return Err(PgError::Corrupt(format!(
+            "weights sidecar truncated or torn: wanted {byte_len} bytes at offset \
+             {byte_offset}, file yields {}",
+            bytes.len()
+        )));
+    }
     out.reserve(bytes.len() / 4);
-    out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+    Ok(())
 }
 
 /// Producer-side partition decode: claim the buffer (C_REQUESTED ->
@@ -1345,7 +1503,17 @@ fn run_user_callback(
         return;
     }
     {
-        let data = buf.data.lock().expect("data lock");
+        // A poisoned payload lock (panicked sibling) fails this block
+        // cleanly and recycles — one bad dispatcher must not wedge every
+        // later request on the handle.
+        let data = match lock_clean(&buf.data, "buffer data") {
+            Ok(d) => d,
+            Err(e) => {
+                req.record_failure(e.to_string());
+                inner.pool.recycle(buffer_id);
+                return;
+            }
+        };
         let blk = EdgeBlock {
             buffer_id,
             start_vertex: meta.start_vertex,

@@ -136,7 +136,10 @@ impl ReadRequest {
     }
 
     pub fn error(&self) -> Option<String> {
-        self.error.lock().expect("error lock").clone()
+        // Poison recovery: an `Option<String>` is never left torn by a
+        // panicking writer, and the error message must stay readable even
+        // after a dispatcher died — it is the request's failure report.
+        crate::coordinator::lock_recover(&self.error).clone()
     }
 
     /// Cancel: outstanding blocks may still complete, but unscheduled ones
@@ -154,7 +157,10 @@ impl ReadRequest {
         self.edges_delivered.fetch_add(edges, Ordering::AcqRel);
         let done = self.blocks_done.fetch_add(1, Ordering::AcqRel) + 1;
         if done >= self.total_blocks {
-            let _g = self.done_mx.lock().expect("done lock");
+            // The mutex only orders the notify against `wait`'s check —
+            // poison (a waiter that panicked between check and park)
+            // must not stop the completion signal.
+            let _g = crate::coordinator::lock_recover(&self.done_mx);
             self.done_cv.notify_all();
         }
     }
@@ -162,7 +168,7 @@ impl ReadRequest {
     /// Producer side: record a failed block.
     pub fn record_failure(&self, message: String) {
         {
-            let mut e = self.error.lock().expect("error lock");
+            let mut e = crate::coordinator::lock_recover(&self.error);
             e.get_or_insert(message);
         }
         self.failed.store(true, Ordering::Release);
@@ -171,12 +177,15 @@ impl ReadRequest {
 
     /// Block until all blocks are done (the blocking-mode primitive).
     pub fn wait(&self) {
-        let mut g = self.done_mx.lock().expect("done lock");
+        // The guarded state is the atomic counters, not the mutex payload
+        // `()`, so a poisoned lock carries no torn data — recover and keep
+        // waiting; `record_failure` already marked the request failed.
+        let mut g = crate::coordinator::lock_recover(&self.done_mx);
         while !self.is_complete() {
             let (ng, _timeout) = self
                 .done_cv
                 .wait_timeout(g, std::time::Duration::from_millis(50))
-                .expect("cv wait");
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             g = ng;
         }
     }

@@ -1,0 +1,368 @@
+//! The leader: plan once, lease tiles, survive workers.
+//!
+//! The leader opens the graph from its own directory only to compute the
+//! 2D plan off the Elias–Fano sidecar (then releases it — the leader
+//! never decodes), binds a loopback listener, spawns worker processes
+//! pointed back at it, and serves each connection from a dedicated
+//! thread. Tiles are never pre-assigned: each handler leases from the
+//! shared [`TileLedger`] on demand, so a fast worker takes more tiles and
+//! a dead one leaves only its in-flight lease to reclaim.
+//!
+//! Worker loss is detected three ways — transport EOF mid-tile, a torn
+//! frame, or the per-tile read deadline ([`LeaderConfig::tile_timeout`])
+//! — and always handled the same: orphan the worker's leases back to the
+//! ledger, kill and reap the child, and let survivors pick the tiles up.
+//! The ledger's per-tile attempt budget ([`LeaderConfig::max_attempts`])
+//! turns an uncompletable tile into a loud [`Err`]; losing *every* worker
+//! with tiles outstanding is equally loud. The leader never hangs on a
+//! dead or stalled worker.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::Msg;
+use crate::coordinator::{lock_recover, GraphType, Options, Paragrapher};
+use crate::partition::{PartitionPlan, TileLedger};
+use crate::storage::DeviceKind;
+
+/// How long a worker may take to connect and say Hello before the run
+/// proceeds without it.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A leader run over one on-disk graph directory.
+#[derive(Debug, Clone)]
+pub struct LeaderConfig {
+    /// Graph directory every process opens independently.
+    pub dir: PathBuf,
+    pub base: String,
+    pub gtype: GraphType,
+    pub device: DeviceKind,
+    /// Worker processes to spawn.
+    pub workers: usize,
+    /// 2D plan shape (`rows × cols` tiles).
+    pub rows: usize,
+    pub cols: usize,
+    /// Read deadline per assigned tile; a worker that blows it is
+    /// declared dead and its leases are retiled.
+    pub tile_timeout: Duration,
+    /// Leases any single tile may burn before the run fails loudly.
+    pub max_attempts: usize,
+    /// argv prefix of a worker process, e.g. `[exe, "worker"]` — the
+    /// leader appends `--connect/--dir/--base/--graph-type/--device/
+    /// --index` (and `--fault` where injected).
+    pub worker_cmd: Vec<String>,
+    /// Deterministic fault injection: `(worker index, WorkerFault spec)`.
+    pub fault_args: Vec<(usize, String)>,
+}
+
+impl LeaderConfig {
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        base: &str,
+        gtype: GraphType,
+        device: DeviceKind,
+        worker_cmd: Vec<String>,
+    ) -> LeaderConfig {
+        LeaderConfig {
+            dir: dir.into(),
+            base: base.to_string(),
+            gtype,
+            device,
+            workers: 2,
+            rows: 3,
+            cols: 3,
+            tile_timeout: Duration::from_secs(20),
+            max_attempts: 3,
+            worker_cmd,
+            fault_args: Vec::new(),
+        }
+    }
+}
+
+/// One tile's merged result, as received from whichever worker
+/// completed it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileOutcome {
+    pub tile: usize,
+    pub edges: u64,
+    pub checksum: u64,
+    /// Worker whose result was accepted (after any retiling).
+    pub worker: usize,
+}
+
+/// What a completed distributed run delivered.
+#[derive(Debug)]
+pub struct RunReport {
+    /// The plan that was shipped (tile `t` of [`Self::tiles`] is
+    /// `plan.parts[t]`).
+    pub plan: PartitionPlan,
+    pub tiles: Vec<TileOutcome>,
+    pub edges_delivered: u64,
+    /// Tiles that went back to pending because their worker died.
+    pub retiled_tiles: usize,
+    pub workers_spawned: usize,
+    pub workers_lost: usize,
+    pub wall_seconds: f64,
+}
+
+/// State shared by every connection handler.
+struct Shared {
+    ledger: TileLedger,
+    plan_msg: Msg,
+    results: Mutex<HashMap<usize, TileOutcome>>,
+    /// First unrecoverable error (plan rejection, attempt budget burned).
+    fatal: Mutex<Option<String>>,
+    lost: AtomicUsize,
+    children: Mutex<HashMap<usize, Child>>,
+    tile_timeout: Duration,
+}
+
+fn set_fatal(sh: &Shared, why: String) {
+    lock_recover(&sh.fatal).get_or_insert(why);
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Worker loss: reclaim its leases, kill and reap the process. Safe to
+/// call for a worker that already exited (kill/wait errors are moot —
+/// the tiles are what matter).
+fn declare_dead(sh: &Shared, worker: usize, why: &str) {
+    let orphaned = sh.ledger.orphan_worker(worker);
+    if let Some(mut child) = lock_recover(&sh.children).remove(&worker) {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    sh.lost.fetch_add(1, Ordering::AcqRel);
+    eprintln!("leader: worker {worker} lost ({why}); {orphaned} tile(s) returned for retiling");
+}
+
+/// Serve one worker connection: ship the plan, then lease→assign→collect
+/// until the ledger drains, the run turns fatal, or the worker dies.
+fn serve_worker(mut stream: TcpStream, sh: &Shared) {
+    let _ = stream.set_nodelay(true);
+    if sh.plan_msg.send(&mut stream).is_err() {
+        // Died before identifying itself: it holds no leases to reclaim,
+        // and the spawn-order index is unknowable from here — the final
+        // child sweep in `run_leader` reaps the process.
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(CONNECT_TIMEOUT));
+    let worker = match Msg::recv(&mut stream) {
+        Ok(Some(Msg::Hello { worker, .. })) => worker,
+        Ok(Some(Msg::Reject { worker, error })) => {
+            // An admission failure is a configuration error (stale plan,
+            // wrong directory) — retrying elsewhere cannot help.
+            set_fatal(sh, format!("worker {worker} rejected the plan: {error}"));
+            return;
+        }
+        _ => return,
+    };
+    let _ = stream.set_read_timeout(Some(sh.tile_timeout));
+    loop {
+        if lock_recover(&sh.fatal).is_some() {
+            let _ = Msg::Done.send(&mut stream);
+            return;
+        }
+        let tile = match sh.ledger.lease(worker) {
+            Err(e) => {
+                set_fatal(sh, e);
+                let _ = Msg::Done.send(&mut stream);
+                return;
+            }
+            Ok(None) => {
+                if sh.ledger.all_done() {
+                    let _ = Msg::Done.send(&mut stream);
+                    return;
+                }
+                // Tiles are all leased to siblings; one may yet be
+                // orphaned back, so poll rather than leave early.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Ok(Some(t)) => t,
+        };
+        if (Msg::Assign { tile }).send(&mut stream).is_err() {
+            declare_dead(sh, worker, "send failed");
+            return;
+        }
+        match Msg::recv(&mut stream) {
+            Ok(Some(Msg::TileResult { tile: t, edges, checksum })) if t == tile => {
+                // `complete` is the authority: a result racing in after
+                // this worker was declared dead elsewhere is dropped.
+                if sh.ledger.complete(tile, worker) {
+                    lock_recover(&sh.results)
+                        .insert(tile, TileOutcome { tile, edges, checksum, worker });
+                }
+            }
+            Ok(Some(other)) => {
+                declare_dead(sh, worker, &format!("protocol violation: {other:?}"));
+                return;
+            }
+            Ok(None) => {
+                declare_dead(sh, worker, &format!("transport EOF mid-tile {tile}"));
+                return;
+            }
+            Err(e) if is_timeout(&e) => {
+                declare_dead(
+                    sh,
+                    worker,
+                    &format!("tile {tile} timed out after {:?}", sh.tile_timeout),
+                );
+                return;
+            }
+            Err(e) => {
+                declare_dead(sh, worker, &format!("transport error on tile {tile}: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Kill and reap every child still registered (stalled workers sleep for
+/// an hour — the run must not leave them behind).
+fn reap_children(sh: &Shared) {
+    let mut kids = lock_recover(&sh.children);
+    for child in kids.values_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    kids.clear();
+}
+
+/// Run one distributed load end to end. See the module docs for the
+/// protocol; the fault-handling contract is: worker loss retiles (never
+/// hangs), and an uncompletable run errors loudly with the loss/retile
+/// accounting in the message.
+pub fn run_leader(cfg: &LeaderConfig) -> Result<RunReport> {
+    let t0 = Instant::now();
+    if cfg.worker_cmd.is_empty() {
+        bail!("worker_cmd must name a worker program");
+    }
+    // Plan off the leader's own sidecar, then release — the leader never
+    // decodes; workers do.
+    let pg = Paragrapher::init();
+    let graph =
+        pg.open_graph_from_dir(&cfg.dir, cfg.device, &cfg.base, cfg.gtype, Options::default())?;
+    let plan = PartitionPlan::two_d(graph.offsets_index(), cfg.rows, cfg.cols);
+    pg.release_graph(graph);
+    let num_tiles = plan.num_parts();
+
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind leader socket")?;
+    let addr = listener.local_addr()?.to_string();
+    listener.set_nonblocking(true)?;
+
+    let sh = Arc::new(Shared {
+        ledger: TileLedger::new(num_tiles, cfg.max_attempts),
+        plan_msg: Msg::Plan { plan: plan.to_json() },
+        results: Mutex::new(HashMap::new()),
+        fatal: Mutex::new(None),
+        lost: AtomicUsize::new(0),
+        children: Mutex::new(HashMap::new()),
+        tile_timeout: cfg.tile_timeout,
+    });
+
+    let workers = cfg.workers.max(1);
+    for i in 0..workers {
+        let mut cmd = Command::new(&cfg.worker_cmd[0]);
+        cmd.args(&cfg.worker_cmd[1..])
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--dir")
+            .arg(&cfg.dir)
+            .arg("--base")
+            .arg(&cfg.base)
+            .arg("--graph-type")
+            .arg(super::gtype_flag(cfg.gtype))
+            .arg("--device")
+            .arg(cfg.device.name())
+            .arg("--index")
+            .arg(i.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        if let Some((_, fault)) = cfg.fault_args.iter().find(|(w, _)| *w == i) {
+            cmd.arg("--fault").arg(fault);
+        }
+        let child = cmd.spawn().with_context(|| format!("spawn worker {i}"))?;
+        lock_recover(&sh.children).insert(i, child);
+    }
+
+    // Accept until every spawned worker connected, the run finished
+    // without some of them, or the connect window closed.
+    let mut handlers = Vec::new();
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    while handlers.len() < workers && Instant::now() < deadline {
+        if lock_recover(&sh.fatal).is_some() || sh.ledger.all_done() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let sh2 = Arc::clone(&sh);
+                let h = std::thread::Builder::new()
+                    .name("pg-leader-conn".into())
+                    .spawn(move || serve_worker(stream, &sh2))
+                    .context("spawn connection handler")?;
+                handlers.push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                reap_children(&sh);
+                bail!("accept: {e}");
+            }
+        }
+    }
+    if handlers.is_empty() {
+        reap_children(&sh);
+        bail!("no worker connected within {CONNECT_TIMEOUT:?}");
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    reap_children(&sh);
+
+    let workers_lost = sh.lost.load(Ordering::Acquire);
+    if let Some(e) = lock_recover(&sh.fatal).take() {
+        bail!(
+            "distributed run failed after {workers_lost} worker loss(es), {} retile(s): {e}",
+            sh.ledger.retiled()
+        );
+    }
+    if !sh.ledger.all_done() {
+        bail!(
+            "{} of {num_tiles} tiles unfinished: every worker is gone \
+             ({workers_lost} lost, {} tile(s) retiled, attempt bound {})",
+            sh.ledger.unfinished(),
+            sh.ledger.retiled(),
+            cfg.max_attempts
+        );
+    }
+    let results = lock_recover(&sh.results);
+    let mut tiles = Vec::with_capacity(num_tiles);
+    let mut edges_delivered = 0u64;
+    for t in 0..num_tiles {
+        let o = *results
+            .get(&t)
+            .ok_or_else(|| anyhow::anyhow!("tile {t} marked done but never recorded"))?;
+        edges_delivered += o.edges;
+        tiles.push(o);
+    }
+    Ok(RunReport {
+        plan,
+        tiles,
+        edges_delivered,
+        retiled_tiles: sh.ledger.retiled(),
+        workers_spawned: workers,
+        workers_lost,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}

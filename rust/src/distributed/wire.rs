@@ -1,0 +1,171 @@
+//! Leader↔worker wire protocol: typed messages over the length-prefixed
+//! JSON frames of [`util::json`](crate::util::json).
+//!
+//! One frame carries one message; the `"type"` field discriminates. Tile
+//! checksums travel as 16-digit hex strings because JSON numbers are
+//! `f64`-backed (only 53 bits survive a numeric round-trip).
+
+use std::io::{Read, Write};
+
+use crate::util::json::{read_frame, write_frame, Json};
+
+/// One protocol message. The conversation is:
+///
+/// ```text
+/// leader → worker   Plan        (the full serialized PartitionPlan)
+/// worker → leader   Hello | Reject
+/// leader → worker   Assign*     (one tile lease at a time)
+/// worker → leader   TileResult* (one per Assign, in order)
+/// leader → worker   Done        (no more tiles; close cleanly)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// The serialized [`PartitionPlan`](crate::partition::PartitionPlan).
+    Plan { plan: Json },
+    /// Worker accepted the plan after local admission checks.
+    Hello { worker: usize, vertices: u64, edges: u64 },
+    /// Worker refused the plan (admission failure) — fatal for the run.
+    Reject { worker: usize, error: String },
+    /// Lease of one tile (an index into the plan's partitions).
+    Assign { tile: usize },
+    /// The decoded tile's merged result summary.
+    TileResult { tile: usize, edges: u64, checksum: u64 },
+    /// No more tiles; the worker should release its graph and exit 0.
+    Done,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Msg::Plan { plan } => {
+                o.set("type", "plan").set("plan", plan.clone());
+            }
+            Msg::Hello { worker, vertices, edges } => {
+                o.set("type", "hello")
+                    .set("worker", *worker)
+                    .set("vertices", *vertices)
+                    .set("edges", *edges);
+            }
+            Msg::Reject { worker, error } => {
+                o.set("type", "reject").set("worker", *worker).set("error", error.as_str());
+            }
+            Msg::Assign { tile } => {
+                o.set("type", "assign").set("tile", *tile);
+            }
+            Msg::TileResult { tile, edges, checksum } => {
+                o.set("type", "tile_result")
+                    .set("tile", *tile)
+                    .set("edges", *edges)
+                    .set("checksum", format!("{checksum:016x}"));
+            }
+            Msg::Done => {
+                o.set("type", "done");
+            }
+        }
+        o
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Msg, String> {
+        let ty = doc
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "message without a \"type\" field".to_string())?;
+        let num = |key: &str| -> Result<u64, String> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("{ty:?} message missing numeric {key:?}"))
+        };
+        match ty {
+            "plan" => {
+                let plan =
+                    doc.get("plan").ok_or_else(|| "plan message without a plan".to_string())?;
+                Ok(Msg::Plan { plan: plan.clone() })
+            }
+            "hello" => Ok(Msg::Hello {
+                worker: num("worker")? as usize,
+                vertices: num("vertices")?,
+                edges: num("edges")?,
+            }),
+            "reject" => Ok(Msg::Reject {
+                worker: num("worker")? as usize,
+                error: doc
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified")
+                    .to_string(),
+            }),
+            "assign" => Ok(Msg::Assign { tile: num("tile")? as usize }),
+            "tile_result" => {
+                let hex = doc
+                    .get("checksum")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "tile_result without a checksum".to_string())?;
+                let checksum = u64::from_str_radix(hex, 16)
+                    .map_err(|_| format!("bad checksum {hex:?}"))?;
+                Ok(Msg::TileResult { tile: num("tile")? as usize, edges: num("edges")?, checksum })
+            }
+            "done" => Ok(Msg::Done),
+            other => Err(format!("unknown message type {other:?}")),
+        }
+    }
+
+    /// Write this message as one frame.
+    pub fn send<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write_frame(w, &self.to_json())
+    }
+
+    /// Read one message; `Ok(None)` is a clean close at a frame boundary.
+    /// Timeout-kinded errors (`WouldBlock`/`TimedOut`) pass through so the
+    /// leader can classify a stalled worker.
+    pub fn recv<R: Read>(r: &mut R) -> std::io::Result<Option<Msg>> {
+        match read_frame(r)? {
+            None => Ok(None),
+            Some(doc) => Msg::from_json(&doc)
+                .map(Some)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_round_trips() {
+        let mut plan = Json::obj();
+        plan.set("kind", "2d:2x2").set("num_vertices", 10u64);
+        let msgs = [
+            Msg::Plan { plan },
+            Msg::Hello { worker: 1, vertices: 10, edges: 35 },
+            Msg::Reject { worker: 0, error: "plan is for a different graph".into() },
+            Msg::Assign { tile: 3 },
+            // A checksum with the top bit set would lose precision as a
+            // JSON number — the hex-string lane must carry it exactly.
+            Msg::TileResult { tile: 3, edges: 9, checksum: 0xdead_beef_cafe_f00d },
+            Msg::Done,
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.send(&mut wire).unwrap();
+        }
+        let mut r = wire.as_slice();
+        for m in &msgs {
+            assert_eq!(Msg::recv(&mut r).unwrap().as_ref(), Some(m));
+        }
+        assert_eq!(Msg::recv(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn garbage_is_invalid_data() {
+        let mut doc = Json::obj();
+        doc.set("type", "launch-the-missiles");
+        let mut wire = Vec::new();
+        crate::util::json::write_frame(&mut wire, &doc).unwrap();
+        let mut r = wire.as_slice();
+        let e = Msg::recv(&mut r).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+}

@@ -1,0 +1,201 @@
+//! The worker process: one graph handle, one socket, tiles on demand.
+//!
+//! A worker is intentionally dumb: connect, receive the plan, admit it
+//! against the *locally opened* graph, then decode whatever tile the
+//! leader leases next through this process's own coordinator
+//! ([`PgGraph::decode_partition_block`](crate::coordinator::PgGraph)).
+//! Admission is strict (§ satellite 3): `PartitionPlan::from_json`
+//! re-runs the structural `check()`, and `validate_plan` cross-checks
+//! `(n, m)` *and* every tile span against this process's own Elias–Fano
+//! sidecar before any decode is dispatched — a stale plan for a
+//! different build of the same-named graph is a `Reject` at admission,
+//! not a failure deep inside decode.
+//!
+//! Leader death is the worker's own fault path: transport EOF or a torn
+//! frame releases the graph and exits nonzero (the coordinator's
+//! shutdown drain joins library threads even mid-stream).
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::Msg;
+use crate::coordinator::{GraphType, Options, Paragrapher};
+use crate::partition::PartitionPlan;
+use crate::storage::DeviceKind;
+
+/// Deterministic fault injection, parsed from `--fault`:
+///
+/// * `kill-after:<n>` — exit(3) mid-tile: after *decoding* the tile that
+///   would be the worker's `n`th result, before sending it. The leader
+///   observes a transport EOF with a lease outstanding.
+/// * `stall-after:<n>` — sleep for an hour at the same point, so the
+///   leader's per-tile deadline (not EOF) is what fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerFault {
+    KillAfter(u64),
+    StallAfter(u64),
+}
+
+impl WorkerFault {
+    pub fn parse(s: &str) -> Result<WorkerFault> {
+        let (kind, n) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault spec {s:?}: want kind:<n>"))?;
+        let n: u64 = n.parse().with_context(|| format!("fault spec {s:?}"))?;
+        match kind {
+            "kill-after" => Ok(WorkerFault::KillAfter(n)),
+            "stall-after" => Ok(WorkerFault::StallAfter(n)),
+            _ => bail!("unknown fault kind {kind:?} (want kill-after or stall-after)"),
+        }
+    }
+}
+
+/// Everything a worker process needs, parsed from the argv the leader
+/// builds (shared by `paragrapher worker` and the example's self-spawn).
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Leader address (`host:port`).
+    pub connect: String,
+    pub dir: PathBuf,
+    pub base: String,
+    pub gtype: GraphType,
+    pub device: DeviceKind,
+    /// This worker's index (assigned by the leader at spawn).
+    pub index: usize,
+    pub fault: Option<WorkerFault>,
+}
+
+impl WorkerConfig {
+    pub fn from_args(args: &[String]) -> Result<WorkerConfig> {
+        let mut connect = None;
+        let mut dir = None;
+        let mut base = "graph".to_string();
+        let mut gtype = GraphType::CsxWg400;
+        let mut device = DeviceKind::Ssd;
+        let mut index = 0usize;
+        let mut fault = None;
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            let mut val = || {
+                it.next().ok_or_else(|| anyhow::anyhow!("{flag} needs a value")).cloned()
+            };
+            match flag.as_str() {
+                "--connect" => connect = Some(val()?),
+                "--dir" => dir = Some(PathBuf::from(val()?)),
+                "--base" => base = val()?,
+                "--graph-type" => {
+                    let v = val()?;
+                    gtype = GraphType::parse(&v)
+                        .ok_or_else(|| anyhow::anyhow!("unknown graph type {v:?}"))?;
+                }
+                "--device" => {
+                    let v = val()?;
+                    device = DeviceKind::parse(&v)
+                        .ok_or_else(|| anyhow::anyhow!("unknown device {v:?}"))?;
+                }
+                "--index" => index = val()?.parse().context("--index")?,
+                "--fault" => fault = Some(WorkerFault::parse(&val()?)?),
+                other => bail!("unknown worker flag {other:?}"),
+            }
+        }
+        Ok(WorkerConfig {
+            connect: connect.ok_or_else(|| anyhow::anyhow!("worker needs --connect"))?,
+            dir: dir.ok_or_else(|| anyhow::anyhow!("worker needs --dir"))?,
+            base,
+            gtype,
+            device,
+            index,
+            fault,
+        })
+    }
+}
+
+/// The worker main loop. Exits `Ok` only after a clean `Done` from the
+/// leader; every other exit releases the graph first so the coordinator's
+/// threads join (shutdown-safe drain) and then surfaces the error.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
+    let mut stream = TcpStream::connect(&cfg.connect)
+        .with_context(|| format!("worker {}: connect {}", cfg.index, cfg.connect))?;
+    let _ = stream.set_nodelay(true);
+
+    let plan = match Msg::recv(&mut stream)? {
+        Some(Msg::Plan { plan }) => plan,
+        other => bail!("worker {}: expected the plan first, got {other:?}", cfg.index),
+    };
+    // Structural admission (`from_json` re-runs `check()`)…
+    let plan = PartitionPlan::from_json(&plan)
+        .with_context(|| format!("worker {}: shipped plan failed check()", cfg.index))?;
+
+    let pg = Paragrapher::init();
+    let graph =
+        pg.open_graph_from_dir(&cfg.dir, cfg.device, &cfg.base, cfg.gtype, Options::default())?;
+    // …then the cross-check against THIS process's own sidecar. A reject
+    // is reported to the leader (fatal for the run — a stale plan cannot
+    // be outrun by retiling) before this worker bails.
+    if let Err(e) = graph.validate_plan(&plan) {
+        let _ = (Msg::Reject { worker: cfg.index, error: e.to_string() }).send(&mut stream);
+        pg.release_graph(graph);
+        return Err(e.context(format!("worker {}: plan rejected at admission", cfg.index)));
+    }
+    (Msg::Hello {
+        worker: cfg.index,
+        vertices: graph.num_vertices() as u64,
+        edges: graph.num_edges(),
+    })
+    .send(&mut stream)?;
+
+    let mut completed = 0u64;
+    let result = loop {
+        match Msg::recv(&mut stream) {
+            Ok(Some(Msg::Done)) => break Ok(()),
+            Ok(Some(Msg::Assign { tile })) => {
+                let Some(part) = plan.parts.get(tile).copied() else {
+                    break Err(anyhow::anyhow!(
+                        "worker {}: leased tile {tile} outside the plan",
+                        cfg.index
+                    ));
+                };
+                let loaded = match graph.decode_partition_block(part, plan.kind) {
+                    Ok(l) => l,
+                    Err(e) => break Err(e.context(format!("tile {tile}"))),
+                };
+                let (edges, checksum) = super::edge_summary(loaded.iter_edges());
+                // Faults fire *after* the decode and *before* the result
+                // ships: the leader sees a worker that died (or stalled)
+                // holding a lease — the exact mid-tile window retiling
+                // must cover.
+                match cfg.fault {
+                    Some(WorkerFault::KillAfter(n)) if completed == n => {
+                        std::process::exit(3);
+                    }
+                    Some(WorkerFault::StallAfter(n)) if completed == n => {
+                        std::thread::sleep(Duration::from_secs(3600));
+                    }
+                    _ => {}
+                }
+                if let Err(e) = (Msg::TileResult { tile, edges, checksum }).send(&mut stream) {
+                    break Err(anyhow::Error::from(e)
+                        .context(format!("worker {}: send tile {tile}", cfg.index)));
+                }
+                completed += 1;
+            }
+            Ok(Some(other)) => {
+                break Err(anyhow::anyhow!("worker {}: unexpected {other:?}", cfg.index))
+            }
+            Ok(None) => {
+                break Err(anyhow::anyhow!(
+                    "worker {}: leader transport closed mid-run",
+                    cfg.index
+                ))
+            }
+            Err(e) => break Err(anyhow::Error::from(e).context("worker transport")),
+        }
+    };
+    // Clean or not, drain the coordinator before exiting — a dying
+    // worker must still join its library threads.
+    pg.release_graph(graph);
+    result
+}

@@ -9,7 +9,10 @@
 //!   the [`formats::GraphSource`] loading contract (block streaming plus
 //!   cached per-vertex random access), the partitioned request subsystem
 //!   ([`partition`]: edge-balanced 1D/2D/COO plans, model-driven prefetch,
-//!   multi-consumer [`partition::PartitionStream`]s), a calibrated
+//!   multi-consumer [`partition::PartitionStream`]s), the multi-process
+//!   distributed harness ([`distributed`]: leader/worker plan shipping
+//!   over length-prefixed JSON frames, tile leasing, fault retiling), a
+//!   calibrated
 //!   virtual-time storage simulator ([`storage`], including the
 //!   decoded-block LRU), graph algorithms ([`algorithms`], with
 //!   out-of-core `*_on` and interleaved `partitioned` variants) and the §3
@@ -25,6 +28,7 @@ pub mod algorithms;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod distributed;
 pub mod formats;
 pub mod graph;
 pub mod metrics;

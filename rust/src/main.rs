@@ -46,6 +46,10 @@ fn main() {
         "end-to-end" => cmd_end_to_end(&flags),
         "calibrate-decode" => cmd_calibrate_decode(&flags),
         "out-of-core" => cmd_out_of_core(&flags),
+        "distributed" => cmd_distributed(&flags),
+        // The worker subcommand parses its own argv (the leader builds
+        // it): the generic --flag map would eat positional mistakes.
+        "worker" => cmd_worker(&args[1..]),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -81,6 +85,13 @@ commands:
   out-of-core   [--vertices N] [--degree D] [--budget-mb N] [--device DEV] [--workers N]
                 [--seed N] [--dir PATH] [--assert-rss] [--keep]
                                                           larger-than-budget load via the mmap store
+  distributed   [--workers N] [--rows R] [--cols C] [--dataset D] [--device DEV] [--scale N]
+                [--seed N] [--tile-timeout-ms N] [--max-attempts N]
+                [--fault-inject kill-worker:<n>|stall-worker:<n>] [--dir PATH] [--keep]
+                                                          multi-process leader/worker load,
+                                                          modeled-vs-measured scaling + oracle check
+  worker        --connect HOST:PORT --dir PATH [--base B] [--graph-type T] [--device DEV]
+                [--index N] [--fault SPEC]                one worker process (spawned by the leader)
   ci-summary                                              markdown health metrics for CI
 
 most load-path commands also take --cache-mb N (simulated page-cache budget, default 8192)"
@@ -592,6 +603,126 @@ fn cmd_out_of_core(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `worker`: one distributed worker process. Spawned by a leader
+/// (`distributed`, the rewritten example, or the tests) — never by hand.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let cfg = paragrapher::distributed::WorkerConfig::from_args(args)?;
+    paragrapher::distributed::run_worker(&cfg)
+}
+
+/// `--fault-inject kill-worker:<n>` / `stall-worker:<n>` → the worker
+/// fault spec the leader forwards: the named worker completes one tile,
+/// then dies (or stalls) mid-second-tile — the deterministic retile
+/// exercise.
+fn parse_fault_inject(spec: &str) -> Result<(usize, String)> {
+    let (kind, n) = spec
+        .split_once(':')
+        .with_context(|| format!("--fault-inject {spec:?}: want kind:<worker>"))?;
+    let worker: usize = n.parse().with_context(|| format!("--fault-inject {spec:?}"))?;
+    match kind {
+        "kill-worker" => Ok((worker, "kill-after:1".to_string())),
+        "stall-worker" => Ok((worker, "stall-after:1".to_string())),
+        _ => bail!("--fault-inject {spec:?}: want kill-worker:<n> or stall-worker:<n>"),
+    }
+}
+
+/// `distributed`: real multi-process loading of one on-disk graph — a
+/// 1-worker baseline run, then the requested worker count (with optional
+/// fault injection), every tile checked against the single-process
+/// full-load oracle, and measured scaling printed next to the §3 modeled
+/// bound min(σ·r, w·d)/min(σ·r, d).
+fn cmd_distributed(flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::bench::workloads::modeled_distributed_speedup;
+    use paragrapher::distributed::{oracle_tile_summaries, run_leader, LeaderConfig};
+    use paragrapher::formats::webgraph;
+
+    let dataset = Dataset::parse(flag(flags, "dataset", "TW")).context("unknown --dataset")?;
+    let device = DeviceKind::parse(flag(flags, "device", "SSD")).context("unknown --device")?;
+    let workers = flag_usize(flags, "workers", 2).max(1);
+    let rows = flag_usize(flags, "rows", 3);
+    let cols = flag_usize(flags, "cols", 3);
+    let scale = flag_usize(flags, "scale", 1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    let tile_timeout =
+        std::time::Duration::from_millis(flag_usize(flags, "tile-timeout-ms", 20_000) as u64);
+    let max_attempts = flag_usize(flags, "max-attempts", 3);
+    let fault_args = match flags.get("fault-inject") {
+        Some(spec) => vec![parse_fault_inject(spec)?],
+        None => Vec::new(),
+    };
+    let dir = match flags.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("pg_distributed_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+
+    // Every process opens this same on-disk fixture independently.
+    let g = dataset.generate(scale, seed);
+    for (name, data) in webgraph::serialize(&g, "dist") {
+        std::fs::write(dir.join(&name), &data).with_context(|| name.clone())?;
+    }
+    let exe = std::env::current_exe().context("current_exe")?;
+    let mut cfg = LeaderConfig::new(
+        &dir,
+        "dist",
+        GraphType::CsxWg400,
+        device,
+        vec![exe.to_string_lossy().into_owned(), "worker".to_string()],
+    );
+    cfg.rows = rows;
+    cfg.cols = cols;
+    cfg.tile_timeout = tile_timeout;
+    cfg.max_attempts = max_attempts;
+
+    let one = run_leader(&LeaderConfig { workers: 1, ..cfg.clone() })?;
+    cfg.workers = workers;
+    cfg.fault_args = fault_args;
+    let multi = run_leader(&cfg)?;
+
+    // Single-process oracle over the same plan, plus the §3 model.
+    let pg = Paragrapher::init();
+    let graph =
+        pg.open_graph_from_dir(&dir, device, "dist", GraphType::CsxWg400, Options::default())?;
+    let oracle = oracle_tile_summaries(&graph, multi.plan.clone())?;
+    let model = graph.load_model();
+    pg.release_graph(graph);
+    for t in &multi.tiles {
+        anyhow::ensure!(
+            (t.edges, t.checksum) == oracle[t.tile],
+            "tile {} disagrees with the single-process oracle",
+            t.tile
+        );
+    }
+    anyhow::ensure!(
+        multi.edges_delivered == one.edges_delivered,
+        "worker counts disagree on total edges delivered"
+    );
+
+    let measured = one.wall_seconds / multi.wall_seconds.max(1e-9);
+    let modeled = modeled_distributed_speedup(&model, workers);
+    let mut table = Table::new(&["run", "workers", "tiles", "edges", "lost", "retiled", "wall"]);
+    for (label, r) in [("baseline", &one), ("scaled", &multi)] {
+        table.row(&[
+            label.to_string(),
+            r.workers_spawned.to_string(),
+            r.tiles.len().to_string(),
+            fmt_count(r.edges_delivered),
+            r.workers_lost.to_string(),
+            r.retiled_tiles.to_string(),
+            format!("{:.2}s", r.wall_seconds),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "every tile matches the single-process oracle; {workers}-worker speedup {measured:.2}x \
+         measured vs {modeled:.2}x modeled (min(sigma*r, w*d)/min(sigma*r, d))"
+    );
+    if !flags.contains_key("keep") && !flags.contains_key("dir") {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(())
+}
+
 /// Process-lifetime peak RSS (`VmHWM`) from /proc — the out-of-core
 /// measurement. `None` off Linux.
 fn peak_rss_bytes() -> Option<u64> {
@@ -812,6 +943,81 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
             run.overlap * 100.0,
             run.speedup()
         );
+    }
+
+    // Distributed-harness canaries: real multi-process runs over an
+    // on-disk fixture — 2-worker scaling vs the §3 modeled bound with
+    // oracle equality, then a deterministic kill-worker-mid-tile run
+    // proving retiling recovers full coverage.
+    {
+        use paragrapher::distributed::{oracle_tile_summaries, run_leader, LeaderConfig};
+
+        let dir = std::env::temp_dir().join(format!("pg_ci_dist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).context("create ci dist dir")?;
+        for (name, data) in webgraph::serialize(&g, "ci") {
+            std::fs::write(dir.join(&name), &data).with_context(|| name.clone())?;
+        }
+        let exe = std::env::current_exe().context("current_exe")?;
+        let cfg = LeaderConfig::new(
+            &dir,
+            "ci",
+            GraphType::CsxWg400,
+            DeviceKind::Ssd,
+            vec![exe.to_string_lossy().into_owned(), "worker".to_string()],
+        );
+        let one = run_leader(&LeaderConfig { workers: 1, ..cfg.clone() })?;
+        let two = run_leader(&LeaderConfig { workers: 2, ..cfg.clone() })?;
+        let pg = Paragrapher::init();
+        let graph = pg.open_graph_from_dir(
+            &dir,
+            DeviceKind::Ssd,
+            "ci",
+            GraphType::CsxWg400,
+            Options::default(),
+        )?;
+        let oracle = oracle_tile_summaries(&graph, two.plan.clone())?;
+        let model = graph.load_model();
+        pg.release_graph(graph);
+        for t in &two.tiles {
+            anyhow::ensure!(
+                (t.edges, t.checksum) == oracle[t.tile],
+                "ci distributed tile {} disagrees with the single-process oracle",
+                t.tile
+            );
+        }
+        anyhow::ensure!(
+            two.edges_delivered == one.edges_delivered,
+            "ci distributed runs disagree on total edges delivered"
+        );
+        let measured = one.wall_seconds / two.wall_seconds.max(1e-9);
+        let modeled = paragrapher::bench::workloads::modeled_distributed_speedup(&model, 2);
+        println!(
+            "| distributed_scaling | 2 workers: {measured:.2}x measured vs {modeled:.2}x \
+             modeled ({} tiles, {} edges, oracle equality held) |",
+            two.tiles.len(),
+            fmt_count(two.edges_delivered)
+        );
+
+        let faulted = run_leader(&LeaderConfig {
+            workers: 2,
+            fault_args: vec![(0, "kill-after:1".to_string())],
+            ..cfg
+        })?;
+        anyhow::ensure!(faulted.workers_lost >= 1, "fault injection lost no worker");
+        anyhow::ensure!(faulted.retiled_tiles >= 1, "worker death retiled no tiles");
+        for t in &faulted.tiles {
+            anyhow::ensure!(
+                (t.edges, t.checksum) == oracle[t.tile],
+                "post-retile tile {} disagrees with the single-process oracle",
+                t.tile
+            );
+        }
+        println!(
+            "| retiled_tiles | {} (kill-worker:0 mid-tile, {} worker lost, oracle equality \
+             held) |",
+            faulted.retiled_tiles, faulted.workers_lost
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
     Ok(())
 }

@@ -1,0 +1,234 @@
+//! Tile lease accounting for the distributed leader.
+//!
+//! The leader never pre-assigns tiles: workers pull leases one at a time,
+//! so a fast worker naturally takes more tiles (the same work-stealing
+//! shape as [`PartitionStream`](super::PartitionStream), but across
+//! processes). The ledger is the single source of truth for fault
+//! handling: when a worker dies or times out mid-tile, its leased tiles
+//! return to the pending set and survivors pick them up on their next
+//! lease — the run never hangs on a dead worker. Every return bumps the
+//! tile's attempt count; once a pending tile has burned
+//! `max_attempts` leases the next [`lease`](TileLedger::lease) call fails
+//! loudly instead of reassigning forever.
+
+use std::sync::Mutex;
+
+use crate::coordinator::lock_recover;
+
+/// Where one tile is in its lease lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Unassigned (initially, or returned by a dead worker).
+    Pending,
+    /// Leased to worker `w`; not yet completed.
+    Leased(usize),
+    /// Result received and recorded.
+    Done,
+}
+
+struct TileState {
+    phase: Phase,
+    /// Leases ever granted for this tile (completed or not).
+    attempts: usize,
+}
+
+struct LedgerInner {
+    tiles: Vec<TileState>,
+    /// Tiles returned to pending by `orphan_worker` (lifetime count).
+    retiled: usize,
+    done: usize,
+}
+
+/// Shared lease ledger over a plan's tiles (indexed by `Partition::index`).
+pub struct TileLedger {
+    inner: Mutex<LedgerInner>,
+    max_attempts: usize,
+}
+
+impl TileLedger {
+    /// A ledger with every tile pending. `max_attempts` bounds the leases
+    /// any single tile may consume before the run fails loudly; it is
+    /// clamped to at least 1.
+    pub fn new(num_tiles: usize, max_attempts: usize) -> TileLedger {
+        TileLedger {
+            inner: Mutex::new(LedgerInner {
+                tiles: (0..num_tiles)
+                    .map(|_| TileState { phase: Phase::Pending, attempts: 0 })
+                    .collect(),
+                retiled: 0,
+                done: 0,
+            }),
+            max_attempts: max_attempts.max(1),
+        }
+    }
+
+    /// Lease the next pending tile to `worker`.
+    ///
+    /// * `Ok(Some(t))` — tile `t` is now leased to `worker`.
+    /// * `Ok(None)` — nothing leasable right now: every tile is done or
+    ///   leased to someone. The caller should re-poll (a lease may still
+    ///   be orphaned) or finish once [`all_done`](Self::all_done).
+    /// * `Err` — some pending tile has exhausted its attempt budget; the
+    ///   run cannot complete and must fail loudly, not spin.
+    pub fn lease(&self, worker: usize) -> Result<Option<usize>, String> {
+        let mut g = lock_recover(&self.inner);
+        let mut exhausted: Option<(usize, usize)> = None;
+        let mut pick = None;
+        for (t, tile) in g.tiles.iter().enumerate() {
+            if tile.phase != Phase::Pending {
+                continue;
+            }
+            if tile.attempts >= self.max_attempts {
+                exhausted.get_or_insert((t, tile.attempts));
+                continue;
+            }
+            pick = Some(t);
+            break;
+        }
+        if let Some(t) = pick {
+            g.tiles[t].phase = Phase::Leased(worker);
+            g.tiles[t].attempts += 1;
+            return Ok(Some(t));
+        }
+        if let Some((t, attempts)) = exhausted {
+            return Err(format!(
+                "tile {t} burned {attempts} leases (bound {}) without completing — \
+                 giving up instead of reassigning forever",
+                self.max_attempts
+            ));
+        }
+        Ok(None)
+    }
+
+    /// Record tile `t` as completed by `worker`. Returns `false` (and
+    /// records nothing) when `worker` no longer holds the lease — a
+    /// result racing in after the leader already declared the worker dead
+    /// and retiled must be dropped, or the tile would double-count.
+    pub fn complete(&self, t: usize, worker: usize) -> bool {
+        let mut g = lock_recover(&self.inner);
+        if t >= g.tiles.len() || g.tiles[t].phase != Phase::Leased(worker) {
+            return false;
+        }
+        g.tiles[t].phase = Phase::Done;
+        g.done += 1;
+        true
+    }
+
+    /// A worker died (EOF, timeout, kill): return all its leased tiles to
+    /// pending. Returns how many tiles were orphaned.
+    pub fn orphan_worker(&self, worker: usize) -> usize {
+        let mut g = lock_recover(&self.inner);
+        let mut n = 0;
+        for tile in g.tiles.iter_mut() {
+            if tile.phase == Phase::Leased(worker) {
+                tile.phase = Phase::Pending;
+                n += 1;
+            }
+        }
+        g.retiled += n;
+        n
+    }
+
+    pub fn all_done(&self) -> bool {
+        let g = lock_recover(&self.inner);
+        g.done == g.tiles.len()
+    }
+
+    /// Tiles not yet done (pending or leased).
+    pub fn unfinished(&self) -> usize {
+        let g = lock_recover(&self.inner);
+        g.tiles.len() - g.done
+    }
+
+    /// Lifetime count of tiles returned to pending by worker loss.
+    pub fn retiled(&self) -> usize {
+        lock_recover(&self.inner).retiled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leases_drain_in_order_and_complete() {
+        let l = TileLedger::new(3, 3);
+        assert_eq!(l.lease(0), Ok(Some(0)));
+        assert_eq!(l.lease(1), Ok(Some(1)));
+        assert_eq!(l.lease(0), Ok(Some(2)));
+        // Everything leased: nothing to hand out, but not an error.
+        assert_eq!(l.lease(1), Ok(None));
+        assert!(!l.all_done());
+        assert!(l.complete(0, 0));
+        assert!(l.complete(1, 1));
+        assert!(l.complete(2, 0));
+        assert!(l.all_done());
+        assert_eq!(l.unfinished(), 0);
+        assert_eq!(l.retiled(), 0);
+        assert_eq!(l.lease(1), Ok(None));
+    }
+
+    #[test]
+    fn orphaned_tiles_go_back_to_survivors() {
+        let l = TileLedger::new(2, 3);
+        assert_eq!(l.lease(0), Ok(Some(0)));
+        assert_eq!(l.lease(1), Ok(Some(1)));
+        // Worker 0 dies mid-tile; its tile must come back.
+        assert_eq!(l.orphan_worker(0), 1);
+        assert_eq!(l.retiled(), 1);
+        assert_eq!(l.lease(1), Ok(Some(0)));
+        assert!(l.complete(0, 1));
+        assert!(l.complete(1, 1));
+        assert!(l.all_done());
+    }
+
+    #[test]
+    fn stale_completion_from_declared_dead_worker_is_dropped() {
+        let l = TileLedger::new(1, 3);
+        assert_eq!(l.lease(0), Ok(Some(0)));
+        assert_eq!(l.orphan_worker(0), 1);
+        // Worker 0's result arrives after the leader gave up on it.
+        assert!(!l.complete(0, 0));
+        assert!(!l.all_done());
+        // The tile is re-leased and completed by the survivor.
+        assert_eq!(l.lease(1), Ok(Some(0)));
+        assert!(l.complete(0, 1));
+        assert!(l.all_done());
+    }
+
+    #[test]
+    fn attempt_budget_bounds_reassignment() {
+        let l = TileLedger::new(1, 2);
+        for w in 0..2 {
+            assert_eq!(l.lease(w), Ok(Some(0)));
+            assert_eq!(l.orphan_worker(w), 1);
+        }
+        // Third lease of the same tile exceeds the bound: loud error.
+        let err = l.lease(2).unwrap_err();
+        assert!(err.contains("tile 0"), "unexpected message: {err}");
+        assert!(err.contains("bound 2"), "unexpected message: {err}");
+        assert_eq!(l.retiled(), 2);
+        assert_eq!(l.unfinished(), 1);
+    }
+
+    #[test]
+    fn exhausted_tile_does_not_block_other_tiles() {
+        let l = TileLedger::new(2, 1);
+        assert_eq!(l.lease(0), Ok(Some(0)));
+        assert_eq!(l.orphan_worker(0), 1);
+        // Tile 0 is exhausted, but tile 1 is still leasable: the error
+        // only fires once no progress is possible.
+        assert_eq!(l.lease(1), Ok(Some(1)));
+        assert!(l.complete(1, 1));
+        assert!(l.lease(1).is_err());
+    }
+
+    #[test]
+    fn double_complete_is_dropped() {
+        let l = TileLedger::new(1, 3);
+        assert_eq!(l.lease(0), Ok(Some(0)));
+        assert!(l.complete(0, 0));
+        assert!(!l.complete(0, 0));
+        assert!(l.all_done());
+    }
+}

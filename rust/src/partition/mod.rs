@@ -26,8 +26,10 @@
 //!   Afforest on top of it so computation runs *while* later partitions
 //!   load.
 
+pub mod lease;
 pub mod stream;
 
+pub use lease::TileLedger;
 pub use stream::{LoadedPartition, PartitionStream, StreamCounters};
 
 use anyhow::{bail, Result};

@@ -414,6 +414,85 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Frames larger than this are rejected by [`read_frame`] — a corrupt or
+/// misaligned length prefix must fail the connection, not allocate 4 GiB.
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+/// Write one length-prefixed JSON frame: a 4-byte big-endian byte length
+/// followed by the document's UTF-8 bytes. This is the distributed wire
+/// format (leader↔worker plan shipping and tile results).
+pub fn write_frame<W: std::io::Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
+    let body = v.to_string_pretty();
+    let len = u32::try_from(body.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame over 4 GiB")
+    })?;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame of {len} bytes exceeds MAX_FRAME_BYTES"),
+        ));
+    }
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Read one frame written by [`write_frame`].
+///
+/// * `Ok(None)` — clean EOF at a frame boundary (peer closed between
+///   frames).
+/// * `Err(UnexpectedEof)` — the peer died mid-frame (torn length prefix or
+///   payload); distinct from a clean close so the leader can treat it as a
+///   worker loss.
+/// * `Err(InvalidData)` — oversized length prefix or unparseable payload.
+///
+/// Timeout-typed errors (`WouldBlock`/`TimedOut` from a socket read
+/// deadline) pass through untouched for the caller to classify.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> std::io::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    // Hand-rolled first read: EOF before any length byte is a clean close,
+    // EOF after one is a torn frame — read_exact cannot tell those apart.
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "torn frame: EOF inside the length prefix",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME_BYTES (corrupt or misaligned stream)"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("torn frame: EOF inside a {len}-byte payload"),
+            )
+        } else {
+            e
+        }
+    })?;
+    let text = std::str::from_utf8(&body).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "frame payload is not UTF-8")
+    })?;
+    Json::parse(text)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
 impl From<f64> for Json {
     fn from(v: f64) -> Self {
         Json::Num(v)
@@ -554,6 +633,49 @@ mod tests {
         // Deep nesting is bounded, not a stack overflow.
         let deep = "[".repeat(100_000) + &"]".repeat(100_000);
         assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut a = Json::obj();
+        a.set("type", "assign").set("tile", 7u64);
+        let b = Json::from(vec![1u64, 2, 3]);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        let mut r = wire.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap(), Some(a));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(b));
+        // Clean EOF at the frame boundary.
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn torn_frames_are_unexpected_eof_not_clean_close() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Json::from("hello")).unwrap();
+        // Torn inside the payload.
+        let mut r = &wire[..wire.len() - 2];
+        let e = read_frame(&mut r).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+        // Torn inside the length prefix.
+        let mut r = &wire[..2];
+        let e = read_frame(&mut r).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn hostile_frames_are_invalid_data() {
+        // A length prefix past the cap must be rejected before allocating.
+        let mut r: &[u8] = &u32::MAX.to_be_bytes();
+        let e = read_frame(&mut r).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        // A well-framed but unparseable payload.
+        let mut wire = 3u32.to_be_bytes().to_vec();
+        wire.extend_from_slice(b"nul");
+        let mut r = wire.as_slice();
+        let e = read_frame(&mut r).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Multi-process distributed harness tests: real worker processes
+//! (spawned from the `paragrapher` binary via `CARGO_BIN_EXE`), plan
+//! shipping over the socket transport, deterministic fault injection,
+//! and the PR's regression tests — truncated weights sidecar, poisoned
+//! coordinator locks, stale-plan admission.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher};
+use paragrapher::distributed::{oracle_tile_summaries, run_leader, LeaderConfig};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::generators;
+use paragrapher::graph::CsrGraph;
+use paragrapher::partition::PartitionPlan;
+use paragrapher::storage::{DeviceKind, SimStore};
+
+/// Run `f` on a helper thread; panic (failing the test) if it does not
+/// finish under `timeout` — the deadlock/hang detector every fault test
+/// runs under ("never hang" is part of the contract being tested).
+fn with_watchdog<T: Send + 'static>(
+    timeout: Duration,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let out = f();
+        let _ = tx.send(());
+        out
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(()) => handle.join().expect("test body panicked"),
+        Err(_) => panic!("watchdog: distributed run did not finish within {timeout:?}"),
+    }
+}
+
+/// Write `g` as an on-disk WebGraph fixture every process opens
+/// independently; returns the directory.
+fn write_graph_dir(g: &CsrGraph, base: &str, tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pg_dist_test_{}_{}", tag, std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create test dir");
+    for (name, data) in webgraph::serialize(g, base) {
+        std::fs::write(dir.join(&name), &data).expect("write fixture");
+    }
+    dir
+}
+
+/// A leader config over `dir` that spawns workers from the real
+/// `paragrapher` binary Cargo built for this test run.
+fn leader_cfg(dir: &std::path::Path) -> LeaderConfig {
+    LeaderConfig::new(
+        dir,
+        "g",
+        GraphType::CsxWg400,
+        DeviceKind::Ssd,
+        vec![env!("CARGO_BIN_EXE_paragrapher").to_string(), "worker".to_string()],
+    )
+}
+
+/// Every tile's (edge count, checksum) must equal the single-process
+/// full-load oracle decoded over the same shipped plan.
+fn assert_oracle_equality(dir: &std::path::Path, report: &paragrapher::distributed::RunReport) {
+    let pg = Paragrapher::init();
+    let graph = pg
+        .open_graph_from_dir(dir, DeviceKind::Ssd, "g", GraphType::CsxWg400, Options::default())
+        .expect("oracle open");
+    let oracle = oracle_tile_summaries(&graph, report.plan.clone()).expect("oracle decode");
+    pg.release_graph(graph);
+    assert_eq!(report.tiles.len(), report.plan.num_parts(), "a result for every tile");
+    for t in &report.tiles {
+        assert_eq!(
+            (t.edges, t.checksum),
+            oracle[t.tile],
+            "tile {} disagrees with the single-process oracle",
+            t.tile
+        );
+    }
+}
+
+#[test]
+fn two_workers_match_full_load_oracle() {
+    with_watchdog(Duration::from_secs(120), || {
+        let g = generators::barabasi_albert(3_000, 6, 42);
+        let m = g.num_edges();
+        let dir = write_graph_dir(&g, "g", "clean");
+        let report = run_leader(&LeaderConfig { workers: 2, ..leader_cfg(&dir) })
+            .expect("clean 2-worker run");
+        assert_eq!(report.workers_spawned, 2);
+        assert_eq!(report.workers_lost, 0);
+        assert_eq!(report.retiled_tiles, 0);
+        assert_eq!(report.edges_delivered, m, "tiles must cover every edge exactly once");
+        assert_oracle_equality(&dir, &report);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn kill_worker_mid_tile_retiles_and_covers_every_edge() {
+    with_watchdog(Duration::from_secs(120), || {
+        let g = generators::barabasi_albert(3_000, 6, 7);
+        let m = g.num_edges();
+        let dir = write_graph_dir(&g, "g", "kill");
+        // Worker 0 ships one tile, then dies mid-second-tile (after the
+        // decode, before the result) — the leader sees EOF with a lease
+        // outstanding and must retile the orphaned span to the survivor.
+        let report = run_leader(&LeaderConfig {
+            workers: 2,
+            fault_args: vec![(0, "kill-after:1".to_string())],
+            ..leader_cfg(&dir)
+        })
+        .expect("a worker death must not fail the run");
+        assert_eq!(report.workers_lost, 1, "exactly the injected death");
+        assert!(report.retiled_tiles >= 1, "the orphaned lease must be retiled");
+        assert_eq!(report.edges_delivered, m, "full coverage after retiling");
+        assert_oracle_equality(&dir, &report);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn stalled_workers_hit_timeout_and_fail_loud() {
+    with_watchdog(Duration::from_secs(60), || {
+        let g = generators::barabasi_albert(2_000, 5, 3);
+        let dir = write_graph_dir(&g, "g", "stall");
+        // Every worker stalls on its first tile; the per-tile deadline
+        // (not EOF) must fire, and with no survivors the leader must
+        // return a loud error — never hang.
+        let mut cfg = leader_cfg(&dir);
+        cfg.workers = 2;
+        cfg.tile_timeout = Duration::from_millis(500);
+        cfg.max_attempts = 2;
+        cfg.fault_args =
+            vec![(0, "stall-after:0".to_string()), (1, "stall-after:0".to_string())];
+        let err = run_leader(&cfg).expect_err("an all-stalled run must fail loud");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("unfinished") || msg.contains("attempt"),
+            "error must name the unfinished tiles or the attempt bound, got: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn truncated_weights_sidecar_fails_cleanly_not_panic() {
+    // A weighted graph whose `.weights` sidecar is torn to an odd,
+    // too-short byte length: the load must surface a clean error naming
+    // the sidecar — the pre-fix code path panicked on the request thread
+    // (poisoning buffer locks) instead.
+    let edges: Vec<(u32, u32, f32)> =
+        (0..900u32).map(|i| (i % 300, (i * 7 + 1) % 300, i as f32 * 0.5)).collect();
+    let g = CsrGraph::from_weighted_edges(300, &edges);
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    let mut weights_len = 0usize;
+    for (name, data) in webgraph::serialize(&g, "w") {
+        if name == "w.weights" {
+            weights_len = data.len();
+            store.put(&name, data[..data.len() - 7].to_vec()); // torn: short AND misaligned
+        } else {
+            store.put(&name, data);
+        }
+    }
+    assert!(weights_len >= 8, "fixture must actually have weights");
+
+    let pg = Paragrapher::init();
+    let graph = pg
+        .open_graph(Arc::clone(&store), "w", GraphType::CsxWg404, Options::default())
+        .expect("open succeeds; the tear is in the payload");
+    let err = graph.load_whole_graph().expect_err("torn weights must be an error, not a panic");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("weights sidecar"), "error must name the sidecar, got: {msg}");
+    // The failure must not wedge the coordinator: an unweighted-range
+    // request path stays usable (buffers were recycled, locks clean).
+    let err2 = graph.load_whole_graph().expect_err("still torn on retry");
+    assert!(format!("{err2:#}").contains("weights sidecar"));
+}
+
+#[test]
+fn panicked_set_options_closure_does_not_wedge_later_requests() {
+    // A user closure that panics inside `set_options` poisons the options
+    // mutex. Pre-fix, every later request died on `.expect("options
+    // lock")`; post-fix the coordinator recovers the (structurally valid)
+    // config and keeps serving.
+    let g = generators::barabasi_albert(1_000, 4, 11);
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(&g, "p") {
+        store.put(&name, data);
+    }
+    let pg = Paragrapher::init();
+    let graph = pg
+        .open_graph(Arc::clone(&store), "p", GraphType::CsxWg400, Options::default())
+        .expect("open");
+    let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        graph.set_options(|_| panic!("user closure panicked while holding the options lock"));
+    }));
+    assert!(poisoned.is_err(), "the closure's panic must propagate to its caller");
+    let block = graph
+        .load_whole_graph()
+        .expect("a poisoned options lock must not wedge later requests");
+    assert_eq!(block.num_edges(), g.num_edges());
+}
+
+#[test]
+fn stale_plan_for_another_graph_is_rejected_at_admission() {
+    // Same (n, m), different degree distribution: a plan cut from graph
+    // A's Elias-Fano sidecar must be rejected by graph B's admission
+    // cross-check before any decode is dispatched.
+    let star: Vec<(u32, u32)> = (1..=50u32).map(|d| (0, d)).collect();
+    let path: Vec<(u32, u32)> = (0..50u32).map(|s| (s, s + 1)).collect();
+    let ga = CsrGraph::from_edges(100, &star);
+    let gb = CsrGraph::from_edges(100, &path);
+    assert_eq!(ga.num_edges(), gb.num_edges());
+
+    let pg = Paragrapher::init();
+    let open = |g: &CsrGraph, base: &str| {
+        let store = Arc::new(SimStore::new(DeviceKind::Dram));
+        for (name, data) in webgraph::serialize(g, base) {
+            store.put(&name, data);
+        }
+        pg.open_graph(store, base, GraphType::CsxWg400, Options::default()).expect("open")
+    };
+    let graph_a = open(&ga, "a");
+    let graph_b = open(&gb, "b");
+    let plan = PartitionPlan::two_d(graph_a.offsets_index(), 2, 2);
+    graph_a.validate_plan(&plan).expect("a graph admits its own plan");
+    let err = graph_b.validate_plan(&plan).expect_err("a foreign plan must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("stale or foreign"),
+        "rejection must say the plan does not match the local sidecar, got: {msg}"
+    );
+}
