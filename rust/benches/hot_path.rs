@@ -105,6 +105,53 @@ fn main() {
     });
     h.report("webgraph/decode-single-vertex", "us", s.min * 1e6);
 
+    // Observability overhead guard: the coordinator's per-block decode
+    // shape — chunked decode with one histogram record and one span per
+    // block — with recording enabled vs killed (PG_OBS semantics via
+    // set_enabled). The instrumentation is a timestamp pair, one bucketed
+    // fetch_add, and one ring push per ~2k-vertex block, so losing more
+    // than 3% means the hot path grew an allocation or a contended lock.
+    {
+        use paragrapher::obs;
+        let hist = obs::Histo::detached();
+        let mut off_buf: Vec<u64> = Vec::new();
+        let mut edge_buf: Vec<u32> = Vec::new();
+        let n = meta.num_vertices;
+        let chunk = 2_048usize;
+        let was = obs::enabled();
+        let mut pass = |h: &mut Harness, name: &str, on: bool| {
+            obs::set_enabled(on);
+            h.bench(name, || {
+                let mut delivered = 0u64;
+                let mut vs = 0usize;
+                while vs < n {
+                    let ve = (vs + chunk).min(n);
+                    let t0 = std::time::Instant::now();
+                    let mut sink = DecodeSink::new(&mut off_buf, &mut edge_buf);
+                    dec.decode_range_sink(vs, ve, &acct, &NativeScan, &mut sink).unwrap();
+                    let dur = t0.elapsed();
+                    hist.record_duration(dur);
+                    obs::tracer().record("bench", "decode-block", t0, dur, 0, vs as u64);
+                    delivered += *off_buf.last().unwrap_or(&0);
+                    vs = ve;
+                }
+                delivered
+            })
+        };
+        let s_on = pass(&mut h, "obs/decode-tracing-on", true);
+        let s_off = pass(&mut h, "obs/decode-tracing-off", false);
+        obs::set_enabled(was);
+        h.report("obs/decode-tracing-on", "ME_per_s", edges as f64 / s_on.min / 1e6);
+        h.report("obs/decode-tracing-off", "ME_per_s", edges as f64 / s_off.min / 1e6);
+        h.report("obs/decode-tracing-on", "overhead_vs_off", s_on.min / s_off.min);
+        assert!(
+            s_on.min <= s_off.min * 1.03,
+            "span+histogram recording must cost < 3% of block decode: {}s on vs {}s off",
+            s_on.min,
+            s_off.min
+        );
+    }
+
     // Zero-copy delivery (tentpole): decode straight into library-owned
     // buffer storage via DecodeSink vs the former decode-then-copy
     // pipeline, on the modeled SSD tier the acceptance criterion names.

@@ -43,6 +43,7 @@ use crate::formats::source::{block_cost, GraphSource};
 use crate::formats::webgraph::{self, DecodeSink, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::VertexId;
 use crate::model::LoadModel;
+use crate::obs::{self, names, Counter, Histo, MetricsRegistry, MetricsSnapshot, SpanGuard};
 use crate::partition::{self, LoadedPartition, Partition, PartitionPlan, PartitionStream};
 use crate::runtime::ScanEngine;
 use crate::storage::cache::CacheCounters;
@@ -174,6 +175,9 @@ pub struct Options {
     /// Decoded-block cache capacity in cost units (≈ edges + vertices);
     /// 0 disables caching. Like the buffer pool, fixed at open time.
     pub source_cache_cost: u64,
+    /// When set, [`PgGraph::release`] exports the process-wide span trace
+    /// as Chrome trace-event JSON (Perfetto-viewable) to this path.
+    pub trace_path: Option<std::path::PathBuf>,
     /// Dead since the event-driven coordinator (PR 1): the request manager
     /// parks on the buffer pool's condvar and is woken by the next recycle;
     /// no code path reads or sleeps on this value.
@@ -198,6 +202,7 @@ impl std::fmt::Debug for Options {
             .field("source_block_vertices", &self.source_block_vertices)
             .field("source_cache_cost", &self.source_cache_cost)
             .field("cache_budget", &self.cache_budget)
+            .field("trace_path", &self.trace_path)
             .finish()
     }
 }
@@ -217,6 +222,7 @@ impl Clone for Options {
             source_block_vertices: self.source_block_vertices,
             source_cache_cost: self.source_cache_cost,
             cache_budget: self.cache_budget,
+            trace_path: self.trace_path.clone(),
             poll_interval: self.poll_interval,
         }
     }
@@ -237,6 +243,7 @@ impl Default for Options {
             source_block_vertices: crate::formats::SourceConfig::default().block_vertices,
             source_cache_cost: crate::formats::SourceConfig::default().cache_cost,
             cache_budget: None,
+            trace_path: None,
             poll_interval: Duration::from_micros(200),
         }
     }
@@ -298,7 +305,14 @@ impl Paragrapher {
 
         let workers = ThreadPool::new(options.buffers);
         let callbacks = ThreadPool::new(2);
-        let decoded_cache = DecodedCache::new(options.source_cache_cost, block_cost);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let decoded_cache = DecodedCache::with_counters(
+            options.source_cache_cost,
+            block_cost,
+            metrics.counter(names::CACHE_HITS),
+            metrics.counter(names::CACHE_MISSES),
+            metrics.counter(names::CACHE_EVICTIONS),
+        );
         let source_block_vertices = options.source_block_vertices.max(1);
         let inner = Arc::new(GraphInner {
             store,
@@ -308,11 +322,13 @@ impl Paragrapher {
             offsets,
             pool: BufferPool::new(options.buffers),
             options: Mutex::new(options),
-            stats: GraphStats::default(),
+            stats: GraphStats::registered(&metrics),
             shutdown: AtomicBool::new(false),
             decoded_cache,
             source_block_vertices,
             random_acct: IoAccount::new(),
+            obs: ObsHandles::resolve(&metrics),
+            metrics,
         });
         inner.stats.sequential_seconds.store(
             ((sequential_cpu + sequential_io) * 1e9) as u64,
@@ -356,46 +372,70 @@ impl Paragrapher {
 }
 
 /// Cumulative per-graph statistics.
+///
+/// Since the observability PR the fields are [`Counter`] handles resolved
+/// from the owning graph's [`MetricsRegistry`] ([`GraphStats::registered`]),
+/// so one registry snapshot covers them; `Counter` `Deref`s to `AtomicU64`,
+/// keeping every legacy `.load`/`.store`/`.fetch_add` call site intact.
 #[derive(Debug, Default)]
 pub struct GraphStats {
     /// Sequential metadata-load phase, nanoseconds (§5.6).
-    pub sequential_seconds: AtomicU64,
-    pub blocks_decoded: AtomicU64,
-    pub edges_decoded: AtomicU64,
-    pub requests_issued: AtomicU64,
+    pub sequential_seconds: Counter,
+    pub blocks_decoded: Counter,
+    pub edges_decoded: Counter,
+    pub requests_issued: Counter,
     /// Per-vertex random accesses served via [`PgGraph::successors`].
-    pub random_accesses: AtomicU64,
+    pub random_accesses: Counter,
     /// Partitioned requests issued ([`PgGraph::get_partitions`] family).
-    pub partition_requests: AtomicU64,
+    pub partition_requests: Counter,
     /// Partitions decoded and staged by partitioned requests.
-    pub partitions_staged: AtomicU64,
+    pub partitions_staged: Counter,
     /// Modeled block-decode time, nanoseconds: per block, the max over its
     /// chunk workers' virtual clocks (I/O + CPU), summed across blocks —
     /// the §3 overlap composition at `decode_workers` granularity. A
     /// weighted graph's sidecar read is its own (post-decode) phase, added
     /// on top of the chunk-worker max.
-    pub decode_seconds: AtomicU64,
+    pub decode_seconds: Counter,
     /// Bytes of decoded payload (offsets, edges, weights) written straight
     /// into coordinator buffers or handed out as borrowed views — each one
     /// a byte the former decode-then-copy pipeline materialized twice.
     /// Grows on every sink-backed block decode and every COO trim view.
-    pub copy_bytes_avoided: AtomicU64,
+    pub copy_bytes_avoided: Counter,
     /// Bytes of decoded payload the block-request path *did* copy after
     /// decode. The zero-copy invariant: stays 0 on single- *and*
     /// multi-worker decodes — the fan-out pre-partitions the sink off the
     /// offsets sidecar and chunk workers write disjoint slices in place.
     /// The only remaining contributor is the stitched fallback a block
     /// larger than the sidecar-reserve guard takes.
-    pub delivery_copy_bytes: AtomicU64,
+    pub delivery_copy_bytes: Counter,
     /// Edges delivered through the block-request (callback) path, paired
     /// with [`Self::delivery_wall_ns`] for the delivery-throughput canary.
-    pub delivery_edges: AtomicU64,
+    pub delivery_edges: Counter,
     /// Wall nanoseconds spent producing block-request payloads (decode +
     /// weights read), summed across blocks.
-    pub delivery_wall_ns: AtomicU64,
+    pub delivery_wall_ns: Counter,
 }
 
 impl GraphStats {
+    /// Counter handles resolved from `reg`, so the graph's cumulative
+    /// stats appear in registry snapshots under `graph.*` names.
+    pub fn registered(reg: &MetricsRegistry) -> GraphStats {
+        GraphStats {
+            sequential_seconds: reg.counter("graph.sequential_ns"),
+            blocks_decoded: reg.counter("graph.blocks_decoded"),
+            edges_decoded: reg.counter("graph.edges_decoded"),
+            requests_issued: reg.counter("graph.requests_issued"),
+            random_accesses: reg.counter("graph.random_accesses"),
+            partition_requests: reg.counter("graph.partition_requests"),
+            partitions_staged: reg.counter("graph.partitions_staged"),
+            decode_seconds: reg.counter("graph.decode_ns"),
+            copy_bytes_avoided: reg.counter("graph.copy_bytes_avoided"),
+            delivery_copy_bytes: reg.counter("graph.delivery_copy_bytes"),
+            delivery_edges: reg.counter("graph.delivery_edges"),
+            delivery_wall_ns: reg.counter("graph.delivery_wall_ns"),
+        }
+    }
+
     /// Delivered edges per wall second on the block-request path (0.0
     /// before anything was delivered) — the `delivery-throughput` counter
     /// proving the zero-copy pipeline's win end to end.
@@ -405,6 +445,32 @@ impl GraphStats {
             return 0.0;
         }
         self.delivery_edges.load(Ordering::Relaxed) as f64 / (ns as f64 / 1e9)
+    }
+}
+
+/// Pre-resolved histogram handles for the hot request path — resolved once
+/// at open time so no request ever takes the registry lock.
+struct ObsHandles {
+    req_successors: Histo,
+    req_csx: Histo,
+    req_coo: Histo,
+    req_partition: Histo,
+    buffer_claim_wait: Histo,
+    decode_block_real: Histo,
+    decode_block_virt: Histo,
+}
+
+impl ObsHandles {
+    fn resolve(reg: &MetricsRegistry) -> ObsHandles {
+        ObsHandles {
+            req_successors: reg.histogram(names::REQ_SUCCESSORS),
+            req_csx: reg.histogram(names::REQ_CSX),
+            req_coo: reg.histogram(names::REQ_COO),
+            req_partition: reg.histogram(names::REQ_PARTITION),
+            buffer_claim_wait: reg.histogram(names::BUFFER_CLAIM_WAIT),
+            decode_block_real: reg.histogram(names::DECODE_BLOCK_REAL),
+            decode_block_virt: reg.histogram(names::DECODE_BLOCK_VIRT),
+        }
     }
 }
 
@@ -424,6 +490,21 @@ struct GraphInner {
     source_block_vertices: usize,
     /// I/O account charged by random accesses (selective reads).
     random_acct: IoAccount,
+    /// Per-graph metrics registry; `stats`, the decoded cache and the
+    /// request-path histograms all resolve their handles from it.
+    metrics: Arc<MetricsRegistry>,
+    /// Hot-path histogram handles (resolved once at open).
+    obs: ObsHandles,
+}
+
+impl GraphInner {
+    /// Record one buffer-claim wait that started at `t_claim`: the
+    /// claim-wait histogram plus a `buffer`-category span.
+    fn observe_buffer_claim(&self, t_claim: Instant, buffer_id: usize) {
+        let dur = t_claim.elapsed();
+        self.obs.buffer_claim_wait.record_duration(dur);
+        obs::tracer().record("buffer", "claim-wait", t_claim, dur, 0, buffer_id as u64);
+    }
 }
 
 /// An opened graph (`paragrapher_graph*`).
@@ -575,6 +656,19 @@ impl PgGraph {
         range: VertexRange,
         callback: BlockCallback,
     ) -> Result<Arc<ReadRequest>> {
+        self.issue_subgraph(range, callback, "csx", self.inner.obs.req_csx.clone())
+    }
+
+    /// Shared issue path of the block-request family. `kind`/`hist` name
+    /// the request-latency histogram and span, so `coo_get_edges` records
+    /// under its own kind rather than the csx path it delegates to.
+    fn issue_subgraph(
+        &self,
+        range: VertexRange,
+        callback: BlockCallback,
+        kind: &'static str,
+        hist: Histo,
+    ) -> Result<Arc<ReadRequest>> {
         let n = self.inner.meta.num_vertices;
         if range.start > range.end || range.end > n {
             bail!("bad vertex range {}..{}", range.start, range.end);
@@ -582,6 +676,7 @@ impl PgGraph {
         let opts = self.options();
         let blocks = self.plan_blocks(range, opts.buffer_edges.max(1));
         let req = Arc::new(ReadRequest::new(blocks.len() as u64));
+        req.set_completion_obs(hist, kind);
         self.inner.stats.requests_issued.fetch_add(1, Ordering::Relaxed);
 
         let inner = Arc::clone(&self.inner);
@@ -603,10 +698,12 @@ impl PgGraph {
                     // until a consumer recycles one. `None` means the pool
                     // closed (shutdown) — account the block so waiters
                     // terminate.
+                    let t_claim = Instant::now();
                     let Some(buffer_id) = inner.pool.acquire_idle(meta) else {
                         req2.record_block(0);
                         continue;
                     };
+                    inner.observe_buffer_claim(t_claim, buffer_id);
                     // Producer side ("Java"): decode the block on a worker.
                     let inner = Arc::clone(&inner);
                     let callbacks = Arc::clone(&callbacks);
@@ -793,7 +890,12 @@ impl PgGraph {
                 user(&trimmed);
             });
         });
-        self.csx_get_subgraph(VertexRange::new(v_first, v_last.max(v_first)), cb)
+        self.issue_subgraph(
+            VertexRange::new(v_first, v_last.max(v_first)),
+            cb,
+            "coo",
+            self.inner.obs.req_coo.clone(),
+        )
     }
 
     /// Convenience: load the full graph through the block pipeline
@@ -972,9 +1074,11 @@ impl PgGraph {
             start_edge: part.edge_span.0,
             end_edge: part.edge_span.1,
         };
+        let t_req = Instant::now();
         let Some(buffer_id) = self.inner.pool.acquire_idle(meta) else {
             return Err(PgError::Closed("buffer pool closed".into()).into());
         };
+        self.inner.observe_buffer_claim(t_req, buffer_id);
         self.inner.stats.partition_requests.fetch_add(1, Ordering::Relaxed);
         let loaded = decode_partition(
             &self.inner,
@@ -986,6 +1090,9 @@ impl PgGraph {
             &self.workers,
         )?;
         self.inner.stats.partitions_staged.fetch_add(1, Ordering::Relaxed);
+        let dur = t_req.elapsed();
+        self.inner.obs.req_partition.record_duration(dur);
+        obs::tracer().record("request", "partition", t_req, dur, 0, loaded.part.index as u64);
         Ok(loaded)
     }
 
@@ -1003,7 +1110,21 @@ impl PgGraph {
             self.auto_prefetch_window()
         };
         self.inner.stats.partition_requests.fetch_add(1, Ordering::Relaxed);
-        let shared = crate::partition::stream::StreamShared::new(plan.num_parts(), window);
+        // Registry mirrors of the stream's counters: per-stream counts stay
+        // authoritative in `StreamCounters`; these accumulate across every
+        // stream of the graph for the one-snapshot view.
+        let stream_obs = crate::partition::stream::StreamObs {
+            produced: self.inner.metrics.counter(names::STREAM_PRODUCED),
+            consumed: self.inner.metrics.counter(names::STREAM_CONSUMED),
+            prefetch_hits: self.inner.metrics.counter(names::STREAM_PREFETCH_HITS),
+            consumer_stalls: self.inner.metrics.counter(names::STREAM_CONSUMER_STALLS),
+            producer_stalls: self.inner.metrics.counter(names::STREAM_PRODUCER_STALLS),
+        };
+        let shared = crate::partition::stream::StreamShared::new_with_obs(
+            plan.num_parts(),
+            window,
+            stream_obs,
+        );
 
         let inner = Arc::clone(&self.inner);
         let workers = Arc::clone(&self.workers);
@@ -1039,10 +1160,12 @@ impl PgGraph {
                         start_edge: part.edge_span.0,
                         end_edge: part.edge_span.1,
                     };
+                    let t_claim = Instant::now();
                     let Some(buffer_id) = inner.pool.acquire_idle(meta) else {
                         abort = Some("buffer pool closed while a partition stream was active");
                         break;
                     };
+                    inner.observe_buffer_claim(t_claim, buffer_id);
                     let inner2 = Arc::clone(&inner);
                     let shared3 = Arc::clone(&shared2);
                     let scan = Arc::clone(&opts.scan);
@@ -1050,12 +1173,23 @@ impl PgGraph {
                     let decode_workers = opts.decode_workers;
                     let chunk_pool = Arc::clone(&workers);
                     workers.execute(move || {
+                        let t_part = Instant::now();
                         match decode_partition(
                             &inner2, buffer_id, part, read_ctx, scan.as_ref(), decode_workers,
                             &chunk_pool,
                         ) {
                             Ok(loaded) => {
                                 inner2.stats.partitions_staged.fetch_add(1, Ordering::Relaxed);
+                                let dur = t_part.elapsed();
+                                inner2.obs.req_partition.record_duration(dur);
+                                obs::tracer().record(
+                                    "request",
+                                    "partition",
+                                    t_part,
+                                    dur,
+                                    0,
+                                    loaded.part.index as u64,
+                                );
                                 shared3.push(loaded);
                             }
                             Err(e) => shared3.fail(e.to_string()),
@@ -1088,6 +1222,9 @@ impl PgGraph {
     /// shared engine is [`cached_successors`](crate::formats::source::cached_successors).
     pub fn successors(&self, v: usize) -> Result<Vec<VertexId>> {
         let inner = &self.inner;
+        let mut span = SpanGuard::new("request", "successors")
+            .with_hist(inner.obs.req_successors.clone());
+        span.set_arg(v as u64);
         let list = crate::formats::source::cached_successors(
             &inner.decoded_cache,
             inner.source_block_vertices,
@@ -1118,6 +1255,20 @@ impl PgGraph {
         self.inner.decoded_cache.counters()
     }
 
+    /// This graph's metrics registry (counters + latency histograms for
+    /// the whole load path). Resolve handles by the names in
+    /// [`crate::obs::names`].
+    pub fn metrics_registry(&self) -> &Arc<MetricsRegistry> {
+        &self.inner.metrics
+    }
+
+    /// Point-in-time snapshot of every metric of this graph — the
+    /// mergeable/serializable unit the distributed worker ships to its
+    /// leader and `ci-summary --json` exports.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.inner.metrics.snapshot()
+    }
+
     /// Virtual-I/O + CPU account charged by the random-access path
     /// (selective reads), mirroring `WebGraphSource::io_account`.
     pub fn random_access_account(&self) -> &IoAccount {
@@ -1126,6 +1277,7 @@ impl PgGraph {
 
     /// Join all library threads, drop the OS cache (§4.1 discipline).
     pub fn release(self) {
+        let trace_path = lock_recover(&self.inner.options).trace_path.clone();
         self.inner.shutdown.store(true, Ordering::Release);
         self.inner.pool.close(); // wake any parked request managers
         self.inner.decoded_cache.clear();
@@ -1141,6 +1293,13 @@ impl PgGraph {
         }
         // Worker/callback pools join on drop (Arc: last owner joins).
         self.inner.store.drop_cache();
+        // Export after every library thread has quiesced, so the trace
+        // covers the whole request history of this handle.
+        if let Some(path) = trace_path {
+            if let Err(e) = obs::tracer().export(&path) {
+                eprintln!("trace export to {} failed: {e}", path.display());
+            }
+        }
     }
 }
 
@@ -1312,6 +1471,17 @@ fn decode_into_buffer(
         Ok((payload, stitched)) => {
             let modeled =
                 crate::storage::vclock::phase_elapsed(&accounts) + weights_acct.elapsed_seconds();
+            let real = t0.elapsed();
+            inner.obs.decode_block_real.record_duration(real);
+            inner.obs.decode_block_virt.record_secs(modeled);
+            obs::tracer().record(
+                "decode",
+                "decode-block",
+                t0,
+                real,
+                (modeled * 1e9) as u64,
+                meta.start_vertex as u64,
+            );
             inner.stats.decode_seconds.fetch_add((modeled * 1e9) as u64, Ordering::Relaxed);
             inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
             inner.stats.edges_decoded.fetch_add(meta.num_edges(), Ordering::Relaxed);
@@ -1401,6 +1571,7 @@ fn decode_partition(
     }
     let accounts: Vec<IoAccount> =
         (0..decode_workers.max(1)).map(|_| IoAccount::new()).collect();
+    let t0 = Instant::now();
     let result = (|| -> Result<DecodedBlock> {
         let dec = Decoder::open(
             &inner.store,
@@ -1431,6 +1602,17 @@ fn decode_partition(
     match result {
         Ok(block) => {
             let modeled = crate::storage::vclock::phase_elapsed(&accounts);
+            let real = t0.elapsed();
+            inner.obs.decode_block_real.record_duration(real);
+            inner.obs.decode_block_virt.record_secs(modeled);
+            obs::tracer().record(
+                "decode",
+                "decode-partition",
+                t0,
+                real,
+                (modeled * 1e9) as u64,
+                part.index as u64,
+            );
             inner.stats.decode_seconds.fetch_add((modeled * 1e9) as u64, Ordering::Relaxed);
             inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
             inner.stats.edges_decoded.fetch_add(block.num_edges(), Ordering::Relaxed);
@@ -1502,6 +1684,8 @@ fn run_user_callback(
         req.record_failure(format!("buffer {buffer_id} not completed"));
         return;
     }
+    let mut span = SpanGuard::new("delivery", "user-callback");
+    span.set_arg(meta.start_vertex as u64);
     {
         // A poisoned payload lock (panicked sibling) fails this block
         // cleanly and recycles — one bad dispatcher must not wedge every

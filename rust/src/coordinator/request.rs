@@ -9,8 +9,10 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use crate::graph::{VertexId, Weight};
+use crate::obs::{self, Histo};
 
 /// What the user asks for: a consecutive vertex range (CSX view) whose
 /// edges are delivered in blocks. `whole()` requests the entire graph
@@ -99,6 +101,11 @@ pub struct ReadRequest {
     done_cv: Condvar,
     done_mx: Mutex<()>,
     cancelled: AtomicBool,
+    issued_at: Instant,
+    /// End-to-end latency sink: taken exactly once, by whichever block
+    /// completion crosses the `total_blocks` threshold. Carries the
+    /// histogram handle plus the request-kind span name.
+    completion_obs: Mutex<Option<(Histo, &'static str)>>,
 }
 
 impl ReadRequest {
@@ -112,7 +119,16 @@ impl ReadRequest {
             done_cv: Condvar::new(),
             done_mx: Mutex::new(()),
             cancelled: AtomicBool::new(false),
+            issued_at: Instant::now(),
+            completion_obs: Mutex::new(None),
         }
+    }
+
+    /// Arm end-to-end latency recording: when the final block lands,
+    /// `issued → last delivery` is recorded into `hist` and emitted as a
+    /// `request`-category span named `kind`. Called once at issue time.
+    pub(crate) fn set_completion_obs(&self, hist: Histo, kind: &'static str) {
+        *crate::coordinator::lock_recover(&self.completion_obs) = Some((hist, kind));
     }
 
     pub fn total_blocks(&self) -> u64 {
@@ -157,6 +173,16 @@ impl ReadRequest {
         self.edges_delivered.fetch_add(edges, Ordering::AcqRel);
         let done = self.blocks_done.fetch_add(1, Ordering::AcqRel) + 1;
         if done >= self.total_blocks {
+            // Exactly one completion crosses the threshold; `take()` keeps
+            // over-completion (cancel racing the last block) from
+            // double-recording.
+            if let Some((hist, kind)) =
+                crate::coordinator::lock_recover(&self.completion_obs).take()
+            {
+                let dur = self.issued_at.elapsed();
+                hist.record_duration(dur);
+                obs::tracer().record("request", kind, self.issued_at, dur, 0, self.total_blocks);
+            }
             // The mutex only orders the notify against `wait`'s check —
             // poison (a waiter that panicked between check and park)
             // must not stop the completion signal.

@@ -29,6 +29,7 @@ use anyhow::{bail, Context, Result};
 
 use super::wire::Msg;
 use crate::coordinator::{lock_recover, GraphType, Options, Paragrapher};
+use crate::obs::{self, names, MetricsSnapshot};
 use crate::partition::{PartitionPlan, TileLedger};
 use crate::storage::DeviceKind;
 
@@ -110,6 +111,12 @@ pub struct RunReport {
     pub workers_spawned: usize,
     pub workers_lost: usize,
     pub wall_seconds: f64,
+    /// Final metrics snapshot of each worker that exited cleanly (shipped
+    /// as the worker's last frame), sorted by worker index.
+    pub worker_metrics: Vec<(usize, MetricsSnapshot)>,
+    /// The worker snapshots merged by name (histograms bucket-wise), plus
+    /// the leader's own `dist.*` counters — the cross-process aggregate.
+    pub metrics: MetricsSnapshot,
 }
 
 /// State shared by every connection handler.
@@ -122,6 +129,8 @@ struct Shared {
     lost: AtomicUsize,
     children: Mutex<HashMap<usize, Child>>,
     tile_timeout: Duration,
+    /// Metrics frames collected from cleanly finished workers.
+    worker_metrics: Mutex<Vec<(usize, MetricsSnapshot)>>,
 }
 
 fn set_fatal(sh: &Shared, why: String) {
@@ -142,7 +151,30 @@ fn declare_dead(sh: &Shared, worker: usize, why: &str) {
         let _ = child.wait();
     }
     sh.lost.fetch_add(1, Ordering::AcqRel);
+    obs::tracer().record(
+        "distributed",
+        "worker-lost",
+        Instant::now(),
+        Duration::ZERO,
+        0,
+        worker as u64,
+    );
     eprintln!("leader: worker {worker} lost ({why}); {orphaned} tile(s) returned for retiling");
+}
+
+/// Close a worker cleanly: send `Done`, then collect the worker's final
+/// metrics frame. Best-effort with a short deadline — a worker that dies
+/// between `Done` and its metrics frame loses the frame, not the run.
+fn finish_worker(stream: &mut TcpStream, sh: &Shared) {
+    if Msg::Done.send(stream).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    if let Ok(Some(Msg::Metrics { worker, snapshot })) = Msg::recv(stream) {
+        if let Ok(snap) = MetricsSnapshot::from_json(&snapshot) {
+            lock_recover(&sh.worker_metrics).push((worker, snap));
+        }
+    }
 }
 
 /// Serve one worker connection: ship the plan, then lease→assign→collect
@@ -169,18 +201,18 @@ fn serve_worker(mut stream: TcpStream, sh: &Shared) {
     let _ = stream.set_read_timeout(Some(sh.tile_timeout));
     loop {
         if lock_recover(&sh.fatal).is_some() {
-            let _ = Msg::Done.send(&mut stream);
+            finish_worker(&mut stream, sh);
             return;
         }
         let tile = match sh.ledger.lease(worker) {
             Err(e) => {
                 set_fatal(sh, e);
-                let _ = Msg::Done.send(&mut stream);
+                finish_worker(&mut stream, sh);
                 return;
             }
             Ok(None) => {
                 if sh.ledger.all_done() {
-                    let _ = Msg::Done.send(&mut stream);
+                    finish_worker(&mut stream, sh);
                     return;
                 }
                 // Tiles are all leased to siblings; one may yet be
@@ -190,12 +222,23 @@ fn serve_worker(mut stream: TcpStream, sh: &Shared) {
             }
             Ok(Some(t)) => t,
         };
+        let t_tile = Instant::now();
         if (Msg::Assign { tile }).send(&mut stream).is_err() {
             declare_dead(sh, worker, "send failed");
             return;
         }
         match Msg::recv(&mut stream) {
             Ok(Some(Msg::TileResult { tile: t, edges, checksum })) if t == tile => {
+                // Lease turnaround: assign → accepted result, as seen from
+                // the leader (includes the worker's decode + the wire).
+                obs::tracer().record(
+                    "distributed",
+                    "tile-lease",
+                    t_tile,
+                    t_tile.elapsed(),
+                    0,
+                    tile as u64,
+                );
                 // `complete` is the authority: a result racing in after
                 // this worker was declared dead elsewhere is dropped.
                 if sh.ledger.complete(tile, worker) {
@@ -268,6 +311,7 @@ pub fn run_leader(cfg: &LeaderConfig) -> Result<RunReport> {
         lost: AtomicUsize::new(0),
         children: Mutex::new(HashMap::new()),
         tile_timeout: cfg.tile_timeout,
+        worker_metrics: Mutex::new(Vec::new()),
     });
 
     let workers = cfg.workers.max(1);
@@ -356,6 +400,15 @@ pub fn run_leader(cfg: &LeaderConfig) -> Result<RunReport> {
         edges_delivered += o.edges;
         tiles.push(o);
     }
+    let mut worker_metrics: Vec<(usize, MetricsSnapshot)> =
+        lock_recover(&sh.worker_metrics).drain(..).collect();
+    worker_metrics.sort_by_key(|(w, _)| *w);
+    let mut metrics = MetricsSnapshot::default();
+    for (_, snap) in &worker_metrics {
+        metrics.merge(snap);
+    }
+    metrics.counters.insert(names::DIST_RETILES.to_string(), sh.ledger.retiled() as u64);
+    metrics.counters.insert(names::DIST_WORKERS_LOST.to_string(), workers_lost as u64);
     Ok(RunReport {
         plan,
         tiles,
@@ -364,5 +417,7 @@ pub fn run_leader(cfg: &LeaderConfig) -> Result<RunReport> {
         workers_spawned: workers,
         workers_lost,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        worker_metrics,
+        metrics,
     })
 }

@@ -32,6 +32,10 @@ pub enum Msg {
     TileResult { tile: usize, edges: u64, checksum: u64 },
     /// No more tiles; the worker should release its graph and exit 0.
     Done,
+    /// The worker's final frame after `Done`: its metrics-registry
+    /// snapshot (the [`MetricsSnapshot`](crate::obs::MetricsSnapshot)
+    /// JSON schema), merged by name on the leader.
+    Metrics { worker: usize, snapshot: Json },
 }
 
 impl Msg {
@@ -61,6 +65,9 @@ impl Msg {
             }
             Msg::Done => {
                 o.set("type", "done");
+            }
+            Msg::Metrics { worker, snapshot } => {
+                o.set("type", "metrics").set("worker", *worker).set("snapshot", snapshot.clone());
             }
         }
         o
@@ -107,6 +114,13 @@ impl Msg {
                 Ok(Msg::TileResult { tile: num("tile")? as usize, edges: num("edges")?, checksum })
             }
             "done" => Ok(Msg::Done),
+            "metrics" => Ok(Msg::Metrics {
+                worker: num("worker")? as usize,
+                snapshot: doc
+                    .get("snapshot")
+                    .cloned()
+                    .ok_or_else(|| "metrics message without a snapshot".to_string())?,
+            }),
             other => Err(format!("unknown message type {other:?}")),
         }
     }
@@ -146,6 +160,10 @@ mod tests {
             // JSON number — the hex-string lane must carry it exactly.
             Msg::TileResult { tile: 3, edges: 9, checksum: 0xdead_beef_cafe_f00d },
             Msg::Done,
+            Msg::Metrics {
+                worker: 2,
+                snapshot: crate::obs::MetricsRegistry::new().snapshot().to_json(),
+            },
         ];
         let mut wire = Vec::new();
         for m in &msgs {

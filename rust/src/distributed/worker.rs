@@ -150,7 +150,17 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
     let mut completed = 0u64;
     let result = loop {
         match Msg::recv(&mut stream) {
-            Ok(Some(Msg::Done)) => break Ok(()),
+            Ok(Some(Msg::Done)) => {
+                // Final frame: ship this process's metrics snapshot so the
+                // leader can merge tails across workers. Best-effort — a
+                // leader that already hung up loses the frame, not the run.
+                let _ = (Msg::Metrics {
+                    worker: cfg.index,
+                    snapshot: graph.metrics_snapshot().to_json(),
+                })
+                .send(&mut stream);
+                break Ok(());
+            }
             Ok(Some(Msg::Assign { tile })) => {
                 let Some(part) = plan.parts.get(tile).copied() else {
                     break Err(anyhow::anyhow!(

@@ -33,6 +33,7 @@ pub mod formats;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod storage;

@@ -9,6 +9,7 @@
 //! paragrapher bench-storage --device SSD                   # Fig. 4 grid
 //! paragrapher sweep      --dataset TW --device HDD         # Fig. 8 grid
 //! paragrapher end-to-end [--scale 1]                       # headline table
+//! paragrapher trace      [--out trace.json --scale 1]      # dual-clock Chrome trace
 //! ```
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
@@ -50,6 +51,7 @@ fn main() {
         // The worker subcommand parses its own argv (the leader builds
         // it): the generic --flag map would eat positional mistakes.
         "worker" => cmd_worker(&args[1..]),
+        "trace" => cmd_trace(&flags),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -92,9 +94,15 @@ commands:
                                                           modeled-vs-measured scaling + oracle check
   worker        --connect HOST:PORT --dir PATH [--base B] [--graph-type T] [--device DEV]
                 [--index N] [--fault SPEC]                one worker process (spawned by the leader)
-  ci-summary                                              markdown health metrics for CI
+  trace         [--out PATH] [--scale N] [--seed N]       run a seeded load exercising every
+                                                          request kind, export the dual-clock
+                                                          Chrome trace (Perfetto-viewable)
+  ci-summary    [--scale N] [--seed N] [--json PATH]      markdown health metrics for CI;
+                                                          --json also writes the merged
+                                                          metrics-registry snapshot
 
-most load-path commands also take --cache-mb N (simulated page-cache budget, default 8192)"
+most load-path commands also take --cache-mb N (simulated page-cache budget, default 8192)
+set PG_OBS=off to disable span/histogram recording (counters stay on)"
     );
 }
 
@@ -717,6 +725,41 @@ fn cmd_distributed(flags: &HashMap<String, String>) -> Result<()> {
         "every tile matches the single-process oracle; {workers}-worker speedup {measured:.2}x \
          measured vs {modeled:.2}x modeled (min(sigma*r, w*d)/min(sigma*r, d))"
     );
+    if !multi.worker_metrics.is_empty() {
+        println!(
+            "\nlatency histograms merged from {} worker metrics frames \
+             (retiles {}, workers lost {}):",
+            multi.worker_metrics.len(),
+            multi.metrics.counters.get(paragrapher::obs::names::DIST_RETILES).copied().unwrap_or(0),
+            multi
+                .metrics
+                .counters
+                .get(paragrapher::obs::names::DIST_WORKERS_LOST)
+                .copied()
+                .unwrap_or(0),
+        );
+        let mut mtable = Table::new(&["metric", "samples", "p50", "p95", "p99", "max"]);
+        let rows = paragrapher::obs::names::REQUEST_KINDS.into_iter().chain([
+            ("buffer-claim", paragrapher::obs::names::BUFFER_CLAIM_WAIT),
+            ("decode-block (real)", paragrapher::obs::names::DECODE_BLOCK_REAL),
+            ("decode-block (virt)", paragrapher::obs::names::DECODE_BLOCK_VIRT),
+        ]);
+        for (label, key) in rows {
+            if let Some(h) = multi.metrics.hists.get(key) {
+                if h.total > 0 {
+                    mtable.row(&[
+                        label.to_string(),
+                        h.total.to_string(),
+                        fmt_ns(h.percentile(0.5)),
+                        fmt_ns(h.percentile(0.95)),
+                        fmt_ns(h.percentile(0.99)),
+                        fmt_ns(h.max),
+                    ]);
+                }
+            }
+        }
+        println!("{}", mtable.render());
+    }
     if !flags.contains_key("keep") && !flags.contains_key("dir") {
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -733,17 +776,136 @@ fn peak_rss_bytes() -> Option<u64> {
     Some(kb * 1024)
 }
 
+/// Human nanoseconds for the latency tables (`850ns`, `1.2µs`, `3.45ms`).
+fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// `trace`: run one seeded load that exercises every request kind (whole
+/// CSX, COO edge range, successors probes, a drained partition stream)
+/// and export the always-on tracer's dual-clock Chrome trace via
+/// [`Options::trace_path`]. The library records these spans regardless —
+/// this command just packages a representative workload with the export,
+/// so CI (and humans) get a Perfetto-viewable timeline in one shot.
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::graph::generators;
+    use paragrapher::obs;
+
+    let scale = flag_usize(flags, "scale", 1).max(1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    let out = std::path::PathBuf::from(flag(flags, "out", "trace.json"));
+
+    let g = generators::barabasi_albert(10_000 * scale, 8, seed);
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    FormatKind::WebGraph.write_to_store(&g, &store, "trace");
+    let pg = Paragrapher::init();
+    let opts = Options { trace_path: Some(out.clone()), ..Options::default() };
+    let graph = pg.open_graph(Arc::clone(&store), "trace", GraphType::CsxWg400, opts)?;
+
+    // Whole-graph CSX load: request + buffer + decode + delivery spans.
+    let block = graph.load_whole_graph()?;
+    anyhow::ensure!(block.num_edges() == g.num_edges(), "trace load lost edges");
+    // A COO edge-range request.
+    let coo_edges = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let coo_edges2 = Arc::clone(&coo_edges);
+    let req = graph.coo_get_edges(
+        0,
+        graph.num_edges().min(50_000),
+        Arc::new(move |blk| {
+            coo_edges2.fetch_add(blk.num_edges(), std::sync::atomic::Ordering::Relaxed);
+        }),
+    )?;
+    req.wait();
+    if let Some(e) = req.error() {
+        bail!("trace coo load failed: {e}");
+    }
+    // Random-access successors probes.
+    let stride = (graph.num_vertices() / 64).max(1);
+    for v in (0..graph.num_vertices()).step_by(stride) {
+        let _ = graph.successors(v)?;
+    }
+    // A drained partition stream (stream-category spans on contention).
+    let stream = graph.csx_get_partitions(8)?;
+    let part_edges = std::sync::atomic::AtomicU64::new(0);
+    paragrapher::algorithms::partitioned::for_each_partition(&stream, 2, |p| {
+        part_edges.fetch_add(p.num_edges(), std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        part_edges.load(std::sync::atomic::Ordering::Relaxed) == g.num_edges(),
+        "trace partition stream lost edges"
+    );
+
+    let snap = graph.metrics_snapshot();
+    // Release exports the trace (Options::trace_path).
+    pg.release_graph(graph);
+
+    let (spans, dropped) = obs::tracer().snapshot();
+    let mut cats: std::collections::BTreeMap<&str, usize> = std::collections::BTreeMap::new();
+    for s in &spans {
+        *cats.entry(s.cat).or_insert(0) += 1;
+    }
+    anyhow::ensure!(
+        cats.len() >= 4,
+        "expected spans from at least 4 categories, got {cats:?}"
+    );
+    println!(
+        "wrote {} — {} spans retained ({} dropped by the rings), seed {seed}",
+        out.display(),
+        spans.len(),
+        dropped
+    );
+    let mut table = Table::new(&["span category", "spans"]);
+    for (cat, n) in &cats {
+        table.row(&[cat.to_string(), n.to_string()]);
+    }
+    println!("{}", table.render());
+    let mut lat = Table::new(&["request kind", "samples", "p50", "p95", "p99", "max"]);
+    for (label, key) in paragrapher::obs::names::REQUEST_KINDS {
+        if let Some(h) = snap.hists.get(key) {
+            if h.total > 0 {
+                lat.row(&[
+                    label.to_string(),
+                    h.total.to_string(),
+                    fmt_ns(h.percentile(0.5)),
+                    fmt_ns(h.percentile(0.95)),
+                    fmt_ns(h.percentile(0.99)),
+                    fmt_ns(h.max),
+                ]);
+            }
+        }
+    }
+    println!("{}", lat.render());
+    Ok(())
+}
+
 /// `ci-summary`: markdown health metrics for the CI job summary — encoder
 /// reference-chain depth, decoded-block cache hit rate, and the Elias–Fano
-/// offsets footprint, on a fixed seeded graph so drift is comparable
-/// across PRs.
-fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
+/// offsets footprint, on a seeded graph (`--scale` / `--seed`) so drift is
+/// comparable across PRs. `--json PATH` additionally writes the merged
+/// metrics-registry snapshot (the `BENCH_metrics.json` schema).
+fn cmd_ci_summary(flags: &HashMap<String, String>) -> Result<()> {
     use paragrapher::formats::webgraph::{self, WgParams};
     use paragrapher::formats::{GraphSource, SourceConfig, WebGraphSource};
     use paragrapher::graph::generators;
     use paragrapher::storage::SimStore;
 
-    let g = generators::barabasi_albert(20_000, 8, 42);
+    let scale = flag_usize(flags, "scale", 1).max(1);
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    // Every coordinator this run opens contributes its registry snapshot;
+    // the distributed runs contribute the leader-merged worker snapshots.
+    let mut merged = paragrapher::obs::MetricsSnapshot::default();
+
+    let g = generators::barabasi_albert(20_000 * scale, 8, seed);
     let (_, _, stats) = webgraph::compress(&g, WgParams::default());
 
     let store = SimStore::new(DeviceKind::Dram);
@@ -765,7 +927,10 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
     let offs =
         webgraph::read_offsets(&store, "ci", paragrapher::storage::sim::ReadCtx::default(), &acct)?;
 
-    println!("### paragrapher health metrics (BA 20k×8, seed 42)\n");
+    println!(
+        "### paragrapher health metrics (BA {}×8, seed {seed})\n",
+        fmt_count(g.num_vertices() as u64)
+    );
     println!("| metric | value |");
     println!("|---|---|");
     println!("| max_ref_chain_depth | {} |", stats.max_ref_chain_depth);
@@ -789,7 +954,7 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
     // word-at-a-time decode engine.
     {
         let assumed_d = 1.0e9;
-        let cal = paragrapher::bench::workloads::calibrate_decode(1, 42, 3)?;
+        let cal = paragrapher::bench::workloads::calibrate_decode(scale, seed, 3)?;
         println!(
             "| decode_measured_d | {} ({:.2}x of assumed {}) |",
             fmt_bw(cal.achieved_d()),
@@ -896,6 +1061,8 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
             "| fused_scan_throughput | {fused:.0} Melem/s ({:.2}x vs scan-then-validate {split:.0} Melem/s) |",
             fused / split
         );
+        merged.merge(&graph.metrics_snapshot());
+        merged.merge(&graph_mw.metrics_snapshot());
     }
 
     // Partitioned-request health: a real 8-partition stream drained by two
@@ -931,6 +1098,7 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
             c.consumer_stalls
         );
         println!("| partition_prefetch_window | {} |", graph.auto_prefetch_window());
+        merged.merge(&graph.metrics_snapshot());
     }
     {
         let store = SimStore::new(DeviceKind::Hdd);
@@ -997,6 +1165,29 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
             two.tiles.len(),
             fmt_count(two.edges_delivered)
         );
+        // Tail latency merged across the worker processes' shipped
+        // metrics frames — the cross-process aggregation canary.
+        anyhow::ensure!(
+            two.worker_metrics.len() >= 2,
+            "expected metrics frames from both workers, got {}",
+            two.worker_metrics.len()
+        );
+        let h = two
+            .metrics
+            .hists
+            .get(paragrapher::obs::names::REQ_PARTITION)
+            .cloned()
+            .unwrap_or_else(paragrapher::obs::HistSnapshot::empty);
+        println!(
+            "| distributed_req_partition (merged from {} worker snapshots) | {} samples, \
+             p50 {} / p99 {} / max {} |",
+            two.worker_metrics.len(),
+            h.total,
+            fmt_ns(h.percentile(0.5)),
+            fmt_ns(h.percentile(0.99)),
+            fmt_ns(h.max)
+        );
+        merged.merge(&two.metrics);
 
         let faulted = run_leader(&LeaderConfig {
             workers: 2,
@@ -1017,7 +1208,41 @@ fn cmd_ci_summary(_flags: &HashMap<String, String>) -> Result<()> {
              held) |",
             faulted.retiled_tiles, faulted.workers_lost
         );
+        merged.merge(&faulted.metrics);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Request tail latency, merged across every coordinator this run
+    // opened plus the distributed workers' shipped snapshots.
+    println!("\n### request tail latency (merged registries)\n");
+    println!("| kind | samples | p50 | p95 | p99 | p99.9 | max |");
+    println!("|---|---|---|---|---|---|---|");
+    let rows = paragrapher::obs::names::REQUEST_KINDS.into_iter().chain([
+        ("buffer-claim", paragrapher::obs::names::BUFFER_CLAIM_WAIT),
+        ("decode-block (real)", paragrapher::obs::names::DECODE_BLOCK_REAL),
+        ("decode-block (virt)", paragrapher::obs::names::DECODE_BLOCK_VIRT),
+    ]);
+    for (label, key) in rows {
+        let h = merged
+            .hists
+            .get(key)
+            .cloned()
+            .unwrap_or_else(paragrapher::obs::HistSnapshot::empty);
+        println!(
+            "| {label} | {} | {} | {} | {} | {} | {} |",
+            h.total,
+            fmt_ns(h.percentile(0.5)),
+            fmt_ns(h.percentile(0.95)),
+            fmt_ns(h.percentile(0.99)),
+            fmt_ns(h.percentile(0.999)),
+            fmt_ns(h.max)
+        );
+    }
+
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, merged.to_json().to_string_pretty())
+            .with_context(|| format!("write metrics snapshot {path}"))?;
+        eprintln!("wrote the merged metrics snapshot to {path}");
     }
     Ok(())
 }

@@ -133,13 +133,15 @@ pub fn partition_report(
     overlap: Option<f64>,
 ) -> Json {
     let mut o = Json::obj();
-    o.set("parts", plan.num_parts() as f64)
+    // Counters go out as exact integers (Json::Uint), not f64 — a long run
+    // can push these past 2^53, where the cast would silently round.
+    o.set("parts", plan.num_parts())
         .set("balance_factor", plan.balance_factor())
-        .set("produced", counters.produced as f64)
-        .set("consumed", counters.consumed as f64)
+        .set("produced", counters.produced)
+        .set("consumed", counters.consumed)
         .set("prefetch_hit_rate", counters.prefetch_hit_rate())
-        .set("consumer_stalls", counters.consumer_stalls as f64)
-        .set("producer_stalls", counters.producer_stalls as f64);
+        .set("consumer_stalls", counters.consumer_stalls)
+        .set("producer_stalls", counters.producer_stalls);
     if let Some(ov) = overlap {
         o.set("interleave_overlap", ov);
     }

@@ -1,0 +1,358 @@
+//! Log-bucketed mergeable histogram (HdrHistogram-style layout).
+//!
+//! Values (u64, typically nanoseconds) land in power-of-two ranges split
+//! into [`SUB_COUNT`] linear sub-buckets, so every bucket's width is at
+//! most 1/16 of its lower bound — percentile queries are exact to ~6%
+//! relative error while the whole table is 976 counters covering the
+//! full u64 range. Recording is one relaxed `fetch_add` per value
+//! (lock-free, any thread); reads go through [`Histogram::snapshot`],
+//! and snapshots merge bucket-wise, which is what makes cross-thread and
+//! cross-process (JSON round-trip) aggregation trivial.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// log2 of the linear sub-bucket count per power-of-two range.
+pub const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per power-of-two range (16).
+pub const SUB_COUNT: usize = 1 << SUB_BITS;
+/// Total buckets: `[0, 16)` one-per-value, then 60 ranges × 16 covering
+/// `[16, u64::MAX]`.
+pub const BUCKETS: usize = SUB_COUNT + (64 - SUB_BITS as usize) * SUB_COUNT;
+
+/// Bucket index for a value. Total order preserving: `a <= b` implies
+/// `index_of(a) <= index_of(b)`.
+pub fn index_of(v: u64) -> usize {
+    if v < SUB_COUNT as u64 {
+        v as usize
+    } else {
+        let top = 63 - v.leading_zeros(); // >= SUB_BITS
+        let shift = top - SUB_BITS;
+        let sub = ((v >> shift) as usize) & (SUB_COUNT - 1);
+        SUB_COUNT + (top - SUB_BITS) as usize * SUB_COUNT + sub
+    }
+}
+
+/// Inclusive-exclusive `[lo, hi)` value bounds of bucket `idx`
+/// (saturating at `u64::MAX` for the last bucket).
+pub fn bounds_of(idx: usize) -> (u64, u64) {
+    if idx < SUB_COUNT {
+        (idx as u64, idx as u64 + 1)
+    } else {
+        let k = ((idx - SUB_COUNT) / SUB_COUNT) as u32;
+        let sub = ((idx - SUB_COUNT) % SUB_COUNT) as u64;
+        let lo = (SUB_COUNT as u64 + sub) << k;
+        (lo, lo.saturating_add(1u64 << k))
+    }
+}
+
+/// The bucket's representative value (midpoint): what percentile queries
+/// return. Always inside the bucket's own bounds.
+fn representative(idx: usize) -> u64 {
+    let (lo, hi) = bounds_of(idx);
+    lo + (hi - lo - 1) / 2
+}
+
+/// The concurrent recording side: a fixed table of relaxed atomics.
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let counts = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        Histogram {
+            counts: counts.into_boxed_slice(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value: three relaxed adds and a `fetch_max`.
+    pub fn record(&self, v: u64) {
+        self.counts[index_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current counts into a plain-data snapshot. Concurrent
+    /// recorders may land between the per-bucket loads — the snapshot is
+    /// a consistent-enough point-in-time view, never torn per bucket.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::empty();
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n > 0 {
+                s.counts.push((i as u32, n));
+                s.total += n;
+            }
+        }
+        // Derive total from the buckets (not self.total) so the snapshot
+        // is internally consistent even mid-record.
+        s.sum = self.sum.load(Ordering::Relaxed);
+        s.max = self.max.load(Ordering::Relaxed);
+        s
+    }
+}
+
+/// Plain-data histogram snapshot: sparse `(bucket, count)` pairs.
+/// Mergeable (bucket-wise add) and JSON round-trippable for the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    /// Sparse nonzero buckets, ascending by index.
+    pub counts: Vec<(u32, u64)>,
+    pub total: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { counts: Vec::new(), total: 0, sum: 0, max: 0 }
+    }
+
+    /// Bucket-wise merge (the cross-thread / cross-worker aggregation).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        let mut merged: Vec<(u32, u64)> = Vec::with_capacity(self.counts.len() + other.counts.len());
+        let (mut a, mut b) = (self.counts.iter().peekable(), other.counts.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(&&(ia, na)), Some(&&(ib, nb))) => {
+                    if ia == ib {
+                        merged.push((ia, na + nb));
+                        a.next();
+                        b.next();
+                    } else if ia < ib {
+                        merged.push((ia, na));
+                        a.next();
+                    } else {
+                        merged.push((ib, nb));
+                        b.next();
+                    }
+                }
+                (Some(&&x), None) => {
+                    merged.push(x);
+                    a.next();
+                }
+                (None, Some(&&x)) => {
+                    merged.push(x);
+                    b.next();
+                }
+                (None, None) => break,
+            }
+        }
+        self.counts = merged;
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the representative (midpoint)
+    /// of the bucket holding the `ceil(q * total)`-th recorded value.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for &(idx, n) in &self.counts {
+            cum += n;
+            if cum >= target {
+                return representative(idx as usize);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Json::Arr(Vec::new());
+        for &(idx, n) in &self.counts {
+            buckets.push(Json::Arr(vec![Json::from(u64::from(idx)), Json::from(n)]));
+        }
+        let mut o = Json::obj();
+        o.set("total", self.total)
+            .set("sum", self.sum)
+            .set("max", self.max)
+            .set("p50", self.percentile(0.50))
+            .set("p95", self.percentile(0.95))
+            .set("p99", self.percentile(0.99))
+            .set("p999", self.percentile(0.999))
+            .set("buckets", buckets);
+        o
+    }
+
+    pub fn from_json(doc: &Json) -> Result<HistSnapshot, String> {
+        let field = |k: &str| {
+            doc.get(k).and_then(Json::as_u64).ok_or_else(|| format!("hist: missing {k:?}"))
+        };
+        let mut s = HistSnapshot::empty();
+        s.total = field("total")?;
+        s.sum = field("sum")?;
+        s.max = field("max")?;
+        let buckets =
+            doc.get("buckets").and_then(Json::as_arr).ok_or("hist: missing buckets")?;
+        for pair in buckets {
+            let pair = pair.as_arr().ok_or("hist: bucket entry is not a pair")?;
+            let (idx, n) = match pair {
+                [i, n] => (
+                    i.as_u64().ok_or("hist: bad bucket index")?,
+                    n.as_u64().ok_or("hist: bad bucket count")?,
+                ),
+                _ => return Err("hist: bucket entry is not a pair".to_string()),
+            };
+            if idx as usize >= BUCKETS {
+                return Err(format!("hist: bucket index {idx} out of range"));
+            }
+            s.counts.push((idx as u32, n));
+        }
+        s.counts.sort_unstable_by_key(|&(i, _)| i);
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_bounds_agree() {
+        // Every probe value lands in a bucket whose bounds contain it,
+        // and indices are monotone in the value.
+        let probes: Vec<u64> = (0..200)
+            .chain((0..63).map(|k| 1u64 << k))
+            .chain((0..63).map(|k| (1u64 << k) + 1))
+            .chain((1..64).map(|k| (1u64 << k) - 1))
+            .chain([u64::MAX, u64::MAX - 1])
+            .collect();
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        for w in sorted.windows(2) {
+            assert!(index_of(w[0]) <= index_of(w[1]), "monotone at {w:?}");
+        }
+        for v in probes {
+            let idx = index_of(v);
+            assert!(idx < BUCKETS);
+            let (lo, hi) = bounds_of(idx);
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "{v} not in [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn exact_bucket_boundaries() {
+        // The first 16 values get their own buckets…
+        for v in 0..16u64 {
+            assert_eq!(index_of(v), v as usize);
+            assert_eq!(bounds_of(v as usize), (v, v + 1));
+        }
+        // …then each power-of-two range starts a fresh run of 16.
+        assert_eq!(index_of(16), 16);
+        assert_eq!(index_of(31), 31);
+        assert_eq!(index_of(32), 32);
+        assert_eq!(bounds_of(32), (32, 34));
+        assert_eq!(index_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_match_sorted_vector_oracle() {
+        // Deterministic pseudo-random values (xorshift), heavy-tailed.
+        let mut x = 0x9E3779B97F4A7C15u64;
+        let mut vals = Vec::new();
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            vals.push(x % 1_000_000 + (x % 97) * (x % 89) * 1000);
+        }
+        let h = Histogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let oracle = sorted[rank - 1];
+            let got = snap.percentile(q);
+            // The histogram's answer must fall in the same bucket as the
+            // exact order statistic (the quantization guarantee).
+            assert_eq!(
+                index_of(got),
+                index_of(oracle),
+                "q={q}: got {got}, oracle {oracle}"
+            );
+        }
+        assert_eq!(snap.total, vals.len() as u64);
+        assert_eq!(snap.max, *sorted.last().unwrap());
+    }
+
+    #[test]
+    fn concurrent_record_then_merge_equals_single() {
+        // N threads record disjoint shards into their own histograms;
+        // merging the shard snapshots equals one histogram fed everything.
+        let all: Vec<u64> = (0..8_000u64).map(|i| i * 37 % 50_021).collect();
+        let reference = Histogram::new();
+        for &v in &all {
+            reference.record(v);
+        }
+        let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        std::thread::scope(|scope| {
+            for (t, shard) in shards.iter().enumerate() {
+                let chunk = &all[t * 2000..(t + 1) * 2000];
+                scope.spawn(move || {
+                    for &v in chunk {
+                        shard.record(v);
+                    }
+                });
+            }
+        });
+        let mut merged = HistSnapshot::empty();
+        for shard in &shards {
+            merged.merge(&shard.snapshot());
+        }
+        assert_eq!(merged, reference.snapshot());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let h = Histogram::new();
+        for v in [0, 1, 15, 16, 1000, 123_456_789, u64::MAX] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let back = HistSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.percentile(0.5), snap.percentile(0.5));
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let snap = Histogram::new().snapshot();
+        assert_eq!(snap.total, 0);
+        assert_eq!(snap.percentile(0.99), 0);
+        assert_eq!(snap.mean(), 0.0);
+    }
+}

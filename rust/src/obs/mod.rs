@@ -1,0 +1,120 @@
+//! Unified observability: mergeable latency histograms, a metrics
+//! registry, and always-on dual-clock span tracing.
+//!
+//! Three pillars (DESIGN.md § Observability):
+//!
+//! * [`MetricsRegistry`] — named lock-free counters/gauges plus
+//!   log-bucketed [`Histogram`]s (power-of-two buckets with linear
+//!   sub-buckets, p50/p95/p99/p99.9 queries). Registries snapshot to
+//!   plain-data [`MetricsSnapshot`]s that merge across threads and — via
+//!   the JSON round-trip — across processes, which is how the distributed
+//!   leader aggregates worker tails.
+//! * [`Tracer`] — low-overhead span recording into bounded per-thread
+//!   ring buffers. Every span carries **two** durations: real monotonic
+//!   time and the §3 model's virtual clock, exported as Chrome
+//!   trace-event JSON with one process lane per clock so a Perfetto view
+//!   lines the measured timeline up against the modeled one.
+//! * A process-wide kill-switch: `PG_OBS=off` (or `0`) disables span and
+//!   histogram recording for the pathological case; counters are single
+//!   relaxed atomic adds and stay on. [`set_enabled`] overrides the
+//!   environment at runtime (the overhead-guard bench flips it).
+//!
+//! The legacy counter structs (`GraphStats`, `CacheCounters`,
+//! `StreamCounters`) remain as *views*: their hot fields are
+//! [`Counter`] handles resolved from the owning graph's registry, so one
+//! snapshot covers everything.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{Counter, Histo, MetricsRegistry, MetricsSnapshot};
+pub use trace::{tracer, Span, SpanGuard, Tracer};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+fn enabled_flag() -> &'static AtomicBool {
+    static ENABLED: OnceLock<AtomicBool> = OnceLock::new();
+    ENABLED.get_or_init(|| {
+        let off = std::env::var("PG_OBS")
+            .map(|v| matches!(v.as_str(), "off" | "0" | "false"))
+            .unwrap_or(false);
+        AtomicBool::new(!off)
+    })
+}
+
+/// Is recording (spans + histograms) enabled? One relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Runtime override of the `PG_OBS` kill-switch (used by the overhead
+/// bench to compare tracing-on vs tracing-off in one process).
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+/// Canonical metric names for the load path, so every layer (coordinator,
+/// cache, stream, distributed, CLI) agrees on the registry keys.
+pub mod names {
+    /// Request latency per kind (histograms, nanoseconds).
+    pub const REQ_SUCCESSORS: &str = "req.successors.ns";
+    pub const REQ_CSX: &str = "req.csx.ns";
+    pub const REQ_COO: &str = "req.coo.ns";
+    pub const REQ_PARTITION: &str = "req.partition.ns";
+    /// Buffer-claim wait (histogram, nanoseconds).
+    pub const BUFFER_CLAIM_WAIT: &str = "buffer.claim_wait.ns";
+    /// Per-block decode time (histograms, nanoseconds): real clock and
+    /// the §3 model's virtual clock for the same blocks.
+    pub const DECODE_BLOCK_REAL: &str = "decode.block.real_ns";
+    pub const DECODE_BLOCK_VIRT: &str = "decode.block.virt_ns";
+    /// Decoded-block cache (counters).
+    pub const CACHE_HITS: &str = "cache.decoded.hits";
+    pub const CACHE_MISSES: &str = "cache.decoded.misses";
+    pub const CACHE_EVICTIONS: &str = "cache.decoded.evictions";
+    /// Partition stream (counters).
+    pub const STREAM_PRODUCED: &str = "stream.produced";
+    pub const STREAM_CONSUMED: &str = "stream.consumed";
+    pub const STREAM_PREFETCH_HITS: &str = "stream.prefetch_hits";
+    pub const STREAM_CONSUMER_STALLS: &str = "stream.consumer_stalls";
+    pub const STREAM_PRODUCER_STALLS: &str = "stream.producer_stalls";
+    /// Distributed harness (counters, leader side).
+    pub const DIST_RETILES: &str = "dist.retiles";
+    pub const DIST_WORKERS_LOST: &str = "dist.workers_lost";
+    /// The request-kind histograms in display order (CLI tail rows).
+    pub const REQUEST_KINDS: [(&str, &str); 4] = [
+        ("successors", REQ_SUCCESSORS),
+        ("csx", REQ_CSX),
+        ("coo", REQ_COO),
+        ("partition", REQ_PARTITION),
+    ];
+}
+
+/// Serializes tests that toggle the process-wide kill-switch (they would
+/// otherwise race in the parallel test runner).
+#[cfg(test)]
+pub(crate) fn test_toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_switch_toggles() {
+        let _guard = test_toggle_lock();
+        let was = enabled();
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(was);
+    }
+}

@@ -1,0 +1,258 @@
+//! The metrics registry: named counters and histograms with cheap typed
+//! handles, plus plain-data snapshots that merge across threads and
+//! processes.
+//!
+//! A registry is *instantiable* — each opened graph owns one, so tests
+//! and concurrent graphs stay isolated — and aggregation happens on
+//! snapshots, not on live registries: `snapshot()` → `merge()` →
+//! `to_json()` is the whole cross-process story (the distributed worker
+//! ships its snapshot in its final frame; the leader merges by name).
+
+use std::collections::BTreeMap;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::hist::{HistSnapshot, Histogram};
+use crate::util::json::Json;
+
+/// A counter/gauge handle: one shared relaxed atomic. `Deref`s to
+/// [`AtomicU64`] so legacy counter-struct call sites
+/// (`stats.foo.fetch_add(..)`, `.load(..)`) keep working after the
+/// struct's fields become registry views.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A counter not attached to any registry (default construction of
+    /// counter structs outside a coordinator).
+    pub fn detached() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Gauge-style overwrite.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::detached()
+    }
+}
+
+impl Deref for Counter {
+    type Target = AtomicU64;
+    fn deref(&self) -> &AtomicU64 {
+        &self.0
+    }
+}
+
+/// A histogram handle. Recording respects the `PG_OBS` kill-switch.
+#[derive(Clone)]
+pub struct Histo(Arc<Histogram>);
+
+impl Histo {
+    pub fn detached() -> Histo {
+        Histo(Arc::new(Histogram::new()))
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::enabled() {
+            self.0.record(v);
+        }
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record modeled (virtual-clock) seconds as nanoseconds.
+    pub fn record_secs(&self, s: f64) {
+        if s >= 0.0 {
+            self.record((s * 1e9) as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.0.snapshot()
+    }
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::detached()
+    }
+}
+
+impl std::fmt::Debug for Histo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histo").field("total", &self.0.total()).finish()
+    }
+}
+
+/// Named metrics, get-or-create by name. Handle resolution takes a lock;
+/// recording through a resolved handle is lock-free — resolve once at
+/// construction time, never on the hot path.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    hists: Mutex<BTreeMap<String, Histo>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.counters.lock().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_insert_with(Counter::detached).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Histo {
+        let mut map = self.hists.lock().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_insert_with(Histo::detached).clone()
+    }
+
+    /// Point-in-time plain-data view of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, h)| (k.clone(), h.snapshot()))
+            .collect();
+        MetricsSnapshot { counters, hists }
+    }
+}
+
+/// Plain-data snapshot of a registry: mergeable by name, JSON
+/// round-trippable (this is the `BENCH_metrics.json` schema and the
+/// distributed metrics frame payload).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Merge by name: counters add, histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_insert_with(HistSnapshot::empty).merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, *v);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            hists.set(k, h.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("counters", counters).set("histograms", hists);
+        o
+    }
+
+    pub fn from_json(doc: &Json) -> Result<MetricsSnapshot, String> {
+        let mut s = MetricsSnapshot::default();
+        match doc.get("counters") {
+            Some(Json::Obj(map)) => {
+                for (k, v) in map {
+                    let v = v.as_u64().ok_or_else(|| format!("counter {k:?} not a u64"))?;
+                    s.counters.insert(k.clone(), v);
+                }
+            }
+            _ => return Err("metrics snapshot: missing counters".to_string()),
+        }
+        match doc.get("histograms") {
+            Some(Json::Obj(map)) => {
+                for (k, v) in map {
+                    s.hists.insert(k.clone(), HistSnapshot::from_json(v)?);
+                }
+            }
+            _ => return Err("metrics snapshot: missing histograms".to_string()),
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_state_by_name() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.add(3);
+        b.inc();
+        assert_eq!(r.counter("x").get(), 4);
+        let h1 = r.histogram("h");
+        let h2 = r.histogram("h");
+        h1.record(10);
+        h2.record(20);
+        assert_eq!(r.histogram("h").snapshot().total, 2);
+    }
+
+    #[test]
+    fn snapshot_merge_and_json_round_trip() {
+        let r1 = MetricsRegistry::new();
+        r1.counter("c").add(5);
+        r1.histogram("lat").record(100);
+        let r2 = MetricsRegistry::new();
+        r2.counter("c").add(7);
+        r2.counter("only2").inc();
+        r2.histogram("lat").record(300);
+        let mut merged = r1.snapshot();
+        merged.merge(&r2.snapshot());
+        assert_eq!(merged.counters["c"], 12);
+        assert_eq!(merged.counters["only2"], 1);
+        assert_eq!(merged.hists["lat"].total, 2);
+        let back = MetricsSnapshot::from_json(&merged.to_json()).unwrap();
+        assert_eq!(back, merged);
+    }
+
+    #[test]
+    fn counter_derefs_to_atomic() {
+        let c = Counter::detached();
+        c.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 2);
+        assert_eq!(c.get(), 2);
+    }
+}

@@ -1,0 +1,346 @@
+//! Always-on span tracing with dual clocks, bounded per-thread rings,
+//! and a Chrome trace-event (Perfetto-viewable) exporter.
+//!
+//! Design points:
+//!
+//! * **Ownership** — each recording thread owns one bounded [`Ring`]
+//!   (registered with the process [`Tracer`] on first use). Recording
+//!   locks only the thread's own ring (uncontended in steady state), so
+//!   a span is a timestamp read plus one short critical section: spans
+//!   are never torn, and a full ring drops the *oldest* span, never
+//!   blocks the recorder.
+//! * **Dual clocks** — every span carries a real monotonic duration and,
+//!   where the site computes one, the §3 model's virtual-clock duration.
+//!   The exporter emits two process lanes: pid 1 is the real timeline;
+//!   pid 2 replays the same spans on a per-thread virtual timeline built
+//!   by accumulating modeled durations, so Perfetto shows measured vs
+//!   modeled side by side.
+//! * **Kill-switch** — recording is gated on [`super::enabled`]
+//!   (`PG_OBS=off`); a disabled record is a single relaxed load.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::registry::Histo;
+use crate::util::json::Json;
+
+/// Spans retained per thread before the oldest is dropped.
+pub const RING_CAPACITY: usize = 8192;
+
+/// One completed span. `cat`/`name` are static so recording never
+/// allocates; `arg` carries the site's one interesting number (vertex,
+/// tile, block index…) into the exported event's `args`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Start, nanoseconds since the tracer epoch (real clock).
+    pub start_ns: u64,
+    /// Real monotonic duration.
+    pub dur_ns: u64,
+    /// §3 model virtual-clock duration (0 when the site has no model).
+    pub virt_dur_ns: u64,
+    /// Tracer-assigned recording-thread id.
+    pub tid: u64,
+    pub arg: u64,
+}
+
+/// A bounded span ring: push is O(1), overflow evicts the oldest.
+#[derive(Debug)]
+pub struct Ring {
+    buf: VecDeque<Span>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    pub fn with_capacity(cap: usize) -> Ring {
+        Ring { buf: VecDeque::with_capacity(cap.min(RING_CAPACITY)), cap, dropped: 0 }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(span);
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.buf.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans evicted so far (oldest-first drop policy).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The process-wide tracer: an epoch plus the registry of thread rings.
+pub struct Tracer {
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+    next_tid: AtomicU64,
+}
+
+thread_local! {
+    static THREAD_RING: std::cell::OnceCell<(u64, Arc<Mutex<Ring>>)> =
+        const { std::cell::OnceCell::new() };
+}
+
+/// The process tracer (lazily initialized).
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer {
+        epoch: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+        next_tid: AtomicU64::new(1),
+    })
+}
+
+impl Tracer {
+    fn with_thread_ring(&self, f: impl FnOnce(u64, &Mutex<Ring>)) {
+        THREAD_RING.with(|cell| {
+            let (tid, ring) = cell.get_or_init(|| {
+                let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+                let ring = Arc::new(Mutex::new(Ring::with_capacity(RING_CAPACITY)));
+                self.rings.lock().expect("tracer registry poisoned").push(Arc::clone(&ring));
+                (tid, ring)
+            });
+            f(*tid, ring);
+        });
+    }
+
+    /// Record one completed span (no-op when `PG_OBS=off`).
+    pub fn record(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        start: Instant,
+        dur: Duration,
+        virt_dur_ns: u64,
+        arg: u64,
+    ) {
+        if !super::enabled() {
+            return;
+        }
+        let start_ns =
+            u64::try_from(start.saturating_duration_since(self.epoch).as_nanos()).unwrap_or(u64::MAX);
+        let dur_ns = u64::try_from(dur.as_nanos()).unwrap_or(u64::MAX);
+        self.with_thread_ring(|tid, ring| {
+            ring.lock()
+                .expect("thread ring poisoned")
+                .push(Span { cat, name, start_ns, dur_ns, virt_dur_ns, tid, arg });
+        });
+    }
+
+    /// All retained spans across every thread ring plus the total
+    /// dropped-span count, sorted by real start time.
+    pub fn snapshot(&self) -> (Vec<Span>, u64) {
+        let rings = self.rings.lock().expect("tracer registry poisoned").clone();
+        let mut spans = Vec::new();
+        let mut dropped = 0;
+        for ring in rings {
+            let ring = ring.lock().expect("thread ring poisoned");
+            spans.extend(ring.spans().cloned());
+            dropped += ring.dropped();
+        }
+        spans.sort_by_key(|s| s.start_ns);
+        (spans, dropped)
+    }
+
+    /// Chrome trace-event JSON: pid 1 = real clock, pid 2 = virtual
+    /// clock (per-thread cumulative modeled timeline). Timestamps in µs.
+    pub fn chrome_trace(&self) -> Json {
+        let (spans, dropped) = self.snapshot();
+        let mut events = Json::Arr(Vec::new());
+        for (pid, label) in [(1u64, "real clock"), (2, "virtual clock (§3 model)")] {
+            let mut meta = Json::obj();
+            let mut args = Json::obj();
+            args.set("name", label);
+            meta.set("ph", "M").set("name", "process_name").set("pid", pid).set("args", args);
+            events.push(meta);
+        }
+        let event = |span: &Span, pid: u64, ts_us: f64, dur_us: f64| {
+            let mut e = Json::obj();
+            let mut args = Json::obj();
+            args.set("arg", span.arg).set("virt_dur_us", span.virt_dur_ns as f64 / 1e3);
+            e.set("name", span.name)
+                .set("cat", span.cat)
+                .set("ph", "X")
+                .set("ts", ts_us)
+                .set("dur", dur_us)
+                .set("pid", pid)
+                .set("tid", span.tid)
+                .set("args", args);
+            e
+        };
+        for span in &spans {
+            events.push(event(span, 1, span.start_ns as f64 / 1e3, span.dur_ns as f64 / 1e3));
+        }
+        // Virtual lane: replay modeled spans per thread, back to back —
+        // the modeled timeline has no global origin, only durations.
+        let mut cum: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+        for span in &spans {
+            if span.virt_dur_ns == 0 {
+                continue;
+            }
+            let ts = cum.entry(span.tid).or_insert(0.0);
+            let dur_us = span.virt_dur_ns as f64 / 1e3;
+            events.push(event(span, 2, *ts, dur_us));
+            *ts += dur_us;
+        }
+        let mut other = Json::obj();
+        other.set("dropped_spans", dropped).set("span_count", spans.len());
+        let mut doc = Json::obj();
+        doc.set("traceEvents", events).set("displayTimeUnit", "ms").set("otherData", other);
+        doc
+    }
+
+    /// Write the Chrome trace to a file (the `Options::trace_path` /
+    /// `paragrapher trace` exporter).
+    pub fn export(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace().to_string_pretty())
+    }
+}
+
+/// RAII span: times from construction to drop, records into the process
+/// tracer and (optionally) a latency histogram — one guard covers every
+/// exit path of a request function.
+pub struct SpanGuard {
+    cat: &'static str,
+    name: &'static str,
+    start: Instant,
+    virt_dur_ns: u64,
+    arg: u64,
+    hist: Option<Histo>,
+}
+
+impl SpanGuard {
+    pub fn new(cat: &'static str, name: &'static str) -> SpanGuard {
+        SpanGuard { cat, name, start: Instant::now(), virt_dur_ns: 0, arg: 0, hist: None }
+    }
+
+    /// Also record the real duration into `hist` on drop.
+    pub fn with_hist(mut self, hist: Histo) -> SpanGuard {
+        self.hist = Some(hist);
+        self
+    }
+
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+
+    /// Attach the site's modeled (virtual-clock) duration.
+    pub fn set_virt_secs(&mut self, secs: f64) {
+        if secs >= 0.0 {
+            self.virt_dur_ns = (secs * 1e9) as u64;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = self.start.elapsed();
+        if let Some(hist) = &self.hist {
+            hist.record_duration(dur);
+        }
+        tracer().record(self.cat, self.name, self.start, dur, self.virt_dur_ns, self.arg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_drops_oldest_never_tears() {
+        let mut ring = Ring::with_capacity(4);
+        for i in 0..10u64 {
+            ring.push(Span {
+                cat: "t",
+                name: "s",
+                start_ns: i * 100,
+                dur_ns: i * 100 + 1,
+                virt_dur_ns: i * 100 + 2,
+                tid: 1,
+                arg: i,
+            });
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let retained: Vec<u64> = ring.spans().map(|s| s.arg).collect();
+        // Newest 4 survive, in order.
+        assert_eq!(retained, vec![6, 7, 8, 9]);
+        // Never torn: every retained span's fields are self-consistent.
+        for s in ring.spans() {
+            assert_eq!(s.start_ns, s.arg * 100);
+            assert_eq!(s.dur_ns, s.arg * 100 + 1);
+            assert_eq!(s.virt_dur_ns, s.arg * 100 + 2);
+        }
+    }
+
+    #[test]
+    fn tracer_records_and_exports_dual_lanes() {
+        let _guard = super::super::test_toggle_lock();
+        super::super::set_enabled(true);
+        let t = tracer();
+        let start = Instant::now();
+        t.record("unit-test-cat", "span-a", start, Duration::from_micros(5), 2_000, 7);
+        t.record("unit-test-cat", "span-b", start, Duration::from_micros(3), 0, 8);
+        let (spans, _) = t.snapshot();
+        assert!(spans.iter().any(|s| s.cat == "unit-test-cat" && s.name == "span-a"));
+        let doc = t.chrome_trace();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // Both clock lanes are present…
+        let pids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .filter_map(|e| e.get("pid").and_then(Json::as_u64))
+            .collect();
+        assert!(pids.contains(&1));
+        assert!(pids.contains(&2), "virtual lane missing: {pids:?}");
+        // …and the export re-parses as valid JSON.
+        let text = doc.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn kill_switch_suppresses_recording() {
+        let _guard = super::super::test_toggle_lock();
+        let t = tracer();
+        super::super::set_enabled(false);
+        let before = t.snapshot().0.len();
+        t.record("killed-cat", "x", Instant::now(), Duration::from_nanos(1), 0, 0);
+        super::super::set_enabled(true);
+        let after: usize = t.snapshot().0.iter().filter(|s| s.cat == "killed-cat").count();
+        assert_eq!(after, 0, "span recorded despite kill-switch (before={before})");
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let _guard = super::super::test_toggle_lock();
+        super::super::set_enabled(true);
+        let hist = Histo::detached();
+        {
+            let mut g = SpanGuard::new("guard-test-cat", "guarded").with_hist(hist.clone());
+            g.set_arg(42);
+            g.set_virt_secs(1e-6);
+        }
+        assert_eq!(hist.snapshot().total, 1);
+        let (spans, _) = tracer().snapshot();
+        let s = spans.iter().find(|s| s.cat == "guard-test-cat").expect("guard span");
+        assert_eq!(s.arg, 42);
+        assert_eq!(s.virt_dur_ns, 1_000);
+    }
+}

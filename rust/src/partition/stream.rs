@@ -27,6 +27,7 @@ use anyhow::{bail, Result};
 use super::Partition;
 use crate::formats::webgraph::DecodedBlock;
 use crate::graph::VertexId;
+use crate::obs::{self, Counter};
 
 /// One delivered partition: its plan metadata plus the decoded CSR slice
 /// (rows of `part.vertices`, edges filtered to `part.targets` for 2D tiles
@@ -87,6 +88,21 @@ impl StreamCounters {
     }
 }
 
+/// Registry mirrors of the per-stream counters: handles resolved from the
+/// owning graph's [`MetricsRegistry`](crate::obs::MetricsRegistry), so
+/// stream health shows up in one mergeable snapshot alongside everything
+/// else. Detached (no-op aggregation) for streams built outside a
+/// coordinator. The per-stream [`StreamCounters`] stay authoritative for
+/// `counters()` — the mirrors are cumulative per registry, not per stream.
+#[derive(Debug, Clone, Default)]
+pub struct StreamObs {
+    pub produced: Counter,
+    pub consumed: Counter,
+    pub prefetch_hits: Counter,
+    pub consumer_stalls: Counter,
+    pub producer_stalls: Counter,
+}
+
 #[derive(Debug, Default)]
 struct StreamState {
     ready: VecDeque<LoadedPartition>,
@@ -116,10 +132,16 @@ pub struct StreamShared {
     hits: AtomicU64,
     consumer_stalls: AtomicU64,
     producer_stalls: AtomicU64,
+    obs: StreamObs,
 }
 
 impl StreamShared {
     pub(crate) fn new(total: usize, window: usize) -> Arc<Self> {
+        Self::new_with_obs(total, window, StreamObs::default())
+    }
+
+    /// Coordinator constructor: mirror counters into the graph registry.
+    pub(crate) fn new_with_obs(total: usize, window: usize, obs: StreamObs) -> Arc<Self> {
         Arc::new(Self {
             // A zero-partition stream is born exhausted — consumers must
             // see Ok(None), not park for pushes that will never come.
@@ -131,6 +153,7 @@ impl StreamShared {
             hits: AtomicU64::new(0),
             consumer_stalls: AtomicU64::new(0),
             producer_stalls: AtomicU64::new(0),
+            obs,
         })
     }
 
@@ -140,28 +163,36 @@ impl StreamShared {
     /// dispatcher can never run more than `window` partitions ahead of
     /// consumption even while every decode is still on a worker.
     pub(crate) fn wait_for_window(&self) -> bool {
+        let t0 = std::time::Instant::now();
         let mut g = self.state.lock().expect("stream lock");
         let mut stalled = false;
-        loop {
+        let result = loop {
             if self.cancelled.load(Ordering::Acquire) || g.failed.is_some() {
-                return false;
+                break false;
             }
             if g.scheduled.saturating_sub(g.consumed) < self.window {
                 g.scheduled += 1;
-                return true;
+                break true;
             }
             if !stalled {
                 stalled = true;
                 self.producer_stalls.fetch_add(1, Ordering::Relaxed);
+                self.obs.producer_stalls.inc();
             }
             g = self.cv.wait(g).expect("stream producer wait");
+        };
+        drop(g);
+        if stalled {
+            obs::tracer().record("stream", "producer-stall", t0, t0.elapsed(), 0, 0);
         }
+        result
     }
 
     /// Producer: stage one decoded partition.
     pub(crate) fn push(&self, item: LoadedPartition) {
         let mut g = self.state.lock().expect("stream lock");
         g.produced += 1;
+        self.obs.produced.inc();
         if !self.cancelled.load(Ordering::Acquire) {
             g.ready.push_back(item);
         }
@@ -195,6 +226,7 @@ impl StreamShared {
     }
 
     fn next(&self) -> Result<Option<LoadedPartition>> {
+        let t0 = std::time::Instant::now();
         let mut g = self.state.lock().expect("stream lock");
         let mut stalled = false;
         loop {
@@ -206,14 +238,21 @@ impl StreamShared {
             }
             if let Some(item) = g.ready.pop_front() {
                 g.consumed += 1;
+                self.obs.consumed.inc();
                 if stalled {
                     self.consumer_stalls.fetch_add(1, Ordering::Relaxed);
+                    self.obs.consumer_stalls.inc();
                 } else {
                     self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.obs.prefetch_hits.inc();
                 }
                 // Wake the producer parked on window space (and fellow
                 // consumers racing for remaining items).
                 self.cv.notify_all();
+                drop(g);
+                if stalled {
+                    obs::tracer().record("stream", "consumer-stall", t0, t0.elapsed(), 0, 0);
+                }
                 return Ok(Some(item));
             }
             if g.done_producing {

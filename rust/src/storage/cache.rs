@@ -15,8 +15,9 @@
 //! format types; formats instantiate it with `DecodedBlock`.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::obs::Counter;
 
 /// Page granularity of the model (16 KiB "super-pages": coarse enough to
 /// keep bookkeeping cheap, fine enough that small files span several).
@@ -219,15 +220,35 @@ struct DecodedInner<T> {
 /// and the cache is `Send + Sync` when `T` is.
 pub struct DecodedCache<T> {
     inner: Mutex<DecodedInner<T>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
     capacity_cost: u64,
     cost: fn(&T) -> u64,
 }
 
 impl<T> DecodedCache<T> {
     pub fn new(capacity_cost: u64, cost: fn(&T) -> u64) -> Self {
+        Self::with_counters(
+            capacity_cost,
+            cost,
+            Counter::detached(),
+            Counter::detached(),
+            Counter::detached(),
+        )
+    }
+
+    /// Construct with registry-resolved counter handles, so the cache's
+    /// hit/miss/eviction counts show up in the owning graph's
+    /// [`crate::obs::MetricsRegistry`] snapshot as well as in
+    /// [`counters`](Self::counters).
+    pub fn with_counters(
+        capacity_cost: u64,
+        cost: fn(&T) -> u64,
+        hits: Counter,
+        misses: Counter,
+        evictions: Counter,
+    ) -> Self {
         Self {
             inner: Mutex::new(DecodedInner {
                 map: HashMap::new(),
@@ -235,9 +256,9 @@ impl<T> DecodedCache<T> {
                 tick: 0,
                 resident_cost: 0,
             }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            hits,
+            misses,
+            evictions,
             capacity_cost,
             cost,
         }
@@ -263,11 +284,11 @@ impl<T> DecodedCache<T> {
                 inner.order.remove(&entry.last_used);
                 entry.last_used = tick;
                 inner.order.insert(tick, key);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 Some(Arc::clone(&entry.value))
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 None
             }
         }
@@ -301,7 +322,7 @@ impl<T> DecodedCache<T> {
             inner.order.remove(&lru_tick);
             let evicted = inner.map.remove(&lru).expect("lru entry present");
             inner.resident_cost -= evicted.cost;
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
         }
     }
 
@@ -324,9 +345,9 @@ impl<T> DecodedCache<T> {
     pub fn counters(&self) -> CacheCounters {
         let inner = self.inner.lock().expect("decoded cache lock");
         CacheCounters {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
             resident_cost: inner.resident_cost,
             blocks: inner.map.len() as u64,
         }

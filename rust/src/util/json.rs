@@ -9,14 +9,37 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// A JSON value. `Object` uses a BTreeMap so output is deterministic.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Numbers come in two variants: `Num` (f64, the general case) and `Uint`
+/// (exact u64, so large counters survive a round-trip without the 2^53
+/// precision cliff). Equality treats them as one numeric domain —
+/// `Num(42.0) == Uint(42)` — so callers never care which one a parse
+/// produced.
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    Uint(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Uint(a), Json::Uint(b)) => a == b,
+            (Json::Num(a), Json::Uint(b)) | (Json::Uint(b), Json::Num(a)) => *a == *b as f64,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -73,6 +96,19 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Uint(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned access: `Uint` verbatim, or a `Num` that is a whole
+    /// non-negative value within u64 range.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Uint(n) => Some(*n),
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < u64::MAX as f64 => {
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
@@ -109,6 +145,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{}", n);
                 }
+            }
+            Json::Uint(n) => {
+                let _ = write!(out, "{}", n);
             }
             Json::Str(s) => {
                 out.push('"');
@@ -302,6 +341,12 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| format!("non-UTF-8 number at byte {start}"))?;
+        // Unsigned integer literals parse exactly (no f64 round-trip), so
+        // 64-bit counters survive the wire; anything signed, fractional,
+        // exponential or past u64::MAX falls back to f64.
+        if let Ok(u) = text.parse::<u64>() {
+            return Ok(Json::Uint(u));
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| format!("bad number {text:?} at byte {start}"))
@@ -500,12 +545,12 @@ impl From<f64> for Json {
 }
 impl From<u64> for Json {
     fn from(v: u64) -> Self {
-        Json::Num(v as f64)
+        Json::Uint(v)
     }
 }
 impl From<usize> for Json {
     fn from(v: usize) -> Self {
-        Json::Num(v as f64)
+        Json::Uint(v as u64)
     }
 }
 impl From<i64> for Json {
@@ -515,7 +560,7 @@ impl From<i64> for Json {
 }
 impl From<u32> for Json {
     fn from(v: u32) -> Self {
-        Json::Num(v as f64)
+        Json::Uint(u64::from(v))
     }
 }
 impl From<bool> for Json {
@@ -604,6 +649,25 @@ mod tests {
             Json::parse("9007199254740991").unwrap(),
             Json::Num(9007199254740991.0)
         );
+    }
+
+    #[test]
+    fn large_u64_round_trips_exactly() {
+        for v in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1, 9_223_372_036_854_775_807] {
+            let text = Json::from(v).to_string_pretty();
+            assert_eq!(text, v.to_string());
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_u64(), Some(v), "{v} must survive the round-trip");
+        }
+        // Num↔Uint numeric cross-equality (one numeric domain).
+        assert_eq!(Json::Num(42.0), Json::Uint(42));
+        assert_ne!(Json::Num(42.5), Json::Uint(42));
+        // Past-2^53 values differ from their f64 rounding only in Uint form.
+        assert_eq!(Json::parse("18446744073709551615").unwrap(), Json::Uint(u64::MAX));
+        // Overflowing u64 falls back to f64.
+        assert!(matches!(Json::parse("18446744073709551616").unwrap(), Json::Num(_)));
+        // Signed stays f64.
+        assert!(matches!(Json::parse("-17").unwrap(), Json::Num(_)));
     }
 
     #[test]

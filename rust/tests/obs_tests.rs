@@ -1,0 +1,154 @@
+//! End-to-end observability tests: the per-graph metrics registry fed by
+//! real loads, cross-graph snapshot merge + JSON round-trip (the
+//! distributed metrics-frame schema), and the always-on tracer's
+//! dual-clock Chrome export via `Options::trace_path`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use paragrapher::coordinator::{GraphType, Options, Paragrapher};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::{generators, CsrGraph};
+use paragrapher::obs::{names, MetricsSnapshot};
+use paragrapher::storage::{DeviceKind, SimStore};
+use paragrapher::util::json::Json;
+
+fn store_with(g: &CsrGraph, base: &str) -> Arc<SimStore> {
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(g, base) {
+        store.put(&name, data);
+    }
+    store
+}
+
+fn open(
+    store: &Arc<SimStore>,
+    base: &str,
+    opts: Options,
+) -> paragrapher::coordinator::PgGraph {
+    Paragrapher::init()
+        .open_graph(Arc::clone(store), base, GraphType::CsxWg400, opts)
+        .expect("open graph")
+}
+
+#[test]
+fn registry_covers_the_request_path() {
+    let g = generators::barabasi_albert(3000, 6, 11);
+    let store = store_with(&g, "g");
+    let graph = open(
+        &store,
+        "g",
+        Options { buffers: 2, buffer_edges: 4000, ..Options::default() },
+    );
+
+    // One of each request kind.
+    let block = graph.load_whole_graph().expect("load");
+    assert_eq!(block.num_edges(), g.num_edges());
+    for v in [0usize, 17, 1234] {
+        let _ = graph.successors(v).expect("successors");
+    }
+    let stream = graph.csx_get_partitions(4).expect("partitions");
+    let edges = AtomicU64::new(0);
+    paragrapher::algorithms::partitioned::for_each_partition(&stream, 2, |p| {
+        edges.fetch_add(p.num_edges(), Ordering::Relaxed);
+        Ok(())
+    })
+    .expect("drain stream");
+    assert_eq!(edges.load(Ordering::Relaxed), g.num_edges());
+
+    let snap = graph.metrics_snapshot();
+    // Request-kind latency histograms.
+    assert_eq!(snap.hists[names::REQ_CSX].total, 1, "one whole-graph csx request");
+    assert_eq!(snap.hists[names::REQ_SUCCESSORS].total, 3);
+    assert_eq!(snap.hists[names::REQ_PARTITION].total, 4);
+    assert!(snap.hists[names::BUFFER_CLAIM_WAIT].total >= 1, "buffer claims recorded");
+    // Decode histograms: both clocks see the same blocks.
+    let real = &snap.hists[names::DECODE_BLOCK_REAL];
+    let virt = &snap.hists[names::DECODE_BLOCK_VIRT];
+    assert!(real.total >= 1, "block decodes recorded");
+    assert_eq!(real.total, virt.total, "dual clocks record the same blocks");
+    // Counter mirrors: the stream counters surface under registry names…
+    assert_eq!(snap.counters[names::STREAM_PRODUCED], 4);
+    assert_eq!(snap.counters[names::STREAM_CONSUMED], 4);
+    assert!(snap.counters.contains_key(names::CACHE_HITS));
+    // …and the legacy GraphStats fields are views over the same registry.
+    assert_eq!(
+        snap.counters["graph.blocks_decoded"],
+        graph.stats().blocks_decoded.load(Ordering::Relaxed)
+    );
+    assert!(snap.counters["graph.blocks_decoded"] >= 1);
+    // Whole-graph load decoded every edge once; the partition drain
+    // decoded them again.
+    assert!(snap.counters["graph.edges_decoded"] >= 2 * g.num_edges());
+}
+
+#[test]
+fn snapshots_merge_across_graphs_and_round_trip() {
+    let g = generators::barabasi_albert(2000, 5, 7);
+    let store = store_with(&g, "g");
+    let a = open(&store, "g", Options::default());
+    let b = open(&store, "g", Options::default());
+    a.load_whole_graph().expect("load a");
+    b.load_whole_graph().expect("load b");
+    let sa = a.metrics_snapshot();
+    let sb = b.metrics_snapshot();
+    // Registries are per-graph: each saw exactly its own request.
+    assert_eq!(sa.hists[names::REQ_CSX].total, 1);
+    assert_eq!(sb.hists[names::REQ_CSX].total, 1);
+    let mut merged = sa.clone();
+    merged.merge(&sb);
+    assert_eq!(merged.hists[names::REQ_CSX].total, 2);
+    assert_eq!(
+        merged.counters["graph.edges_decoded"],
+        sa.counters["graph.edges_decoded"] + sb.counters["graph.edges_decoded"]
+    );
+    // The wire schema round-trips exactly (the distributed metrics frame
+    // and the ci-summary --json payload share it).
+    let back = MetricsSnapshot::from_json(&merged.to_json()).expect("parse snapshot");
+    assert_eq!(back, merged);
+}
+
+#[test]
+fn trace_path_exports_dual_clock_chrome_trace_on_release() {
+    let dir = std::env::temp_dir().join(format!("pg_obs_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("trace dir");
+    let path = dir.join("trace.json");
+
+    let g = generators::barabasi_albert(2500, 6, 13);
+    let store = store_with(&g, "g");
+    let pg = Paragrapher::init();
+    let graph = pg
+        .open_graph(
+            Arc::clone(&store),
+            "g",
+            GraphType::CsxWg400,
+            Options {
+                trace_path: Some(path.clone()),
+                buffer_edges: 3000,
+                ..Options::default()
+            },
+        )
+        .expect("open graph");
+    let block = graph.load_whole_graph().expect("load");
+    assert_eq!(block.num_edges(), g.num_edges());
+    let _ = graph.successors(42).expect("successors");
+    pg.release_graph(graph); // exports to trace_path
+
+    let text = std::fs::read_to_string(&path).expect("trace file written on release");
+    let doc = Json::parse(&text).expect("trace is valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    let complete: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    let cats: std::collections::BTreeSet<&str> =
+        complete.iter().filter_map(|e| e.get("cat").and_then(Json::as_str)).collect();
+    for want in ["request", "buffer", "decode", "delivery"] {
+        assert!(cats.contains(want), "missing span category {want:?} in {cats:?}");
+    }
+    let pids: std::collections::BTreeSet<u64> =
+        complete.iter().filter_map(|e| e.get("pid").and_then(Json::as_u64)).collect();
+    assert!(pids.contains(&1), "real-clock lane missing: {pids:?}");
+    assert!(pids.contains(&2), "virtual-clock lane missing: {pids:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
