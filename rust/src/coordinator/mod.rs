@@ -33,6 +33,7 @@
 pub mod buffer;
 pub mod request;
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -99,6 +100,11 @@ pub enum PgError {
     /// A persistent artifact failed validation: a truncated/corrupt sidecar
     /// or a shipped plan that disagrees with the opened graph.
     Corrupt(String),
+    /// A read fault that could not be healed: the checksum sidecar says
+    /// the data at rest is fine (or cannot say), but the read kept failing
+    /// past the retry budget — the block is quarantined so one flaky
+    /// region cannot wedge the request stream.
+    Faulted(String),
 }
 
 impl std::fmt::Display for PgError {
@@ -106,6 +112,7 @@ impl std::fmt::Display for PgError {
         match self {
             PgError::Closed(why) => write!(f, "graph handle closed: {why}"),
             PgError::Corrupt(why) => write!(f, "corrupt input: {why}"),
+            PgError::Faulted(why) => write!(f, "unhealed read fault: {why}"),
         }
     }
 }
@@ -178,6 +185,13 @@ pub struct Options {
     /// When set, [`PgGraph::release`] exports the process-wide span trace
     /// as Chrome trace-event JSON (Perfetto-viewable) to this path.
     pub trace_path: Option<std::path::PathBuf>,
+    /// Retry budget of the self-healing read path: how many times a
+    /// *transient* decode/read fault (checksum sidecar says the data at
+    /// rest is fine) is retried before the block is quarantined. Checksum
+    /// mismatches never retry — corruption at rest cannot be outwaited.
+    pub read_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub retry_backoff: Duration,
     /// Dead since the event-driven coordinator (PR 1): the request manager
     /// parks on the buffer pool's condvar and is woken by the next recycle;
     /// no code path reads or sleeps on this value.
@@ -203,6 +217,8 @@ impl std::fmt::Debug for Options {
             .field("source_cache_cost", &self.source_cache_cost)
             .field("cache_budget", &self.cache_budget)
             .field("trace_path", &self.trace_path)
+            .field("read_retries", &self.read_retries)
+            .field("retry_backoff", &self.retry_backoff)
             .finish()
     }
 }
@@ -223,6 +239,8 @@ impl Clone for Options {
             source_cache_cost: self.source_cache_cost,
             cache_budget: self.cache_budget,
             trace_path: self.trace_path.clone(),
+            read_retries: self.read_retries,
+            retry_backoff: self.retry_backoff,
             poll_interval: self.poll_interval,
         }
     }
@@ -244,6 +262,8 @@ impl Default for Options {
             source_cache_cost: crate::formats::SourceConfig::default().cache_cost,
             cache_budget: None,
             trace_path: None,
+            read_retries: 2,
+            retry_backoff: Duration::from_millis(1),
             poll_interval: Duration::from_micros(200),
         }
     }
@@ -300,6 +320,21 @@ impl Paragrapher {
         }
         let offsets = webgraph::read_offsets(&store, base, options.read_ctx, &meta_acct)?;
         offsets.check_matches(&meta).with_context(|| base.to_string())?;
+        // Open-time integrity gate: verify the `.graph` header chunk against
+        // the checksums sidecar — O(1) in file size, catches a corrupted
+        // stream before any request is issued. Directories written before
+        // the sidecar existed are tolerated (no sidecar ⇒ no gate);
+        // `verify_range` only fails here on a real mismatch.
+        if store.file_len(&format!("{base}.checksums")).is_some() {
+            if let Err(e) =
+                webgraph::integrity::verify_range(&store, base, 0, 1, options.read_ctx, &meta_acct)
+            {
+                return Err(PgError::Corrupt(format!(
+                    "{base}: header chunk failed open-time verification: {e}"
+                ))
+                .into());
+            }
+        }
         let sequential_cpu = t0.elapsed().as_secs_f64();
         let sequential_io = meta_acct.io_seconds();
 
@@ -329,6 +364,8 @@ impl Paragrapher {
             random_acct: IoAccount::new(),
             obs: ObsHandles::resolve(&metrics),
             metrics,
+            quarantine: Mutex::new(HashSet::new()),
+            fault_injected_seen: AtomicU64::new(0),
         });
         inner.stats.sequential_seconds.store(
             ((sequential_cpu + sequential_io) * 1e9) as u64,
@@ -458,6 +495,13 @@ struct ObsHandles {
     buffer_claim_wait: Histo,
     decode_block_real: Histo,
     decode_block_virt: Histo,
+    /// Fault/self-healing counters. `fault_injected` and `read_degraded`
+    /// mirror store-owned state (synced by [`GraphInner::sync_fault_obs`]);
+    /// the other two are incremented directly by the healing path.
+    fault_injected: Counter,
+    read_retries: Counter,
+    read_degraded: Counter,
+    block_quarantined: Counter,
 }
 
 impl ObsHandles {
@@ -470,6 +514,10 @@ impl ObsHandles {
             buffer_claim_wait: reg.histogram(names::BUFFER_CLAIM_WAIT),
             decode_block_real: reg.histogram(names::DECODE_BLOCK_REAL),
             decode_block_virt: reg.histogram(names::DECODE_BLOCK_VIRT),
+            fault_injected: reg.counter(names::FAULT_INJECTED),
+            read_retries: reg.counter(names::READ_RETRIES),
+            read_degraded: reg.counter(names::READ_DEGRADED),
+            block_quarantined: reg.counter(names::BLOCK_QUARANTINED),
         }
     }
 }
@@ -495,6 +543,16 @@ struct GraphInner {
     metrics: Arc<MetricsRegistry>,
     /// Hot-path histogram handles (resolved once at open).
     obs: ObsHandles,
+    /// Blocks (keyed by vertex range) the self-healing path gave up on:
+    /// a checksum-confirmed corrupt block, or a transient fault that
+    /// outlived the retry budget. Quarantined blocks fail fast with a
+    /// typed error instead of burning the retry budget on every request.
+    quarantine: Mutex<HashSet<(usize, usize)>>,
+    /// Watermark of the store's injected-fault count at the last
+    /// [`Self::sync_fault_obs`]: the store's count lives on the *installed*
+    /// fault plan, so swapping plans resets it — the delta fold below is
+    /// what keeps the registry's `fault.injected` cumulative per graph.
+    fault_injected_seen: AtomicU64,
 }
 
 impl GraphInner {
@@ -504,6 +562,24 @@ impl GraphInner {
         let dur = t_claim.elapsed();
         self.obs.buffer_claim_wait.record_duration(dur);
         obs::tracer().record("buffer", "claim-wait", t_claim, dur, 0, buffer_id as u64);
+    }
+
+    /// Mirror the store-owned fault state into the registry so one metrics
+    /// snapshot carries it; called on every healing event and on snapshot,
+    /// so a clean run reports exact zeros. `fault.injected` folds positive
+    /// deltas over a watermark (cumulative across plan swaps — a swap
+    /// resets the store-side count); `read.degraded` is a plain gauge of
+    /// currently-degraded files.
+    fn sync_fault_obs(&self) {
+        let now = self.store.fault_injected();
+        let prev = self.fault_injected_seen.swap(now, Ordering::Relaxed);
+        if now > prev {
+            self.obs.fault_injected.add(now - prev);
+        } else if now < prev {
+            // New plan epoch: everything it injected so far is new.
+            self.obs.fault_injected.add(now);
+        }
+        self.obs.read_degraded.set(self.store.degraded_files());
     }
 }
 
@@ -1232,18 +1308,24 @@ impl PgGraph {
             v,
             |lo, hi| {
                 let opts = self.options();
-                let dec = Decoder::open(
-                    &inner.store,
-                    &inner.base,
-                    &inner.meta,
-                    &inner.offsets,
-                    opts.read_ctx,
-                    &inner.random_acct,
-                )?;
-                let decoded =
-                    dec.decode_range_with_scan(lo, hi, &inner.random_acct, opts.scan.as_ref())?;
-                inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
-                Ok(decoded)
+                run_with_healing(inner, opts.read_ctx, lo, hi, || {
+                    let dec = Decoder::open(
+                        &inner.store,
+                        &inner.base,
+                        &inner.meta,
+                        &inner.offsets,
+                        opts.read_ctx,
+                        &inner.random_acct,
+                    )?;
+                    let decoded = dec.decode_range_with_scan(
+                        lo,
+                        hi,
+                        &inner.random_acct,
+                        opts.scan.as_ref(),
+                    )?;
+                    inner.stats.blocks_decoded.fetch_add(1, Ordering::Relaxed);
+                    Ok(decoded)
+                })
             },
         )?;
         inner.stats.random_accesses.fetch_add(1, Ordering::Relaxed);
@@ -1266,7 +1348,31 @@ impl PgGraph {
     /// mergeable/serializable unit the distributed worker ships to its
     /// leader and `ci-summary --json` exports.
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.inner.sync_fault_obs();
         self.inner.metrics.snapshot()
+    }
+
+    /// The store this graph reads from — the handle fault campaigns use to
+    /// install/clear a [`FaultPlan`](crate::storage::FaultPlan) underneath
+    /// a live graph.
+    pub fn store(&self) -> &Arc<SimStore> {
+        &self.inner.store
+    }
+
+    /// Blocks currently quarantined by the self-healing read path.
+    pub fn quarantined_blocks(&self) -> usize {
+        lock_recover(&self.inner.quarantine).len()
+    }
+
+    /// Lift every quarantine (e.g. after clearing a fault plan or
+    /// repairing the underlying files); returns how many blocks were
+    /// released. The obs counter keeps its cumulative count — it records
+    /// quarantine *events*, not current membership.
+    pub fn clear_quarantine(&self) -> usize {
+        let mut q = lock_recover(&self.inner.quarantine);
+        let n = q.len();
+        q.clear();
+        n
     }
 
     /// Virtual-I/O + CPU account charged by the random-access path
@@ -1339,6 +1445,92 @@ impl Drop for PgGraph {
     }
 }
 
+/// The self-healing read policy (DESIGN.md § Fault injection): run `body`
+/// (a re-runnable decode attempt over vertices `start_vertex..end_vertex`),
+/// and on failure classify the block's `.graph` byte range against the
+/// checksums sidecar through the *infallible* store paths:
+///
+/// * **Mismatch** — the data at rest is corrupt: quarantine the block and
+///   return [`PgError::Corrupt`] with the offending chunk. Retrying cannot
+///   help, so no retry is burned.
+/// * **Ok / Unverifiable** — the bytes at rest are fine (or no sidecar can
+///   say): treat the failure as transient and retry with doubling backoff
+///   up to `Options::read_retries` times; when the budget is exhausted,
+///   quarantine the block and return [`PgError::Faulted`].
+///
+/// Already-typed errors pass straight through: [`PgError::Closed`] means
+/// the handle (not the data) is the problem, and [`PgError::Corrupt`] was
+/// already classified by a lower layer. A quarantined block fails fast on
+/// entry — one flaky region must not re-pay the retry budget per request.
+fn run_with_healing<T>(
+    inner: &GraphInner,
+    read_ctx: ReadCtx,
+    start_vertex: usize,
+    end_vertex: usize,
+    mut body: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let key = (start_vertex, end_vertex);
+    if lock_recover(&inner.quarantine).contains(&key) {
+        return Err(PgError::Faulted(format!(
+            "block {start_vertex}..{end_vertex} is quarantined after repeated read faults"
+        ))
+        .into());
+    }
+    let (retries, backoff) = {
+        let o = lock_recover(&inner.options);
+        (o.read_retries, o.retry_backoff)
+    };
+    let mut attempt = 0u32;
+    loop {
+        let err = match body() {
+            Ok(v) => return Ok(v),
+            Err(e) => e,
+        };
+        inner.sync_fault_obs();
+        match err.downcast_ref::<PgError>() {
+            Some(PgError::Closed(_)) | Some(PgError::Corrupt(_)) => return Err(err),
+            _ => {}
+        }
+        // Classify the block's compressed byte range against the sidecar.
+        let byte0 = inner.offsets.bit_offset(start_vertex) / 8;
+        let byte1 = inner.offsets.bit_offset(end_vertex).div_ceil(8);
+        let verdict = webgraph::integrity::classify_range(
+            &inner.store,
+            &inner.base,
+            byte0,
+            byte1,
+            read_ctx,
+            &inner.random_acct,
+        );
+        if let webgraph::integrity::Verdict::Mismatch { chunk } = verdict {
+            lock_recover(&inner.quarantine).insert(key);
+            inner.obs.block_quarantined.inc();
+            return Err(PgError::Corrupt(format!(
+                "checksum mismatch in chunk {chunk} covering vertices \
+                 {start_vertex}..{end_vertex}: {err:#}"
+            ))
+            .into());
+        }
+        // Transient (sidecar says the bytes at rest are fine, or cannot
+        // say): retry inside the budget, quarantine past it.
+        if attempt >= retries {
+            lock_recover(&inner.quarantine).insert(key);
+            inner.obs.block_quarantined.inc();
+            return Err(PgError::Faulted(format!(
+                "transient fault persisted through {} attempts at vertices \
+                 {start_vertex}..{end_vertex}: {err:#}",
+                attempt + 1
+            ))
+            .into());
+        }
+        inner.obs.read_retries.inc();
+        // Doubling backoff, capped at 2^10 so a generous retry budget
+        // cannot compound into a multi-minute sleep.
+        std::thread::sleep(backoff * 2u32.saturating_pow(attempt.min(10)));
+        attempt += 1;
+    }
+}
+
 /// Producer-side block decode: claim C_REQUESTED -> J_READING, decode
 /// *straight into* the buffer's storage, publish J_READ_COMPLETED (or fail
 /// back to C_IDLE). Returns true when the buffer holds a decoded block
@@ -1396,7 +1588,10 @@ fn decode_into_buffer(
     // worker 0 was not the block's critical path.
     let weights_acct = IoAccount::new();
     let t0 = Instant::now();
-    let result = (|| -> Result<(u64, u64)> {
+    // The attempt body is re-runnable — `data.clear()` leads every attempt,
+    // so a retry decodes into a clean buffer — which is what lets
+    // `run_with_healing` drive it under the retry/quarantine policy.
+    let result = run_with_healing(inner, read_ctx, meta.start_vertex, meta.end_vertex, || {
         let dec = Decoder::open(
             &inner.store,
             &inner.base,
@@ -1466,7 +1661,7 @@ fn decode_into_buffer(
             + data.weights.len() * std::mem::size_of::<crate::graph::Weight>())
             as u64;
         Ok((payload, stitched))
-    })();
+    });
     match result {
         Ok((payload, stitched)) => {
             let modeled =
@@ -1518,7 +1713,12 @@ fn decode_into_buffer(
 /// that is not a multiple of 4) is a [`PgError::Corrupt`] error, never a
 /// panic: the store clamps out-of-range reads at EOF like `pread`, so a
 /// truncated file surfaces here as `bytes.len() < byte_len` and must fail
-/// the block cleanly.
+/// the block cleanly. Reads go through the *fallible* store path, so an
+/// injected [`IoFault`](crate::storage::IoFault) propagates untyped and
+/// the healing policy treats it as transient. A short *result* is typed by
+/// what the file actually holds: if the file has the requested bytes the
+/// shortfall was a torn read (untyped ⇒ transient, retryable); only a file
+/// that is genuinely too small is [`PgError::Corrupt`].
 fn read_weights_into(
     file: &crate::storage::SimFile<'_>,
     byte_offset: u64,
@@ -1526,15 +1726,25 @@ fn read_weights_into(
     ctx: ReadCtx,
     acct: &IoAccount,
     out: &mut Vec<crate::graph::Weight>,
-) -> std::result::Result<(), PgError> {
+) -> Result<()> {
     out.clear();
-    let bytes = file.read_borrowed(byte_offset, byte_len, ctx, acct);
+    let bytes = file.try_read_borrowed(byte_offset, byte_len, ctx, acct)?;
     if bytes.len() as u64 != byte_len || bytes.len() % 4 != 0 {
+        if byte_offset + byte_len <= file.len() {
+            // The file holds the requested span, so the shortfall came from
+            // the read itself — transient, let the healing policy retry.
+            bail!(
+                "torn weights read: wanted {byte_len} bytes at offset {byte_offset}, \
+                 read yielded {}",
+                bytes.len()
+            );
+        }
         return Err(PgError::Corrupt(format!(
             "weights sidecar truncated or torn: wanted {byte_len} bytes at offset \
              {byte_offset}, file yields {}",
             bytes.len()
-        )));
+        ))
+        .into());
     }
     out.reserve(bytes.len() / 4);
     out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
@@ -1572,7 +1782,7 @@ fn decode_partition(
     let accounts: Vec<IoAccount> =
         (0..decode_workers.max(1)).map(|_| IoAccount::new()).collect();
     let t0 = Instant::now();
-    let result = (|| -> Result<DecodedBlock> {
+    let result = run_with_healing(inner, read_ctx, part.vertices.start, part.vertices.end, || {
         let dec = Decoder::open(
             &inner.store,
             &inner.base,
@@ -1598,7 +1808,7 @@ fn decode_partition(
             row_span,
             inner.meta.num_vertices,
         ))
-    })();
+    });
     match result {
         Ok(block) => {
             let modeled = crate::storage::vclock::phase_elapsed(&accounts);

@@ -13,7 +13,12 @@
 //!
 //! Leader death is the worker's own fault path: transport EOF or a torn
 //! frame releases the graph and exits nonzero (the coordinator's
-//! shutdown drain joins library threads even mid-stream).
+//! shutdown drain joins library threads even mid-stream). A leader that
+//! *silently* vanishes (SIGKILL'd process, dropped link — no FIN, so no
+//! EOF) is covered by liveness timeouts: the socket reads with
+//! [`READ_TIMEOUT`] and the worker exits cleanly once [`IDLE_BUDGET`] of
+//! consecutive silence accumulates, instead of blocking in `recv` forever
+//! as an orphan.
 
 use std::net::TcpStream;
 use std::path::PathBuf;
@@ -113,6 +118,21 @@ impl WorkerConfig {
     }
 }
 
+/// Per-read socket timeout: granularity at which a waiting worker rechecks
+/// its idle budget. Short enough that a dead leader is noticed promptly,
+/// long enough that the recheck itself is noise.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Consecutive leader silence a worker tolerates before concluding the
+/// leader is gone and exiting cleanly. Must comfortably exceed the
+/// leader's own per-tile deadline (seconds), so a leader that is merely
+/// waiting out a *sibling* worker's stall never loses this one too.
+const IDLE_BUDGET: Duration = Duration::from_secs(60);
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
 /// The worker main loop. Exits `Ok` only after a clean `Done` from the
 /// leader; every other exit releases the graph first so the coordinator's
 /// threads join (shutdown-safe drain) and then surfaces the error.
@@ -120,10 +140,28 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
     let mut stream = TcpStream::connect(&cfg.connect)
         .with_context(|| format!("worker {}: connect {}", cfg.index, cfg.connect))?;
     let _ = stream.set_nodelay(true);
+    // Liveness: never block in `recv` forever. Timeout-kinded errors tick
+    // an idle budget instead of failing the worker outright.
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .with_context(|| format!("worker {}: set read timeout", cfg.index))?;
 
-    let plan = match Msg::recv(&mut stream)? {
-        Some(Msg::Plan { plan }) => plan,
-        other => bail!("worker {}: expected the plan first, got {other:?}", cfg.index),
+    let mut idle = Duration::ZERO;
+    let plan = loop {
+        match Msg::recv(&mut stream) {
+            Ok(Some(Msg::Plan { plan })) => break plan,
+            Ok(other) => bail!("worker {}: expected the plan first, got {other:?}", cfg.index),
+            Err(e) if is_timeout(&e) => {
+                idle += READ_TIMEOUT;
+                if idle >= IDLE_BUDGET {
+                    bail!(
+                        "worker {}: no plan within {IDLE_BUDGET:?}; leader presumed dead",
+                        cfg.index
+                    );
+                }
+            }
+            Err(e) => return Err(anyhow::Error::from(e).context("worker transport")),
+        }
     };
     // Structural admission (`from_json` re-runs `check()`)…
     let plan = PartitionPlan::from_json(&plan)
@@ -148,6 +186,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
     .send(&mut stream)?;
 
     let mut completed = 0u64;
+    let mut idle = Duration::ZERO;
     let result = loop {
         match Msg::recv(&mut stream) {
             Ok(Some(Msg::Done)) => {
@@ -162,6 +201,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
                 break Ok(());
             }
             Ok(Some(Msg::Assign { tile })) => {
+                idle = Duration::ZERO;
                 let Some(part) = plan.parts.get(tile).copied() else {
                     break Err(anyhow::anyhow!(
                         "worker {}: leased tile {tile} outside the plan",
@@ -200,6 +240,19 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
                     "worker {}: leader transport closed mid-run",
                     cfg.index
                 ))
+            }
+            Err(e) if is_timeout(&e) => {
+                // Silence, not failure: tick the idle budget and keep
+                // listening. A leader that died without a FIN (SIGKILL,
+                // dropped link) never closes the socket, so this path is
+                // what keeps the worker from lingering as an orphan.
+                idle += READ_TIMEOUT;
+                if idle >= IDLE_BUDGET {
+                    break Err(anyhow::anyhow!(
+                        "worker {}: {IDLE_BUDGET:?} of leader silence; presumed dead",
+                        cfg.index
+                    ));
+                }
             }
             Err(e) => break Err(anyhow::Error::from(e).context("worker transport")),
         }

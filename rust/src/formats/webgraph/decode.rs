@@ -467,7 +467,7 @@ impl<'a> Decoder<'a> {
         let bit1 = self.offsets.bit_offset(v_end);
         let byte0 = bit0 / 8;
         let byte1 = (bit1 + 7) / 8;
-        let bytes = self.file.read_borrowed(byte0, byte1 - byte0, self.ctx, acct);
+        let bytes = self.file.try_read_borrowed(byte0, byte1 - byte0, self.ctx, acct)?;
 
         // Phase 1: bit-parse every vertex; stitch residual gaps into one
         // array (adjusting each segment head so a single inclusive scan
@@ -851,7 +851,7 @@ impl<'a> Decoder<'a> {
         let bit1 = self.offsets.bit_offset(v + 1);
         let byte0 = bit0 / 8;
         let byte1 = (bit1 + 7) / 8;
-        let local = self.file.read(byte0, byte1 - byte0, self.ctx, acct);
+        let local = self.file.try_read(byte0, byte1 - byte0, self.ctx, acct)?;
         let mut reader = BitReader::at_bit(&local, bit0 - byte0 * 8)
             .map_err(|e| anyhow::anyhow!("bit seek: {e}"))?;
         let mut parts = AdjParts::default();

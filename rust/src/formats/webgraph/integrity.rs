@@ -12,15 +12,139 @@ use crate::storage::{IoAccount, SimStore};
 /// Checksum chunk granularity (bytes of the `.graph` stream).
 pub const CHUNK: u64 = 64 << 10;
 
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
 /// FNV-1a 64-bit — cheap, order-sensitive, adequate for storage-integrity
 /// (not adversarial) checking.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+    let mut h = FNV_OFFSET;
     for &b in bytes {
         h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+        h = h.wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// Streaming builder of the `{base}.checksums` sidecar: feed the `.graph`
+/// stream in arbitrary flush-sized pieces and get a sidecar byte-identical
+/// to [`build_checksums`] over the concatenation. This is what lets
+/// `write_stream_to_dir` emit checksums without buffering the stream.
+#[derive(Debug)]
+pub struct ChecksumBuilder {
+    h: u64,
+    filled: u64,
+    sums: Vec<u64>,
+}
+
+impl ChecksumBuilder {
+    pub fn new() -> ChecksumBuilder {
+        ChecksumBuilder { h: FNV_OFFSET, filled: 0, sums: Vec::new() }
+    }
+
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        while !bytes.is_empty() {
+            let take = ((CHUNK - self.filled) as usize).min(bytes.len());
+            for &b in &bytes[..take] {
+                self.h ^= b as u64;
+                self.h = self.h.wrapping_mul(FNV_PRIME);
+            }
+            self.filled += take as u64;
+            if self.filled == CHUNK {
+                self.sums.push(self.h);
+                self.h = FNV_OFFSET;
+                self.filled = 0;
+            }
+            bytes = &bytes[take..];
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.filled > 0 {
+            self.sums.push(self.h);
+        }
+        let mut out = Vec::with_capacity(16 + self.sums.len() * 8);
+        out.extend_from_slice(&CHUNK.to_le_bytes());
+        out.extend_from_slice(&(self.sums.len() as u64).to_le_bytes());
+        for s in &self.sums {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+}
+
+impl Default for ChecksumBuilder {
+    fn default() -> Self {
+        ChecksumBuilder::new()
+    }
+}
+
+/// Typed outcome of a checksum classification — what the coordinator's
+/// self-healing path branches on (DESIGN.md § Fault injection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    /// Every chunk overlapping the range matches its recorded checksum:
+    /// whatever failed was *transient* — the data at rest is good.
+    Ok,
+    /// A chunk disagrees with the sidecar: the data at rest is corrupt;
+    /// retrying cannot help.
+    Mismatch { chunk: u64 },
+    /// No verdict possible (sidecar missing/malformed, range beyond the
+    /// checksummed region). Callers treat this as transient — absence of
+    /// a sidecar must never *create* a corruption error.
+    Unverifiable(String),
+}
+
+/// Classify the byte range `[start, end)` of `{base}.graph` against the
+/// checksums sidecar. Deliberately reads through the *infallible* store
+/// paths: classification is an independent verification channel and must
+/// return stable verdicts even while the fault plan is hammering
+/// `try_read` (DESIGN.md § Fault injection).
+pub fn classify_range(
+    store: &SimStore,
+    base: &str,
+    start: u64,
+    end: u64,
+    ctx: ReadCtx,
+    acct: &IoAccount,
+) -> Verdict {
+    let sums_name = format!("{base}.checksums");
+    let Some(sums_file) = store.open(&sums_name) else {
+        return Verdict::Unverifiable(format!("missing {sums_name}"));
+    };
+    let sums = sums_file.read(0, sums_file.len(), ctx, acct);
+    if sums.len() < 16 {
+        return Verdict::Unverifiable(format!("{sums_name}: truncated header"));
+    }
+    let chunk = u64::from_le_bytes(sums[0..8].try_into().unwrap());
+    let count = u64::from_le_bytes(sums[8..16].try_into().unwrap());
+    if chunk == 0 || sums.len() as u64 != 16 + count * 8 {
+        return Verdict::Unverifiable(format!("{sums_name}: malformed"));
+    }
+    let graph_name = format!("{base}.graph");
+    let Some(graph) = store.open(&graph_name) else {
+        return Verdict::Unverifiable(format!("missing {graph_name}"));
+    };
+    let end = end.min(graph.len());
+    if start >= end {
+        return Verdict::Ok;
+    }
+    let first = start / chunk;
+    let last = (end - 1) / chunk;
+    if last >= count {
+        return Verdict::Unverifiable(format!("{graph_name}: range beyond checksummed region"));
+    }
+    for c in first..=last {
+        let off = c * chunk;
+        let len = chunk.min(graph.len() - off);
+        let bytes = graph.read(off, len, ctx, acct);
+        let expect =
+            u64::from_le_bytes(sums[16 + c as usize * 8..24 + c as usize * 8].try_into().unwrap());
+        if fnv1a64(&bytes) != expect {
+            return Verdict::Mismatch { chunk: c };
+        }
+    }
+    Verdict::Ok
 }
 
 /// Build the `{base}.checksums` sidecar for a serialized `.graph` stream:
@@ -48,42 +172,13 @@ pub fn verify_range(
     ctx: ReadCtx,
     acct: &IoAccount,
 ) -> Result<()> {
-    let sums_name = format!("{base}.checksums");
-    let sums_file =
-        store.open(&sums_name).with_context(|| format!("missing {sums_name}"))?;
-    let sums = sums_file.read(0, sums_file.len(), ctx, acct);
-    if sums.len() < 16 {
-        bail!("{sums_name}: truncated header");
-    }
-    let chunk = u64::from_le_bytes(sums[0..8].try_into().unwrap());
-    let count = u64::from_le_bytes(sums[8..16].try_into().unwrap());
-    if chunk == 0 || sums.len() as u64 != 16 + count * 8 {
-        bail!("{sums_name}: malformed");
-    }
-    let graph_name = format!("{base}.graph");
-    let graph =
-        store.open(&graph_name).with_context(|| format!("missing {graph_name}"))?;
-    let end = end.min(graph.len());
-    if start >= end {
-        return Ok(());
-    }
-    let first = start / chunk;
-    let last = (end - 1) / chunk;
-    if last >= count {
-        bail!("{graph_name}: range beyond checksummed region");
-    }
-    for c in first..=last {
-        let off = c * chunk;
-        let len = chunk.min(graph.len() - off);
-        let bytes = graph.read(off, len, ctx, acct);
-        let expect =
-            u64::from_le_bytes(sums[16 + c as usize * 8..24 + c as usize * 8].try_into().unwrap());
-        let got = fnv1a64(&bytes);
-        if got != expect {
-            bail!("{graph_name}: checksum mismatch in chunk {c} (corrupt block)");
+    match classify_range(store, base, start, end, ctx, acct) {
+        Verdict::Ok => Ok(()),
+        Verdict::Mismatch { chunk } => {
+            bail!("{base}.graph: checksum mismatch in chunk {chunk} (corrupt block)")
         }
+        Verdict::Unverifiable(why) => bail!(why),
     }
-    Ok(())
 }
 
 /// Verify the entire `.graph` stream.
@@ -156,5 +251,44 @@ mod tests {
         let store = setup(None);
         let acct = IoAccount::new();
         verify_range(&store, "g", 50, 50, ReadCtx::default(), &acct).unwrap();
+    }
+
+    #[test]
+    fn streaming_builder_matches_batch_checksums() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(77);
+        for len in [0usize, 1, 100, CHUNK as usize - 1, CHUNK as usize, CHUNK as usize + 1, 300_000]
+        {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut b = ChecksumBuilder::new();
+            // Feed in ragged pieces to cross chunk boundaries mid-update.
+            let mut rest = &data[..];
+            while !rest.is_empty() {
+                let take = (1 + rng.next_below(40_000) as usize).min(rest.len());
+                b.update(&rest[..take]);
+                rest = &rest[take..];
+            }
+            assert_eq!(b.finish(), build_checksums(&data), "len {len}");
+        }
+    }
+
+    #[test]
+    fn classify_range_verdicts() {
+        let acct = IoAccount::new();
+        let ctx = ReadCtx::default();
+        let clean = setup(None);
+        let len = clean.file_len("g.graph").unwrap();
+        assert_eq!(classify_range(&clean, "g", 0, len, ctx, &acct), Verdict::Ok);
+        let corrupt = setup(Some(CHUNK as usize + 10));
+        assert_eq!(
+            classify_range(&corrupt, "g", CHUNK, CHUNK + 100, ctx, &acct),
+            Verdict::Mismatch { chunk: 1 }
+        );
+        assert_eq!(classify_range(&corrupt, "g", 0, 100, ctx, &acct), Verdict::Ok);
+        // No sidecar ⇒ Unverifiable, never Mismatch.
+        corrupt.remove("g.checksums");
+        assert!(matches!(
+            classify_range(&corrupt, "g", 0, 100, ctx, &acct),
+            Verdict::Unverifiable(_)
+        ));
     }
 }

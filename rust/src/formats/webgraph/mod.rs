@@ -88,6 +88,7 @@ pub fn serialize(graph: &CsrGraph, base: &str) -> Vec<(String, Vec<u8>)> {
 
 pub fn serialize_with(graph: &CsrGraph, base: &str, params: WgParams) -> Vec<(String, Vec<u8>)> {
     let (stream, bit_offsets, _stats) = compress(graph, params);
+    let checksums = integrity::build_checksums(&stream);
     let n = graph.num_vertices();
     let m = graph.num_edges();
 
@@ -128,6 +129,9 @@ pub fn serialize_with(graph: &CsrGraph, base: &str, params: WgParams) -> Vec<(St
         (format!("{base}.graph"), stream),
         (format!("{base}.offsets"), offsets),
         (format!("{base}.properties"), properties.into_bytes()),
+        // Per-chunk checksum sidecar (§6, the MS-BioGraphs discipline):
+        // what the self-healing read path classifies failures against.
+        (format!("{base}.checksums"), checksums),
     ];
     if graph.is_weighted() {
         let mut w = Vec::with_capacity(graph.weights.len() * 4);
@@ -159,10 +163,18 @@ pub fn write_stream_to_dir(
     let graph_path = dir.join(format!("{base}.graph"));
     let mut graph_file = std::fs::File::create(&graph_path)
         .with_context(|| format!("create {}", graph_path.display()))?;
+    // Checksum the stream as it flushes: the sidecar comes out
+    // byte-identical to `build_checksums` over the whole stream without
+    // ever buffering it (the out-of-core contract).
+    let mut sums = integrity::ChecksumBuilder::new();
     let out = compress_stream(n, params, successors, |bytes| {
+        sums.update(bytes);
         graph_file.write_all(bytes).context("write .graph stream")
     })?;
     drop(graph_file);
+    let sums_path = dir.join(format!("{base}.checksums"));
+    std::fs::write(&sums_path, sums.finish())
+        .with_context(|| format!("write {}", sums_path.display()))?;
 
     // v2 sidecar: header + the two γ-delta streams joined at *bit*
     // granularity (their standalone byte forms are padded; re-packing
@@ -215,7 +227,7 @@ fn append_bits(
 pub fn read_meta(store: &SimStore, base: &str, ctx: ReadCtx, acct: &IoAccount) -> Result<WgMeta> {
     let name = format!("{base}.properties");
     let file = store.open(&name).with_context(|| format!("missing {name}"))?;
-    let bytes = file.read(0, file.len(), ctx, acct);
+    let bytes = file.try_read(0, file.len(), ctx, acct)?;
     let text = String::from_utf8(bytes).context("properties not UTF-8")?;
     let mut n = None;
     let mut m = None;
@@ -364,7 +376,7 @@ pub fn read_offsets(
 ) -> Result<WgOffsets> {
     let name = format!("{base}.offsets");
     let file = store.open(&name).with_context(|| format!("missing {name}"))?;
-    let bytes = file.read(0, file.len(), ctx, acct);
+    let bytes = file.try_read(0, file.len(), ctx, acct)?;
     if bytes.len() >= 8
         && u64::from_le_bytes(bytes[0..8].try_into().unwrap()) == OFFSETS_MAGIC_V2
     {
@@ -460,7 +472,7 @@ pub fn load_full(
         let weights = if meta.weighted {
             let name = format!("{base}.weights");
             let file = store.open(&name).with_context(|| format!("missing {name}"))?;
-            let bytes = file.read(0, file.len(), ctx, &accounts[0]);
+            let bytes = file.try_read(0, file.len(), ctx, &accounts[0])?;
             bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
         } else {
             Vec::new()

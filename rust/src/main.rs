@@ -52,6 +52,7 @@ fn main() {
         // it): the generic --flag map would eat positional mistakes.
         "worker" => cmd_worker(&args[1..]),
         "trace" => cmd_trace(&flags),
+        "chaos" => cmd_chaos(&flags),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -97,6 +98,11 @@ commands:
   trace         [--out PATH] [--scale N] [--seed N]       run a seeded load exercising every
                                                           request kind, export the dual-clock
                                                           Chrome trace (Perfetto-viewable)
+  chaos         [--seed N] [--vertices N] [--timeout-s N] [--dir PATH] [--keep]
+                                                          seeded fault-injection campaign over a
+                                                          real on-disk graph: checksum-classified
+                                                          retries, quarantine, mmap->pread
+                                                          degradation, oracle-checked recovery
   ci-summary    [--scale N] [--seed N] [--json PATH]      markdown health metrics for CI;
                                                           --json also writes the merged
                                                           metrics-registry snapshot
@@ -888,6 +894,266 @@ fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `chaos`: a seeded fault-injection campaign over a real on-disk graph.
+///
+/// Four phases under one watchdog, each asserting the self-healing
+/// contract (every request terminates with bit-exact-vs-oracle data or a
+/// clean typed error — never silently wrong data, never a wedged pool):
+///
+/// 1. **heal** — a one-shot injected EIO on the `.graph` stream; the
+///    request must succeed on retry and match the oracle.
+/// 2. **quarantine** — a persistent EIO; the retry budget must exhaust
+///    into [`PgError::Faulted`], quarantine the block, degrade the mmapped
+///    file to pread, and fail fast on the next request.
+/// 3. **corrupt** — a second fixture whose checksums sidecar disagrees
+///    with the stream past the header chunk; a failing read there must
+///    classify as [`PgError::Corrupt`] without burning retries.
+/// 4. **mixed** — probabilistic EIO + stall garnish (seeded) under
+///    successors/CSX/COO/partition traffic; outcomes are tallied, the
+///    buffer pool must come back whole. Bit-flips and short reads are
+///    deliberately absent here: an undetected flip could decode to
+///    plausible-but-wrong data, which is exactly what the store unit
+///    tests and `fault_tests.rs` pin down in isolation.
+///
+/// Then the plan is cleared, quarantines lifted, and the same handle must
+/// serve clean oracle-equal requests — the self-healing state machine
+/// leaves no permanent scar.
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::coordinator::PgError;
+    use paragrapher::formats::webgraph;
+    use paragrapher::graph::generators;
+    use paragrapher::obs::names;
+    use paragrapher::storage::FaultPlan;
+
+    let seed = flag_usize(flags, "seed", 42) as u64;
+    // Floor: phase 3 needs the `.graph` stream to span 2+ checksum chunks
+    // (64 KiB each) so a non-header chunk exists to corrupt.
+    let n = flag_usize(flags, "vertices", 40_000).max(1 << 15);
+    let timeout =
+        std::time::Duration::from_secs(flag_usize(flags, "timeout-s", 240).max(10) as u64);
+    let dir = match flags.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("pg_chaos_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+
+    // Watchdog: termination is part of the contract — a wedged buffer pool
+    // or a retry loop that never gives up is itself a failed campaign.
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let watchdog = std::thread::spawn(move || {
+        if done_rx.recv_timeout(timeout).is_err() {
+            eprintln!("chaos: watchdog fired after {timeout:?} — campaign wedged");
+            std::process::exit(9);
+        }
+    });
+
+    // Fixture: a seeded graph on real files, checksums sidecar included.
+    let g = generators::barabasi_albert(n, 8, seed);
+    for (name, data) in webgraph::serialize(&g, "chaos") {
+        std::fs::write(dir.join(&name), &data).with_context(|| name.clone())?;
+    }
+    let pg = Paragrapher::init();
+    let opts = Options {
+        read_ctx: ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() },
+        ..Options::default()
+    };
+    let graph = pg.open_graph_from_dir(
+        &dir,
+        DeviceKind::Ssd,
+        "chaos",
+        GraphType::CsxWg400,
+        opts.clone(),
+    )?;
+    let store = Arc::clone(graph.store());
+    let buffers = graph.options().buffers;
+    let check_vertex = |v: usize, got: &[paragrapher::graph::VertexId]| -> Result<()> {
+        anyhow::ensure!(got == g.neighbors(v as u32), "vertex {v} disagrees with the oracle");
+        Ok(())
+    };
+
+    // Phase 1 — heal: one injected EIO, then the rule is spent; the
+    // healing retry must deliver oracle-exact data.
+    let v_heal = 17usize;
+    store.set_fault_plan(Some(Arc::new(FaultPlan::parse("eio:*.graph@count=1", seed)?)));
+    check_vertex(v_heal, &graph.successors(v_heal)?)?;
+    let snap = graph.metrics_snapshot();
+    let retries_after_heal = snap.counters.get(names::READ_RETRIES).copied().unwrap_or(0);
+    anyhow::ensure!(retries_after_heal >= 1, "healed read burned no retry");
+
+    // Phase 2 — quarantine + degradation: every `.graph` read faults; the
+    // retry budget must exhaust into Faulted, the block quarantine, and the
+    // repeatedly-faulting mmapped file degrade to pread.
+    let v_quar = n / 2;
+    store.set_fault_plan(Some(FaultPlan::parse("eio:*.graph@count=inf", seed)?.into()));
+    let err = graph.successors(v_quar).expect_err("persistent EIO cannot succeed");
+    anyhow::ensure!(
+        matches!(err.downcast_ref::<PgError>(), Some(PgError::Faulted(_))),
+        "expected PgError::Faulted, got: {err:#}"
+    );
+    anyhow::ensure!(graph.quarantined_blocks() >= 1, "no block was quarantined");
+    let fail_fast = std::time::Instant::now();
+    anyhow::ensure!(graph.successors(v_quar).is_err(), "quarantined block served data");
+    let fail_fast = fail_fast.elapsed();
+    anyhow::ensure!(store.degraded_files() >= 1, "repeated mmap faults did not degrade");
+
+    // Phase 3 — corrupt: a sibling fixture whose checksums sidecar
+    // disagrees with the stream past the header chunk. A failing read
+    // there must classify as Corrupt (no retries burned on corruption).
+    let dir2 = dir.join("corrupt");
+    std::fs::create_dir_all(&dir2).context("create corrupt fixture dir")?;
+    for (name, data) in webgraph::serialize(&g, "chaos") {
+        std::fs::write(dir2.join(&name), &data).with_context(|| name.clone())?;
+    }
+    let sums_path = dir2.join("chaos.checksums");
+    let mut sums = std::fs::read(&sums_path).context("read checksums sidecar")?;
+    let chunk_count = u64::from_le_bytes(sums[8..16].try_into().unwrap()) as usize;
+    anyhow::ensure!(chunk_count >= 2, "fixture must span 2+ checksum chunks, got {chunk_count}");
+    for c in 1..chunk_count {
+        sums[16 + c * 8] ^= 0x01; // header chunk stays valid (open-time gate)
+    }
+    std::fs::write(&sums_path, &sums).context("write corrupted sidecar")?;
+    let graph2 = pg.open_graph_from_dir(
+        &dir2,
+        DeviceKind::Ssd,
+        "chaos",
+        GraphType::CsxWg400,
+        opts.clone(),
+    )?;
+    graph2
+        .store()
+        .set_fault_plan(Some(FaultPlan::parse("eio:*.graph@count=inf", seed)?.into()));
+    let err = graph2.successors(n - 2).expect_err("corrupt-classified read cannot succeed");
+    anyhow::ensure!(
+        matches!(err.downcast_ref::<PgError>(), Some(PgError::Corrupt(_))),
+        "expected PgError::Corrupt from the mismatching sidecar, got: {err:#}"
+    );
+    let corrupt_retries = graph2
+        .metrics_snapshot()
+        .counters
+        .get(names::READ_RETRIES)
+        .copied()
+        .unwrap_or(0);
+    anyhow::ensure!(corrupt_retries == 0, "corruption burned {corrupt_retries} retries");
+    pg.release_graph(graph2);
+
+    // Phase 4 — mixed traffic under seeded probabilistic EIO + stalls.
+    store.set_fault_plan(Some(
+        FaultPlan::parse("eio:*.graph@prob=0.04;stall-ms:*.graph@prob=0.04,ms=2", seed)?.into(),
+    ));
+    let (mut ok_reqs, mut failed_reqs) = (0u64, 0u64);
+    let mut rng = paragrapher::util::rng::Xoshiro256::seed_from_u64(seed ^ 0xC0FFEE);
+    for _ in 0..120 {
+        let v = rng.next_below(n as u64) as usize;
+        match graph.successors(v) {
+            Ok(list) => {
+                check_vertex(v, &list)?;
+                ok_reqs += 1;
+            }
+            Err(_) => failed_reqs += 1,
+        }
+    }
+    for _ in 0..8 {
+        let lo = rng.next_below((n - 64) as u64) as usize;
+        let hi = (lo + 1 + rng.next_below(2048) as usize).min(n);
+        match graph.csx_get_subgraph_sync(VertexRange::new(lo, hi)) {
+            Ok(block) => {
+                for i in 0..(hi - lo) {
+                    let (a, b) = block.vertex_span(i);
+                    anyhow::ensure!(
+                        block.edges[a..b] == *g.neighbors((lo + i) as u32),
+                        "csx block vertex {} disagrees with the oracle",
+                        lo + i
+                    );
+                }
+                ok_reqs += 1;
+            }
+            Err(_) => failed_reqs += 1,
+        }
+    }
+    {
+        let edges = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let edges2 = Arc::clone(&edges);
+        let req = graph.coo_get_edges(
+            0,
+            graph.num_edges().min(100_000),
+            Arc::new(move |blk| {
+                edges2.fetch_add(blk.num_edges(), std::sync::atomic::Ordering::Relaxed);
+            }),
+        )?;
+        req.wait();
+        if req.error().is_some() {
+            failed_reqs += 1;
+        } else {
+            ok_reqs += 1;
+        }
+    }
+    {
+        let stream = graph.csx_get_partitions(6)?;
+        let edges = std::sync::atomic::AtomicU64::new(0);
+        let drained = paragrapher::algorithms::partitioned::for_each_partition(&stream, 2, |p| {
+            edges.fetch_add(p.num_edges(), std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        match drained {
+            Ok(()) => {
+                anyhow::ensure!(
+                    edges.load(std::sync::atomic::Ordering::Relaxed) == g.num_edges(),
+                    "partition stream delivered a partial edge set without erroring"
+                );
+                ok_reqs += 1;
+            }
+            Err(_) => failed_reqs += 1,
+        }
+    }
+    anyhow::ensure!(ok_reqs > 0, "the mixed campaign healed nothing — fault mix too hot");
+
+    // Snapshot the fault counters *before* recovery: clearing the plan
+    // resets the store-owned gauges (injected count lives on the plan,
+    // degradation is lifted), which is itself part of the contract.
+    let snap = graph.metrics_snapshot();
+    let counter = |k: &str| snap.counters.get(k).copied().unwrap_or(0);
+    anyhow::ensure!(counter(names::FAULT_INJECTED) > 0, "no fault was injected");
+    anyhow::ensure!(counter(names::READ_RETRIES) > 0, "no read was retried");
+    anyhow::ensure!(counter(names::BLOCK_QUARANTINED) > 0, "no block was quarantined");
+    anyhow::ensure!(counter(names::READ_DEGRADED) > 0, "no file degraded mmap->pread");
+
+    // Recovery: clear the plan, lift quarantines; the surviving handle
+    // must serve clean oracle-equal requests and the pool must be whole.
+    store.set_fault_plan(None);
+    let lifted = graph.clear_quarantine();
+    check_vertex(v_heal, &graph.successors(v_heal)?)?;
+    check_vertex(v_quar, &graph.successors(v_quar)?)?;
+    let block = graph.csx_get_subgraph_sync(VertexRange::new(0, n.min(4096)))?;
+    anyhow::ensure!(block.num_edges() > 0, "post-campaign clean request was empty");
+    anyhow::ensure!(
+        graph.idle_buffers() == buffers,
+        "buffer leak: {} of {buffers} idle after the campaign",
+        graph.idle_buffers()
+    );
+
+    println!("### chaos campaign (seed {seed}, {} vertices)\n", fmt_count(n as u64));
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!("| fault.injected | {} |", counter(names::FAULT_INJECTED));
+    println!("| read.retries | {} |", counter(names::READ_RETRIES));
+    println!("| read.degraded | {} |", counter(names::READ_DEGRADED));
+    println!("| block.quarantined | {} |", counter(names::BLOCK_QUARANTINED));
+    println!("| quarantine_fail_fast | {:.2}ms (no retry budget re-paid) |",
+        fail_fast.as_secs_f64() * 1e3);
+    println!("| corrupt_fixture | PgError::Corrupt, 0 retries burned |");
+    println!("| mixed_requests | {ok_reqs} healed+exact, {failed_reqs} typed failures |");
+    println!("| quarantines_lifted | {lifted} |");
+    println!("| post_campaign | clean requests oracle-equal, {buffers}/{buffers} buffers idle |");
+
+    pg.release_graph(graph);
+    let _ = done_tx.send(());
+    let _ = watchdog.join();
+    if !flags.contains_key("keep") && !flags.contains_key("dir") {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(())
+}
+
 /// `ci-summary`: markdown health metrics for the CI job summary — encoder
 /// reference-chain depth, decoded-block cache hit rate, and the Elias–Fano
 /// offsets footprint, on a seeded graph (`--scale` / `--seed`) so drift is
@@ -1237,6 +1503,18 @@ fn cmd_ci_summary(flags: &HashMap<String, String>) -> Result<()> {
             fmt_ns(h.percentile(0.999)),
             fmt_ns(h.max)
         );
+    }
+
+    // Fault-path counters on the clean baseline: ci-summary injects no
+    // store faults, so every one of these must be exactly zero — any drift
+    // means the healing path fired (or was miscounted) on healthy I/O.
+    println!("\n### fault counters (clean baseline)\n");
+    println!("| counter | value |");
+    println!("|---|---|");
+    for key in paragrapher::obs::names::FAULT_COUNTERS {
+        let v = merged.counters.get(key).copied().unwrap_or(0);
+        anyhow::ensure!(v == 0, "clean ci-summary run moved fault counter {key}: {v}");
+        println!("| {key} | {v} |");
     }
 
     if let Some(path) = flags.get("json") {

@@ -84,6 +84,15 @@ pub mod names {
     /// Distributed harness (counters, leader side).
     pub const DIST_RETILES: &str = "dist.retiles";
     pub const DIST_WORKERS_LOST: &str = "dist.workers_lost";
+    /// Fault injection & self-healing reads (counters; all 0 on a clean
+    /// run — the ci-summary baseline asserts exactly that).
+    pub const FAULT_INJECTED: &str = "fault.injected";
+    pub const READ_RETRIES: &str = "read.retries";
+    pub const READ_DEGRADED: &str = "read.degraded";
+    pub const BLOCK_QUARANTINED: &str = "block.quarantined";
+    /// The fault counters in display order (CLI tail rows).
+    pub const FAULT_COUNTERS: [&str; 4] =
+        [FAULT_INJECTED, READ_RETRIES, READ_DEGRADED, BLOCK_QUARANTINED];
     /// The request-kind histograms in display order (CLI tail rows).
     pub const REQUEST_KINDS: [(&str, &str); 4] = [
         ("successors", REQ_SUCCESSORS),

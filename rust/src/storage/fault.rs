@@ -1,0 +1,466 @@
+//! Deterministic fault injection below [`StoreFile`](super::store::StoreFile).
+//!
+//! A [`FaultPlan`] sits between the store's read surface and its Mem/Mapped
+//! backing, so `mmap` and `pread` share one fault surface: a rule fires on
+//! the *logical* read (`file`, `offset`, `len`) before the backing is
+//! consulted, regardless of which syscall path would serve it. The plan is
+//! parsed from spec strings extending the distributed layer's
+//! `--fault-inject` vocabulary:
+//!
+//! ```text
+//! kind:pattern[@key=value,...]
+//!
+//! kinds     short-read | bit-flip | eio | stall-ms
+//! pattern   file name with `*` globs (e.g. `*.graph`)
+//! keys      nth=N      first matching read that fires (1-based, default 1)
+//!           count=N    how many consecutive matches fire (default 1, `inf`)
+//!           range=A..B only reads overlapping bytes [A, B) match
+//!           prob=P     fire with probability P per eligible match (default 1)
+//!           ms=N       stall duration for `stall-ms` (default 1)
+//! ```
+//!
+//! Multiple rules are `;`-separated; the first rule that fires on a read
+//! wins. Determinism: every rule carries its own match counter and its own
+//! seeded PRNG stream, so under sequential traffic the *exact* reads that
+//! fault are reproducible from `(seed, specs)`; under concurrent traffic
+//! the fault *count and kind mix* are reproducible while interleaving is
+//! not (chaos campaigns assert structural invariants, not exact traces).
+//!
+//! Only [`FaultAction::Eio`] surfaces as an error ([`IoFault`]); the other
+//! kinds corrupt or delay the returned bytes and let the checksum layer do
+//! the catching — that split is what exercises both halves of the
+//! coordinator's classify-then-retry path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Xoshiro256;
+
+/// What a fired rule does to the read it hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The read fails outright with an [`IoFault`].
+    Eio,
+    /// The read returns only the first `keep` bytes (torn read).
+    ShortRead { keep: u64 },
+    /// One byte of the returned copy is XORed with `mask` at buffer
+    /// offset `pos` (silent corruption — only checksums can tell).
+    BitFlip { pos: u64, mask: u8 },
+    /// The read completes normally after a real `ms`-millisecond sleep.
+    Stall { ms: u64 },
+}
+
+/// A failed injected read: the only fault kind that surfaces as an `Err`.
+/// Implements [`std::error::Error`] so it rides inside `anyhow::Error` and
+/// can be recovered by `downcast_ref` at the classification site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoFault {
+    pub file: String,
+    pub offset: u64,
+    pub len: u64,
+}
+
+impl std::fmt::Display for IoFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "injected I/O error (EIO) on {} at [{}, {})",
+            self.file,
+            self.offset,
+            self.offset + self.len
+        )
+    }
+}
+
+impl std::error::Error for IoFault {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    ShortRead,
+    BitFlip,
+    Eio,
+    Stall,
+}
+
+/// One parsed rule. Counters are per-rule so independent rules do not
+/// perturb each other's firing schedule.
+struct FaultRule {
+    kind: FaultKind,
+    pattern: String,
+    nth: u64,
+    count: u64,
+    range: Option<(u64, u64)>,
+    prob: f64,
+    ms: u64,
+    matches: AtomicU64,
+    fired: AtomicU64,
+    rng: Mutex<Xoshiro256>,
+}
+
+impl FaultRule {
+    fn parse(spec: &str, rng: Xoshiro256) -> Result<FaultRule> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault spec {spec:?}: want kind:pattern[@k=v,..]"))?;
+        let kind = match kind {
+            "short-read" => FaultKind::ShortRead,
+            "bit-flip" => FaultKind::BitFlip,
+            "eio" => FaultKind::Eio,
+            "stall-ms" => FaultKind::Stall,
+            other => bail!(
+                "fault spec {spec:?}: unknown kind {other:?} \
+                 (want short-read|bit-flip|eio|stall-ms)"
+            ),
+        };
+        let (pattern, params) = match rest.split_once('@') {
+            Some((p, q)) => (p, Some(q)),
+            None => (rest, None),
+        };
+        if pattern.is_empty() {
+            bail!("fault spec {spec:?}: empty file pattern");
+        }
+        let mut rule = FaultRule {
+            kind,
+            pattern: pattern.to_string(),
+            nth: 1,
+            count: 1,
+            range: None,
+            prob: 1.0,
+            ms: 1,
+            matches: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            rng: Mutex::new(rng),
+        };
+        for kv in params.unwrap_or("").split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec {spec:?}: bad param {kv:?}"))?;
+            match k {
+                "nth" => {
+                    rule.nth = v.parse().with_context(|| format!("fault spec {spec:?}: nth"))?;
+                    if rule.nth == 0 {
+                        bail!("fault spec {spec:?}: nth is 1-based");
+                    }
+                }
+                "count" => {
+                    rule.count = if v == "inf" {
+                        u64::MAX
+                    } else {
+                        v.parse().with_context(|| format!("fault spec {spec:?}: count"))?
+                    }
+                }
+                "range" => {
+                    let (a, b) = v.split_once("..").ok_or_else(|| {
+                        anyhow::anyhow!("fault spec {spec:?}: range wants A..B")
+                    })?;
+                    let a: u64 =
+                        a.parse().with_context(|| format!("fault spec {spec:?}: range"))?;
+                    let b: u64 =
+                        b.parse().with_context(|| format!("fault spec {spec:?}: range"))?;
+                    if b <= a {
+                        bail!("fault spec {spec:?}: empty range");
+                    }
+                    rule.range = Some((a, b));
+                }
+                "prob" => {
+                    rule.prob =
+                        v.parse().with_context(|| format!("fault spec {spec:?}: prob"))?;
+                    if !(0.0..=1.0).contains(&rule.prob) {
+                        bail!("fault spec {spec:?}: prob outside [0, 1]");
+                    }
+                }
+                "ms" => {
+                    rule.ms = v.parse().with_context(|| format!("fault spec {spec:?}: ms"))?;
+                }
+                other => bail!("fault spec {spec:?}: unknown param {other:?}"),
+            }
+        }
+        Ok(rule)
+    }
+
+    /// Does this rule's (pattern, range) select the read at all?
+    fn selects(&self, file: &str, offset: u64, len: u64) -> bool {
+        if !glob_match(&self.pattern, file) {
+            return false;
+        }
+        match self.range {
+            None => true,
+            Some((a, b)) => offset < b && offset.saturating_add(len) > a,
+        }
+    }
+
+    /// Count the match and decide whether it fires; build the action.
+    fn decide(&self, offset: u64, len: u64) -> Option<FaultAction> {
+        let m = self.matches.fetch_add(1, Ordering::Relaxed) + 1;
+        if m < self.nth || m - self.nth >= self.count {
+            return None;
+        }
+        let mut rng = self.rng.lock().expect("fault rule rng");
+        if self.prob < 1.0 && !rng.next_bool(self.prob) {
+            return None;
+        }
+        let action = match self.kind {
+            FaultKind::Eio => FaultAction::Eio,
+            FaultKind::Stall => FaultAction::Stall { ms: self.ms },
+            FaultKind::ShortRead => {
+                if len == 0 {
+                    return None;
+                }
+                FaultAction::ShortRead { keep: rng.next_below(len) }
+            }
+            FaultKind::BitFlip => {
+                if len == 0 {
+                    return None;
+                }
+                // Flip inside the (range ∩ read) window so `range=` rules
+                // corrupt exactly the chunk they target.
+                let (lo, hi) = match self.range {
+                    Some((a, b)) => (a.max(offset), b.min(offset + len)),
+                    None => (offset, offset + len),
+                };
+                let pos = lo + rng.next_below(hi - lo) - offset;
+                let mask = 1u8 << rng.next_below(8);
+                FaultAction::BitFlip { pos, mask }
+            }
+        };
+        self.fired.fetch_add(1, Ordering::Relaxed);
+        Some(action)
+    }
+}
+
+impl std::fmt::Debug for FaultRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultRule")
+            .field("kind", &self.kind)
+            .field("pattern", &self.pattern)
+            .field("nth", &self.nth)
+            .field("count", &self.count)
+            .field("matches", &self.matches.load(Ordering::Relaxed))
+            .field("fired", &self.fired.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+/// A seeded set of fault rules, installed on a
+/// [`GraphStore`](super::store::GraphStore) via `set_fault_plan`.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    injected: AtomicU64,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { rules: Vec::new(), injected: AtomicU64::new(0), seed }
+    }
+
+    /// Parse a `;`-separated list of rule specs.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(seed);
+        for rule in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            plan.push(rule)?;
+        }
+        if plan.rules.is_empty() {
+            bail!("fault plan {spec:?}: no rules");
+        }
+        Ok(plan)
+    }
+
+    /// Append one rule; its PRNG stream is derived from `(seed, index)` so
+    /// rule order — not push timing — defines the streams.
+    pub fn push(&mut self, spec: &str) -> Result<()> {
+        let idx = self.rules.len() as u64;
+        let stream =
+            Xoshiro256::seed_from_u64(self.seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15));
+        self.rules.push(FaultRule::parse(spec, stream)?);
+        Ok(())
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rules(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Total faults this plan has injected (all kinds).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The store's per-read hook: first rule that fires wins. Rules that
+    /// merely *select* the read still advance their match counters, so
+    /// `nth=` schedules stay independent across rules.
+    pub fn decide(&self, file: &str, offset: u64, len: u64) -> Option<FaultAction> {
+        let mut hit = None;
+        for rule in &self.rules {
+            if !rule.selects(file, offset, len) {
+                continue;
+            }
+            if let Some(action) = rule.decide(offset, len) {
+                if hit.is_none() {
+                    hit = Some(action);
+                }
+            }
+        }
+        if hit.is_some() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+}
+
+/// `*`-only glob match (no escapes, no character classes).
+fn glob_match(pattern: &str, name: &str) -> bool {
+    if !pattern.contains('*') {
+        return pattern == name;
+    }
+    let parts: Vec<&str> = pattern.split('*').collect();
+    let (first, last) = (parts[0], parts[parts.len() - 1]);
+    if !name.starts_with(first) || name.len() < first.len() + last.len() {
+        return false;
+    }
+    let mut rest = &name[first.len()..name.len() - last.len()];
+    if !name.ends_with(last) {
+        return false;
+    }
+    for part in &parts[1..parts.len() - 1] {
+        if part.is_empty() {
+            continue;
+        }
+        match rest.find(part) {
+            Some(i) => rest = &rest[i + part.len()..],
+            None => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_semantics() {
+        assert!(glob_match("g.graph", "g.graph"));
+        assert!(!glob_match("g.graph", "g.offsets"));
+        assert!(glob_match("*.graph", "g.graph"));
+        assert!(!glob_match("*.graph", "g.graphx"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("a*b*c", "aXbYc"));
+        assert!(!glob_match("a*b*c", "aXcYb"));
+        assert!(glob_match("g*", "g.checksums"));
+        assert!(!glob_match("ab*ba", "aba"), "overlapping affixes must not double-count");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "eio",
+            "typo:*.graph",
+            "eio:",
+            "eio:*.graph@nth=0",
+            "eio:*.graph@range=9..9",
+            "eio:*.graph@prob=1.5",
+            "eio:*.graph@wat=1",
+            "",
+        ] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "{bad:?} should not parse");
+        }
+        let plan = FaultPlan::parse(
+            "eio:g.graph@nth=3,count=inf; bit-flip:*@range=0..10,prob=0.5; stall-ms:*@ms=7",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.rules(), 3);
+    }
+
+    #[test]
+    fn nth_and_count_schedule_firing() {
+        let plan = FaultPlan::parse("eio:g@nth=3,count=2", 42).unwrap();
+        let hits: Vec<bool> =
+            (0..6).map(|_| plan.decide("g", 0, 100).is_some()).collect();
+        assert_eq!(hits, [false, false, true, true, false, false]);
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn count_inf_fires_forever() {
+        let plan = FaultPlan::parse("eio:g@nth=2,count=inf", 42).unwrap();
+        let hits = (0..10).filter(|_| plan.decide("g", 0, 1).is_some()).count();
+        assert_eq!(hits, 9);
+    }
+
+    #[test]
+    fn range_filter_gates_matching() {
+        let plan = FaultPlan::parse("eio:g@range=100..200", 42).unwrap();
+        assert!(plan.decide("g", 0, 50).is_none(), "disjoint below");
+        assert!(plan.decide("g", 200, 50).is_none(), "disjoint above");
+        assert!(plan.decide("g", 150, 10).is_some(), "overlap fires");
+        assert!(plan.decide("g", 150, 10).is_none(), "count=1 spent");
+    }
+
+    #[test]
+    fn bit_flip_lands_inside_the_requested_window() {
+        let plan = FaultPlan::parse("bit-flip:g@count=inf", 7).unwrap();
+        for _ in 0..100 {
+            match plan.decide("g", 1000, 64) {
+                Some(FaultAction::BitFlip { pos, mask }) => {
+                    assert!(pos < 64, "pos {pos} must be buffer-relative");
+                    assert_eq!(mask.count_ones(), 1);
+                }
+                other => panic!("expected BitFlip, got {other:?}"),
+            }
+        }
+        // Ranged flips land inside (range ∩ read).
+        let plan = FaultPlan::parse("bit-flip:g@range=1010..1020,count=inf", 7).unwrap();
+        for _ in 0..100 {
+            match plan.decide("g", 1000, 64) {
+                Some(FaultAction::BitFlip { pos, .. }) => {
+                    assert!((10..20).contains(&pos), "pos {pos} must fall in the range window");
+                }
+                other => panic!("expected BitFlip, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn short_read_keeps_a_strict_prefix() {
+        let plan = FaultPlan::parse("short-read:g@count=inf", 9).unwrap();
+        for _ in 0..100 {
+            match plan.decide("g", 0, 512) {
+                Some(FaultAction::ShortRead { keep }) => assert!(keep < 512),
+                other => panic!("expected ShortRead, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let spec = "eio:*.graph@prob=0.3,count=inf; bit-flip:*@prob=0.2,count=inf";
+        let a = FaultPlan::parse(spec, 1234).unwrap();
+        let b = FaultPlan::parse(spec, 1234).unwrap();
+        let c = FaultPlan::parse(spec, 4321).unwrap();
+        let run = |p: &FaultPlan| -> Vec<Option<FaultAction>> {
+            (0..200).map(|i| p.decide("g.graph", i * 64, 64)).collect()
+        };
+        let (ra, rb, rc) = (run(&a), run(&b), run(&c));
+        assert_eq!(ra, rb, "same seed replays the same fault trace");
+        assert_ne!(ra, rc, "different seeds diverge");
+        assert!(a.injected() > 0);
+    }
+
+    #[test]
+    fn first_firing_rule_wins_but_all_count() {
+        let plan = FaultPlan::parse("stall-ms:g@ms=5,count=inf; eio:g@nth=2,count=inf", 1).unwrap();
+        assert_eq!(plan.decide("g", 0, 8), Some(FaultAction::Stall { ms: 5 }));
+        // Second read: both rules fire; the first in spec order wins, but
+        // the eio rule still advanced past its nth gate.
+        assert_eq!(plan.decide("g", 0, 8), Some(FaultAction::Stall { ms: 5 }));
+        assert_eq!(plan.injected(), 2);
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod cache;
 pub mod device;
+pub mod fault;
 pub mod mmap;
 pub mod reader;
 pub mod sim;
@@ -29,6 +30,7 @@ pub mod vclock;
 
 pub use cache::{CacheCounters, DecodedCache};
 pub use device::{DeviceKind, DeviceModel};
+pub use fault::{FaultAction, FaultPlan, IoFault};
 pub use reader::ReadMethod;
 pub use sim::{SimFile, SimStore};
 pub use store::{GraphStore, ReadCtx, StoreFile, DEFAULT_CACHE_BYTES};

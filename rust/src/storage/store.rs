@@ -30,13 +30,14 @@
 use std::collections::HashMap;
 use std::fs::File;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
 use super::cache::{PageCache, CACHE_PAGE};
 use super::device::DeviceModel;
+use super::fault::{FaultAction, FaultPlan, IoFault};
 use super::mmap::{Advice, MmapRegion};
 use super::reader::{ReadMethod, ReaderImpl};
 use super::vclock::IoAccount;
@@ -143,10 +144,20 @@ enum Backing {
     Mapped(MappedFile),
 }
 
+/// Mapped-read faults tolerated on one file before its `Mmap` reads are
+/// degraded to `Pread` (the per-file mmap→pread fallback).
+const MMAP_DEGRADE_AFTER: u64 = 2;
+
 #[derive(Debug)]
 struct FileImage {
     id: u64,
+    /// Store name, carried so the fault plan can pattern-match reads.
+    name: String,
     backing: Backing,
+    /// Injected faults observed under `ReadMethod::Mmap` on this file.
+    mmap_faults: AtomicU64,
+    /// Once set, `try_read*` rewrites `Mmap` to `Pread` for this file.
+    degraded: AtomicBool,
 }
 
 impl FileImage {
@@ -177,7 +188,13 @@ impl StoreInner {
     fn insert(&mut self, name: &str, backing: Backing) -> Arc<FileImage> {
         let id = self.next_id;
         self.next_id += 1;
-        let img = Arc::new(FileImage { id, backing });
+        let img = Arc::new(FileImage {
+            id,
+            name: name.to_string(),
+            backing,
+            mmap_faults: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+        });
         if let Some(old) = self.files.insert(name.to_string(), Arc::clone(&img)) {
             self.by_id.remove(&old.id);
         }
@@ -197,6 +214,12 @@ pub struct GraphStore {
     device_bytes: AtomicU64,
     /// Directory real files live under (`None` = purely simulated store).
     root: Option<PathBuf>,
+    /// Fast-path gate for fault injection: `try_read*` consults the plan
+    /// only when set, so fault-free stores pay one relaxed load per read.
+    fault_active: AtomicBool,
+    fault_plan: RwLock<Option<Arc<FaultPlan>>>,
+    /// Files whose `Mmap` reads have been degraded to `Pread`.
+    degraded_files: AtomicU64,
 }
 
 impl GraphStore {
@@ -229,7 +252,40 @@ impl GraphStore {
             }),
             device_bytes: AtomicU64::new(0),
             root: None,
+            fault_active: AtomicBool::new(false),
+            fault_plan: RwLock::new(None),
+            degraded_files: AtomicU64::new(0),
         }
+    }
+
+    /// Install (or clear) a fault plan. Clearing also lifts every file's
+    /// mmap→pread degradation — the operator replaced the flaky medium.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        let active = plan.is_some();
+        *self.fault_plan.write().expect("fault plan lock") = plan;
+        self.fault_active.store(active, Ordering::Relaxed);
+        if !active {
+            let inner = self.inner.read().expect("store lock");
+            for img in inner.files.values() {
+                img.mmap_faults.store(0, Ordering::Relaxed);
+                img.degraded.store(false, Ordering::Relaxed);
+            }
+            self.degraded_files.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Total faults the installed plan has injected (0 when no plan).
+    pub fn fault_injected(&self) -> u64 {
+        self.fault_plan
+            .read()
+            .expect("fault plan lock")
+            .as_ref()
+            .map_or(0, |p| p.injected())
+    }
+
+    /// Files currently degraded from `Mmap` to `Pread`.
+    pub fn degraded_files(&self) -> u64 {
+        self.degraded_files.load(Ordering::Relaxed)
     }
 
     /// Open a store rooted at `dir`: every name resolves to a real file
@@ -584,6 +640,122 @@ impl<'s> StoreFile<'s> {
         }
         &self.img.bytes()[start as usize..end as usize]
     }
+
+    /// Whether this file's `Mmap` reads have been degraded to `Pread`.
+    pub fn is_degraded(&self) -> bool {
+        self.img.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Rewrite `Mmap` to `Pread` once the file is degraded: the mapping
+    /// stays alive (borrows remain valid) but new reads travel through the
+    /// descriptor, dodging whatever poisoned the mapped path.
+    fn effective_ctx(&self, ctx: ReadCtx) -> ReadCtx {
+        if ctx.method == ReadMethod::Mmap && self.img.degraded.load(Ordering::Relaxed) {
+            ReadCtx { method: ReadMethod::Pread, ..ctx }
+        } else {
+            ctx
+        }
+    }
+
+    /// Consult the store's fault plan for this read (cheap no-op gate when
+    /// no plan is installed).
+    fn decide_fault(&self, offset: u64, len: u64) -> Option<FaultAction> {
+        if !self.store.fault_active.load(Ordering::Relaxed) {
+            return None;
+        }
+        let plan = Arc::clone(self.store.fault_plan.read().expect("fault plan lock").as_ref()?);
+        plan.decide(&self.img.name, offset, len)
+    }
+
+    /// Count an injected fault against the mapped path; past the tolerance
+    /// the file flips to degraded and subsequent `try_read*` calls under
+    /// `Mmap` go through `Pread` instead.
+    fn note_mmap_fault(&self, ctx: ReadCtx) {
+        if ctx.method != ReadMethod::Mmap {
+            return;
+        }
+        let n = self.img.mmap_faults.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= MMAP_DEGRADE_AFTER && !self.img.degraded.swap(true, Ordering::Relaxed) {
+            self.store.degraded_files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fallible read: [`Self::read`] plus the fault surface. This is the
+    /// entry production call sites use — injection happens *below*
+    /// `StoreFile` and *above* the backing, so `mmap` and `pread` requests
+    /// share one fault schedule.
+    pub fn try_read(
+        &self,
+        offset: u64,
+        len: u64,
+        ctx: ReadCtx,
+        acct: &IoAccount,
+    ) -> std::result::Result<Vec<u8>, IoFault> {
+        let eff = self.effective_ctx(ctx);
+        match self.decide_fault(offset, len) {
+            None => Ok(self.read(offset, len, eff, acct)),
+            Some(FaultAction::Eio) => {
+                self.note_mmap_fault(ctx);
+                Err(IoFault { file: self.img.name.clone(), offset, len })
+            }
+            Some(FaultAction::Stall { ms }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(self.read(offset, len, eff, acct))
+            }
+            Some(FaultAction::ShortRead { keep }) => {
+                self.note_mmap_fault(ctx);
+                let mut out = self.read(offset, len, eff, acct);
+                out.truncate(keep as usize);
+                Ok(out)
+            }
+            Some(FaultAction::BitFlip { pos, mask }) => {
+                self.note_mmap_fault(ctx);
+                let mut out = self.read(offset, len, eff, acct);
+                if let Some(b) = out.get_mut(pos as usize) {
+                    *b ^= mask;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Fallible borrow: [`Self::read_borrowed`] plus the fault surface.
+    /// Corrupting faults force `Cow::Owned` — the store's own image is
+    /// never mutated, only the copy handed to the caller.
+    pub fn try_read_borrowed(
+        &self,
+        offset: u64,
+        len: u64,
+        ctx: ReadCtx,
+        acct: &IoAccount,
+    ) -> std::result::Result<std::borrow::Cow<'_, [u8]>, IoFault> {
+        let eff = self.effective_ctx(ctx);
+        match self.decide_fault(offset, len) {
+            None => Ok(self.read_borrowed(offset, len, eff, acct)),
+            Some(FaultAction::Eio) => {
+                self.note_mmap_fault(ctx);
+                Err(IoFault { file: self.img.name.clone(), offset, len })
+            }
+            Some(FaultAction::Stall { ms }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(self.read_borrowed(offset, len, eff, acct))
+            }
+            Some(FaultAction::ShortRead { keep }) => {
+                self.note_mmap_fault(ctx);
+                let mut out = self.read(offset, len, eff, acct);
+                out.truncate(keep as usize);
+                Ok(std::borrow::Cow::Owned(out))
+            }
+            Some(FaultAction::BitFlip { pos, mask }) => {
+                self.note_mmap_fault(ctx);
+                let mut out = self.read(offset, len, eff, acct);
+                if let Some(b) = out.get_mut(pos as usize) {
+                    *b ^= mask;
+                }
+                Ok(std::borrow::Cow::Owned(out))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -768,6 +940,82 @@ mod tests {
         assert!(s2.remove("x.bin"));
         drop(f);
         drop(s2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn try_read_without_a_plan_matches_read() {
+        let s = store_with_file(DeviceKind::Dram, 4096);
+        let f = s.open("f").unwrap();
+        let acct = IoAccount::new();
+        let a = f.try_read(100, 64, ReadCtx::default(), &acct).unwrap();
+        let b = f.read(100, 64, ReadCtx::default(), &acct);
+        assert_eq!(a, b);
+        assert_eq!(s.fault_injected(), 0);
+    }
+
+    #[test]
+    fn fault_plan_drives_try_read() {
+        let s = store_with_file(DeviceKind::Dram, 4096);
+        s.set_fault_plan(Some(Arc::new(FaultPlan::parse("eio:f@nth=2", 1).unwrap())));
+        let f = s.open("f").unwrap();
+        let acct = IoAccount::new();
+        let ctx = ReadCtx::default();
+        assert!(f.try_read(0, 64, ctx, &acct).is_ok());
+        let err = f.try_read(0, 64, ctx, &acct).unwrap_err();
+        assert_eq!((err.file.as_str(), err.offset, err.len), ("f", 0, 64));
+        assert!(f.try_read(0, 64, ctx, &acct).is_ok(), "nth=2 fires exactly once");
+        assert_eq!(s.fault_injected(), 1);
+        // Infallible paths never consult the plan.
+        s.set_fault_plan(Some(Arc::new(FaultPlan::parse("eio:f@count=inf", 1).unwrap())));
+        assert_eq!(f.read(0, 64, ctx, &acct).len(), 64);
+        s.set_fault_plan(None);
+        assert_eq!(s.fault_injected(), 0);
+    }
+
+    #[test]
+    fn corrupting_faults_alter_only_the_returned_copy() {
+        let s = store_with_file(DeviceKind::Dram, 4096);
+        let f = s.open("f").unwrap();
+        let acct = IoAccount::new();
+        let ctx = ReadCtx::default();
+        let clean = f.read(0, 256, ctx, &acct);
+        s.set_fault_plan(Some(Arc::new(
+            FaultPlan::parse("bit-flip:f@nth=1; short-read:f@nth=2", 3).unwrap(),
+        )));
+        let flipped = f.try_read(0, 256, ctx, &acct).unwrap();
+        assert_ne!(flipped, clean, "bit flip must corrupt the copy");
+        assert_eq!(flipped.len(), clean.len());
+        let torn = f.try_read(0, 256, ctx, &acct).unwrap();
+        assert!(torn.len() < clean.len(), "short read truncates");
+        assert_eq!(torn[..], clean[..torn.len()], "torn prefix is genuine data");
+        s.set_fault_plan(None);
+        assert_eq!(f.read(0, 256, ctx, &acct), clean, "backing image untouched");
+    }
+
+    #[test]
+    fn repeated_mmap_faults_degrade_the_file_to_pread() {
+        let (s, dir) = rooted_store_with_file(DeviceKind::Dram, 65_536);
+        s.set_fault_plan(Some(Arc::new(FaultPlan::parse("eio:f@count=2", 5).unwrap())));
+        let f = s.open("f").unwrap();
+        let acct = IoAccount::new();
+        let mmap_ctx = ReadCtx { method: ReadMethod::Mmap, ..ReadCtx::default() };
+        assert!(f.try_read(0, 64, mmap_ctx, &acct).is_err());
+        assert!(!f.is_degraded(), "one fault is tolerated");
+        assert!(f.try_read(0, 64, mmap_ctx, &acct).is_err());
+        assert!(f.is_degraded(), "second mapped fault degrades the file");
+        assert_eq!(s.degraded_files(), 1);
+        // Degraded + plan exhausted: reads succeed, and the borrow path
+        // travels the descriptor (owned buffer), not the mapping.
+        let got = f.try_read_borrowed(0, 64, mmap_ctx, &acct).unwrap();
+        assert!(matches!(got, std::borrow::Cow::Owned(_)), "degraded mmap reads via pread");
+        assert_eq!(got.len(), 64);
+        s.set_fault_plan(None);
+        assert!(!f.is_degraded(), "clearing the plan lifts degradation");
+        assert_eq!(s.degraded_files(), 0);
+        drop(got);
+        drop(f);
+        drop(s);
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -158,6 +158,122 @@ fn mixed_traffic_over_two_buffers_matches_oracle() {
 }
 
 #[test]
+fn mixed_traffic_under_fault_injection_stays_typed_and_leak_free() {
+    // The mixed-traffic stress again, but with a seeded fault plan firing
+    // underneath: every request must either deliver oracle-exact data or
+    // fail with a *typed* healing error — and the pool must drain back to
+    // idle either way. Only eio + stall faults: an undetected bit flip
+    // could decode to plausible-but-wrong data, which is exactly the
+    // silent failure the typed-error contract rules out of this test.
+    use paragrapher::coordinator::PgError;
+    use paragrapher::storage::FaultPlan;
+
+    with_watchdog(WATCHDOG, || {
+        let g = Arc::new(generators::rmat(10, 8, 77)); // 1024 vertices
+        let n = g.num_vertices();
+        let (store, graph) = open_graph(&g, 2, 256);
+        store.set_fault_plan(Some(Arc::new(
+            FaultPlan::parse("eio:*.graph@prob=0.05;stall-ms:*.graph@prob=0.05,ms=1", 0xFA17)
+                .expect("fault plan"),
+        )));
+        let graph = Arc::new(graph);
+        let buffers = 2;
+
+        const THREADS: u64 = 4;
+        const OPS_PER_THREAD: u64 = 25;
+        let faulted = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let g = Arc::clone(&g);
+            let graph = Arc::clone(&graph);
+            let faulted = Arc::clone(&faulted);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(0xFA4C7 + t);
+                for op in 0..OPS_PER_THREAD {
+                    match rng.next_below(3) {
+                        0 => {
+                            let v = rng.next_below(n as u64) as usize;
+                            match graph.successors(v) {
+                                Ok(got) => assert_eq!(
+                                    got,
+                                    g.neighbors(v as VertexId),
+                                    "thread {t} op {op}: successors({v})"
+                                ),
+                                // The direct path surfaces the healing
+                                // error itself: it must be typed.
+                                Err(e) => {
+                                    assert!(
+                                        matches!(
+                                            e.downcast_ref::<PgError>(),
+                                            Some(PgError::Faulted(_))
+                                        ),
+                                        "thread {t} op {op}: untyped fault error: {e:#}"
+                                    );
+                                    faulted.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        1 => {
+                            let lo = rng.next_below(n as u64) as usize;
+                            let hi = (lo + 1 + rng.next_below(200) as usize).min(n);
+                            match graph.csx_get_subgraph_sync(VertexRange::new(lo, hi)) {
+                                Ok(block) => {
+                                    for (i, v) in (lo..hi).enumerate() {
+                                        assert_eq!(
+                                            block.neighbors(i),
+                                            g.neighbors(v as VertexId),
+                                            "thread {t} op {op}: range {lo}..{hi} vertex {v}"
+                                        );
+                                    }
+                                }
+                                Err(_) => {
+                                    faulted.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        _ => {
+                            let lo = rng.next_below((n / 2) as u64) as usize;
+                            let hi = (lo + 50 + rng.next_below(400) as usize).min(n);
+                            let req = graph
+                                .csx_get_subgraph(VertexRange::new(lo, hi), Arc::new(|_| {}))
+                                .expect("async subgraph submit");
+                            req.wait(); // must terminate, healed or failed
+                            assert!(req.is_complete(), "thread {t} op {op}");
+                            if req.is_failed() {
+                                faulted.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("requester thread panicked");
+        }
+        // Quiesce: failed requests recycle their buffers on completion.
+        let mut idle = graph.idle_buffers();
+        for _ in 0..400 {
+            if idle == buffers {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            idle = graph.idle_buffers();
+        }
+        assert_eq!(idle, buffers, "fault paths leaked a buffer out of C_IDLE");
+
+        // The campaign over, the same handle must serve clean traffic.
+        store.set_fault_plan(None);
+        graph.clear_quarantine();
+        for v in [0usize, 3, n / 2, n - 1] {
+            assert_eq!(
+                graph.successors(v).expect("post-campaign clean read"),
+                g.neighbors(v as VertexId)
+            );
+        }
+    });
+}
+
+#[test]
 fn blocking_requesters_saturate_a_single_buffer_pool() {
     // 8 threads × sequential whole-range loads through ONE buffer: the
     // request manager parks on the pool condvar for almost every block. A

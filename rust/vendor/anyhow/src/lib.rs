@@ -1,29 +1,38 @@
 //! Minimal, dependency-free drop-in for the subset of the `anyhow` API this
-//! repository uses (`Result`, `Error`, `Context`, `anyhow!`, `bail!`,
-//! `ensure!`). The real crate is unavailable in the offline build
-//! environment; this keeps the public surface source-compatible.
+//! repository uses (`Result`, `Error`, `Context`, `downcast_ref`,
+//! `anyhow!`, `bail!`, `ensure!`). The real crate is unavailable in the
+//! offline build environment; this keeps the public surface
+//! source-compatible.
 //!
 //! Semantics mirror `anyhow`:
 //! * `Error` is a cheap dynamic error carrying a context chain.
 //! * `Display` prints the outermost context; `{:#}` prints the whole chain
 //!   joined by `": "`; `Debug` prints the chain as a `Caused by:` list.
 //! * `Context` attaches context to `Result` and `Option` values.
+//! * Typed errors converted via `?`/`From` keep their concrete root, so
+//!   `downcast_ref::<T>()` recovers them through any number of context
+//!   layers (walking the root's `source()` chain like the real crate).
 
 use std::fmt;
 
 /// `Result` with a defaulted error type, like `anyhow::Result`.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// Dynamic error: an outermost-first chain of messages.
+/// Dynamic error: an outermost-first chain of messages, plus — when the
+/// error was converted from a typed `std::error::Error` — the boxed root
+/// itself so `downcast_ref` can recover the concrete type.
 pub struct Error {
     /// `chain[0]` is the outermost context, `chain.last()` the root cause.
     chain: Vec<String>,
+    /// The typed root cause, kept for `downcast_ref`; `None` for errors
+    /// built from bare messages (`anyhow!`, `Error::msg`).
+    root: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Construct from a single displayable message.
     pub fn msg(message: impl fmt::Display) -> Self {
-        Self { chain: vec![message.to_string()] }
+        Self { chain: vec![message.to_string()], root: None }
     }
 
     /// Wrap with an outer context message.
@@ -40,6 +49,20 @@ impl Error {
     /// Iterate the chain from outermost to root.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(String::as_str)
+    }
+
+    /// Recover the typed root cause (or anything on its `source()` chain),
+    /// like `anyhow::Error::downcast_ref`. Context layers added with
+    /// `context`/`with_context` are message-only and never mask the root.
+    pub fn downcast_ref<T: std::error::Error + 'static>(&self) -> Option<&T> {
+        let root = self.root.as_ref()?;
+        let mut cur: &(dyn std::error::Error + 'static) = &**root;
+        loop {
+            if let Some(t) = cur.downcast_ref::<T>() {
+                return Some(t);
+            }
+            cur = cur.source()?;
+        }
     }
 }
 
@@ -77,7 +100,7 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Self { chain }
+        Self { chain, root: Some(Box::new(e)) }
     }
 }
 
@@ -188,6 +211,19 @@ mod tests {
         assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
         let e = anyhow!("value {} bad", 3);
         assert_eq!(e.to_string(), "value 3 bad");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_layers() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("reading header")
+            .unwrap_err()
+            .context("opening graph");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root kept");
+        assert_eq!(io.to_string(), "disk on fire");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // Message-built errors carry no typed root.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
