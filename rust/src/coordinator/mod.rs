@@ -105,6 +105,17 @@ pub enum PgError {
     /// past the retry budget — the block is quarantined so one flaky
     /// region cannot wedge the request stream.
     Faulted(String),
+    /// Load shedding: the serving front-end refused to queue the request
+    /// because the tenant's admission queue is full (or the server is
+    /// draining). `retry_after` is the §3 [`LoadModel`] backlog estimate —
+    /// queued uncompressed bytes divided by the modeled load bandwidth
+    /// upper bound — i.e. roughly when the backlog will have drained.
+    Overloaded { retry_after: Duration },
+    /// The request's deadline passed before it was dispatched (or before
+    /// its result was consumed). Expired requests are *cancelled and
+    /// billed* — counted against the tenant and visible in its latency
+    /// histogram — never silently dropped.
+    Expired { waited: Duration },
 }
 
 impl std::fmt::Display for PgError {
@@ -113,6 +124,12 @@ impl std::fmt::Display for PgError {
             PgError::Closed(why) => write!(f, "graph handle closed: {why}"),
             PgError::Corrupt(why) => write!(f, "corrupt input: {why}"),
             PgError::Faulted(why) => write!(f, "unhealed read fault: {why}"),
+            PgError::Overloaded { retry_after } => {
+                write!(f, "overloaded: retry after {:.3}s", retry_after.as_secs_f64())
+            }
+            PgError::Expired { waited } => {
+                write!(f, "deadline expired after {:.3}s", waited.as_secs_f64())
+            }
         }
     }
 }
@@ -875,6 +892,11 @@ impl PgGraph {
         )?;
         req.wait();
         if let Some(e) = req.error() {
+            // Re-raise the typed class when the producer preserved one
+            // (the serving layer routes Faulted/Corrupt/Closed on it).
+            if let Some(pg) = req.error_kind() {
+                return Err(pg.into());
+            }
             bail!("load failed: {e}");
         }
         // In-place assembly needs *every* block to have landed; a quietly
@@ -1268,14 +1290,22 @@ impl PgGraph {
                                 );
                                 shared3.push(loaded);
                             }
-                            Err(e) => shared3.fail(e.to_string()),
+                            // A shutdown-classed decode failure (handle
+                            // released, pool closed, poisoned lock) keeps
+                            // its type through the stream so churn reads
+                            // as Closed, not corruption.
+                            Err(e) => match e.downcast_ref::<PgError>() {
+                                Some(PgError::Closed(_)) => shared3.fail_closed(e.to_string()),
+                                _ => shared3.fail(e.to_string()),
+                            },
                         }
                     });
                 }
                 if let Some(reason) = abort {
                     // Poison: a shutdown truncation must not read as a
-                    // complete drain.
-                    shared2.fail(reason.to_string());
+                    // complete drain — and it is a *Closed*, not a decode
+                    // failure, so serving-layer churn stays typed.
+                    shared2.fail_closed(reason.to_string());
                 } else if terminal {
                     // Cancelled/failed early exit: wake parked consumers.
                     shared2.finish_producing();
@@ -1297,15 +1327,31 @@ impl PgGraph {
     /// neighborhoods skip re-decompression on subsequent accesses. The
     /// shared engine is [`cached_successors`](crate::formats::source::cached_successors).
     pub fn successors(&self, v: usize) -> Result<Vec<VertexId>> {
+        self.successors_tagged(v, None)
+    }
+
+    /// [`successors`](Self::successors) billed to a per-tenant
+    /// [`CacheTag`]: the decoded-block lookup counts on the tenant's
+    /// `cache.decoded.hits.<tenant>` counter and the insert is charged
+    /// against the tenant's resident-cost quota
+    /// ([`DecodedCache::insert_tagged`] evicts the tenant's own LRU
+    /// entries first). The serve layer resolves tags through
+    /// [`register_cache_tenant`](Self::register_cache_tenant).
+    pub fn successors_tagged(
+        &self,
+        v: usize,
+        tag: Option<crate::storage::cache::CacheTag>,
+    ) -> Result<Vec<VertexId>> {
         let inner = &self.inner;
         let mut span = SpanGuard::new("request", "successors")
             .with_hist(inner.obs.req_successors.clone());
         span.set_arg(v as u64);
-        let list = crate::formats::source::cached_successors(
+        let list = crate::formats::source::cached_successors_tagged(
             &inner.decoded_cache,
             inner.source_block_vertices,
             inner.meta.num_vertices,
             v,
+            tag,
             |lo, hi| {
                 let opts = self.options();
                 run_with_healing(inner, opts.read_ctx, lo, hi, || {
@@ -1335,6 +1381,31 @@ impl PgGraph {
     /// Counters of the random-access decoded-block cache.
     pub fn decoded_cache_counters(&self) -> CacheCounters {
         self.inner.decoded_cache.counters()
+    }
+
+    /// Register tenant `name` with this graph's decoded-block cache:
+    /// resolves `cache.decoded.{hits,evictions}.<name>` counters from the
+    /// graph's registry and installs `quota_cost` (cost units, 0 = no
+    /// quota) as the tenant's resident ceiling. Returns the [`CacheTag`]
+    /// to pass to [`successors_tagged`](Self::successors_tagged).
+    /// Re-registering updates the quota and returns the same tag.
+    pub fn register_cache_tenant(
+        &self,
+        name: &str,
+        quota_cost: u64,
+    ) -> crate::storage::cache::CacheTag {
+        let metrics = &self.inner.metrics;
+        self.inner.decoded_cache.register_tag(
+            name,
+            quota_cost,
+            metrics.counter(&names::cache_tenant_hits(name)),
+            metrics.counter(&names::cache_tenant_evictions(name)),
+        )
+    }
+
+    /// Resident decoded-cache cost currently billed to `tag`.
+    pub fn cache_tenant_resident(&self, tag: crate::storage::cache::CacheTag) -> u64 {
+        self.inner.decoded_cache.tag_resident_cost(tag)
     }
 
     /// This graph's metrics registry (counters + latency histograms for
@@ -1383,6 +1454,18 @@ impl PgGraph {
 
     /// Join all library threads, drop the OS cache (§4.1 discipline).
     pub fn release(self) {
+        self.shutdown_and_join();
+    }
+
+    /// [`release`](Self::release) through a shared reference — the serving
+    /// front-end's churn path, where the handle lives in an `Arc` with
+    /// clones still held by in-flight requests. Sets the shutdown flag,
+    /// closes the buffer pool (poisoning in-flight streams into typed
+    /// [`PgError::Closed`] failures instead of hangs), clears the decoded
+    /// cache, joins every dispatcher this handle spawned, and drops the OS
+    /// cache. Idempotent: a second call finds the dispatcher list empty
+    /// and the flags already set.
+    pub fn shutdown_and_join(&self) {
         let trace_path = lock_recover(&self.inner.options).trace_path.clone();
         self.inner.shutdown.store(true, Ordering::Release);
         self.inner.pool.close(); // wake any parked request managers
@@ -1699,7 +1782,7 @@ fn decode_into_buffer(
         }
         Err(e) => {
             inner.pool.recycle(buffer_id);
-            req.record_failure(e.to_string());
+            req.record_failure_typed(&e);
             false
         }
     }
@@ -1903,7 +1986,7 @@ fn run_user_callback(
         let data = match lock_clean(&buf.data, "buffer data") {
             Ok(d) => d,
             Err(e) => {
-                req.record_failure(e.to_string());
+                req.record_failure_typed(&e.into());
                 inner.pool.recycle(buffer_id);
                 return;
             }

@@ -98,6 +98,10 @@ pub struct ReadRequest {
     edges_delivered: AtomicU64,
     failed: AtomicBool,
     error: Mutex<Option<String>>,
+    /// Typed classification of the first failure, when the producer had
+    /// one (`Faulted`, `Corrupt`, `Closed`, …) — the serving layer routes
+    /// on this instead of string-scraping `error`.
+    error_kind: Mutex<Option<crate::coordinator::PgError>>,
     done_cv: Condvar,
     done_mx: Mutex<()>,
     cancelled: AtomicBool,
@@ -116,6 +120,7 @@ impl ReadRequest {
             edges_delivered: AtomicU64::new(0),
             failed: AtomicBool::new(false),
             error: Mutex::new(None),
+            error_kind: Mutex::new(None),
             done_cv: Condvar::new(),
             done_mx: Mutex::new(()),
             cancelled: AtomicBool::new(false),
@@ -156,6 +161,13 @@ impl ReadRequest {
         // panicking writer, and the error message must stay readable even
         // after a dispatcher died — it is the request's failure report.
         crate::coordinator::lock_recover(&self.error).clone()
+    }
+
+    /// Typed class of the recorded failure, when the producer preserved
+    /// one via [`record_failure_typed`](Self::record_failure_typed);
+    /// `None` for untyped failures.
+    pub fn error_kind(&self) -> Option<crate::coordinator::PgError> {
+        crate::coordinator::lock_recover(&self.error_kind).clone()
     }
 
     /// Cancel: outstanding blocks may still complete, but unscheduled ones
@@ -199,6 +211,16 @@ impl ReadRequest {
         }
         self.failed.store(true, Ordering::Release);
         self.record_block(0);
+    }
+
+    /// [`record_failure`](Self::record_failure), preserving the typed
+    /// [`PgError`](crate::coordinator::PgError) class when `err` carries
+    /// one — blocking callers re-raise it instead of a flattened string.
+    pub fn record_failure_typed(&self, err: &anyhow::Error) {
+        if let Some(pg) = err.downcast_ref::<crate::coordinator::PgError>() {
+            let _ = crate::coordinator::lock_recover(&self.error_kind).get_or_insert(pg.clone());
+        }
+        self.record_failure(format!("{err:#}"));
     }
 
     /// Block until all blocks are done (the blocking-mode primitive).
@@ -257,6 +279,18 @@ mod tests {
         assert!(r.is_failed());
         assert!(r.is_complete());
         assert_eq!(r.error().as_deref(), Some("boom"));
+        assert!(r.error_kind().is_none(), "untyped failure has no kind");
+    }
+
+    #[test]
+    fn typed_failure_class_preserved() {
+        use crate::coordinator::PgError;
+        let r = ReadRequest::new(1);
+        let e = anyhow::Error::from(PgError::Faulted("injected EIO".into()));
+        r.record_failure_typed(&e);
+        assert!(r.is_failed());
+        assert!(matches!(r.error_kind(), Some(PgError::Faulted(_))));
+        assert!(r.error().unwrap().contains("injected EIO"));
     }
 
     #[test]

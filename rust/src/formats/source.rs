@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::formats::webgraph::{self, DecodedBlock, Decoder, WgMeta, WgOffsets};
 use crate::graph::{CsrGraph, VertexId};
-use crate::storage::cache::{CacheCounters, DecodedCache};
+use crate::storage::cache::{CacheCounters, CacheTag, DecodedCache};
 use crate::storage::sim::ReadCtx;
 use crate::storage::{IoAccount, SimStore};
 
@@ -95,18 +95,33 @@ pub fn cached_successors(
     v: usize,
     decode: impl FnOnce(usize, usize) -> Result<DecodedBlock>,
 ) -> Result<Vec<VertexId>> {
+    cached_successors_tagged(cache, block_vertices, num_vertices, v, None, decode)
+}
+
+/// [`cached_successors`] with the lookup/insert billed to a per-tenant
+/// [`CacheTag`] — the serve layer's quota-aware entry point: hits count on
+/// the tenant's own counter and inserts are charged against its resident
+/// quota.
+pub fn cached_successors_tagged(
+    cache: &DecodedCache<DecodedBlock>,
+    block_vertices: usize,
+    num_vertices: usize,
+    v: usize,
+    tag: Option<CacheTag>,
+    decode: impl FnOnce(usize, usize) -> Result<DecodedBlock>,
+) -> Result<Vec<VertexId>> {
     if v >= num_vertices {
         bail!("vertex {v} out of range (n={num_vertices})");
     }
     let block_vertices = block_vertices.max(1);
     let bid = (v / block_vertices) as u64;
-    let block = match cache.get(bid) {
+    let block = match cache.get_tagged(bid, tag) {
         Some(b) => b,
         None => {
             let lo = bid as usize * block_vertices;
             let hi = (lo + block_vertices).min(num_vertices);
             let block = Arc::new(decode(lo, hi)?);
-            cache.insert(bid, Arc::clone(&block));
+            cache.insert_tagged(bid, Arc::clone(&block), tag);
             block
         }
     };

@@ -36,5 +36,6 @@ pub mod model;
 pub mod obs;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod storage;
 pub mod util;

@@ -53,6 +53,7 @@ fn main() {
         "worker" => cmd_worker(&args[1..]),
         "trace" => cmd_trace(&flags),
         "chaos" => cmd_chaos(&flags),
+        "serve-stress" => cmd_serve_stress(&flags),
         "ci-summary" => cmd_ci_summary(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -103,6 +104,12 @@ commands:
                                                           real on-disk graph: checksum-classified
                                                           retries, quarantine, mmap->pread
                                                           degradation, oracle-checked recovery
+  serve-stress  [--seed N] [--scale N] [--requests N] [--exec-workers N] [--p99-factor F]
+                [--json PATH] [--timeout-s N] [--no-churn] [--no-faults]
+                                                          multi-tenant serving campaign: DRR
+                                                          fairness, overload shedding, deadline
+                                                          expiry, mid-run graph churn, fault
+                                                          isolation; per-tenant tail latencies
   ci-summary    [--scale N] [--seed N] [--json PATH]      markdown health metrics for CI;
                                                           --json also writes the merged
                                                           metrics-registry snapshot
@@ -1522,5 +1529,45 @@ fn cmd_ci_summary(flags: &HashMap<String, String>) -> Result<()> {
             .with_context(|| format!("write metrics snapshot {path}"))?;
         eprintln!("wrote the merged metrics snapshot to {path}");
     }
+    Ok(())
+}
+
+/// `serve-stress`: the multi-tenant serving campaign — four tenants (one
+/// abusive) over two live graphs with mid-run churn and a fault window,
+/// published as per-tenant tail-latency rows plus the contract table.
+/// `--json PATH` writes the `BENCH_serve.json` report.
+fn cmd_serve_stress(flags: &HashMap<String, String>) -> Result<()> {
+    use paragrapher::serve::stress::{run, StressConfig};
+
+    let timeout =
+        std::time::Duration::from_secs(flag_usize(flags, "timeout-s", 240).max(10) as u64);
+    // Watchdog: a wedged dispatcher or an unsettled ticket is itself a
+    // failed campaign — terminate loudly instead of hanging CI.
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let watchdog = std::thread::spawn(move || {
+        if done_rx.recv_timeout(timeout).is_err() {
+            eprintln!("serve-stress: watchdog fired after {timeout:?} — campaign wedged");
+            std::process::exit(9);
+        }
+    });
+
+    let cfg = StressConfig {
+        seed: flag_usize(flags, "seed", 42) as u64,
+        scale: flag_usize(flags, "scale", 1).max(1),
+        requests: flag_usize(flags, "requests", 400).max(40),
+        exec_workers: flag_usize(flags, "exec-workers", 4).max(1),
+        p99_factor: flag_f64(flags, "p99-factor", 2.0),
+        churn: !flags.contains_key("no-churn"),
+        faults: !flags.contains_key("no-faults"),
+    };
+    let report = run(cfg)?;
+    println!("{}", report.to_markdown());
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .with_context(|| format!("write serve bench report {path}"))?;
+        eprintln!("wrote the serve bench report to {path}");
+    }
+    let _ = done_tx.send(());
+    let _ = watchdog.join();
     Ok(())
 }

@@ -100,6 +100,42 @@ pub mod names {
         ("coo", REQ_COO),
         ("partition", REQ_PARTITION),
     ];
+
+    /// Per-tenant decoded-cache attribution (counters, resolved in the
+    /// owning *graph's* registry, so the label is per-graph × per-tenant).
+    pub fn cache_tenant_hits(tenant: &str) -> String {
+        format!("{CACHE_HITS}.{tenant}")
+    }
+    pub fn cache_tenant_evictions(tenant: &str) -> String {
+        format!("{CACHE_EVICTIONS}.{tenant}")
+    }
+
+    /// Serving front-end, per tenant (resolved in the *server's* registry).
+    /// End-to-end request latency, submit → reply, nanoseconds (histogram);
+    /// expired requests are billed here too — cancelled, never silent.
+    pub fn serve_tenant_lat(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.ns")
+    }
+    /// Requests accepted into the tenant's admission queue (counter).
+    pub fn serve_tenant_admitted(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.admitted")
+    }
+    /// Requests rejected with `PgError::Overloaded` (counter).
+    pub fn serve_tenant_shed(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.shed")
+    }
+    /// Requests completed successfully (counter).
+    pub fn serve_tenant_completed(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.completed")
+    }
+    /// Requests cancelled at their deadline (counter).
+    pub fn serve_tenant_expired(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.expired")
+    }
+    /// Requests that failed with a request error (counter).
+    pub fn serve_tenant_failed(tenant: &str) -> String {
+        format!("serve.tenant.{tenant}.failed")
+    }
 }
 
 /// Serializes tests that toggle the process-wide kill-switch (they would

@@ -125,28 +125,22 @@ impl MetricsRegistry {
     }
 
     pub fn counter(&self, name: &str) -> Counter {
-        let mut map = self.counters.lock().expect("metrics registry poisoned");
+        let mut map = crate::coordinator::lock_recover(&self.counters);
         map.entry(name.to_string()).or_insert_with(Counter::detached).clone()
     }
 
     pub fn histogram(&self, name: &str) -> Histo {
-        let mut map = self.hists.lock().expect("metrics registry poisoned");
+        let mut map = crate::coordinator::lock_recover(&self.hists);
         map.entry(name.to_string()).or_insert_with(Histo::detached).clone()
     }
 
     /// Point-in-time plain-data view of every registered metric.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let counters = self
-            .counters
-            .lock()
-            .expect("metrics registry poisoned")
+        let counters = crate::coordinator::lock_recover(&self.counters)
             .iter()
             .map(|(k, c)| (k.clone(), c.get()))
             .collect();
-        let hists = self
-            .hists
-            .lock()
-            .expect("metrics registry poisoned")
+        let hists = crate::coordinator::lock_recover(&self.hists)
             .iter()
             .map(|(k, h)| (k.clone(), h.snapshot()))
             .collect();

@@ -114,7 +114,7 @@ impl Tracer {
             let (tid, ring) = cell.get_or_init(|| {
                 let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
                 let ring = Arc::new(Mutex::new(Ring::with_capacity(RING_CAPACITY)));
-                self.rings.lock().expect("tracer registry poisoned").push(Arc::clone(&ring));
+                crate::coordinator::lock_recover(&self.rings).push(Arc::clone(&ring));
                 (tid, ring)
             });
             f(*tid, ring);
@@ -138,8 +138,7 @@ impl Tracer {
             u64::try_from(start.saturating_duration_since(self.epoch).as_nanos()).unwrap_or(u64::MAX);
         let dur_ns = u64::try_from(dur.as_nanos()).unwrap_or(u64::MAX);
         self.with_thread_ring(|tid, ring| {
-            ring.lock()
-                .expect("thread ring poisoned")
+            crate::coordinator::lock_recover(ring)
                 .push(Span { cat, name, start_ns, dur_ns, virt_dur_ns, tid, arg });
         });
     }
@@ -147,11 +146,11 @@ impl Tracer {
     /// All retained spans across every thread ring plus the total
     /// dropped-span count, sorted by real start time.
     pub fn snapshot(&self) -> (Vec<Span>, u64) {
-        let rings = self.rings.lock().expect("tracer registry poisoned").clone();
+        let rings = crate::coordinator::lock_recover(&self.rings).clone();
         let mut spans = Vec::new();
         let mut dropped = 0;
         for ring in rings {
-            let ring = ring.lock().expect("thread ring poisoned");
+            let ring = crate::coordinator::lock_recover(&ring);
             spans.extend(ring.spans().cloned());
             dropped += ring.dropped();
         }

@@ -25,6 +25,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Result};
 
 use super::Partition;
+use crate::coordinator::lock_recover;
 use crate::formats::webgraph::DecodedBlock;
 use crate::graph::VertexId;
 use crate::obs::{self, Counter};
@@ -116,6 +117,11 @@ struct StreamState {
     done_producing: bool,
     /// First decode failure; poisons the stream.
     failed: Option<String>,
+    /// The failure was a *shutdown* (graph released / buffer pool closed),
+    /// not a decode error: consumers then see a typed
+    /// [`PgError::Closed`](crate::coordinator::PgError) so a serving layer
+    /// can tell graceful churn apart from data corruption.
+    failed_closed: bool,
 }
 
 /// Shared core of a [`PartitionStream`] (producer and consumers both hold
@@ -164,7 +170,7 @@ impl StreamShared {
     /// consumption even while every decode is still on a worker.
     pub(crate) fn wait_for_window(&self) -> bool {
         let t0 = std::time::Instant::now();
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         let mut stalled = false;
         let result = loop {
             if self.cancelled.load(Ordering::Acquire) || g.failed.is_some() {
@@ -179,7 +185,7 @@ impl StreamShared {
                 self.producer_stalls.fetch_add(1, Ordering::Relaxed);
                 self.obs.producer_stalls.inc();
             }
-            g = self.cv.wait(g).expect("stream producer wait");
+            g = self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
         };
         drop(g);
         if stalled {
@@ -190,7 +196,7 @@ impl StreamShared {
 
     /// Producer: stage one decoded partition.
     pub(crate) fn push(&self, item: LoadedPartition) {
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         g.produced += 1;
         self.obs.produced.inc();
         if !self.cancelled.load(Ordering::Acquire) {
@@ -204,8 +210,22 @@ impl StreamShared {
 
     /// Producer: record a failed decode; poisons the stream.
     pub(crate) fn fail(&self, message: String) {
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         g.failed.get_or_insert(message);
+        g.done_producing = true;
+        self.cv.notify_all();
+    }
+
+    /// Producer: poison the stream as *closed* (graph released, buffer
+    /// pool shut) — consumers get a typed
+    /// [`PgError::Closed`](crate::coordinator::PgError) from [`next`]
+    /// instead of a generic stream failure.
+    pub(crate) fn fail_closed(&self, message: String) {
+        let mut g = lock_recover(&self.state);
+        if g.failed.is_none() {
+            g.failed = Some(message);
+            g.failed_closed = true;
+        }
         g.done_producing = true;
         self.cv.notify_all();
     }
@@ -213,24 +233,30 @@ impl StreamShared {
     /// Producer: mark the end of production (used on cancellation exits so
     /// consumers don't wait for partitions that will never arrive).
     pub(crate) fn finish_producing(&self) {
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         g.done_producing = true;
         self.cv.notify_all();
     }
 
     fn cancel(&self) {
         self.cancelled.store(true, Ordering::Release);
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         g.ready.clear(); // staged items will never be consumed
         self.cv.notify_all();
     }
 
     fn next(&self) -> Result<Option<LoadedPartition>> {
         let t0 = std::time::Instant::now();
-        let mut g = self.state.lock().expect("stream lock");
+        let mut g = lock_recover(&self.state);
         let mut stalled = false;
         loop {
             if let Some(e) = &g.failed {
+                if g.failed_closed {
+                    return Err(crate::coordinator::PgError::Closed(format!(
+                        "partition stream failed: {e}"
+                    ))
+                    .into());
+                }
                 bail!("partition stream failed: {e}");
             }
             if self.cancelled.load(Ordering::Acquire) {
@@ -259,12 +285,12 @@ impl StreamShared {
                 return Ok(None);
             }
             stalled = true;
-            g = self.cv.wait(g).expect("stream consumer wait");
+            g = self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
     fn counters(&self) -> StreamCounters {
-        let g = self.state.lock().expect("stream lock");
+        let g = lock_recover(&self.state);
         StreamCounters {
             produced: g.produced as u64,
             consumed: g.consumed as u64,

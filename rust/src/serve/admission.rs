@@ -1,0 +1,331 @@
+//! Admission control: bounded per-tenant queues drained by deficit
+//! round-robin (DRR).
+//!
+//! Every tenant owns one FIFO admission queue with a hard depth bound
+//! ([`TenantQuotas::max_queue`]); a request that would overflow it is
+//! rejected *at submit time* with a typed
+//! [`PgError::Overloaded`](crate::coordinator::PgError) carrying a
+//! `retry_after` derived from the §3 load model (see
+//! [`GraphServer::submit`](super::GraphServer::submit)) — the queue never
+//! grows unboundedly and a hostile client learns to back off.
+//!
+//! Dispatch is deficit round-robin over *work units* (estimated edges
+//! touched), not request counts: each rotation visit tops a tenant's
+//! deficit up by its quantum ([`TenantQuotas::weight`]) at most once, and
+//! the tenant may dispatch while its deficit covers the head request's
+//! cost. Bandwidth share therefore converges to the quantum ratio even
+//! when one tenant submits exclusively huge partition drains and another
+//! submits single-vertex lookups — the classic DRR fairness argument.
+//! A per-tenant in-flight cap ([`TenantQuotas::max_in_flight`]) bounds how
+//! much executor concurrency any one tenant can hold at once.
+//!
+//! Expired requests are swept before every pick: a request whose deadline
+//! passed while queued completes with a typed
+//! [`PgError::Expired`](crate::coordinator::PgError) and is *billed* — the
+//! tenant's latency histogram records the time it spent queued and its
+//! `expired` counter increments. Silent drops would make an overloaded
+//! server look fast.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::obs::{Counter, Histo};
+
+/// Per-tenant resource bounds. `Default` gives a well-behaved interactive
+/// tenant: shallow queue, a few concurrent requests, no cache quota.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantQuotas {
+    /// Requests this tenant may have executing at once.
+    pub max_in_flight: usize,
+    /// Admission-queue depth; submits beyond it shed with `Overloaded`.
+    pub max_queue: usize,
+    /// Decoded-cache resident-cost ceiling (cost units — edges + offsets
+    /// of cached blocks; 0 = no per-tenant quota). Enforced by the cache
+    /// itself: the tenant's own LRU entries evict first
+    /// ([`DecodedCache::insert_tagged`](crate::storage::cache)).
+    pub cache_quota_cost: u64,
+    /// DRR quantum, work units (estimated edges) added per rotation visit.
+    pub weight: u64,
+}
+
+impl Default for TenantQuotas {
+    fn default() -> Self {
+        Self { max_in_flight: 4, max_queue: 64, cache_quota_cost: 0, weight: 1 << 16 }
+    }
+}
+
+/// Point-in-time view of one tenant's serving counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub queued: usize,
+    pub in_flight: usize,
+}
+
+/// One queued request, as the dispatcher sees it (the server attaches the
+/// actual work closure/ticket alongside via the same queue slot).
+pub(crate) struct Queued<J> {
+    pub job: J,
+    /// Estimated work units (edges touched) — the DRR cost.
+    pub cost: u64,
+    /// Estimated *uncompressed* bytes the request will move — the §3
+    /// backlog unit behind `retry_after`.
+    pub bytes: u64,
+    pub enqueued: Instant,
+    pub deadline: Instant,
+}
+
+/// Per-tenant admission state. Owned by the server's state mutex.
+pub(crate) struct TenantState<J> {
+    pub name: String,
+    pub quotas: TenantQuotas,
+    pub queue: VecDeque<Queued<J>>,
+    pub deficit: u64,
+    pub in_flight: usize,
+    /// Sum of `bytes` over the queue (kept incrementally).
+    pub queued_bytes: u64,
+    // Registry-resolved counters (`serve.tenant.<name>.*`).
+    pub admitted: Counter,
+    pub shed: Counter,
+    pub completed: Counter,
+    pub expired: Counter,
+    pub failed: Counter,
+    /// End-to-end latency, submit → completion (expiries billed too).
+    pub lat: Histo,
+}
+
+impl<J> TenantState<J> {
+    pub fn stats(&self) -> TenantStats {
+        TenantStats {
+            admitted: self.admitted.get(),
+            shed: self.shed.get(),
+            completed: self.completed.get(),
+            expired: self.expired.get(),
+            failed: self.failed.get(),
+            queued: self.queue.len(),
+            in_flight: self.in_flight,
+        }
+    }
+
+    /// Pop every queue-head-to-tail request whose deadline has passed.
+    /// Returns the expired jobs with how long each waited; the caller
+    /// completes their tickets (billed) outside the state lock.
+    pub fn sweep_expired(&mut self, now: Instant) -> Vec<(J, Duration)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].deadline <= now {
+                let q = self.queue.remove(i).expect("index in bounds");
+                self.queued_bytes = self.queued_bytes.saturating_sub(q.bytes);
+                out.push((q.job, now.saturating_duration_since(q.enqueued)));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+/// One DRR pick across `tenants`: classic deficit round-robin, one
+/// dequeued request per call.
+///
+/// `cursor` is the tenant the rotation currently sits on and `topped`
+/// whether that tenant has already received its *arrival* top-up — both
+/// live in the server state so the burst structure survives across calls.
+/// On arriving at a tenant its deficit grows by one quantum, once; it then
+/// dispatches requests (one per call, cursor parked) while the deficit
+/// covers the head cost and in-flight headroom remains. When it can no
+/// longer afford its head the rotation moves on *without* another top-up —
+/// this is what stops a cheap-request tenant from monopolizing: its
+/// service per rotation is bounded by its quantum, so long-run bandwidth
+/// share converges to the quantum (weight) ratio. An emptied queue resets
+/// the deficit (DRR's anti-banking rule: credit does not accumulate while
+/// idle). Returns the tenant index and the dequeued request.
+pub(crate) fn drr_pick<J>(
+    tenants: &mut [TenantState<J>],
+    cursor: &mut usize,
+    topped: &mut bool,
+) -> Option<(usize, Queued<J>)> {
+    let n = tenants.len();
+    if n == 0 {
+        return None;
+    }
+    // At most one full rotation (every tenant visited once) per call.
+    for _ in 0..=n {
+        let idx = *cursor % n;
+        let t = &mut tenants[idx];
+        if t.queue.is_empty() {
+            t.deficit = 0;
+            *cursor = (idx + 1) % n;
+            *topped = false;
+            continue;
+        }
+        if t.in_flight >= t.quotas.max_in_flight {
+            // Concurrency-capped: skip without a top-up so a blocked
+            // tenant does not bank credit while it cannot run anyway.
+            *cursor = (idx + 1) % n;
+            *topped = false;
+            continue;
+        }
+        let head_cost = t.queue.front().expect("non-empty").cost;
+        if !*topped {
+            // Arrival top-up, ceilinged at one quantum (or the head cost,
+            // whichever is larger, so every request is affordable after a
+            // single top-up): credit never banks without bound, which
+            // caps the post-idle burst at max(quantum, head_cost).
+            let quantum = t.quotas.weight.max(1);
+            t.deficit = t.deficit.saturating_add(quantum).min(quantum.max(head_cost));
+            *topped = true;
+        }
+        if t.deficit >= head_cost {
+            let q = t.queue.pop_front().expect("head present");
+            t.deficit -= head_cost;
+            t.queued_bytes = t.queued_bytes.saturating_sub(q.bytes);
+            t.in_flight += 1;
+            return Some((idx, q));
+        }
+        *cursor = (idx + 1) % n;
+        *topped = false;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant(name: &str, weight: u64, max_in_flight: usize) -> TenantState<u32> {
+        TenantState {
+            name: name.to_string(),
+            quotas: TenantQuotas { weight, max_in_flight, ..Default::default() },
+            queue: VecDeque::new(),
+            deficit: 0,
+            in_flight: 0,
+            queued_bytes: 0,
+            admitted: Counter::detached(),
+            shed: Counter::detached(),
+            completed: Counter::detached(),
+            expired: Counter::detached(),
+            failed: Counter::detached(),
+            lat: Histo::detached(),
+        }
+    }
+
+    fn enqueue(t: &mut TenantState<u32>, job: u32, cost: u64) {
+        let now = Instant::now();
+        t.queue.push_back(Queued {
+            job,
+            cost,
+            bytes: cost * 8,
+            enqueued: now,
+            deadline: now + Duration::from_secs(60),
+        });
+        t.queued_bytes += cost * 8;
+    }
+
+    #[test]
+    fn drr_shares_by_weight_not_request_count() {
+        // Tenant a: many cheap requests; tenant b: few huge ones, equal
+        // weights — served work units should stay balanced, so the huge
+        // requests are NOT starved and the cheap ones do NOT monopolize.
+        let mut ts = vec![tenant("a", 100, usize::MAX), tenant("b", 100, usize::MAX)];
+        for i in 0..100 {
+            enqueue(&mut ts[0], i, 10);
+        }
+        for i in 0..10 {
+            enqueue(&mut ts[1], 1000 + i, 100);
+        }
+        let mut cursor = 0;
+        let mut topped = false;
+        let mut served = [0u64, 0u64];
+        for _ in 0..10_000 {
+            // Completion is immediate in this model.
+            match drr_pick(&mut ts, &mut cursor, &mut topped) {
+                Some((idx, q)) => {
+                    served[idx] += q.cost;
+                    ts[idx].in_flight -= 1;
+                }
+                None => {
+                    if ts.iter().all(|t| t.queue.is_empty()) {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(served, [1000, 1000], "equal weights -> equal work served");
+    }
+
+    #[test]
+    fn drr_respects_in_flight_cap() {
+        let mut ts = vec![tenant("a", 1000, 2)];
+        for i in 0..5 {
+            enqueue(&mut ts[0], i, 1);
+        }
+        let mut cursor = 0;
+        let mut topped = false;
+        assert!(drr_pick(&mut ts, &mut cursor, &mut topped).is_some());
+        assert!(drr_pick(&mut ts, &mut cursor, &mut topped).is_some());
+        assert!(
+            drr_pick(&mut ts, &mut cursor, &mut topped).is_none(),
+            "third pick blocked by max_in_flight=2"
+        );
+        ts[0].in_flight = 0;
+        assert!(drr_pick(&mut ts, &mut cursor, &mut topped).is_some());
+    }
+
+    #[test]
+    fn weighted_tenant_gets_proportional_share() {
+        let mut ts = vec![tenant("heavy", 300, usize::MAX), tenant("light", 100, usize::MAX)];
+        for i in 0..400 {
+            enqueue(&mut ts[0], i, 10);
+            enqueue(&mut ts[1], i, 10);
+        }
+        let mut cursor = 0;
+        let mut topped = false;
+        let mut served = [0u64, 0u64];
+        // Stop while both queues are still non-empty so the shares
+        // reflect steady-state competition, not one queue draining.
+        for _ in 0..200 {
+            if let Some((idx, q)) = drr_pick(&mut ts, &mut cursor, &mut topped) {
+                served[idx] += q.cost;
+                ts[idx].in_flight -= 1;
+            }
+        }
+        assert!(!ts[0].queue.is_empty() && !ts[1].queue.is_empty());
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!(
+            (2.0..=4.0).contains(&ratio),
+            "3:1 weights -> ~3:1 served work, got {ratio} ({served:?})"
+        );
+    }
+
+    #[test]
+    fn sweep_expired_bills_and_removes() {
+        let mut t = tenant("a", 100, 4);
+        let now = Instant::now();
+        t.queue.push_back(Queued {
+            job: 1,
+            cost: 1,
+            bytes: 8,
+            enqueued: now,
+            deadline: now, // already expired
+        });
+        t.queue.push_back(Queued {
+            job: 2,
+            cost: 1,
+            bytes: 8,
+            enqueued: now,
+            deadline: now + Duration::from_secs(60),
+        });
+        t.queued_bytes = 16;
+        let expired = t.sweep_expired(Instant::now());
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0, 1);
+        assert_eq!(t.queue.len(), 1);
+        assert_eq!(t.queued_bytes, 8);
+    }
+}

@@ -1,0 +1,913 @@
+//! Multi-tenant serving front-end: one [`GraphServer`] multiplexes many
+//! tenants over many open graphs.
+//!
+//! The paper frames ParaGrapher as a *library* one analytics process links
+//! against; this module answers the operational question that framing
+//! leaves open — what happens when the same loaded graphs serve many
+//! independent clients at once ("millions of users", ROADMAP). Three
+//! mechanisms, layered on the existing coordinator contracts:
+//!
+//! * **Admission control** ([`admission`]) — every request names a tenant;
+//!   each tenant owns a bounded FIFO queue drained by deficit round-robin
+//!   over *work units* (estimated edges touched), so an abusive tenant
+//!   flooding cheap requests cannot starve a well-behaved one issuing
+//!   large scans. A submit that would overflow the tenant's queue is shed
+//!   with a typed [`PgError::Overloaded`] whose `retry_after` comes from
+//!   the §3 load model: the current queued backlog in uncompressed bytes
+//!   divided by the graph's modeled load bandwidth — the honest "come
+//!   back when the backlog could have drained" answer, not a magic
+//!   constant. Requests carry deadlines; one that expires while queued is
+//!   cancelled with [`PgError::Expired`] and *billed* to the tenant's
+//!   latency histogram — an overloaded server must not look fast.
+//! * **Per-tenant accounting** — each tenant gets
+//!   `serve.tenant.<name>.{admitted,shed,completed,expired,failed}`
+//!   counters and an end-to-end latency histogram in the server's
+//!   registry, plus a per-graph [`CacheTag`] so decoded-cache hits and
+//!   evictions are attributed (`cache.decoded.{hits,evictions}.<name>`)
+//!   and the tenant's resident cache footprint is capped by its quota
+//!   (the cache evicts the over-quota tenant's own LRU entries first).
+//! * **Graceful churn** — [`GraphServer::close`] removes a graph while
+//!   traffic is in flight: its buffer pool closes, which poisons that
+//!   graph's partition streams into typed [`PgError::Closed`] failures
+//!   (never hangs), queued requests against it fail typed at dispatch,
+//!   and *other* graphs' tenants are untouched. [`GraphServer::reopen`]
+//!   replays the recorded open spec under a fresh epoch; requests
+//!   admitted against the old epoch fail typed rather than silently
+//!   landing on a different incarnation.
+//!
+//! Dispatch is asynchronous: `submit` returns a [`Ticket`] immediately;
+//! a dispatcher thread sweeps deadlines and feeds a fixed executor pool.
+//! Executors re-check the deadline and re-resolve the graph by
+//! (name, epoch) at execution time, and a panic in an executor settles
+//! the ticket with `Closed` instead of leaving a waiter hung (the pool
+//! catches the unwind; the settle guard runs during it).
+
+pub mod admission;
+pub mod stress;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    lock_clean, lock_recover, BlockCallback, GraphType, Options, Paragrapher, PgError, PgGraph,
+    VertexRange,
+};
+use crate::graph::VertexId;
+use crate::obs::{names, HistSnapshot, MetricsRegistry, MetricsSnapshot};
+use crate::storage::cache::CacheTag;
+use crate::storage::{DeviceKind, SimStore};
+use crate::util::pool::ThreadPool;
+
+pub use admission::{TenantQuotas, TenantStats};
+use admission::{drr_pick, Queued, TenantState};
+
+/// Server-wide knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Executor threads shared by every tenant (per-tenant concurrency is
+    /// bounded separately by [`TenantQuotas::max_in_flight`]).
+    pub exec_workers: usize,
+    /// Deadline applied when `submit` is called without one.
+    pub default_deadline: Duration,
+    /// How often the dispatcher wakes to sweep expired requests when no
+    /// work is pending.
+    pub sweep_interval: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            exec_workers: 4,
+            default_deadline: Duration::from_secs(30),
+            sweep_interval: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One request against a named open graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeRequest {
+    /// Random access: one vertex's successor list.
+    Successors { vertex: usize },
+    /// Vertex-range subgraph (blocking CSX path); replies with the edge
+    /// count it decoded.
+    CsxRange { lo: usize, hi: usize },
+    /// Edge-range request (COO path); replies with edges delivered.
+    CooRange { lo_edge: u64, hi_edge: u64 },
+    /// Full partitioned drain with `parts` partitions; replies with the
+    /// total edge count streamed.
+    Partitions { parts: usize },
+}
+
+/// A completed request's payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeReply {
+    Successors(Vec<VertexId>),
+    /// Edges decoded/streamed by a range or partition request.
+    Edges(u64),
+}
+
+enum TicketSlot {
+    Pending,
+    Done(Result<ServeReply>),
+    Taken,
+}
+
+struct TicketInner {
+    slot: Mutex<TicketSlot>,
+    cv: Condvar,
+}
+
+impl TicketInner {
+    /// First completion wins; later calls (e.g. the panic guard after a
+    /// normal settle) are no-ops.
+    fn complete(&self, result: Result<ServeReply>) {
+        let mut s = lock_recover(&self.slot);
+        if matches!(*s, TicketSlot::Pending) {
+            *s = TicketSlot::Done(result);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Handle to one submitted request. The result is single-consumer:
+/// [`wait`](Ticket::wait) takes it, a second wait reports `Closed`.
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    fn new() -> Self {
+        Self {
+            inner: Arc::new(TicketInner {
+                slot: Mutex::new(TicketSlot::Pending),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Block until the request settles (completion, expiry, or failure —
+    /// every admitted request settles; see the dispatcher contract).
+    pub fn wait(&self) -> Result<ServeReply> {
+        let mut s = lock_recover(&self.inner.slot);
+        loop {
+            match std::mem::replace(&mut *s, TicketSlot::Taken) {
+                TicketSlot::Done(r) => return r,
+                TicketSlot::Taken => {
+                    return Err(PgError::Closed("ticket result already taken".into()).into());
+                }
+                TicketSlot::Pending => {
+                    *s = TicketSlot::Pending;
+                    s = self
+                        .inner
+                        .cv
+                        .wait(s)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Like [`wait`](Self::wait) but gives up after `timeout`, leaving the
+    /// ticket pending. `None` = still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<ServeReply>> {
+        let deadline = Instant::now() + timeout;
+        let mut s = lock_recover(&self.inner.slot);
+        loop {
+            match std::mem::replace(&mut *s, TicketSlot::Taken) {
+                TicketSlot::Done(r) => return Some(r),
+                TicketSlot::Taken => {
+                    return Some(Err(PgError::Closed("ticket result already taken".into()).into()));
+                }
+                TicketSlot::Pending => {
+                    *s = TicketSlot::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (g, _) = self
+                        .inner
+                        .cv
+                        .wait_timeout(s, deadline - now)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    s = g;
+                }
+            }
+        }
+    }
+
+    /// Has the request settled (result still available to take)?
+    pub fn is_done(&self) -> bool {
+        matches!(*lock_recover(&self.inner.slot), TicketSlot::Done(_))
+    }
+}
+
+/// Everything needed to re-execute an open (the [`GraphServer::reopen`]
+/// churn path).
+#[derive(Clone)]
+enum OpenSpec {
+    Store { store: Arc<SimStore>, base: String, gtype: GraphType, options: Options },
+    Dir { dir: PathBuf, device: DeviceKind, base: String, gtype: GraphType, options: Options },
+}
+
+struct GraphEntry {
+    graph: Arc<PgGraph>,
+    /// Bumped on every (re)open; queued requests carry the epoch they were
+    /// admitted against and fail typed if it no longer matches.
+    epoch: u64,
+    spec: OpenSpec,
+    /// Per-tenant cache tags, indexed by tenant slot.
+    tags: Vec<Option<CacheTag>>,
+}
+
+struct ServeJob {
+    graph: String,
+    epoch: u64,
+    req: ServeRequest,
+    ticket: Arc<TicketInner>,
+}
+
+struct ServerState {
+    tenants: Vec<TenantState<ServeJob>>,
+    names: HashMap<String, usize>,
+    graphs: HashMap<String, GraphEntry>,
+    /// DRR rotation position + whether its tenant received its arrival
+    /// top-up (see [`admission::drr_pick`]).
+    cursor: usize,
+    topped: bool,
+    epoch: u64,
+}
+
+struct ServerInner {
+    state: Mutex<ServerState>,
+    /// Signalled on submit, completion, churn, and shutdown.
+    work: Condvar,
+    metrics: Arc<MetricsRegistry>,
+    opts: ServerOptions,
+    shutdown: AtomicBool,
+}
+
+/// The multi-tenant serving front-end. See the module docs for the model.
+pub struct GraphServer {
+    inner: Arc<ServerInner>,
+    exec: Option<Arc<ThreadPool>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl GraphServer {
+    pub fn new(opts: ServerOptions) -> Self {
+        let inner = Arc::new(ServerInner {
+            state: Mutex::new(ServerState {
+                tenants: Vec::new(),
+                names: HashMap::new(),
+                graphs: HashMap::new(),
+                cursor: 0,
+                topped: false,
+                epoch: 0,
+            }),
+            work: Condvar::new(),
+            metrics: Arc::new(MetricsRegistry::new()),
+            opts,
+            shutdown: AtomicBool::new(false),
+        });
+        let exec = Arc::new(ThreadPool::new(opts.exec_workers.max(1)));
+        let dispatcher = {
+            let inner = Arc::clone(&inner);
+            let exec = Arc::clone(&exec);
+            std::thread::Builder::new()
+                .name("pg-serve-dispatch".into())
+                .spawn(move || dispatcher_loop(inner, exec))
+                .expect("spawn serve dispatcher")
+        };
+        Self { inner, exec: Some(exec), dispatcher: Some(dispatcher) }
+    }
+
+    /// Register tenant `name` (or update its quotas if already known).
+    /// Resolves the tenant's serve counters in the server registry and a
+    /// cache tag on every open graph; graphs opened later pick the tenant
+    /// up at open time.
+    pub fn register_tenant(&self, name: &str, quotas: TenantQuotas) -> Result<()> {
+        let metrics = Arc::clone(&self.inner.metrics);
+        let mut st = lock_recover(&self.inner.state);
+        let st = &mut *st;
+        if let Some(&slot) = st.names.get(name) {
+            st.tenants[slot].quotas = quotas;
+            for e in st.graphs.values_mut() {
+                let tag = e.graph.register_cache_tenant(name, quotas.cache_quota_cost);
+                if e.tags.len() <= slot {
+                    e.tags.resize(slot + 1, None);
+                }
+                e.tags[slot] = Some(tag);
+            }
+            return Ok(());
+        }
+        let slot = st.tenants.len();
+        st.tenants.push(TenantState {
+            name: name.to_string(),
+            quotas,
+            queue: std::collections::VecDeque::new(),
+            deficit: 0,
+            in_flight: 0,
+            queued_bytes: 0,
+            admitted: metrics.counter(&names::serve_tenant_admitted(name)),
+            shed: metrics.counter(&names::serve_tenant_shed(name)),
+            completed: metrics.counter(&names::serve_tenant_completed(name)),
+            expired: metrics.counter(&names::serve_tenant_expired(name)),
+            failed: metrics.counter(&names::serve_tenant_failed(name)),
+            lat: metrics.histogram(&names::serve_tenant_lat(name)),
+        });
+        st.names.insert(name.to_string(), slot);
+        for e in st.graphs.values_mut() {
+            let tag = e.graph.register_cache_tenant(name, quotas.cache_quota_cost);
+            if e.tags.len() <= slot {
+                e.tags.resize(slot + 1, None);
+            }
+            e.tags[slot] = Some(tag);
+        }
+        Ok(())
+    }
+
+    /// Open `base` from `store` as graph `name`.
+    pub fn open_store(
+        &self,
+        name: &str,
+        store: Arc<SimStore>,
+        base: &str,
+        gtype: GraphType,
+        options: Options,
+    ) -> Result<()> {
+        let graph =
+            Paragrapher::init().open_graph(Arc::clone(&store), base, gtype, options.clone())?;
+        self.install(
+            name,
+            graph,
+            OpenSpec::Store { store, base: base.to_string(), gtype, options },
+        )
+    }
+
+    /// Open `base` from an on-disk directory as graph `name`.
+    pub fn open_dir(
+        &self,
+        name: &str,
+        dir: &Path,
+        device: DeviceKind,
+        base: &str,
+        gtype: GraphType,
+        options: Options,
+    ) -> Result<()> {
+        let graph =
+            Paragrapher::init().open_graph_from_dir(dir, device, base, gtype, options.clone())?;
+        self.install(
+            name,
+            graph,
+            OpenSpec::Dir {
+                dir: dir.to_path_buf(),
+                device,
+                base: base.to_string(),
+                gtype,
+                options,
+            },
+        )
+    }
+
+    fn install(&self, name: &str, graph: PgGraph, spec: OpenSpec) -> Result<()> {
+        let graph = Arc::new(graph);
+        let mut st = lock_recover(&self.inner.state);
+        if st.graphs.contains_key(name) {
+            drop(st);
+            // Don't leak the freshly opened graph's threads.
+            graph.shutdown_and_join();
+            bail!("graph '{name}' is already open");
+        }
+        let tags = st
+            .tenants
+            .iter()
+            .map(|t| Some(graph.register_cache_tenant(&t.name, t.quotas.cache_quota_cost)))
+            .collect();
+        st.epoch += 1;
+        let epoch = st.epoch;
+        st.graphs.insert(name.to_string(), GraphEntry { graph, epoch, spec, tags });
+        drop(st);
+        self.inner.work.notify_all();
+        Ok(())
+    }
+
+    /// Close graph `name` with traffic possibly in flight: the entry is
+    /// unlinked first, then the graph's threads are joined *outside* the
+    /// state lock (executors settling requests need that lock). Closing
+    /// the buffer pool poisons the graph's in-flight partition streams
+    /// into typed [`PgError::Closed`]; still-queued requests against it
+    /// fail typed at dispatch. Other graphs are unaffected.
+    pub fn close(&self, name: &str) -> Result<()> {
+        let entry = {
+            let mut st = lock_recover(&self.inner.state);
+            st.graphs.remove(name).with_context(|| format!("graph '{name}' is not open"))?
+        };
+        entry.graph.shutdown_and_join();
+        self.inner.work.notify_all();
+        Ok(())
+    }
+
+    /// Close and re-open graph `name` from its recorded open spec, under a
+    /// fresh epoch. Requests admitted against the old epoch fail typed.
+    pub fn reopen(&self, name: &str) -> Result<()> {
+        let spec = {
+            let st = lock_recover(&self.inner.state);
+            st.graphs
+                .get(name)
+                .with_context(|| format!("graph '{name}' is not open"))?
+                .spec
+                .clone()
+        };
+        self.close(name)?;
+        match spec {
+            OpenSpec::Store { store, base, gtype, options } => {
+                self.open_store(name, store, &base, gtype, options)
+            }
+            OpenSpec::Dir { dir, device, base, gtype, options } => {
+                self.open_dir(name, &dir, device, &base, gtype, options)
+            }
+        }
+    }
+
+    /// The live handle for graph `name` (e.g. to install a fault plan on
+    /// its store, or to drive partition streams directly in tests).
+    pub fn graph(&self, name: &str) -> Option<Arc<PgGraph>> {
+        let st = lock_recover(&self.inner.state);
+        st.graphs.get(name).map(|e| Arc::clone(&e.graph))
+    }
+
+    /// Names of currently open graphs.
+    pub fn graph_names(&self) -> Vec<String> {
+        let st = lock_recover(&self.inner.state);
+        st.graphs.keys().cloned().collect()
+    }
+
+    /// Submit with the server's default deadline.
+    pub fn submit(&self, tenant: &str, graph: &str, req: ServeRequest) -> Result<Ticket> {
+        self.submit_with_deadline(tenant, graph, req, self.inner.opts.default_deadline)
+    }
+
+    /// Admit one request, or shed it. Sheds are typed: a full tenant queue
+    /// returns [`PgError::Overloaded`] with `retry_after` = the §3 model's
+    /// minimum time to drain the currently queued bytes; an unknown graph
+    /// or a shut-down server returns [`PgError::Closed`].
+    pub fn submit_with_deadline(
+        &self,
+        tenant: &str,
+        graph: &str,
+        req: ServeRequest,
+        deadline: Duration,
+    ) -> Result<Ticket> {
+        let mut st = lock_clean(&self.inner.state, "server state")?;
+        if self.inner.shutdown.load(Ordering::Acquire) {
+            return Err(PgError::Closed("server is shutting down".into()).into());
+        }
+        let slot = match st.names.get(tenant) {
+            Some(&s) => s,
+            None => bail!("unknown tenant '{tenant}'"),
+        };
+        let (cost, bytes, epoch, model) = match st.graphs.get(graph) {
+            Some(e) => {
+                let (c, b) = estimate_cost(&e.graph, &req);
+                (c, b, e.epoch, e.graph.load_model())
+            }
+            None => return Err(PgError::Closed(format!("graph '{graph}' is not open")).into()),
+        };
+        if st.tenants[slot].queue.len() >= st.tenants[slot].quotas.max_queue {
+            let backlog: u64 =
+                st.tenants.iter().map(|t| t.queued_bytes).sum::<u64>().saturating_add(bytes);
+            st.tenants[slot].shed.inc();
+            let secs = model.min_load_seconds(backlog).clamp(1e-3, 600.0);
+            return Err(PgError::Overloaded { retry_after: Duration::from_secs_f64(secs) }.into());
+        }
+        let now = Instant::now();
+        let ticket = Ticket::new();
+        let t = &mut st.tenants[slot];
+        t.queue.push_back(Queued {
+            job: ServeJob {
+                graph: graph.to_string(),
+                epoch,
+                req,
+                ticket: Arc::clone(&ticket.inner),
+            },
+            cost,
+            bytes,
+            enqueued: now,
+            deadline: now + deadline,
+        });
+        t.queued_bytes += bytes;
+        t.admitted.inc();
+        drop(st);
+        self.inner.work.notify_all();
+        Ok(ticket)
+    }
+
+    /// Convenience: submit and block for the reply.
+    pub fn call(&self, tenant: &str, graph: &str, req: ServeRequest) -> Result<ServeReply> {
+        self.submit(tenant, graph, req)?.wait()
+    }
+
+    /// Point-in-time serving counters for one tenant.
+    pub fn tenant_stats(&self, name: &str) -> Option<TenantStats> {
+        let st = lock_recover(&self.inner.state);
+        st.names.get(name).map(|&s| st.tenants[s].stats())
+    }
+
+    /// Snapshot of one tenant's end-to-end latency histogram.
+    pub fn tenant_latency(&self, name: &str) -> Option<HistSnapshot> {
+        let st = lock_recover(&self.inner.state);
+        st.names.get(name).map(|&s| st.tenants[s].lat.snapshot())
+    }
+
+    /// The server's metrics registry (`serve.tenant.*`).
+    pub fn metrics_registry(&self) -> &Arc<MetricsRegistry> {
+        &self.inner.metrics
+    }
+
+    /// Snapshot of every server metric.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.inner.metrics.snapshot()
+    }
+
+    /// Stop admitting, fail everything still queued with typed `Closed`,
+    /// join the dispatcher and executors (in-flight requests settle
+    /// first), then close every graph. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.dispatcher.is_none() && self.exec.is_none() {
+            return;
+        }
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.work.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        // The dispatcher held the only other pool handle and has been
+        // joined, so this drop is the last reference: it closes the queue
+        // and joins the executor workers, letting in-flight requests
+        // settle before their graphs go away below.
+        drop(self.exec.take());
+        let entries: Vec<GraphEntry> = {
+            let mut st = lock_recover(&self.inner.state);
+            st.graphs.drain().map(|(_, e)| e).collect()
+        };
+        for e in entries {
+            e.graph.shutdown_and_join();
+        }
+    }
+}
+
+impl Drop for GraphServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Work-unit + byte estimate for admission: edges the request will touch
+/// (DRR cost) and the uncompressed bytes it will move (§3 backlog unit).
+/// Estimates only — degree skew is invisible before decoding — but
+/// monotone in request size, which is all fairness needs.
+fn estimate_cost(graph: &PgGraph, req: &ServeRequest) -> (u64, u64) {
+    let n = graph.num_vertices().max(1) as u64;
+    let m = graph.num_edges();
+    let deg = (m / n).max(1);
+    let edges = match req {
+        ServeRequest::Successors { .. } => deg,
+        ServeRequest::CsxRange { lo, hi } => (hi.saturating_sub(*lo) as u64).saturating_mul(deg),
+        ServeRequest::CooRange { lo_edge, hi_edge } => hi_edge.saturating_sub(*lo_edge),
+        ServeRequest::Partitions { .. } => m,
+    }
+    .max(1);
+    (edges, edges.saturating_mul(8))
+}
+
+fn dispatcher_loop(inner: Arc<ServerInner>, exec: Arc<ThreadPool>) {
+    loop {
+        let shutting_down = inner.shutdown.load(Ordering::Acquire);
+        let mut to_expire: Vec<(ServeJob, Duration)> = Vec::new();
+        let mut to_abort: Vec<ServeJob> = Vec::new();
+        let mut pick = None;
+        {
+            let mut st = lock_recover(&inner.state);
+            let now = Instant::now();
+            for t in st.tenants.iter_mut() {
+                for (job, waited) in t.sweep_expired(now) {
+                    t.expired.inc();
+                    t.lat.record_duration(waited);
+                    to_expire.push((job, waited));
+                }
+            }
+            if shutting_down {
+                for t in st.tenants.iter_mut() {
+                    while let Some(q) = t.queue.pop_front() {
+                        t.queued_bytes = t.queued_bytes.saturating_sub(q.bytes);
+                        t.failed.inc();
+                        t.lat.record_duration(now.saturating_duration_since(q.enqueued));
+                        to_abort.push(q.job);
+                    }
+                }
+            } else {
+                let s = &mut *st;
+                pick = drr_pick(&mut s.tenants, &mut s.cursor, &mut s.topped);
+                if pick.is_none() && to_expire.is_empty() {
+                    let _ = inner
+                        .work
+                        .wait_timeout(st, inner.opts.sweep_interval)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+            }
+        }
+        for (job, waited) in to_expire {
+            job.ticket.complete(Err(PgError::Expired { waited }.into()));
+        }
+        for job in to_abort {
+            let e = PgError::Closed("server shut down with request queued".into());
+            job.ticket.complete(Err(e.into()));
+        }
+        if let Some((slot, q)) = pick {
+            let inner = Arc::clone(&inner);
+            exec.execute(move || execute_job(inner, slot, q));
+        }
+        if shutting_down {
+            return;
+        }
+    }
+}
+
+/// Bills the tenant and settles the ticket exactly once — including when
+/// the executor panics (the drop arm fires during the pool's
+/// catch-unwind), so a `Ticket::wait` never hangs on a dead request.
+struct SettleGuard {
+    inner: Arc<ServerInner>,
+    slot: usize,
+    ticket: Arc<TicketInner>,
+    enqueued: Instant,
+    armed: bool,
+}
+
+impl SettleGuard {
+    fn settle(mut self, result: Result<ServeReply>) {
+        self.armed = false;
+        settle(&self.inner, self.slot, &self.ticket, self.enqueued, result);
+    }
+}
+
+impl Drop for SettleGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            settle(
+                &self.inner,
+                self.slot,
+                &self.ticket,
+                self.enqueued,
+                Err(PgError::Closed("request executor panicked".into()).into()),
+            );
+        }
+    }
+}
+
+fn settle(
+    inner: &ServerInner,
+    slot: usize,
+    ticket: &TicketInner,
+    enqueued: Instant,
+    result: Result<ServeReply>,
+) {
+    let expired = matches!(
+        result.as_ref().err().and_then(|e| e.downcast_ref::<PgError>()),
+        Some(PgError::Expired { .. })
+    );
+    {
+        let mut st = lock_recover(&inner.state);
+        let t = &mut st.tenants[slot];
+        t.lat.record_duration(enqueued.elapsed());
+        match &result {
+            Ok(_) => t.completed.inc(),
+            Err(_) if expired => t.expired.inc(),
+            Err(_) => t.failed.inc(),
+        }
+        t.in_flight = t.in_flight.saturating_sub(1);
+    }
+    inner.work.notify_all();
+    ticket.complete(result);
+}
+
+fn execute_job(inner: Arc<ServerInner>, slot: usize, q: Queued<ServeJob>) {
+    let Queued { job, enqueued, deadline, .. } = q;
+    let ServeJob { graph: graph_name, epoch, req, ticket } = job;
+    let guard = SettleGuard { inner, slot, ticket, enqueued, armed: true };
+    // ticket was moved into the guard; settle through it from here on.
+    let now = Instant::now();
+    if now >= deadline {
+        let waited = now.saturating_duration_since(enqueued);
+        guard.settle(Err(PgError::Expired { waited }.into()));
+        return;
+    }
+    let resolved = {
+        let st = lock_recover(&guard.inner.state);
+        st.graphs
+            .get(&graph_name)
+            .filter(|e| e.epoch == epoch)
+            .map(|e| (Arc::clone(&e.graph), e.tags.get(slot).copied().flatten()))
+    };
+    let result = match resolved {
+        Some((graph, tag)) => run_request(&graph, tag, &req),
+        None => Err(PgError::Closed(format!(
+            "graph '{graph_name}' was closed while the request was queued"
+        ))
+        .into()),
+    };
+    guard.settle(result);
+}
+
+fn run_request(graph: &PgGraph, tag: Option<CacheTag>, req: &ServeRequest) -> Result<ServeReply> {
+    match req {
+        ServeRequest::Successors { vertex } => {
+            Ok(ServeReply::Successors(graph.successors_tagged(*vertex, tag)?))
+        }
+        ServeRequest::CsxRange { lo, hi } => {
+            let block = graph.csx_get_subgraph_sync(VertexRange::new(*lo, *hi))?;
+            Ok(ServeReply::Edges(block.num_edges()))
+        }
+        ServeRequest::CooRange { lo_edge, hi_edge } => {
+            let cb: BlockCallback = Arc::new(|_blk| {});
+            let r = graph.coo_get_edges(*lo_edge, *hi_edge, cb)?;
+            r.wait();
+            if r.is_failed() {
+                if let Some(pg) = r.error_kind() {
+                    return Err(pg.into());
+                }
+                let msg = r.error().unwrap_or_else(|| "no error recorded".into());
+                bail!("coo request failed: {msg}");
+            }
+            Ok(ServeReply::Edges(r.edges_delivered()))
+        }
+        ServeRequest::Partitions { parts } => {
+            let stream = graph.csx_get_partitions(*parts)?;
+            let mut edges = 0u64;
+            while let Some(p) = stream.next()? {
+                edges += p.num_edges();
+            }
+            Ok(ServeReply::Edges(edges))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::webgraph;
+    use crate::graph::generators;
+
+    fn open_test_server(n: usize, seed: u64) -> (GraphServer, crate::graph::CsrGraph) {
+        let g = generators::barabasi_albert(n, 4, seed);
+        let store = Arc::new(SimStore::new(DeviceKind::Dram));
+        for (name, data) in webgraph::serialize(&g, "g") {
+            store.put(&name, data);
+        }
+        let server = GraphServer::new(ServerOptions::default());
+        let opts = Options { buffers: 2, buffer_edges: 4096, ..Options::default() };
+        server.open_store("g", store, "g", GraphType::CsxWg400, opts).unwrap();
+        (server, g)
+    }
+
+    #[test]
+    fn serves_successors_csx_coo_and_partitions() {
+        let (server, g) = open_test_server(300, 11);
+        server.register_tenant("t", TenantQuotas::default()).unwrap();
+        match server.call("t", "g", ServeRequest::Successors { vertex: 7 }).unwrap() {
+            ServeReply::Successors(s) => assert_eq!(s, g.neighbors(7)),
+            other => panic!("unexpected reply {other:?}"),
+        }
+        let m = g.num_edges();
+        for req in [
+            ServeRequest::CsxRange { lo: 0, hi: g.num_vertices() },
+            ServeRequest::CooRange { lo_edge: 0, hi_edge: m },
+            ServeRequest::Partitions { parts: 3 },
+        ] {
+            match server.call("t", "g", req).unwrap() {
+                ServeReply::Edges(e) => assert_eq!(e, m),
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        let stats = server.tenant_stats("t").unwrap();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.shed, 0);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_overloaded() {
+        let (server, _g) = open_test_server(200, 13);
+        server
+            .register_tenant("t", TenantQuotas { max_queue: 0, ..TenantQuotas::default() })
+            .unwrap();
+        let err = server.submit("t", "g", ServeRequest::Successors { vertex: 0 }).unwrap_err();
+        match err.downcast_ref::<PgError>() {
+            Some(PgError::Overloaded { retry_after }) => {
+                assert!(*retry_after > Duration::ZERO, "retry_after must be positive");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(server.tenant_stats("t").unwrap().shed, 1);
+    }
+
+    #[test]
+    fn queued_past_deadline_expires_and_is_billed() {
+        let (server, _g) = open_test_server(200, 17);
+        // max_in_flight = 0: nothing ever dispatches, so the request can
+        // only leave the queue through the deadline sweep.
+        server
+            .register_tenant("t", TenantQuotas { max_in_flight: 0, ..TenantQuotas::default() })
+            .unwrap();
+        let t = server
+            .submit_with_deadline(
+                "t",
+                "g",
+                ServeRequest::Successors { vertex: 0 },
+                Duration::from_millis(5),
+            )
+            .unwrap();
+        let err = t.wait().unwrap_err();
+        match err.downcast_ref::<PgError>() {
+            Some(PgError::Expired { waited }) => assert!(*waited >= Duration::from_millis(5)),
+            other => panic!("expected Expired, got {other:?}"),
+        }
+        let stats = server.tenant_stats("t").unwrap();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.completed, 0);
+        let lat = server.tenant_latency("t").unwrap();
+        assert_eq!(lat.total, 1, "expiry must be billed to the latency histogram");
+    }
+
+    #[test]
+    fn request_queued_across_close_fails_typed() {
+        let (server, _g) = open_test_server(200, 19);
+        // Hold the request in the queue (no dispatch), close the graph,
+        // then let it dispatch: the epoch check must fail it typed.
+        server
+            .register_tenant("t", TenantQuotas { max_in_flight: 0, ..TenantQuotas::default() })
+            .unwrap();
+        let t = server.submit("t", "g", ServeRequest::Successors { vertex: 0 }).unwrap();
+        server.close("g").unwrap();
+        server.register_tenant("t", TenantQuotas::default()).unwrap();
+        let err = t.wait().unwrap_err();
+        match err.downcast_ref::<PgError>() {
+            Some(PgError::Closed(_)) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(server.tenant_stats("t").unwrap().failed, 1);
+    }
+
+    #[test]
+    fn unknown_tenant_and_unknown_graph_are_rejected() {
+        let (server, _g) = open_test_server(200, 23);
+        server.register_tenant("t", TenantQuotas::default()).unwrap();
+        assert!(server.submit("ghost", "g", ServeRequest::Successors { vertex: 0 }).is_err());
+        let err = server.submit("t", "nope", ServeRequest::Successors { vertex: 0 }).unwrap_err();
+        assert!(matches!(err.downcast_ref::<PgError>(), Some(PgError::Closed(_))));
+    }
+
+    #[test]
+    fn reopen_bumps_epoch_and_keeps_serving() {
+        let (server, g) = open_test_server(250, 29);
+        server.register_tenant("t", TenantQuotas::default()).unwrap();
+        let before = server.call("t", "g", ServeRequest::Successors { vertex: 3 }).unwrap();
+        server.reopen("g").unwrap();
+        let after = server.call("t", "g", ServeRequest::Successors { vertex: 3 }).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(after, ServeReply::Successors(g.neighbors(3).to_vec()));
+    }
+
+    #[test]
+    fn shutdown_fails_queued_requests_typed() {
+        let (mut server, _g) = open_test_server(200, 31);
+        server
+            .register_tenant("t", TenantQuotas { max_in_flight: 0, ..TenantQuotas::default() })
+            .unwrap();
+        let t = server.submit("t", "g", ServeRequest::Successors { vertex: 0 }).unwrap();
+        server.shutdown();
+        let err = t.wait().unwrap_err();
+        assert!(matches!(err.downcast_ref::<PgError>(), Some(PgError::Closed(_))));
+        // Post-shutdown submits are rejected typed, not hung.
+        let err = server.submit("t", "g", ServeRequest::Successors { vertex: 0 }).unwrap_err();
+        assert!(matches!(err.downcast_ref::<PgError>(), Some(PgError::Closed(_))));
+    }
+
+    #[test]
+    fn estimate_is_monotone_in_request_size() {
+        let (server, _g) = open_test_server(300, 37);
+        let graph = server.graph("g").unwrap();
+        let (c1, b1) = estimate_cost(&graph, &ServeRequest::CsxRange { lo: 0, hi: 10 });
+        let (c2, b2) = estimate_cost(&graph, &ServeRequest::CsxRange { lo: 0, hi: 100 });
+        assert!(c2 > c1 && b2 > b1);
+        let (cp, _) = estimate_cost(&graph, &ServeRequest::Partitions { parts: 4 });
+        assert_eq!(cp, graph.num_edges());
+    }
+}

@@ -1,0 +1,508 @@
+//! `serve-stress`: the multi-tenant serving bench/campaign.
+//!
+//! Drives one [`GraphServer`] with a mixed request storm — successors,
+//! CSX ranges, COO ranges, and partition drains — from several tenants
+//! over two graphs, with one deliberately abusive tenant, mid-run churn
+//! (close + reopen of one graph under traffic) and a fault window (every
+//! read of one graph's store fails) — then checks the serving contracts
+//! end to end:
+//!
+//! * the abusive tenant is shed with typed `Overloaded` (and nothing
+//!   else is);
+//! * well-behaved tenants' p99 stays within a configured factor of their
+//!   solo (uncontended) p99;
+//! * two equally-weighted tenants running the same workload finish in
+//!   comparable wall time (the DRR fairness ratio);
+//! * churn and faults on one graph never fail a request on the other;
+//! * every admitted request settles and every buffer returns to its pool
+//!   — zero leaks, zero wedged streams.
+//!
+//! The campaign is seeded and deterministic in its request mix (timing
+//! naturally varies); [`StressReport`] renders the per-tenant tail table
+//! for the CI job summary and the `BENCH_serve.json` artifact.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{GraphType, Options, PgError};
+use crate::formats::webgraph;
+use crate::graph::generators;
+use crate::storage::{DeviceKind, FaultPlan, SimStore};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+use super::{GraphServer, ServeRequest, ServerOptions, TenantQuotas, Ticket};
+
+/// Campaign knobs (`paragrapher serve-stress`).
+#[derive(Debug, Clone, Copy)]
+pub struct StressConfig {
+    pub seed: u64,
+    /// Graph-size multiplier (g1 = 3000·scale vertices, g2 = 2000·scale).
+    pub scale: usize,
+    /// Requests per well-behaved tenant in the contended phase; the
+    /// abusive tenant fires 3× this many.
+    pub requests: usize,
+    pub exec_workers: usize,
+    /// Contended p99 must stay ≤ this factor × solo p99 (+ a small
+    /// absolute slack for scheduler jitter).
+    pub p99_factor: f64,
+    /// Close + reopen g2 under traffic.
+    pub churn: bool,
+    /// Run the fault window against g2's store.
+    pub faults: bool,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            scale: 1,
+            requests: 400,
+            exec_workers: 4,
+            p99_factor: 2.0,
+            churn: true,
+            faults: true,
+        }
+    }
+}
+
+/// One tenant's row in the report.
+pub struct TenantRow {
+    pub tenant: String,
+    pub phase: &'static str,
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Campaign outcome: per-tenant tails plus the headline contract numbers.
+pub struct StressReport {
+    pub seed: u64,
+    pub g1_vertices: usize,
+    pub g1_edges: u64,
+    pub g2_vertices: usize,
+    pub g2_edges: u64,
+    pub rows: Vec<TenantRow>,
+    pub solo_p99_ms: f64,
+    pub contended_p99_ms: f64,
+    pub p99_limit_ms: f64,
+    /// max/min wall time of the two equal-workload tenants (1.0 = perfect).
+    pub fairness_ratio: f64,
+    pub churn_reopens: u64,
+    pub fault_failures: u64,
+    pub total_settled: u64,
+}
+
+impl StressReport {
+    /// Markdown for the CI job summary, chaos-bench style.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "### serve-stress (seed {}, g1 {}v/{}e, g2 {}v/{}e)\n\n",
+            self.seed, self.g1_vertices, self.g1_edges, self.g2_vertices, self.g2_edges
+        ));
+        s.push_str("| tenant | phase | admitted | completed | shed | expired | failed ");
+        s.push_str("| p50 ms | p95 ms | p99 ms |\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |\n",
+                r.tenant, r.phase, r.admitted, r.completed, r.shed, r.expired, r.failed,
+                r.p50_ms, r.p95_ms, r.p99_ms
+            ));
+        }
+        s.push_str("\n| contract | value |\n|---|---|\n");
+        s.push_str(&format!(
+            "| well-behaved p99 | {:.3} ms (solo {:.3} ms, limit {:.3} ms) |\n",
+            self.contended_p99_ms, self.solo_p99_ms, self.p99_limit_ms
+        ));
+        s.push_str(&format!(
+            "| fairness ratio (wall time, equal workloads) | {:.2} |\n",
+            self.fairness_ratio
+        ));
+        s.push_str(&format!("| churn reopens under traffic | {} |\n", self.churn_reopens));
+        s.push_str(&format!(
+            "| fault-window typed failures (g2 only) | {} |\n",
+            self.fault_failures
+        ));
+        s.push_str(&format!(
+            "| requests settled | {} (every ticket; zero wedged) |\n",
+            self.total_settled
+        ));
+        s
+    }
+
+    /// The `BENCH_serve.json` payload.
+    pub fn to_json(&self) -> Json {
+        let mut tenants = Json::Arr(vec![]);
+        for r in &self.rows {
+            let mut row = Json::obj();
+            row.set("tenant", r.tenant.as_str())
+                .set("phase", r.phase)
+                .set("admitted", r.admitted)
+                .set("completed", r.completed)
+                .set("shed", r.shed)
+                .set("expired", r.expired)
+                .set("failed", r.failed)
+                .set("p50_ms", r.p50_ms)
+                .set("p95_ms", r.p95_ms)
+                .set("p99_ms", r.p99_ms);
+            tenants.push(row);
+        }
+        let mut summary = Json::obj();
+        summary
+            .set("solo_p99_ms", self.solo_p99_ms)
+            .set("contended_p99_ms", self.contended_p99_ms)
+            .set("p99_limit_ms", self.p99_limit_ms)
+            .set("fairness_ratio", self.fairness_ratio)
+            .set("churn_reopens", self.churn_reopens)
+            .set("fault_failures", self.fault_failures)
+            .set("total_settled", self.total_settled);
+        let mut root = Json::obj();
+        root.set("bench", "serve")
+            .set("seed", self.seed)
+            .set("g1_vertices", self.g1_vertices)
+            .set("g1_edges", self.g1_edges)
+            .set("g2_vertices", self.g2_vertices)
+            .set("g2_edges", self.g2_edges)
+            .set("tenants", tenants)
+            .set("summary", summary);
+        root
+    }
+}
+
+/// What one client saw, classified by typed error.
+#[derive(Debug, Default, Clone, Copy)]
+struct ClientOutcome {
+    ok: u64,
+    shed: u64,
+    closed: u64,
+    faulted: u64,
+    expired: u64,
+    other: u64,
+}
+
+impl ClientOutcome {
+    fn settled(&self) -> u64 {
+        self.ok + self.shed + self.closed + self.faulted + self.expired + self.other
+    }
+
+    fn classify(&mut self, e: &anyhow::Error) {
+        match e.downcast_ref::<PgError>() {
+            Some(PgError::Overloaded { .. }) => self.shed += 1,
+            Some(PgError::Closed(_)) => self.closed += 1,
+            Some(PgError::Faulted(_)) => self.faulted += 1,
+            Some(PgError::Expired { .. }) => self.expired += 1,
+            _ => self.other += 1,
+        }
+    }
+}
+
+/// Seeded mixed request: mostly cheap random access, some vertex/edge
+/// ranges, the occasional full partition drain.
+fn mixed_request(rng: &mut Xoshiro256, n: usize, m: u64) -> ServeRequest {
+    match rng.next_below(100) {
+        0..=79 => ServeRequest::Successors { vertex: rng.next_below(n as u64) as usize },
+        80..=92 => {
+            let lo = rng.next_below(n as u64) as usize;
+            let hi = (lo + 1 + rng.next_below(256) as usize).min(n);
+            ServeRequest::CsxRange { lo, hi }
+        }
+        93..=98 => {
+            let lo = rng.next_below(m.max(1));
+            let hi = (lo + 1 + rng.next_below(4096)).min(m);
+            ServeRequest::CooRange { lo_edge: lo, hi_edge: hi }
+        }
+        _ => ServeRequest::Partitions { parts: 4 },
+    }
+}
+
+fn settle_one(pending: &mut VecDeque<Ticket>, out: &mut ClientOutcome) -> Result<()> {
+    let t = pending.pop_front().expect("pending non-empty");
+    match t.wait_timeout(Duration::from_secs(120)) {
+        Some(Ok(_)) => out.ok += 1,
+        Some(Err(e)) => out.classify(&e),
+        None => bail!("request did not settle within 120s — wedged ticket"),
+    }
+    Ok(())
+}
+
+/// One client: `count` seeded mixed requests round-robined over `graphs`,
+/// pipelined `depth` deep. Typed failures are tolerated and classified
+/// (under churn and shedding they are the expected outcome); a ticket
+/// that never settles is the one hard error.
+fn run_client(
+    server: &GraphServer,
+    tenant: &str,
+    graphs: &[&str],
+    count: usize,
+    seed: u64,
+    depth: usize,
+) -> Result<ClientOutcome> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = ClientOutcome::default();
+    let dims: Vec<(String, usize, u64)> = graphs
+        .iter()
+        .map(|g| {
+            let h = server.graph(g).with_context(|| format!("graph '{g}' not open"))?;
+            Ok((g.to_string(), h.num_vertices(), h.num_edges()))
+        })
+        .collect::<Result<_>>()?;
+    let mut pending: VecDeque<Ticket> = VecDeque::new();
+    for i in 0..count {
+        let (gname, n, m) = &dims[i % dims.len()];
+        let req = mixed_request(&mut rng, *n, *m);
+        match server.submit(tenant, gname, req) {
+            Ok(t) => pending.push_back(t),
+            Err(e) => out.classify(&e),
+        }
+        while pending.len() >= depth.max(1) {
+            settle_one(&mut pending, &mut out)?;
+        }
+    }
+    while !pending.is_empty() {
+        settle_one(&mut pending, &mut out)?;
+    }
+    Ok(out)
+}
+
+fn sim_store_with(g: &crate::graph::CsrGraph, base: &str) -> Arc<SimStore> {
+    let store = Arc::new(SimStore::new(DeviceKind::Dram));
+    for (name, data) in webgraph::serialize(g, base) {
+        store.put(&name, data);
+    }
+    store
+}
+
+fn tenant_row(server: &GraphServer, tenant: &str, phase: &'static str) -> TenantRow {
+    let stats = server.tenant_stats(tenant).unwrap_or_default();
+    let lat = server.tenant_latency(tenant).unwrap_or_else(crate::obs::HistSnapshot::empty);
+    let ms = |q: f64| lat.percentile(q) as f64 / 1e6;
+    TenantRow {
+        tenant: tenant.to_string(),
+        phase,
+        admitted: stats.admitted,
+        completed: stats.completed,
+        shed: stats.shed,
+        expired: stats.expired,
+        failed: stats.failed,
+        p50_ms: ms(0.50),
+        p95_ms: ms(0.95),
+        p99_ms: ms(0.99),
+    }
+}
+
+/// Run the campaign. Every contract violation is a hard `Err`; the `Ok`
+/// report carries the numbers for the CI summary and `BENCH_serve.json`.
+pub fn run(cfg: StressConfig) -> Result<StressReport> {
+    let scale = cfg.scale.max(1);
+    let g1 = generators::barabasi_albert(3000 * scale, 6, cfg.seed);
+    let g2 = generators::barabasi_albert(2000 * scale, 5, cfg.seed ^ 0x5EED);
+    let opts = Options { buffers: 4, buffer_edges: 4096, ..Options::default() };
+    let server = GraphServer::new(ServerOptions {
+        exec_workers: cfg.exec_workers.max(1),
+        ..ServerOptions::default()
+    });
+    server.open_store("g1", sim_store_with(&g1, "g1"), "g1", GraphType::CsxWg400, opts.clone())?;
+    server.open_store("g2", sim_store_with(&g2, "g2"), "g2", GraphType::CsxWg400, opts.clone())?;
+
+    let wide = TenantQuotas {
+        max_in_flight: 4,
+        max_queue: 512,
+        cache_quota_cost: 1 << 20,
+        weight: 1 << 16,
+    };
+    server.register_tenant("a-solo", wide)?;
+    server.register_tenant("alpha", wide)?;
+    server.register_tenant("beta", wide)?;
+    server.register_tenant("gamma", wide)?;
+    // The abusive tenant: equal weight but a shallow queue — floods get
+    // shed instead of queued, and DRR caps its share regardless.
+    server.register_tenant("abuse", TenantQuotas { max_queue: 16, max_in_flight: 2, ..wide })?;
+
+    // Phase A — solo baseline on an otherwise idle server. Under
+    // capacity, nothing may shed.
+    let solo = run_client(&server, "a-solo", &["g1"], cfg.requests, cfg.seed ^ 1, 4)?;
+    ensure!(solo.settled() == cfg.requests as u64, "solo client lost requests: {solo:?}");
+    let solo_stats = server.tenant_stats("a-solo").context("a-solo stats")?;
+    ensure!(solo_stats.shed == 0, "under-capacity baseline shed {} requests", solo_stats.shed);
+    ensure!(solo.ok == cfg.requests as u64, "solo requests failed on an idle server: {solo:?}");
+    let solo_p99_ms =
+        server.tenant_latency("a-solo").context("a-solo latency")?.percentile(0.99) as f64 / 1e6;
+
+    // Phase B — contention: alpha+beta (equal workloads, p99-asserted,
+    // g1 only), gamma (mixed over both graphs, rides through churn),
+    // abuse (flooding g1), and an optional churn thread bouncing g2.
+    let mut churn_reopens = 0u64;
+    let (alpha, alpha_wall, beta, beta_wall, gamma, abuse) = std::thread::scope(|s| {
+        let alpha_h = s.spawn(|| {
+            let t0 = Instant::now();
+            run_client(&server, "alpha", &["g1"], cfg.requests, cfg.seed ^ 2, 8)
+                .map(|o| (o, t0.elapsed()))
+        });
+        let beta_h = s.spawn(|| {
+            let t0 = Instant::now();
+            run_client(&server, "beta", &["g1"], cfg.requests, cfg.seed ^ 3, 8)
+                .map(|o| (o, t0.elapsed()))
+        });
+        let gamma_h = s.spawn(|| {
+            run_client(&server, "gamma", &["g1", "g2"], cfg.requests / 2, cfg.seed ^ 4, 8)
+        });
+        let abuse_h = s.spawn(|| {
+            run_client(&server, "abuse", &["g1"], cfg.requests * 3, cfg.seed ^ 5, 32)
+        });
+        let churn_h = cfg.churn.then(|| {
+            s.spawn(|| {
+                let mut ok = 0u64;
+                for _ in 0..3 {
+                    std::thread::sleep(Duration::from_millis(20));
+                    if server.reopen("g2").is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        });
+        let (alpha, alpha_wall) = alpha_h.join().expect("alpha client panicked")?;
+        let (beta, beta_wall) = beta_h.join().expect("beta client panicked")?;
+        let gamma = gamma_h.join().expect("gamma client panicked")?;
+        let abuse = abuse_h.join().expect("abuse client panicked")?;
+        if let Some(h) = churn_h {
+            churn_reopens = h.join().expect("churn thread panicked");
+        }
+        Ok::<_, anyhow::Error>((alpha, alpha_wall, beta, beta_wall, gamma, abuse))
+    })?;
+
+    // Contracts of the contended phase.
+    for (name, o, count) in [("alpha", &alpha, cfg.requests), ("beta", &beta, cfg.requests)] {
+        ensure!(o.settled() == count as u64, "{name} lost requests: {o:?}");
+        ensure!(o.ok == count as u64, "{name} (well-behaved, stable graph) saw failures: {o:?}");
+    }
+    ensure!(gamma.settled() == (cfg.requests / 2) as u64, "gamma lost requests: {gamma:?}");
+    if cfg.churn {
+        ensure!(churn_reopens > 0, "no churn reopen succeeded under traffic");
+    }
+    ensure!(abuse.settled() == (cfg.requests * 3) as u64, "abuse client lost requests: {abuse:?}");
+    ensure!(abuse.shed > 0, "the flooding tenant was never shed with Overloaded");
+    let abuse_stats = server.tenant_stats("abuse").context("abuse stats")?;
+    ensure!(abuse_stats.shed == abuse.shed, "server and client disagree on shed count");
+
+    let contended_p99_ms =
+        server.tenant_latency("alpha").context("alpha latency")?.percentile(0.99) as f64 / 1e6;
+    // Small absolute slack: on a busy CI runner the solo baseline can be
+    // tens of microseconds, where scheduler jitter alone exceeds 2×.
+    let p99_limit_ms = solo_p99_ms * cfg.p99_factor + 25.0;
+    ensure!(
+        contended_p99_ms <= p99_limit_ms,
+        "well-behaved p99 {contended_p99_ms:.3}ms exceeds limit {p99_limit_ms:.3}ms \
+         (solo {solo_p99_ms:.3}ms × {})",
+        cfg.p99_factor
+    );
+    let fairness_ratio = {
+        let (a, b) = (alpha_wall.as_secs_f64().max(1e-9), beta_wall.as_secs_f64().max(1e-9));
+        a.max(b) / a.min(b)
+    };
+    ensure!(
+        fairness_ratio < 3.0,
+        "equal-weight equal-workload tenants finished {fairness_ratio:.2}x apart"
+    );
+
+    // Fault window — every g2 read faults; gamma's g2 requests must fail
+    // typed while alpha's g1 requests keep succeeding untouched.
+    let mut fault_failures = 0u64;
+    if cfg.faults {
+        let g2_handle = server.graph("g2").context("g2 not open after churn")?;
+        g2_handle
+            .store()
+            .set_fault_plan(Some(Arc::new(FaultPlan::parse("eio:*.graph@count=inf", cfg.seed)?)));
+        for i in 0..12usize {
+            let lo = (i * 97) % (g2.num_vertices() - 64);
+            let r = server.call("gamma", "g2", ServeRequest::CsxRange { lo, hi: lo + 64 });
+            let e = match r {
+                Ok(_) => bail!("g2 request succeeded under an infinite fault plan"),
+                Err(e) => e,
+            };
+            match e.downcast_ref::<PgError>() {
+                Some(PgError::Faulted(_)) | Some(PgError::Closed(_)) => fault_failures += 1,
+                other => bail!("fault window produced an untyped failure: {other:?}"),
+            }
+            let w = server.call("alpha", "g1", ServeRequest::Successors { vertex: (i * 31) % 100 });
+            ensure!(w.is_ok(), "fault on g2 leaked into a g1 request: {:?}", w.err());
+        }
+        g2_handle.store().set_fault_plan(None);
+        g2_handle.clear_quarantine();
+        // The degraded graph recovers for its own tenants too.
+        server
+            .call("gamma", "g2", ServeRequest::CsxRange { lo: 0, hi: 64 })
+            .context("g2 did not recover after the fault plan was cleared")?;
+    }
+
+    // Zero-leak contract: every buffer back in its pool on both graphs.
+    for name in ["g1", "g2"] {
+        let h = server.graph(name).with_context(|| format!("{name} not open at teardown"))?;
+        let buffers = h.options().buffers;
+        ensure!(
+            h.idle_buffers() == buffers,
+            "buffer leak on {name}: {}/{} idle after the campaign",
+            h.idle_buffers(),
+            buffers
+        );
+    }
+
+    let rows = vec![
+        tenant_row(&server, "a-solo", "solo"),
+        tenant_row(&server, "alpha", "contended"),
+        tenant_row(&server, "beta", "contended"),
+        tenant_row(&server, "gamma", "contended+churn"),
+        tenant_row(&server, "abuse", "contended"),
+    ];
+    let total_settled = solo.settled()
+        + alpha.settled()
+        + beta.settled()
+        + gamma.settled()
+        + abuse.settled()
+        + fault_failures;
+    Ok(StressReport {
+        seed: cfg.seed,
+        g1_vertices: g1.num_vertices(),
+        g1_edges: g1.num_edges(),
+        g2_vertices: g2.num_vertices(),
+        g2_edges: g2.num_edges(),
+        rows,
+        solo_p99_ms,
+        contended_p99_ms,
+        p99_limit_ms,
+        fairness_ratio,
+        churn_reopens,
+        fault_failures,
+        total_settled,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_campaign_holds_every_contract() {
+        let cfg = StressConfig { requests: 60, scale: 1, ..StressConfig::default() };
+        let report = run(cfg).expect("stress campaign");
+        assert!(report.rows.iter().any(|r| r.tenant == "abuse" && r.shed > 0));
+        assert!(report.fairness_ratio >= 1.0);
+        assert_eq!(report.rows.len(), 5);
+        let json = report.to_json();
+        assert_eq!(json.get("bench").and_then(|j| j.as_str()), Some("serve"));
+        assert_eq!(json.get("tenants").and_then(|t| t.as_arr()).map(|a| a.len()), Some(5));
+        let md = report.to_markdown();
+        assert!(md.contains("| abuse |"));
+        assert!(md.contains("fairness ratio"));
+    }
+}

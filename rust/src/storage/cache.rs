@@ -17,6 +17,7 @@
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::lock_recover;
 use crate::obs::Counter;
 
 /// Page granularity of the model (16 KiB "super-pages": coarse enough to
@@ -106,7 +107,7 @@ impl PageCache {
         }
         let first = offset / CACHE_PAGE;
         let last = (offset + len - 1) / CACHE_PAGE;
-        let mut inner = self.inner.lock().expect("cache lock");
+        let mut inner = lock_recover(&self.inner);
         let mut missed_bytes = 0u64;
         for p in first..=last {
             if inner.pages.contains_key(&(file_id, p)) {
@@ -133,14 +134,14 @@ impl PageCache {
 
     /// Modeled cache budget, bytes (page-granular).
     pub fn capacity_bytes(&self) -> u64 {
-        let inner = self.inner.lock().expect("cache lock");
+        let inner = lock_recover(&self.inner);
         inner.capacity_pages * CACHE_PAGE
     }
 
     /// Re-budget the cache; shrinking evicts FIFO immediately, reporting
     /// the evicted `(file_id, page_index)` pairs.
     pub fn set_capacity(&self, capacity_bytes: u64, evicted: &mut Vec<(u64, u64)>) {
-        let mut inner = self.inner.lock().expect("cache lock");
+        let mut inner = lock_recover(&self.inner);
         inner.capacity_pages = (capacity_bytes / CACHE_PAGE).max(1);
         while inner.order.len() as u64 > inner.capacity_pages {
             if let Some(old) = inner.order.pop_front() {
@@ -154,18 +155,18 @@ impl PageCache {
 
     /// Drop everything — the `flushcache` discipline between experiments.
     pub fn drop_cache(&self) {
-        let mut inner = self.inner.lock().expect("cache lock");
+        let mut inner = lock_recover(&self.inner);
         inner.pages.clear();
         inner.order.clear();
     }
 
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.inner.lock().expect("cache lock");
+        let inner = lock_recover(&self.inner);
         (inner.hits, inner.misses)
     }
 
     pub fn resident_bytes(&self) -> u64 {
-        let inner = self.inner.lock().expect("cache lock");
+        let inner = lock_recover(&self.inner);
         inner.pages.len() as u64 * CACHE_PAGE
     }
 }
@@ -193,10 +194,30 @@ impl CacheCounters {
     }
 }
 
+/// Handle to a per-tenant accounting slot of one [`DecodedCache`], returned
+/// by [`DecodedCache::register_tag`]. Tags attribute resident cost, hits and
+/// evictions to the tenant that inserted each entry, and carry an optional
+/// *quota*: a per-tenant resident-cost ceiling enforced by evicting that
+/// tenant's own LRU entries first, so one hot tenant cannot evict everyone
+/// else's working set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheTag(usize);
+
+struct TagState {
+    name: String,
+    /// Per-tenant resident-cost ceiling; 0 = no per-tenant quota.
+    quota_cost: u64,
+    resident_cost: u64,
+    hits: Counter,
+    evictions: Counter,
+}
+
 struct DecodedEntry<T> {
     value: Arc<T>,
     cost: u64,
     last_used: u64,
+    /// Accounting slot of the tenant that inserted this entry.
+    tag: Option<usize>,
 }
 
 struct DecodedInner<T> {
@@ -207,6 +228,40 @@ struct DecodedInner<T> {
     order: BTreeMap<u64, u64>,
     tick: u64,
     resident_cost: u64,
+    /// Per-tenant accounting slots (indexed by `CacheTag.0`).
+    tags: Vec<TagState>,
+}
+
+impl<T> DecodedInner<T> {
+    /// Remove `key` (present) from the map/order, fix global + tag resident
+    /// cost, and count the eviction on both the global and the tag counter.
+    fn evict_key(&mut self, key: u64, global_evictions: &Counter) {
+        let entry = match self.map.remove(&key) {
+            Some(e) => e,
+            None => return,
+        };
+        self.order.remove(&entry.last_used);
+        self.resident_cost -= entry.cost;
+        if let Some(t) = entry.tag {
+            let tag = &mut self.tags[t];
+            tag.resident_cost = tag.resident_cost.saturating_sub(entry.cost);
+            tag.evictions.inc();
+        }
+        global_evictions.inc();
+    }
+
+    /// First key in LRU order matching `pred`, skipping `skip`.
+    fn lru_matching(
+        &self,
+        skip: u64,
+        mut pred: impl FnMut(&DecodedEntry<T>) -> bool,
+    ) -> Option<u64> {
+        self.order
+            .values()
+            .copied()
+            .filter(|k| *k != skip)
+            .find(|k| self.map.get(k).map(&mut pred).unwrap_or(false))
+    }
 }
 
 
@@ -255,6 +310,7 @@ impl<T> DecodedCache<T> {
                 order: BTreeMap::new(),
                 tick: 0,
                 resident_cost: 0,
+                tags: Vec::new(),
             }),
             hits,
             misses,
@@ -272,10 +328,45 @@ impl<T> DecodedCache<T> {
         self.capacity_cost > 0
     }
 
+    /// Register (or re-budget) a per-tenant accounting slot. Entries
+    /// inserted under the returned [`CacheTag`] bill their resident cost to
+    /// the tenant; `quota_cost > 0` caps that tenant's resident cost by
+    /// evicting *its own* LRU entries first. `hits`/`evictions` are counter
+    /// handles (typically registry-resolved under
+    /// `cache.decoded.{hits,evictions}.<tenant>`) so quota enforcement is
+    /// observable per tenant. Registering an existing name updates its
+    /// quota and returns the same tag.
+    pub fn register_tag(
+        &self,
+        name: &str,
+        quota_cost: u64,
+        hits: Counter,
+        evictions: Counter,
+    ) -> CacheTag {
+        let mut inner = lock_recover(&self.inner);
+        if let Some(i) = inner.tags.iter().position(|t| t.name == name) {
+            inner.tags[i].quota_cost = quota_cost;
+            return CacheTag(i);
+        }
+        inner.tags.push(TagState {
+            name: name.to_string(),
+            quota_cost,
+            resident_cost: 0,
+            hits,
+            evictions,
+        });
+        CacheTag(inner.tags.len() - 1)
+    }
+
     /// Look up `key`; counts a hit or miss and refreshes recency on hit
     /// (single map probe — this is the `successors()` fast path).
     pub fn get(&self, key: u64) -> Option<Arc<T>> {
-        let mut guard = self.inner.lock().expect("decoded cache lock");
+        self.get_tagged(key, None)
+    }
+
+    /// [`get`](Self::get) with the hit also billed to `tag`'s counter.
+    pub fn get_tagged(&self, key: u64, tag: Option<CacheTag>) -> Option<Arc<T>> {
+        let mut guard = lock_recover(&self.inner);
         guard.tick += 1;
         let tick = guard.tick;
         let inner = &mut *guard;
@@ -285,6 +376,11 @@ impl<T> DecodedCache<T> {
                 entry.last_used = tick;
                 inner.order.insert(tick, key);
                 self.hits.inc();
+                if let Some(CacheTag(t)) = tag {
+                    if let Some(tag) = inner.tags.get(t) {
+                        tag.hits.inc();
+                    }
+                }
                 Some(Arc::clone(&entry.value))
             }
             None => {
@@ -298,36 +394,78 @@ impl<T> DecodedCache<T> {
     /// cost fits the capacity again. The entry just inserted is never the
     /// LRU, so a single oversized block stays resident rather than thrashing.
     pub fn insert(&self, key: u64, value: Arc<T>) {
+        self.insert_tagged(key, value, None)
+    }
+
+    /// [`insert`](Self::insert) billed to `tag`. Eviction is quota-aware,
+    /// in two passes:
+    ///
+    /// 1. while `tag` is over its own quota, evict *that tenant's* LRU
+    ///    entries (never the one just inserted) — the hot tenant pays for
+    ///    its own overflow;
+    /// 2. while the cache is over global capacity, evict over-quota
+    ///    tenants' LRU entries first, falling back to the global LRU only
+    ///    when every remaining tenant is within budget.
+    pub fn insert_tagged(&self, key: u64, value: Arc<T>, tag: Option<CacheTag>) {
         if self.capacity_cost == 0 {
             return;
         }
         let cost = (self.cost)(&value);
-        let mut inner = self.inner.lock().expect("decoded cache lock");
+        let mut inner = lock_recover(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
-        if let Some(old) = inner.map.insert(key, DecodedEntry { value, cost, last_used: tick }) {
+        let tag_idx = tag.map(|CacheTag(t)| t).filter(|t| *t < inner.tags.len());
+        if let Some(old) =
+            inner.map.insert(key, DecodedEntry { value, cost, last_used: tick, tag: tag_idx })
+        {
             inner.resident_cost -= old.cost;
             inner.order.remove(&old.last_used);
+            if let Some(t) = old.tag {
+                inner.tags[t].resident_cost =
+                    inner.tags[t].resident_cost.saturating_sub(old.cost);
+            }
         }
         inner.order.insert(tick, key);
         inner.resident_cost += cost;
-        while inner.resident_cost > self.capacity_cost && inner.map.len() > 1 {
-            let (lru_tick, lru) = match inner.order.iter().next() {
-                Some((&t, &k)) => (t, k),
-                None => break,
-            };
-            if lru == key {
-                break;
+        if let Some(t) = tag_idx {
+            inner.tags[t].resident_cost += cost;
+        }
+        // Pass 1: per-tenant quota — the inserting tenant sheds its own LRU.
+        if let Some(t) = tag_idx {
+            while inner.tags[t].quota_cost > 0
+                && inner.tags[t].resident_cost > inner.tags[t].quota_cost
+            {
+                match inner.lru_matching(key, |e| e.tag == Some(t)) {
+                    Some(victim) => inner.evict_key(victim, &self.evictions),
+                    None => break, // only the fresh insert remains oversized
+                }
             }
-            inner.order.remove(&lru_tick);
-            let evicted = inner.map.remove(&lru).expect("lru entry present");
-            inner.resident_cost -= evicted.cost;
-            self.evictions.inc();
+        }
+        // Pass 2: global capacity — over-quota tenants evict first.
+        while inner.resident_cost > self.capacity_cost && inner.map.len() > 1 {
+            let over_quota = inner.lru_matching(key, |e| match e.tag {
+                Some(t) => {
+                    let tag = &inner.tags[t];
+                    tag.quota_cost > 0 && tag.resident_cost > tag.quota_cost
+                }
+                None => false,
+            });
+            let victim = match over_quota.or_else(|| inner.lru_matching(key, |_| true)) {
+                Some(k) => k,
+                None => break, // only the fresh insert left
+            };
+            inner.evict_key(victim, &self.evictions);
         }
     }
 
+    /// Resident cost currently billed to `tag` (tests + quota inspection).
+    pub fn tag_resident_cost(&self, tag: CacheTag) -> u64 {
+        let inner = lock_recover(&self.inner);
+        inner.tags.get(tag.0).map(|t| t.resident_cost).unwrap_or(0)
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("decoded cache lock").map.len()
+        lock_recover(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -336,14 +474,14 @@ impl<T> DecodedCache<T> {
 
     /// Drop all resident entries (counters are preserved).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().expect("decoded cache lock");
+        let mut inner = lock_recover(&self.inner);
         inner.map.clear();
         inner.order.clear();
         inner.resident_cost = 0;
     }
 
     pub fn counters(&self) -> CacheCounters {
-        let inner = self.inner.lock().expect("decoded cache lock");
+        let inner = lock_recover(&self.inner);
         CacheCounters {
             hits: self.hits.get(),
             misses: self.misses.get(),

@@ -34,7 +34,10 @@ impl ThreadPool {
                     .name(format!("pg-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().expect("pool queue poisoned");
+                            // Poison contract: a panicked sibling must not
+                            // wedge the whole pool — recover the guard (the
+                            // channel receiver stays structurally valid).
+                            let guard = crate::coordinator::lock_recover(&rx);
                             guard.recv()
                         };
                         match job {
@@ -177,7 +180,7 @@ impl Drop for AbortGuard<'_> {
         let missing = self.parts - claimed;
         if missing > 0 {
             let (mx, cv) = &**self.done;
-            let mut g = mx.lock().expect("scoped_for done lock");
+            let mut g = crate::coordinator::lock_recover(mx);
             *g += missing;
             cv.notify_all();
         }
@@ -208,9 +211,9 @@ struct WaitAll<'a> {
 impl Drop for WaitAll<'_> {
     fn drop(&mut self) {
         let (mx, cv) = &**self.done;
-        let mut g = mx.lock().expect("scoped_for done lock");
+        let mut g = crate::coordinator::lock_recover(mx);
         while *g < self.parts {
-            g = cv.wait(g).expect("scoped_for done wait");
+            g = cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }
@@ -232,7 +235,7 @@ struct DoneGuard<'a>(&'a Arc<(Mutex<usize>, std::sync::Condvar)>);
 impl Drop for DoneGuard<'_> {
     fn drop(&mut self) {
         let (mx, cv) = &**self.0;
-        let mut g = mx.lock().expect("scoped_for done lock");
+        let mut g = crate::coordinator::lock_recover(mx);
         *g += 1;
         cv.notify_all();
     }

@@ -1,0 +1,190 @@
+//! Integration tests of the multi-tenant serving front-end: graph churn
+//! under in-flight partition streams, fault isolation between tenants on
+//! different graphs, and per-tenant decoded-cache quotas — all through the
+//! public `GraphServer` surface.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paragrapher::coordinator::{GraphType, Options, PgError};
+use paragrapher::formats::webgraph;
+use paragrapher::graph::generators;
+use paragrapher::obs::names;
+use paragrapher::serve::{GraphServer, ServeReply, ServeRequest, ServerOptions, TenantQuotas};
+use paragrapher::storage::{DeviceKind, FaultPlan, SimStore};
+
+/// A server with one seeded BA graph per `(name, vertices, seed)` entry,
+/// small buffers and a pinned two-deep prefetch window so partition
+/// streams are provably mid-flight when churn hits.
+fn open_server(graphs: &[(&str, usize, u64)]) -> GraphServer {
+    let server = GraphServer::new(ServerOptions::default());
+    for &(name, n, seed) in graphs {
+        let g = generators::barabasi_albert(n, 8, seed);
+        let store = Arc::new(SimStore::new(DeviceKind::Dram));
+        for (file, data) in webgraph::serialize(&g, name) {
+            store.put(&file, data);
+        }
+        let opts =
+            Options { buffers: 2, buffer_edges: 4096, prefetch_window: 2, ..Options::default() };
+        server.open_store(name, store, name, GraphType::CsxWg400, opts).expect("open graph");
+    }
+    server
+}
+
+fn p99_ms(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    s[((s.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+/// Satellite: reopening a graph while two tenants hold in-flight
+/// `PartitionStream`s must poison those streams into a typed
+/// [`PgError::Closed`] — never a hang, never a truncated drain that reads
+/// as complete — and every claimed buffer must come back.
+#[test]
+fn reopen_poisons_in_flight_partition_streams_typed() {
+    let server = open_server(&[("g", 6000, 11)]);
+    server.register_tenant("t1", TenantQuotas::default()).expect("register t1");
+    server.register_tenant("t2", TenantQuotas::default()).expect("register t2");
+    let old = server.graph("g").expect("open graph handle");
+    let buffers = old.options().buffers;
+
+    // Two tenants hold mid-flight streams: one partition consumed each,
+    // the producers parked on the two-deep staging window.
+    let s1 = old.csx_get_partitions(64).expect("stream 1");
+    let s2 = old.csx_get_partitions(64).expect("stream 2");
+    assert!(s1.next().expect("first partition").is_some());
+    assert!(s2.next().expect("first partition").is_some());
+
+    server.reopen("g").expect("reopen under traffic");
+
+    for s in [&s1, &s2] {
+        let err = loop {
+            match s.next() {
+                Ok(Some(_)) => continue, // staged before the close: fine
+                Ok(None) => panic!("stream read as complete despite churn"),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            matches!(err.downcast_ref::<PgError>(), Some(PgError::Closed(_))),
+            "want PgError::Closed, got: {err:#}"
+        );
+    }
+    drop(s1);
+    drop(s2);
+
+    // Zero leaked buffers on the closed handle: queued decode jobs drain
+    // and recycle even against a closed pool.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while old.idle_buffers() != buffers && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(old.idle_buffers(), buffers, "buffer leak on the closed handle");
+
+    // The fresh epoch serves both tenants, pool whole.
+    let fresh = server.graph("g").expect("reopened graph handle");
+    assert!(!Arc::ptr_eq(&old, &fresh), "reopen must install a fresh handle");
+    for t in ["t1", "t2"] {
+        match server.call(t, "g", ServeRequest::Successors { vertex: 17 }).expect("serve") {
+            ServeReply::Successors(_) => {}
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(fresh.idle_buffers(), fresh.options().buffers);
+}
+
+/// Satellite: a PR-9 fault plan installed under one graph degrades only
+/// that graph's tenants. The victim sees typed `Faulted` (and its blocks
+/// quarantine); the healthy tenant on the other graph keeps succeeding
+/// with p99 within 2x its clean baseline.
+#[test]
+fn fault_plan_through_serve_isolates_tenants() {
+    let server = open_server(&[("ga", 4000, 21), ("gb", 4000, 22)]);
+    server.register_tenant("healthy", TenantQuotas::default()).expect("register healthy");
+    server.register_tenant("victim", TenantQuotas::default()).expect("register victim");
+
+    let healthy_call = |i: usize| -> f64 {
+        let v = (i * 61) % 4000;
+        let t0 = Instant::now();
+        server
+            .call("healthy", "ga", ServeRequest::Successors { vertex: v })
+            .expect("healthy tenant request failed");
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+
+    let clean: Vec<f64> = (0..60).map(healthy_call).collect();
+
+    // Every read of gb's stream now faults persistently.
+    let gb = server.graph("gb").expect("gb open");
+    let plan = FaultPlan::parse("eio:*.graph@count=inf", 7).expect("fault spec");
+    gb.store().set_fault_plan(Some(Arc::new(plan)));
+
+    let mut contended = Vec::new();
+    let mut typed_faults = 0usize;
+    for i in 0..60 {
+        // Victim request against the faulted graph: must fail *typed*
+        // through the whole serve stack (distinct vertices so the decoded
+        // cache cannot mask the fault).
+        let v = (i * 67) % 4000;
+        let err = server
+            .call("victim", "gb", ServeRequest::Successors { vertex: v })
+            .expect_err("persistent EIO cannot succeed");
+        match err.downcast_ref::<PgError>() {
+            Some(PgError::Faulted(_)) => typed_faults += 1,
+            Some(PgError::Closed(_)) | Some(PgError::Corrupt(_)) => {}
+            other => panic!("untyped failure through the serve layer: {other:?} / {err:#}"),
+        }
+        contended.push(healthy_call(i));
+    }
+    assert!(typed_faults > 0, "no PgError::Faulted surfaced to the victim");
+    assert!(gb.quarantined_blocks() >= 1, "faulted blocks never quarantined through serve");
+
+    // Fault isolation: the healthy tenant's tail is bounded by its clean
+    // baseline (2x + a small absolute slack for CI timer noise).
+    let limit = p99_ms(&clean) * 2.0 + 25.0;
+    let got = p99_ms(&contended);
+    assert!(got <= limit, "healthy p99 {got:.3}ms exceeds limit {limit:.3}ms");
+
+    // Recovery: lift the plan and the quarantine; the victim serves again.
+    gb.store().set_fault_plan(None);
+    gb.clear_quarantine();
+    server.call("victim", "gb", ServeRequest::Successors { vertex: 33 }).expect("post-recovery");
+}
+
+/// Satellite: a tenant's decoded-cache residency stays under its quota
+/// (its own LRU entries evict first) and the per-tenant
+/// `cache.decoded.{hits,evictions}.<tenant>` counters land in the graph's
+/// metrics registry.
+#[test]
+fn cache_quota_bounds_residency_with_labeled_counters() {
+    let server = open_server(&[("g", 4000, 31)]);
+    let quota = 2000u64;
+    let quotas = TenantQuotas { cache_quota_cost: quota, ..TenantQuotas::default() };
+    server.register_tenant("small", quotas).expect("register small");
+    let graph = server.graph("g").expect("open graph handle");
+    // Re-registering returns the same tag the serve layer bills against.
+    let tag = graph.register_cache_tenant("small", quota);
+
+    // Touch many distinct 64-vertex source blocks (each ~64 + 8*64 cost
+    // units) — far more than the quota admits resident at once.
+    for i in 0..120usize {
+        let v = (i * 64 + 1) % 4000;
+        server.call("small", "g", ServeRequest::Successors { vertex: v }).expect("serve");
+    }
+    // Re-touch one hot vertex: one re-decode, then counted hits.
+    for _ in 0..4 {
+        server.call("small", "g", ServeRequest::Successors { vertex: 65 }).expect("serve");
+    }
+
+    let resident = graph.cache_tenant_resident(tag);
+    assert!(resident <= quota, "tenant resident {resident} exceeds quota {quota}");
+
+    let snap = graph.metrics_snapshot();
+    let hits_key = names::cache_tenant_hits("small");
+    let evix_key = names::cache_tenant_evictions("small");
+    let hits = snap.counters.get(hits_key.as_str()).copied().unwrap_or(0);
+    let evix = snap.counters.get(evix_key.as_str()).copied().unwrap_or(0);
+    assert!(hits >= 1, "no per-tenant cache hit recorded");
+    assert!(evix >= 1, "quota never evicted despite oversubscription");
+}
